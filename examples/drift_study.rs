@@ -1,0 +1,55 @@
+//! PCM conductance-drift study (paper Fig 7 / Table V, §V-B).
+//!
+//! Programs a trained checkpoint onto the simulated PCM crossbars once,
+//! then replays inference at increasing time-since-programming, with and
+//! without global drift compensation — entirely in Rust on the PJRT
+//! runtime (weights are executable inputs; DESIGN.md §3).
+//!
+//! ```sh
+//! cargo run --release --example drift_study [artifacts] [model]
+//! ```
+
+use anyhow::Result;
+use xpikeformer::config::DriftConfig;
+use xpikeformer::repro::accuracy::{evaluate, install_analog,
+                                   program_artifact};
+use xpikeformer::repro::ReproCtx;
+use xpikeformer::runtime::Engine;
+use xpikeformer::workloads::EvalSet;
+
+const TIMES: &[(f64, &str)] = &[
+    (0.0, "fresh"),
+    (3600.0, "1 hour"),
+    (86_400.0, "1 day"),
+    (2_592_000.0, "1 month"),
+    (31_536_000.0, "1 year"),
+];
+
+fn main() -> Result<()> {
+    let artifacts = std::env::args().nth(1)
+        .unwrap_or_else(|| "artifacts".to_string());
+    let model = std::env::args().nth(2)
+        .unwrap_or_else(|| "vit_xpike_2-64".to_string());
+    let ctx = ReproCtx::new(&artifacts);
+
+    println!("== PCM drift study ({model}) ==");
+    let mut engine = Engine::load(&artifacts, &format!("{model}_b32"))?;
+    let aimc = program_artifact(&engine, &ctx, None)?;
+    let set = EvalSet::load(std::path::Path::new(&artifacts)
+        .join("image_eval.bin"))?;
+
+    println!("{:<10} {:>12} {:>12}", "age", "no comp.", "with GDC");
+    for &(t, label) in TIMES {
+        let mut row = Vec::new();
+        for gdc in [false, true] {
+            let drift = DriftConfig { t_seconds: t, gdc, seed: ctx.seed };
+            install_analog(&mut engine, &aimc, &drift)?;
+            let curve = evaluate(&engine, &set, 3000)?;
+            row.push(100.0 * curve.acc.last().unwrap());
+        }
+        println!("{label:<10} {:>11.2}% {:>11.2}%", row[0], row[1]);
+    }
+    println!("\nExpected shape (paper Fig 7): uncompensated accuracy\n\
+              collapses within hours-days; GDC holds it for a year.");
+    Ok(())
+}

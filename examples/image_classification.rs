@@ -1,0 +1,62 @@
+//! Image classification on the simulated Xpikeformer ASIC (paper Task 1).
+//!
+//! End-to-end driver over all layers of the stack:
+//!   1. loads the trained spiking-ViT artifact (L2/L1 AOT product),
+//!   2. programs its weights onto the simulated PCM crossbars (AIMC
+//!      engine: 5-bit quantization + programming noise),
+//!   3. evaluates the full fixed eval set through the PJRT runtime,
+//!   4. reports accuracy per encoding length T plus the analytical
+//!      energy/latency the same inference costs at paper scale.
+//!
+//! ```sh
+//! cargo run --release --example image_classification [artifacts] [model]
+//! ```
+
+use anyhow::Result;
+use xpikeformer::config::{vit_imagenet, DriftConfig, HardwareConfig};
+use xpikeformer::energy::{xpikeformer_energy, xpikeformer_latency};
+use xpikeformer::repro::{accuracy, ReproCtx};
+use xpikeformer::runtime::Engine;
+use xpikeformer::workloads::EvalSet;
+
+fn main() -> Result<()> {
+    let artifacts = std::env::args().nth(1)
+        .unwrap_or_else(|| "artifacts".to_string());
+    let model = std::env::args().nth(2)
+        .unwrap_or_else(|| "vit_xpike_2-64".to_string());
+    let ctx = ReproCtx::new(&artifacts);
+
+    println!("== Xpikeformer image classification ({model}) ==");
+    let mut engine = Engine::load(&artifacts, &format!("{model}_b32"))?;
+
+    // Program PCM crossbars and install the (noisy, quantized) weights.
+    let aimc = accuracy::program_artifact(&engine, &ctx, None)?;
+    println!("AIMC engine: {} synaptic arrays programmed",
+             aimc.total_arrays());
+    accuracy::install_analog(&mut engine, &aimc, &DriftConfig::default())?;
+
+    let set = EvalSet::load(std::path::Path::new(&artifacts)
+        .join("image_eval.bin"))?;
+    println!("eval set: {} images", set.n);
+    let t0 = std::time::Instant::now();
+    let curve = accuracy::evaluate(&engine, &set, 1000)?;
+    let dt = t0.elapsed();
+    println!("\naccuracy vs encoding length T (hardware-simulated):");
+    for (t, a) in curve.acc.iter().enumerate() {
+        println!("  T={:>2}: {:>5.1}%", t + 1, 100.0 * a);
+    }
+    println!("minimum T to converge (dAcc < 0.1pp): {}",
+             curve.min_t(false, 0.001));
+    println!("runtime: {dt:?} ({:.1} img/s)",
+             set.n as f64 / dt.as_secs_f64());
+
+    // What this inference costs on the ASIC at paper scale.
+    let hw = HardwareConfig::default();
+    let paper = vit_imagenet(8, 768, 12, 7);
+    let e = xpikeformer_energy(&paper, &hw);
+    let l = xpikeformer_latency(&paper, &hw);
+    println!("\nprojected ASIC cost at paper scale (ViT-8-768, ImageNet):");
+    println!("  energy  {:.2} mJ/inference (paper: 0.30)", e.total_mj());
+    println!("  latency {:.2} ms/inference (paper: 2.18)", l.total_ms());
+    Ok(())
+}

@@ -1,0 +1,69 @@
+//! Quickstart: load an AOT-compiled spiking transformer, run one batch of
+//! inference on the PJRT runtime, and verify numerical parity against the
+//! golden vector exported at AOT time.
+//!
+//! ```sh
+//! make artifacts            # once: train + lower (python, build time)
+//! cargo run --release --example quickstart
+//! ```
+
+use anyhow::{Context, Result};
+use xpikeformer::runtime::{prefix_predictions, Artifact, Engine};
+
+fn main() -> Result<()> {
+    let artifacts = std::env::args().nth(1)
+        .unwrap_or_else(|| "artifacts".to_string());
+
+    // 1. Discover what `make artifacts` produced.
+    let tags = Artifact::discover(&artifacts)
+        .context("no artifacts dir — run `make artifacts` first")?;
+    println!("discovered {} artifacts:", tags.len());
+    for t in &tags {
+        println!("  {t}");
+    }
+    let tag = tags
+        .iter()
+        .find(|t| t.starts_with("vit_xpike") && t.ends_with("_b32"))
+        .context("no vit_xpike_*_b32 artifact")?;
+
+    // 2. Compile the HLO once on the PJRT CPU client (python is NOT
+    //    involved — the artifact is self-contained).
+    println!("\nloading {tag} ...");
+    let engine = Engine::load(&artifacts, tag)?;
+    let m = engine.artifact.manifest.clone();
+    println!("model={} batch={} T={} classes={}", m.model, m.batch,
+             m.config.t_max, m.config.classes);
+
+    // 3. Run the golden batch and check bit-level reproducibility.
+    let golden = engine.artifact.load_golden()?;
+    let x = golden.get("x")?.as_f32();
+    let seed = golden.get("seed")?.as_u32()[0];
+    let expect = golden.get("logits")?.as_f32();
+    let t0 = std::time::Instant::now();
+    let logits = engine.run(&x, seed)?;
+    let dt = t0.elapsed();
+    let max_err = logits
+        .iter()
+        .zip(&expect)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!("\nforward pass: {dt:?} for batch {}", m.batch);
+    println!("golden parity: max |err| = {max_err:e} (expect ~0)");
+    anyhow::ensure!(max_err < 1e-4, "golden mismatch");
+
+    // 4. Decode predictions at every encoding length T (prefix mean).
+    let labels = golden.get("labels")?.as_i32();
+    let preds = prefix_predictions(&logits, m.config.t_max, m.batch,
+                                   m.config.classes);
+    for t in [1, m.config.t_max / 2, m.config.t_max] {
+        let acc = preds[t - 1]
+            .iter()
+            .zip(&labels)
+            .filter(|(p, l)| **p as i32 == **l)
+            .count() as f64
+            / m.batch as f64;
+        println!("accuracy @ T={t:>2}: {:.1}%", 100.0 * acc);
+    }
+    println!("\nquickstart OK");
+    Ok(())
+}

@@ -1,0 +1,158 @@
+"""PCM analog in-memory-computing device model (AIHWKit substitute).
+
+Models the non-idealities of the paper's AIMC engine (§IV-A, Table II,
+§V) that matter for accuracy:
+
+* **weight quantization** — differential pair of 4-bit PCM devices
+  → 5-bit effective signed weight (Table II);
+* **programming noise** — iterative-program residual error, Gaussian with
+  std ``sigma_prog * w_max`` (Joshi et al., Nat. Comm. 2020);
+* **read noise** — per-access Gaussian on column currents;
+* **conductance drift** — ``g(t) = g(t0) * (t/t0)^(-nu)`` with per-device
+  drift exponent ``nu ~ N(nu_mean, nu_std)``;
+* **global drift compensation (GDC)** — periodic calibration that rescales
+  outputs by the measured mean drift factor (paper §V-B, from [53]);
+* **ADC quantization** — 5-bit SAR ADC on every crossbar-column partial sum
+  of a 128-row block (row-block-wise mapping, §IV-A2).
+
+The same model is implemented in Rust (``rust/src/aimc``) for the
+inference-time drift studies; ``python/tests/test_analog.py`` checks the
+invariants both must satisfy.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AnalogConfig:
+    """PCM + readout parameters (defaults = paper Table II)."""
+
+    g_bits: int = 4           # conductance levels per device
+    sigma_prog: float = 0.03  # programming-noise std, fraction of w_max
+    sigma_read: float = 0.02  # read-noise std per block output, frac of w_max
+    nu_mean: float = 0.05     # drift exponent mean
+    nu_std: float = 0.01      # drift exponent device-to-device std
+    t0: float = 25.0          # drift reference time [s] after programming
+    adc_bits: int = 5         # SAR ADC resolution
+    adc_clip_kappa: float = 4.0  # ADC full-scale = kappa*sqrt(R)*rms(w)
+    crossbar_rows: int = 128  # cells per column (row-block height)
+
+    @property
+    def g_levels(self) -> int:
+        return 2 ** self.g_bits - 1  # 15 positive levels per device
+
+
+DEFAULT = AnalogConfig()
+
+
+def w_max_of(w: jax.Array) -> jax.Array:
+    """Per-tensor conductance full-scale (max |w|, floored for stability)."""
+    return jnp.maximum(jnp.max(jnp.abs(w)), 1e-6)
+
+
+def quantize_weights(w: jax.Array, cfg: AnalogConfig = DEFAULT) -> jax.Array:
+    """Quantize to the differential-pair grid: g_levels steps per polarity.
+
+    A positive weight maps to (g+ = k*step, g- = 0) and vice versa, so the
+    effective weight grid is ``{-15..15} * w_max/15`` — the paper's '5-bit
+    weight resolution' from two 4-bit devices.
+    """
+    w_max = w_max_of(w)
+    step = w_max / cfg.g_levels
+    return jnp.clip(jnp.round(w / step), -cfg.g_levels, cfg.g_levels) * step
+
+
+def program(w: jax.Array, key: jax.Array,
+            cfg: AnalogConfig = DEFAULT) -> jax.Array:
+    """Quantize + programming noise: what lands on the crossbar at t=t0."""
+    wq = quantize_weights(w, cfg)
+    return wq + cfg.sigma_prog * w_max_of(w) * jax.random.normal(key, w.shape)
+
+
+def drift_factors(key: jax.Array, shape, t_seconds: float,
+                  cfg: AnalogConfig = DEFAULT) -> jax.Array:
+    """Per-device multiplicative drift factor at time ``t_seconds``."""
+    nu = cfg.nu_mean + cfg.nu_std * jax.random.normal(key, shape)
+    t = jnp.maximum(t_seconds, cfg.t0)
+    return (t / cfg.t0) ** (-nu)
+
+
+def apply_drift(w: jax.Array, key: jax.Array, t_seconds: float,
+                cfg: AnalogConfig = DEFAULT,
+                gdc: bool = False) -> jax.Array:
+    """Drift the differential conductances of ``w`` to time ``t_seconds``.
+
+    g+ and g- drift with independent exponents. With ``gdc=True`` the
+    output is rescaled by the *measured mean* drift factor — exactly what
+    the calibration columns measure in hardware — leaving only the
+    stochastic (per-device) component uncompensated.
+    """
+    kp, km = jax.random.split(key)
+    gp = jnp.maximum(w, 0.0)
+    gm = jnp.maximum(-w, 0.0)
+    dp = drift_factors(kp, w.shape, t_seconds, cfg)
+    dm = drift_factors(km, w.shape, t_seconds, cfg)
+    w_d = gp * dp - gm * dm
+    if gdc:
+        # Calibration: known input on sample columns measures the global
+        # current attenuation; compensate by its inverse.
+        num = jnp.sum(gp * dp + gm * dm)
+        den = jnp.maximum(jnp.sum(gp + gm), 1e-12)
+        alpha = jnp.maximum(num / den, 1e-3)
+        w_d = w_d / alpha
+    return w_d
+
+
+def adc_clip_of(w: jax.Array, cfg: AnalogConfig = DEFAULT) -> jax.Array:
+    """ADC full-scale current for a row block, set at mapping time.
+
+    Sized to ``kappa * sqrt(R) * rms(w)``: with ~R/2 active binary inputs
+    the column current is a random sum whose std is ~sqrt(R)*rms(w), so a
+    few sigmas of headroom avoids saturation while keeping LSB small.
+    """
+    rms = jnp.sqrt(jnp.mean(w * w) + 1e-12)
+    return cfg.adc_clip_kappa * jnp.sqrt(float(cfg.crossbar_rows)) * rms
+
+
+def adc_quantize(x: jax.Array, clip: jax.Array,
+                 cfg: AnalogConfig = DEFAULT) -> jax.Array:
+    """Symmetric mid-rise quantization of a partial sum to ``adc_bits``."""
+    levels = 2 ** (cfg.adc_bits - 1) - 1  # signed range
+    step = clip / levels
+    return jnp.clip(jnp.round(x / step), -levels, levels) * step
+
+
+def crossbar_matmul(x: jax.Array, w: jax.Array,
+                    key: jax.Array | None = None,
+                    cfg: AnalogConfig = DEFAULT) -> jax.Array:
+    """Row-block-wise analog MVM: ``x [*, Din] @ w [Din, Dout]``.
+
+    The input rows are split into 128-row blocks; each block's partial sum
+    passes through read noise + the shared 5-bit ADC before the digital
+    carry-save accumulation in the LIF unit (paper Fig. 4). This is the
+    *reference* (pure-jnp) implementation; the Pallas kernel in
+    ``kernels/crossbar.py`` computes the same function.
+    """
+    din = w.shape[0]
+    r = cfg.crossbar_rows
+    n_blocks = -(-din // r)
+    pad = n_blocks * r - din
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((*x.shape[:-1], pad), x.dtype)], -1)
+        w = jnp.concatenate([w, jnp.zeros((pad, w.shape[1]), w.dtype)], 0)
+    clip = adc_clip_of(w, cfg)
+    w_max = w_max_of(w)
+    out = jnp.zeros((*x.shape[:-1], w.shape[1]), x.dtype)
+    for b in range(n_blocks):
+        part = x[..., b * r:(b + 1) * r] @ w[b * r:(b + 1) * r, :]
+        if key is not None:
+            key, sub = jax.random.split(key)
+            part = part + cfg.sigma_read * w_max * jax.random.normal(
+                sub, part.shape)
+        out = out + adc_quantize(part, clip, cfg)
+    return out

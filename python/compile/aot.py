@@ -1,0 +1,185 @@
+"""AOT bridge: lower trained Xpikeformer models to HLO text artifacts.
+
+Emits, for every trained ``xpike`` checkpoint and requested batch size:
+
+* ``<model>_b<B>.hlo.txt``   — HLO *text* of the full T_max-step inference
+  graph (Pallas SSA + crossbar kernels, interpret-lowered). Text, not
+  ``.serialize()``: jax >= 0.5 emits 64-bit instruction ids which
+  xla_extension 0.5.1 rejects; the text parser reassigns ids.
+* ``<model>_b<B>.manifest.json`` — input ordering (params -> x -> seed),
+  shapes, analog-parameter flags, output shape, config echo.
+* ``<model>.params.bin``     — checkpoint in the XPKT container.
+* ``<model>_b<B>.golden.bin``— input + expected logits for a fixed seed
+  (the Rust runtime's numerical-parity test).
+
+Plus the shared eval datasets (``*_eval.bin``) the Rust accuracy harness
+consumes — the *same* fixed synthetic eval sets ``train.evaluate`` uses.
+
+The lowered function signature is ``fn(*params, x, seed) -> (logits,)``
+with ``logits [T_max, B, classes]``: parameters are *inputs*, so the Rust
+AIMC simulator can quantize/noise/drift them per run (DESIGN.md §3).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data, model, params_io
+from .configs import CONFIGS, ModelConfig
+
+GOLDEN_SEED = 123
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def inference_fn(cfg: ModelConfig, names: list[str]):
+    """Build ``fn(*params, x, seed)`` closing over the static config."""
+
+    def fn(*args):
+        params = dict(zip(names, args[:-2]))
+        x, seed = args[-2], args[-1]
+        key = jax.random.PRNGKey(seed)
+        logits = model.forward(params, x, key, cfg, variant="pallas",
+                               t_steps=cfg.t_max)
+        return (logits,)
+
+    return fn
+
+
+def x_shape(cfg: ModelConfig, batch: int) -> tuple[int, ...]:
+    if cfg.kind == "vit":
+        return (batch, 3, 32, 32)
+    return (batch, cfg.n_tokens, cfg.in_feat)
+
+
+def export_model(cfg: ModelConfig, out_dir: str, batch: int,
+                 force: bool = False) -> None:
+    ckpt = os.path.join(out_dir, "checkpoints", f"{cfg.name}.params.bin")
+    if not os.path.exists(ckpt):
+        print(f"  !! no checkpoint for {cfg.name}; skipping")
+        return
+    tag = f"{cfg.name}_b{batch}"
+    hlo_path = os.path.join(out_dir, f"{tag}.hlo.txt")
+    man_path = os.path.join(out_dir, f"{tag}.manifest.json")
+    if not force and os.path.exists(hlo_path) and os.path.exists(man_path) \
+            and os.path.getmtime(hlo_path) > os.path.getmtime(ckpt):
+        print(f"  {tag}: up to date")
+        return
+
+    specs = model.param_specs(cfg)
+    names = [n for n, _, _ in specs]
+    fn = inference_fn(cfg, names)
+    example = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s, _ in specs]
+    example.append(jax.ShapeDtypeStruct(x_shape(cfg, batch), jnp.float32))
+    example.append(jax.ShapeDtypeStruct((), jnp.uint32))
+    lowered = jax.jit(fn).lower(*example)
+    text = to_hlo_text(lowered)
+    with open(hlo_path, "w") as f:
+        f.write(text)
+
+    params = params_io.load(ckpt)
+    # Golden parity vector for the Rust runtime test.
+    gx, gy = data.batch_for(cfg, jax.random.PRNGKey(31337), batch)
+    glogits = np.asarray(fn(*[jnp.asarray(params[n]) for n in names],
+                            jnp.asarray(gx),
+                            jnp.uint32(GOLDEN_SEED))[0])
+    params_io.save(os.path.join(out_dir, f"{tag}.golden.bin"), {
+        "x": np.asarray(gx, np.float32),
+        "labels": np.asarray(gy, np.int32),
+        "seed": np.asarray([GOLDEN_SEED], np.uint32),
+        "logits": glogits.astype(np.float32),
+    })
+
+    manifest = {
+        "name": tag,
+        "model": cfg.name,
+        "kind": cfg.kind,
+        "batch": batch,
+        "hlo": f"{tag}.hlo.txt",
+        "params_bin": f"checkpoints/{cfg.name}.params.bin",
+        "golden": f"{tag}.golden.bin",
+        "config": {
+            "depth": cfg.depth, "dim": cfg.dim, "heads": cfg.heads,
+            "n_tokens": cfg.n_tokens, "in_feat": cfg.in_feat,
+            "classes": cfg.classes, "t_max": cfg.t_max,
+            "t_train": cfg.t_steps, "mlp_ratio": cfg.mlp_ratio,
+            "causal": cfg.causal, "nt": cfg.nt, "nr": cfg.nr,
+            "size": cfg.size_tag,
+        },
+        "inputs": [
+            {"name": n, "kind": "param", "shape": list(s), "analog": a}
+            for n, s, a in specs
+        ] + [
+            {"name": "x", "kind": "data",
+             "shape": list(x_shape(cfg, batch)), "analog": False},
+            {"name": "seed", "kind": "seed", "shape": [], "analog": False},
+        ],
+        "output_shape": [cfg.t_max, batch, cfg.classes],
+    }
+    with open(man_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"  wrote {tag} ({len(text)/1e6:.1f} MB hlo)", flush=True)
+
+
+def export_eval_sets(out_dir: str, n_image: int = 512, n_mimo: int = 512,
+                     batch: int = 64) -> None:
+    """The fixed eval sets (same sampling scheme as ``train.evaluate``)."""
+
+    def gen(cfg, n):
+        xs, ys = [], []
+        for i in range(n // batch):
+            bk = jax.random.fold_in(jax.random.PRNGKey(9000), i)
+            x, y = data.batch_for(cfg, bk, batch)
+            xs.append(np.asarray(x, np.float32))
+            ys.append(np.asarray(y, np.int32))
+        return np.concatenate(xs), np.concatenate(ys)
+
+    jobs = {
+        "image_eval.bin": CONFIGS["vit_xpike_2-64"],
+        "mimo_2x2_eval.bin": CONFIGS["gpt_xpike_2-64_2x2"],
+        "mimo_4x4_eval.bin": CONFIGS["gpt_xpike_2-64_4x4"],
+    }
+    for fname, cfg in jobs.items():
+        path = os.path.join(out_dir, fname)
+        if os.path.exists(path):
+            continue
+        n = n_image if cfg.kind == "vit" else n_mimo
+        x, y = gen(cfg, n)
+        params_io.save(path, {"x": x, "labels": y})
+        print(f"  wrote {fname} x{x.shape}", flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--batches", type=int, nargs="*", default=[1, 32])
+    ap.add_argument("--models", nargs="*", default=None,
+                    help="config names (default: every xpike config)")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    export_eval_sets(args.out)
+    names = args.models or [n for n, c in CONFIGS.items()
+                            if c.impl == "xpike"]
+    for name in names:
+        cfg = CONFIGS[name]
+        for b in args.batches:
+            export_model(cfg, args.out, b, force=args.force)
+    print("aot done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+"""Model-size presets shared by training, AOT lowering, and the manifests.
+
+Two families, mirroring the paper's evaluation (§VI):
+
+* ``vit_*``  — encoder-only spiking ViT, image classification (Table III);
+* ``gpt_*``  — decoder-only spiking GPT, in-context MIMO symbol detection
+  (Table IV), 18 query-answer context pairs.
+
+The paper trains 4-384 … 8-768 models on CIFAR/ImageNet; we train scaled
+presets (``*-64``, ``*-128``, ``*-192``) from scratch on synthetic data —
+the 'depth-dim' naming convention is kept. Paper-scale dimensions are still
+used (analytically) by the Rust energy model; see ``rust/src/config``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+IMAGE_SIZE = 32
+IMAGE_CHANNELS = 3
+PATCH = 8
+N_IMAGE_CLASSES = 10
+ICL_PAIRS = 18  # context query-answer pairs (paper §VI-A Task 2)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture + task description of one trainable model."""
+
+    name: str
+    kind: str        # "vit" (encoder) | "gpt" (decoder)
+    impl: str        # "ann" | "snn" (Spikformer-style LIF) | "xpike" (BNL)
+    depth: int
+    dim: int
+    heads: int
+    n_tokens: int
+    in_feat: int     # per-token input feature width
+    classes: int
+    t_steps: int     # spike-encoding length used in *training*
+    t_max: int       # max T evaluated (prefix-averaging gives all T<=t_max)
+    mlp_ratio: int = 2
+    # gpt task parameters (0 for vit)
+    nt: int = 0      # transmit antennas
+    nr: int = 0      # receive antennas
+    snr_db: float = 10.0
+
+    @property
+    def causal(self) -> bool:
+        return self.kind == "gpt"
+
+    @property
+    def d_head(self) -> int:
+        assert self.dim % self.heads == 0
+        return self.dim // self.heads
+
+    @property
+    def size_tag(self) -> str:
+        return f"{self.depth}-{self.dim}"
+
+
+def vit(depth: int, dim: int, heads: int, impl: str,
+        t_steps: int = 8, t_max: int = 16) -> ModelConfig:
+    n_patches = (IMAGE_SIZE // PATCH) ** 2
+    return ModelConfig(
+        name=f"vit_{impl}_{depth}-{dim}", kind="vit", impl=impl,
+        depth=depth, dim=dim, heads=heads, n_tokens=n_patches,
+        in_feat=PATCH * PATCH * IMAGE_CHANNELS, classes=N_IMAGE_CLASSES,
+        t_steps=t_steps, t_max=t_max)
+
+
+def gpt(depth: int, dim: int, heads: int, impl: str, nt: int, nr: int,
+        t_steps: int = 8, t_max: int = 16, snr_db: float = 10.0,
+) -> ModelConfig:
+    n_tokens = ICL_PAIRS + 1  # pair-joint tokens + query
+    return ModelConfig(
+        name=f"gpt_{impl}_{depth}-{dim}_{nt}x{nr}", kind="gpt", impl=impl,
+        depth=depth, dim=dim, heads=heads, n_tokens=n_tokens,
+        in_feat=2 * nr + 2 * nt, classes=4 ** nt,
+        t_steps=t_steps, t_max=t_max, nt=nt, nr=nr, snr_db=snr_db)
+
+
+# Scaled counterparts of the paper's size grid (Table III: 4-384/6-512/8-768;
+# Table IV: 4-256/8-512). Three implementations per size, as in the paper.
+VIT_SIZES = [(2, 64, 2), (4, 128, 4)]
+GPT_SIZES = [(2, 64, 2), (4, 128, 4)]
+ANTENNAS = [(2, 2), (4, 4)]
+IMPLS = ["ann", "snn", "xpike"]
+
+
+def all_configs() -> dict[str, ModelConfig]:
+    """Every model the accuracy experiments (Tables III/IV) train."""
+    out: dict[str, ModelConfig] = {}
+    for d, w, h in VIT_SIZES:
+        for impl in IMPLS:
+            c = vit(d, w, h, impl)
+            out[c.name] = c
+    for d, w, h in GPT_SIZES:
+        for nt, nr in ANTENNAS:
+            for impl in IMPLS:
+                c = gpt(d, w, h, impl, nt, nr)
+                out[c.name] = c
+    return out
+
+
+CONFIGS = all_configs()

@@ -1,0 +1,147 @@
+"""Synthetic workload generators (datasets the paper's tasks gate on).
+
+Task 1 substitute (paper: CIFAR-10 / ImageNet-1K): a procedural 10-class
+image task — each class is a fixed smooth random texture prototype; samples
+add pixel noise and a random circular shift. Classifiable by a small ViT
+but not saturating, leaving headroom to observe hardware-noise degradation.
+
+Task 2 (paper §VI-A Task 2, from [30]): in-context-learning MIMO symbol
+detection. Fully synthetic in the paper as well, regenerated here exactly:
+per sequence a Rayleigh channel H is drawn; 18 context (received y,
+transmitted x) pairs plus one query y are tokenized; the model classifies
+the query's transmitted QPSK symbol tuple (4^Nt classes). Mirrored
+bit-exactly by ``rust/src/workloads`` via the exported eval sets.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ICL_PAIRS, IMAGE_CHANNELS, IMAGE_SIZE, ModelConfig
+
+# ---------------------------------------------------------------------------
+# Task 1: procedural image classification
+# ---------------------------------------------------------------------------
+
+_PROTO_SEED = 1234  # class prototypes are a fixed, public part of the task
+NOISE_STD = 0.55
+MAX_SHIFT = 5
+
+
+def class_prototypes(n_classes: int = 10) -> jax.Array:
+    """``[C, ch, H, W]`` smooth textures in [0,1] (low-res noise upsampled)."""
+    key = jax.random.PRNGKey(_PROTO_SEED)
+    low = jax.random.normal(
+        key, (n_classes, IMAGE_CHANNELS, 4, 4)) * 1.6
+    protos = jax.image.resize(
+        low, (n_classes, IMAGE_CHANNELS, IMAGE_SIZE, IMAGE_SIZE), "bilinear")
+    return jax.nn.sigmoid(protos)
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def image_batch(key: jax.Array, n: int, n_classes: int = 10):
+    """Sample ``(x [n,ch,32,32] in [0,1], y [n] int32)``."""
+    protos = class_prototypes(n_classes)
+    ky, kn, ks = jax.random.split(key, 3)
+    y = jax.random.randint(ky, (n,), 0, n_classes)
+    x = protos[y] + NOISE_STD * jax.random.normal(
+        kn, (n, IMAGE_CHANNELS, IMAGE_SIZE, IMAGE_SIZE))
+    shifts = jax.random.randint(ks, (n, 2), -MAX_SHIFT, MAX_SHIFT + 1)
+
+    def shift_one(img, s):
+        return jnp.roll(img, (s[0], s[1]), axis=(1, 2))
+
+    x = jax.vmap(shift_one)(x, shifts)
+    return jnp.clip(x, 0.0, 1.0), y
+
+
+# ---------------------------------------------------------------------------
+# Task 2: ICL MIMO symbol detection
+# ---------------------------------------------------------------------------
+
+def qpsk_symbols(idx: jax.Array) -> jax.Array:
+    """Symbol index 0..3 -> complex QPSK point (Gray-free binary map).
+
+    bit0 -> real sign, bit1 -> imag sign: s = ((1-2 b0) + j(1-2 b1))/sqrt2.
+    """
+    b0 = idx % 2
+    b1 = idx // 2
+    re = (1.0 - 2.0 * b0) / math.sqrt(2.0)
+    im = (1.0 - 2.0 * b1) / math.sqrt(2.0)
+    return re + 1j * im
+
+
+def class_to_bits(cls: jax.Array, nt: int) -> jax.Array:
+    """Class index (base-4 digit per antenna) -> ``[.., 2*nt]`` bits."""
+    bits = []
+    for _ in range(nt):
+        idx = cls % 4
+        bits.append(idx % 2)
+        bits.append(idx // 2)
+        cls = cls // 4
+    return jnp.stack(bits, axis=-1)
+
+
+def _y_features(y: jax.Array) -> jax.Array:
+    """Complex received vector -> [0,1] features (soft-compressed I/Q)."""
+    feats = jnp.concatenate([y.real, y.imag], axis=-1)
+    return jax.nn.sigmoid(1.5 * feats)
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2, 3, 4, 5))
+def mimo_batch(key: jax.Array, n: int, nt: int, nr: int,
+               snr_db: float = 10.0, n_pairs: int = ICL_PAIRS):
+    """Sample ``(tokens [n, 2*pairs+1, 2nr+2nt], labels [n] int32)``.
+
+    Per sequence: H ~ CN(0, 1/nt) entries (fixed over the sequence — the
+    ICL premise), context pairs (y_i, x_i), final query y_q. y-tokens carry
+    I/Q features in the first 2*nr slots; x-tokens carry the transmitted
+    bits in the last 2*nt slots; unused slots are 0.5 (uninformative rate).
+    """
+    kh, kx, kn = jax.random.split(key, 3)
+    n_seq = n_pairs + 1
+    hr = jax.random.normal(kh, (n, nr, nt)) / math.sqrt(2.0 * nt)
+    khi = jax.random.fold_in(kh, 1)
+    hi = jax.random.normal(khi, (n, nr, nt)) / math.sqrt(2.0 * nt)
+    h = hr + 1j * hi
+    cls = jax.random.randint(kx, (n, n_seq), 0, 4 ** nt)
+    # Per-antenna symbol indices from the class code.
+    idx = jnp.stack([(cls // (4 ** a)) % 4 for a in range(nt)], -1)
+    x_sym = qpsk_symbols(idx)  # [n, n_seq, nt] complex
+    noise_std = math.sqrt(10.0 ** (-snr_db / 10.0) / 2.0)
+    nre = jax.random.normal(kn, (n, n_seq, nr))
+    nim = jax.random.normal(jax.random.fold_in(kn, 1), (n, n_seq, nr))
+    y = jnp.einsum("bra,bsa->bsr", h, x_sym) + noise_std * (nre + 1j * nim)
+
+    y_feat = _y_features(y)  # [n, n_seq, 2nr]
+    x_bits = class_to_bits(cls, nt).astype(jnp.float32)  # [n, n_seq, 2nt]
+
+    # Pair-joint prompting: one token carries a (received y, transmitted
+    # x) pair; the query token carries only its y (x slots at the
+    # uninformative 0.5). Attention then implements a kernel-regression
+    # vote: the query attends to context tokens with similar y and reads
+    # their bits — the ICL mechanism of [3]/[30].
+    dim = 2 * nr + 2 * nt
+    tokens = jnp.full((n, n_seq, dim), 0.5, jnp.float32)
+    tokens = tokens.at[:, :, :2 * nr].set(y_feat)
+    tokens = tokens.at[:, :n_pairs, 2 * nr:].set(x_bits[:, :n_pairs])
+    labels = cls[:, -1]
+    return tokens, labels
+
+
+def batch_for(cfg: ModelConfig, key: jax.Array, n: int):
+    """Task-appropriate batch for a model config."""
+    if cfg.kind == "vit":
+        return image_batch(key, n, cfg.classes)
+    return mimo_batch(key, n, cfg.nt, cfg.nr, cfg.snr_db)
+
+
+def ber_from_predictions(pred_cls, true_cls, nt: int) -> jax.Array:
+    """Bit error rate between predicted and true class codes."""
+    pb = class_to_bits(pred_cls, nt)
+    tb = class_to_bits(true_cls, nt)
+    return jnp.mean((pb != tb).astype(jnp.float32))

@@ -1,0 +1,6 @@
+"""L1 Pallas kernels (interpret-mode) + pure-jnp reference oracles."""
+
+from . import ref  # noqa: F401
+from .crossbar import crossbar_matmul  # noqa: F401
+from .lif import lif  # noqa: F401
+from .ssa import ssa  # noqa: F401

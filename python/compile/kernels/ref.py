@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for the Pallas kernels — the CORE correctness signal.
+
+Each function here is the mathematical definition of the corresponding
+Pallas kernel in this package; ``python/tests/test_kernels.py`` asserts
+bit-exact (binary outputs) or allclose (analog sums) agreement across a
+hypothesis-driven sweep of shapes.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ssa_ref(q, k, v, u_s, u_a, causal: bool = False):
+    """Stochastic spiking attention, Algorithm 1, one head, one timestep.
+
+    Args:
+      q, k, v: ``[N, dk]`` binary {0,1} f32 (token-major, transposed w.r.t.
+        the paper's ``d_K x N`` but identical math).
+      u_s: ``[N, N]`` uniforms for the score Bernoulli encoders.
+      u_a: ``[N, dk]`` uniforms for the output Bernoulli encoders.
+      causal: apply the decoder mask (paper Algorithm 1, step 7).
+
+    Returns ``[N, dk]`` binary attention output ``A``.
+    """
+    n, dk = q.shape
+    # Step 5: S ~ Bern( (1/dk) sum_d Q_dn AND K_dn' ). For {0,1} operands
+    # the AND-popcount is exactly a matmul.
+    scores = q @ k.T / float(dk)
+    s = (u_s < scores).astype(jnp.float32)
+    if causal:
+        mask = jnp.tril(jnp.ones((n, n), jnp.float32))
+        s = s * mask
+    # Step 9: A ~ Bern( (1/N) sum_n' S AND V ).
+    probs = s @ v / float(n)
+    return (u_a < probs).astype(jnp.float32)
+
+
+def lif_ref(i_seq, beta: float = 0.5, vth: float = 1.0):
+    """LIF over a leading time axis, hard reset: ``[T, M] -> [T, M]``."""
+    t_steps = i_seq.shape[0]
+    v = jnp.zeros(i_seq.shape[1:], i_seq.dtype)
+    outs = []
+    for t in range(t_steps):
+        v = beta * v + i_seq[t]
+        s = (v >= vth).astype(i_seq.dtype)
+        v = v * (1.0 - s)
+        outs.append(s)
+    return jnp.stack(outs)
+
+
+def crossbar_ref(x, w, adc_bits: int = 5, rows: int = 128,
+                 clip: float | None = None):
+    """Row-block-wise quantized MVM: ``[M, Din] @ [Din, Dout]``.
+
+    Each 128-row block's partial sum is ADC-quantized (symmetric,
+    ``adc_bits``) before digital accumulation — the paper's 'no non-binary
+    pre-activation storage' dataflow. ``clip=None`` derives the ADC
+    full-scale from the weights like ``analog.adc_clip_of``.
+    """
+    din, dout = w.shape
+    n_blocks = -(-din // rows)
+    pad = n_blocks * rows - din
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((*x.shape[:-1], pad), x.dtype)], -1)
+        w = jnp.concatenate([w, jnp.zeros((pad, dout), w.dtype)], 0)
+    if clip is None:
+        clip = 4.0 * jnp.sqrt(float(rows)) * jnp.sqrt(jnp.mean(w * w) + 1e-12)
+    levels = 2 ** (adc_bits - 1) - 1
+    step = clip / levels
+    out = jnp.zeros((*x.shape[:-1], dout), x.dtype)
+    for b in range(n_blocks):
+        part = x[..., b * rows:(b + 1) * rows] @ w[b * rows:(b + 1) * rows, :]
+        out = out + jnp.clip(jnp.round(part / step), -levels, levels) * step
+    return out

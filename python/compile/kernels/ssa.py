@@ -1,0 +1,67 @@
+"""Pallas kernel: stochastic spiking attention (SSA), paper Algorithm 1.
+
+Hardware adaptation (DESIGN.md §3): the paper's ASIC streams K/V across an
+N x N array of stochastic attention cells over d_K cycles, computing the
+AND-popcount serially per cell. On a TPU-style target the same reduction is
+one binary matmul on the MXU — a {0,1} x {0,1} matmul *is* the AND-popcount
+— and the Bernoulli encoders become vectorized compares against uniform
+draws resident in VMEM. Q/K/V/U tiles are staged through VMEM via
+BlockSpec; one grid step processes one (batch, head) pair so score matrices
+(N <= 128 for the paper's edge workloads => N^2 <= 16K f32 = 64 KiB) stay
+in VMEM and are never written to HBM — the Pallas analogue of the ASIC's
+'no intermediate storage' dataflow.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO with identical numerics.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+@functools.partial(jax.jit, static_argnames=("causal",))
+def ssa(q, k, v, u_s, u_a, causal: bool = False):
+    """SSA over ``[B, H, N, dk]`` binary tensors; one grid step per (b,h).
+
+    ``u_s [B,H,N,N]`` / ``u_a [B,H,N,dk]`` are the uniform draws for the
+    score/output Bernoulli encoders (the LFSR array of the SSA engine).
+    Returns binary ``A [B,H,N,dk]``; bit-exact vs ``ref.ssa_ref``.
+    """
+    b, h, n, dk = q.shape
+    qf = q.reshape(b * h, n, dk)
+    kf = k.reshape(b * h, n, dk)
+    vf = v.reshape(b * h, n, dk)
+    usf = u_s.reshape(b * h, n, n)
+    uaf = u_a.reshape(b * h, n, dk)
+    tok_spec = pl.BlockSpec((1, n, dk), lambda i: (i, 0, 0))
+    sc_spec = pl.BlockSpec((1, n, n), lambda i: (i, 0, 0))
+
+    def kernel(q_ref, k_ref, v_ref, us_ref, ua_ref, o_ref):
+        qb = q_ref[0]
+        kb = k_ref[0]
+        vb = v_ref[0]
+        # Step 5: AND-popcount == binary matmul (MXU-friendly formulation).
+        scores = jnp.dot(qb, kb.T, preferred_element_type=jnp.float32)
+        s = (us_ref[0] < scores * (1.0 / dk)).astype(jnp.float32)
+        if causal:
+            row = jax.lax.broadcasted_iota(jnp.int32, (n, n), 0)
+            col = jax.lax.broadcasted_iota(jnp.int32, (n, n), 1)
+            s = jnp.where(col <= row, s, 0.0)
+        # Step 9: scores x values, again a binary matmul, then Bernoulli.
+        probs = jnp.dot(s, vb, preferred_element_type=jnp.float32) * (1.0 / n)
+        o_ref[0] = (ua_ref[0] < probs).astype(jnp.float32)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h,),
+        in_specs=[tok_spec, tok_spec, tok_spec, sc_spec, tok_spec],
+        out_specs=tok_spec,
+        out_shape=jax.ShapeDtypeStruct((b * h, n, dk), jnp.float32),
+        interpret=True,
+    )(qf, kf, vf, usf, uaf)
+    return out.reshape(b, h, n, dk)

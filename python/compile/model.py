@@ -1,0 +1,357 @@
+"""L2 models: spiking ViT / spiking GPT (+ ANN and Spikformer baselines).
+
+Implements the three columns of paper Table I:
+
+* ``impl="ann"``   — vanilla transformer (softmax attention, GELU FFN,
+  LayerNorm): the *ANN-ViT/GPT (GPU)* baseline.
+* ``impl="snn"``   — Spikformer-style spiking transformer [13]:
+  LIF(LIF(QK^T)V) attention, LIF FFN, no softmax/LayerNorm: the
+  *SNN-ViT/GPT (GPU)* baseline.
+* ``impl="xpike"`` — Xpikeformer: BNL(BNL(QK^T)V) stochastic spiking
+  attention, LIF FFN, AIMC crossbar linear layers.
+
+All spiking models consume Bernoulli-rate-coded inputs, run a
+``lax.scan`` over the spike-encoding time axis with per-neuron membrane
+state in the carry, and return per-timestep logits ``[T, B, C]`` so the
+minimum-encoding-length sweep (Tables III/IV report accuracy at minimum T)
+is a *prefix mean* over one forward pass. ANN returns ``[1, B, C]``.
+
+Forward ``variant`` selects the hardware fidelity of linear layers:
+
+* ``ideal``          — plain matmul (CT training, GPU baselines);
+* ``hwat``           — fresh PCM program noise + read noise + ADC every
+  call (hardware-aware training, paper §V-A);
+* ``analog_frozen``  — weights are *already* programmed/drifted by the
+  caller (python eval or the Rust AIMC simulator); apply read noise + ADC;
+* ``pallas``         — the AOT inference path: Pallas crossbar + SSA
+  kernels, read noise applied post-accumulation (documented approximation).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from . import analog, snn
+from .configs import ModelConfig
+from .kernels import crossbar_matmul as xbar_kernel
+from .kernels import ssa as ssa_kernel
+
+VARIANTS = ("ideal", "hwat", "analog_frozen", "pallas")
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def param_specs(cfg: ModelConfig) -> list[tuple[str, tuple[int, ...], bool]]:
+    """Ordered ``(name, shape, analog)`` — the manifest's source of truth.
+
+    ``analog=True`` parameters are weight matrices mapped onto PCM
+    crossbars; the Rust AIMC simulator quantizes/noises/drifts exactly
+    these. Everything else stays digital.
+    """
+    d, f, n, c = cfg.dim, cfg.in_feat, cfg.n_tokens, cfg.classes
+    hid = cfg.mlp_ratio * d
+    specs: list[tuple[str, tuple[int, ...], bool]] = []
+    if cfg.impl == "ann":
+        specs.append(("pos", (n, d), False))
+    else:
+        specs.append(("pos", (n, f), False))
+    specs.append(("embed.w", (f, d), True))
+    for layer in range(cfg.depth):
+        p = f"blocks.{layer}"
+        for w in ("wq", "wk", "wv", "wo"):
+            specs.append((f"{p}.{w}", (d, d), True))
+        specs.append((f"{p}.w1", (d, hid), True))
+        specs.append((f"{p}.w2", (hid, d), True))
+        if cfg.impl == "ann":
+            for ln in ("ln1", "ln2"):
+                specs.append((f"{p}.{ln}.g", (d,), False))
+                specs.append((f"{p}.{ln}.b", (d,), False))
+    if cfg.impl == "ann":
+        specs.append(("ln.g", (d,), False))
+        specs.append(("ln.b", (d,), False))
+    specs.append(("head.w", (d, c), True))
+    return specs
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> dict[str, jax.Array]:
+    """Fan-in-scaled normal init.
+
+    Spiking nets get extra drive: binary inputs with firing rate p<1
+    deliver ~sqrt(p) of the l2 mass a dense activation would, so the
+    membrane needs a larger gain to reach threshold.
+    """
+    gain = 1.0 if cfg.impl == "ann" else 2.0
+    params = {}
+    for name, shape, _ in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name == "pos":
+            params[name] = 0.1 * jax.random.normal(sub, shape)
+        elif name.endswith(".g"):
+            params[name] = jnp.ones(shape)
+        elif name.endswith(".b"):
+            params[name] = jnp.zeros(shape)
+        else:
+            fan_in = shape[0]
+            params[name] = gain / math.sqrt(fan_in) * jax.random.normal(
+                sub, shape)
+    return params
+
+
+def analog_param_names(cfg: ModelConfig) -> list[str]:
+    return [n for n, _, a in param_specs(cfg) if a]
+
+
+def program_params(params, key, cfg: ModelConfig,
+                   acfg: analog.AnalogConfig = analog.DEFAULT):
+    """One-shot PCM programming of all crossbar weights (quant + noise)."""
+    out = dict(params)
+    for name in analog_param_names(cfg):
+        key, sub = jax.random.split(key)
+        out[name] = analog.program(params[name], sub, acfg)
+    return out
+
+
+def quantize_params_int8(params, cfg: ModelConfig):
+    """Per-tensor symmetric INT8 weight quantization (GPU-baseline eval)."""
+    out = dict(params)
+    for name in analog_param_names(cfg):
+        w = params[name]
+        step = jnp.maximum(jnp.max(jnp.abs(w)), 1e-6) / 127.0
+        out[name] = jnp.clip(jnp.round(w / step), -127, 127) * step
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Input featurization
+# ---------------------------------------------------------------------------
+
+def input_features(x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Raw task input -> per-token features in [0,1] ``[B, N, F]``.
+
+    vit: ``x [B, C, H, W]`` pixels in [0,1] -> non-overlapping patches.
+    gpt: ``x [B, N, F]`` already tokenized by the workload generator.
+    """
+    if cfg.kind == "vit":
+        b, c, h, w = x.shape
+        p = int(math.isqrt(cfg.in_feat // c))
+        x = x.reshape(b, c, h // p, p, w // p, p)
+        x = x.transpose(0, 2, 4, 1, 3, 5)  # [B, gh, gw, C, p, p]
+        return x.reshape(b, cfg.n_tokens, cfg.in_feat)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Linear-layer dispatch (the AIMC engine, at four fidelity levels)
+# ---------------------------------------------------------------------------
+
+class _Linear:
+    """Per-forward linear dispatcher; derives a fresh key per call."""
+
+    def __init__(self, params, variant: str, key: jax.Array,
+                 acfg: analog.AnalogConfig):
+        assert variant in VARIANTS, variant
+        self.params = params
+        self.variant = variant
+        self.key = key
+        self.acfg = acfg
+        self.calls = 0
+
+    def _next_key(self) -> jax.Array:
+        self.calls += 1
+        return jax.random.fold_in(self.key, self.calls)
+
+    def __call__(self, name: str, x: jax.Array) -> jax.Array:
+        w = self.params[name]
+        if self.variant == "ideal":
+            return x @ w
+        if self.variant == "hwat":
+            kp, kr = jax.random.split(self._next_key())
+            w = analog.program(w, kp, self.acfg)
+            return analog.crossbar_matmul(x, w, kr, self.acfg)
+        if self.variant == "analog_frozen":
+            return analog.crossbar_matmul(x, w, self._next_key(), self.acfg)
+        # pallas: AOT inference path.
+        lead = x.shape[:-1]
+        flat = x.reshape(-1, x.shape[-1])
+        clip = analog.adc_clip_of(w, self.acfg)
+        out = xbar_kernel(flat, w, clip, adc_bits=self.acfg.adc_bits,
+                          rows=self.acfg.crossbar_rows)
+        # Read noise, applied post-accumulation (per-block in hardware; the
+        # summed distribution is identical, quantization interaction is
+        # second-order — see DESIGN.md).
+        n_blocks = -(-w.shape[0] // self.acfg.crossbar_rows)
+        sigma = self.acfg.sigma_read * analog.w_max_of(w) * math.sqrt(
+            float(n_blocks))
+        out = out + sigma * jax.random.normal(self._next_key(), out.shape)
+        return out.reshape(*lead, w.shape[1])
+
+
+# ---------------------------------------------------------------------------
+# Spiking forward (snn + xpike)
+# ---------------------------------------------------------------------------
+
+def _init_state(cfg: ModelConfig, batch: int) -> dict[str, jax.Array]:
+    """Membrane potentials carried across timesteps by ``lax.scan``."""
+    b, n, d, h = batch, cfg.n_tokens, cfg.dim, cfg.heads
+    hid, dk = cfg.mlp_ratio * d, cfg.d_head
+    st = {"emb": jnp.zeros((b, n, d))}
+    for layer in range(cfg.depth):
+        p = f"blocks.{layer}"
+        for nm in ("q", "k", "v", "o", "f"):
+            st[f"{p}.{nm}"] = jnp.zeros((b, n, d))
+        st[f"{p}.h"] = jnp.zeros((b, n, hid))
+        if cfg.impl == "snn":
+            st[f"{p}.s"] = jnp.zeros((b, h, n, n))
+            st[f"{p}.a"] = jnp.zeros((b, h, n, dk))
+    return st
+
+
+def _split_heads(x, cfg):  # [B,N,D] -> [B,H,N,dk]
+    b, n, _ = x.shape
+    return x.reshape(b, n, cfg.heads, cfg.d_head).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):  # [B,H,N,dk] -> [B,N,D]
+    b, h, n, dk = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, n, h * dk)
+
+
+def _lif(state, name, i):
+    v, s = snn.lif_step(state[name], i)
+    state[name] = v
+    return s
+
+
+def _snn_step(params, feats, state, key, cfg: ModelConfig, lin: _Linear):
+    """One spike-encoding timestep of the full network."""
+    b = feats.shape[0]
+    n, dk, h = cfg.n_tokens, cfg.d_head, cfg.heads
+    uidx = 0
+
+    def unif(shape):
+        nonlocal uidx
+        uidx += 1
+        return jax.random.uniform(jax.random.fold_in(key, 1000 + uidx), shape)
+
+    # Spike-encoding layer (paper Fig. 1b): Bernoulli rate coding.
+    s_in = snn.bernoulli_ste(feats, unif(feats.shape))
+    x = _lif(state, "emb", lin("embed.w", s_in))
+
+    for layer in range(cfg.depth):
+        p = f"blocks.{layer}"
+        q = _split_heads(_lif(state, f"{p}.q", lin(f"{p}.wq", x)), cfg)
+        k = _split_heads(_lif(state, f"{p}.k", lin(f"{p}.wk", x)), cfg)
+        v = _split_heads(_lif(state, f"{p}.v", lin(f"{p}.wv", x)), cfg)
+
+        if cfg.impl == "xpike":
+            u_s = unif((b, h, n, n))
+            u_a = unif((b, h, n, dk))
+            if lin.variant == "pallas":
+                a = ssa_kernel(q, k, v, u_s, u_a, causal=cfg.causal)
+            else:
+                scores = jnp.einsum("bhnd,bhmd->bhnm", q, k) / dk
+                s = snn.bernoulli_ste(scores, u_s)
+                if cfg.causal:
+                    s = s * jnp.tril(jnp.ones((n, n)))
+                a = snn.bernoulli_ste(jnp.einsum(
+                    "bhnm,bhmd->bhnd", s, v) / n, u_a)
+        else:  # Spikformer-style stateful LIF attention [13]
+            scores = jnp.einsum("bhnd,bhmd->bhnm", q, k) / dk
+            s = _lif(state, f"{p}.s", scores * 4.0)
+            if cfg.causal:
+                s = s * jnp.tril(jnp.ones((n, n)))
+            a = _lif(state, f"{p}.a",
+                     jnp.einsum("bhnm,bhmd->bhnd", s, v) / n * 4.0)
+
+        o = _lif(state, f"{p}.o", lin(f"{p}.wo", _merge_heads(a)))
+        x = snn.spike_or(x, o)
+        hsp = _lif(state, f"{p}.h", lin(f"{p}.w1", x))
+        f = _lif(state, f"{p}.f", lin(f"{p}.w2", hsp))
+        x = snn.spike_or(x, f)
+
+    logits = lin("head.w", x)  # [B, N, C]: binary-input crossbar, then
+    if cfg.kind == "vit":      # digital pooling (mean commutes with matmul)
+        return jnp.mean(logits, axis=1), state
+    return logits[:, -1, :], state
+
+
+# ---------------------------------------------------------------------------
+# ANN forward (baseline)
+# ---------------------------------------------------------------------------
+
+def _layernorm(x, g, b):
+    mu = jnp.mean(x, -1, keepdims=True)
+    var = jnp.var(x, -1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-6) * g + b
+
+
+def _ann_forward(params, x, cfg: ModelConfig, lin: _Linear):
+    feats = input_features(x, cfg)
+    h = lin("embed.w", feats) + params["pos"]
+    n = cfg.n_tokens
+    for layer in range(cfg.depth):
+        p = f"blocks.{layer}"
+        y = _layernorm(h, params[f"{p}.ln1.g"], params[f"{p}.ln1.b"])
+        q = _split_heads(lin(f"{p}.wq", y), cfg)
+        k = _split_heads(lin(f"{p}.wk", y), cfg)
+        v = _split_heads(lin(f"{p}.wv", y), cfg)
+        scores = jnp.einsum("bhnd,bhmd->bhnm", q, k) / math.sqrt(cfg.d_head)
+        if cfg.causal:
+            scores = jnp.where(jnp.tril(jnp.ones((n, n))) > 0, scores, -1e9)
+        a = jnp.einsum("bhnm,bhmd->bhnd", jax.nn.softmax(scores, -1), v)
+        h = h + lin(f"{p}.wo", _merge_heads(a))
+        y = _layernorm(h, params[f"{p}.ln2.g"], params[f"{p}.ln2.b"])
+        h = h + lin(f"{p}.w2", jax.nn.gelu(lin(f"{p}.w1", y)))
+    h = _layernorm(h, params["ln.g"], params["ln.b"])
+    logits = lin("head.w", h)
+    if cfg.kind == "vit":
+        return jnp.mean(logits, axis=1)
+    return logits[:, -1, :]
+
+
+# ---------------------------------------------------------------------------
+# Public entry point
+# ---------------------------------------------------------------------------
+
+def forward(params, x, key, cfg: ModelConfig, variant: str = "ideal",
+            t_steps: int | None = None,
+            acfg: analog.AnalogConfig = analog.DEFAULT) -> jax.Array:
+    """Full forward pass -> per-timestep logits ``[T, B, C]``.
+
+    ``key`` seeds every stochastic element (rate coding, BNL draws, analog
+    noise) — fixed key => bit-reproducible forward. ANN ignores the time
+    axis and returns ``[1, B, C]``.
+    """
+    if cfg.impl == "ann":
+        lin = _Linear(params, variant, key, acfg)
+        return _ann_forward(params, x, cfg, lin)[None]
+
+    t_steps = t_steps or cfg.t_steps
+    feats = input_features(x, cfg)
+    feats = jnp.clip(feats + params["pos"], 0.0, 1.0)
+    state0 = _init_state(cfg, feats.shape[0])
+
+    def step(state, t):
+        kt = jax.random.fold_in(key, t)
+        lin = _Linear(params, variant, jax.random.fold_in(kt, 7), acfg)
+        logits, state = _snn_step(params, feats, state, kt, cfg, lin)
+        return state, logits
+
+    _, logits = jax.lax.scan(step, state0, jnp.arange(t_steps))
+    return logits
+
+
+def prefix_logits(logits_t: jax.Array) -> jax.Array:
+    """``[T,B,C]`` per-step logits -> ``[T,B,C]`` prefix-mean logits.
+
+    Entry ``t`` equals the decision statistic of a run with encoding
+    length ``t+1`` — this is how the minimum-T sweep is evaluated.
+    """
+    csum = jnp.cumsum(logits_t, axis=0)
+    t = jnp.arange(1, logits_t.shape[0] + 1, dtype=logits_t.dtype)
+    return csum / t[:, None, None]

@@ -1,0 +1,70 @@
+"""XPKT tensor container: the python<->rust interchange for params & data.
+
+Layout (all little-endian):
+
+    magic   4 bytes  b"XPKT"
+    version u32      1
+    count   u32      number of tensors
+    per tensor:
+        name_len u32, name utf-8 bytes
+        dtype    u32  (0 = f32, 1 = i32, 2 = u32)
+        ndim     u32, dims u32 * ndim
+        nbytes   u64, raw data
+
+The Rust reader lives in ``rust/src/tensor``; round-trip bit-exactness is
+tested on both sides (``python/tests/test_params_io.py`` writes, reads,
+compares; the Rust unit test reads a golden file written here).
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+MAGIC = b"XPKT"
+VERSION = 1
+_DTYPES = {np.dtype(np.float32): 0, np.dtype(np.int32): 1,
+           np.dtype(np.uint32): 2}
+_RDTYPES = {0: np.float32, 1: np.int32, 2: np.uint32}
+
+
+def save(path: str, tensors: dict[str, np.ndarray]) -> None:
+    """Write tensors (insertion order preserved) to ``path``."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<II", VERSION, len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.ascontiguousarray(arr)
+            if arr.dtype not in _DTYPES:
+                arr = arr.astype(np.float32)
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<I", _DTYPES[arr.dtype]))
+            f.write(struct.pack("<I", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            raw = arr.tobytes()
+            f.write(struct.pack("<Q", len(raw)))
+            f.write(raw)
+
+
+def load(path: str) -> dict[str, np.ndarray]:
+    """Read a container written by :func:`save` (or by the Rust writer)."""
+    with open(path, "rb") as f:
+        assert f.read(4) == MAGIC, f"{path}: bad magic"
+        version, count = struct.unpack("<II", f.read(8))
+        assert version == VERSION, f"{path}: unsupported version {version}"
+        out: dict[str, np.ndarray] = {}
+        for _ in range(count):
+            (name_len,) = struct.unpack("<I", f.read(4))
+            name = f.read(name_len).decode("utf-8")
+            dtype_code, ndim = struct.unpack("<II", f.read(8))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim)) if ndim \
+                else ()
+            (nbytes,) = struct.unpack("<Q", f.read(8))
+            raw = f.read(nbytes)
+            arr = np.frombuffer(raw, dtype=_RDTYPES[dtype_code]).reshape(dims)
+            out[name] = arr.copy()
+    return out

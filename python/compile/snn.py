@@ -1,0 +1,119 @@
+"""Spiking-neuron primitives (SpikingJelly substitute).
+
+Implements the two neuron models Xpikeformer uses (paper §II-A, §IV-B):
+
+* **LIF** — leaky integrate-and-fire with leak factor ``beta`` (the hardware
+  uses a shift register, i.e. ``beta = 0.5``), hard reset to 0 on spike
+  (paper eq. (2)-(3)).
+* **Bernoulli neuron (BNL)** — stateless: normalizes a non-negative integer
+  input to a probability and emits a Bernoulli sample (paper §IV-B1).
+
+Both are made trainable with surrogate gradients:
+
+* spikes use a sigmoid surrogate (standard SNN practice, SpikingJelly's
+  default), and
+* Bernoulli samples use a straight-through estimator (gradient w.r.t. the
+  probability is the identity).
+
+All stochastic primitives take *explicit* uniform tensors so the same code
+path lowers to deterministic HLO given a seed input (see ``aot.py``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Sharpness of the sigmoid surrogate gradient for the Heaviside spike.
+SURROGATE_ALPHA = 4.0
+
+# Hardware constants (paper §IV-A2): shift-register leak and unit threshold.
+HW_BETA = 0.5
+HW_VTH = 1.0
+
+
+@jax.custom_vjp
+def spike_fn(v: jax.Array) -> jax.Array:
+    """Heaviside step at 0 returning f32 {0,1} with sigmoid surrogate grad."""
+    return jnp.greater_equal(v, 0.0).astype(jnp.float32)
+
+
+def _spike_fwd(v):
+    return spike_fn(v), v
+
+
+def _spike_bwd(v, g):
+    s = jax.nn.sigmoid(SURROGATE_ALPHA * v)
+    return (g * SURROGATE_ALPHA * s * (1.0 - s),)
+
+
+spike_fn.defvjp(_spike_fwd, _spike_bwd)
+
+
+@jax.custom_vjp
+def bernoulli_ste(p: jax.Array, u: jax.Array) -> jax.Array:
+    """Bernoulli(p) sample via a supplied uniform ``u``; straight-through grad.
+
+    Forward: ``1[u < p]`` — exactly the hardware Bernoulli encoder (compare
+    an unnormalized integer against an LFSR draw, paper §IV-B2).
+    Backward: d out / d p = 1 (straight-through), d out / d u = 0.
+    """
+    return jnp.less(u, p).astype(jnp.float32)
+
+
+def _bern_fwd(p, u):
+    return bernoulli_ste(p, u), None
+
+
+def _bern_bwd(_res, g):
+    return (g, None)
+
+
+bernoulli_ste.defvjp(_bern_fwd, _bern_bwd)
+
+
+def lif_step(v: jax.Array, i: jax.Array, beta: float = HW_BETA,
+             vth: float = HW_VTH):
+    """One LIF timestep: integrate, fire, hard-reset (paper eqs. (2)-(3)).
+
+    Returns ``(v_next, spikes)``; shapes follow ``i``.
+    """
+    v = beta * v + i
+    s = spike_fn(v - vth)
+    v = v * (1.0 - s)
+    return v, s
+
+
+def lif_seq(i_seq: jax.Array, beta: float = HW_BETA, vth: float = HW_VTH,
+            v0: jax.Array | None = None) -> jax.Array:
+    """Run LIF over a leading time axis: ``[T, ...] -> [T, ...]`` spikes."""
+    if v0 is None:
+        v0 = jnp.zeros(i_seq.shape[1:], i_seq.dtype)
+
+    def step(v, i):
+        v, s = lif_step(v, i, beta, vth)
+        return v, s
+
+    _, s = jax.lax.scan(step, v0, i_seq)
+    return s
+
+
+def rate_encode(x: jax.Array, key: jax.Array, t_steps: int) -> jax.Array:
+    """Bernoulli rate coding (paper eq. (1)): ``x in [0,1] -> [T, ...]``."""
+    u = jax.random.uniform(key, (t_steps, *x.shape))
+    return bernoulli_ste(jnp.broadcast_to(x, u.shape), u)
+
+
+def rate_decode(s_seq: jax.Array) -> jax.Array:
+    """Mean firing rate over the leading time axis — the MMSE decoder."""
+    return jnp.mean(s_seq, axis=0)
+
+
+def spike_or(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Binary residual join: logical OR on {0,1} spikes.
+
+    The hardware 'residual units' (paper Fig. 9, 2.7% of compute energy)
+    merge spike streams without leaving the binary domain. a + b - a*b is
+    OR for binary inputs and differentiable for the surrogate-grad path.
+    """
+    return a + b - a * b

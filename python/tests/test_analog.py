@@ -1,0 +1,107 @@
+"""PCM device-model invariants (mirrored by rust/src/aimc unit tests)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import analog
+
+
+def test_quantize_grid_has_31_levels():
+    w = jnp.linspace(-1.0, 1.0, 1001)
+    wq = np.unique(np.asarray(analog.quantize_weights(w)))
+    assert len(wq) == 2 * analog.DEFAULT.g_levels + 1  # ±15 + 0
+
+
+def test_quantize_idempotent():
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (64, 64)) * 0.1
+    wq = analog.quantize_weights(w)
+    np.testing.assert_allclose(np.asarray(analog.quantize_weights(wq)),
+                               np.asarray(wq), atol=1e-7)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_quantize_error_bounded_by_half_step(seed):
+    w = jax.random.normal(jax.random.PRNGKey(seed), (32, 32)) * 0.2
+    wq = analog.quantize_weights(w)
+    step = float(analog.w_max_of(w)) / analog.DEFAULT.g_levels
+    assert float(jnp.max(jnp.abs(w - wq))) <= step / 2 + 1e-6
+
+
+def test_program_noise_scale():
+    key = jax.random.PRNGKey(1)
+    w = jnp.zeros((200, 200)) + 0.5
+    wp = analog.program(w, key)
+    resid = np.asarray(wp) - np.asarray(analog.quantize_weights(w))
+    assert abs(resid.std() - analog.DEFAULT.sigma_prog * 0.5) < 0.005
+
+
+def test_drift_attenuates_over_time():
+    key = jax.random.PRNGKey(2)
+    w = jnp.abs(jax.random.normal(key, (64, 64))) * 0.1
+    d_hour = analog.apply_drift(w, key, 3600.0)
+    d_year = analog.apply_drift(w, key, 3.15e7)
+    assert float(jnp.mean(d_year)) < float(jnp.mean(d_hour)) < float(
+        jnp.mean(w))
+
+
+def test_drift_at_t0_is_identity_in_expectation():
+    key = jax.random.PRNGKey(3)
+    w = jnp.ones((128, 128)) * 0.3
+    d = analog.apply_drift(w, key, analog.DEFAULT.t0)
+    np.testing.assert_allclose(float(jnp.mean(d)), 0.3, rtol=1e-3)
+
+
+def test_gdc_restores_mean_current():
+    """GDC rescales by the measured mean factor: the *mean* drifted weight
+    returns to its original magnitude; per-device dispersion remains."""
+    key = jax.random.PRNGKey(4)
+    w = jnp.abs(jax.random.normal(key, (256, 256))) * 0.1
+    one_year = 3.15e7
+    nc = analog.apply_drift(w, key, one_year, gdc=False)
+    gdc = analog.apply_drift(w, key, one_year, gdc=True)
+    # Without compensation the mean collapses; with GDC it's restored.
+    assert float(jnp.mean(nc)) < 0.6 * float(jnp.mean(w))
+    np.testing.assert_allclose(float(jnp.mean(gdc)), float(jnp.mean(w)),
+                               rtol=0.02)
+
+
+def test_gdc_residual_smaller_than_uncompensated():
+    key = jax.random.PRNGKey(5)
+    w = jax.random.normal(key, (128, 128)) * 0.1
+    one_year = 3.15e7
+    nc = analog.apply_drift(w, key, one_year, gdc=False)
+    gdc = analog.apply_drift(w, key, one_year, gdc=True)
+    err_nc = float(jnp.mean((nc - w) ** 2))
+    err_gdc = float(jnp.mean((gdc - w) ** 2))
+    assert err_gdc < err_nc
+
+
+def test_adc_quantize_levels():
+    clip = jnp.array(1.0)
+    x = jnp.linspace(-2.0, 2.0, 4001)
+    q = np.unique(np.asarray(analog.adc_quantize(x, clip)))
+    assert len(q) == 2 * (2 ** (analog.DEFAULT.adc_bits - 1) - 1) + 1
+
+
+def test_crossbar_matmul_close_to_dense():
+    """With no read noise, ADC error per block is <= step/2."""
+    ks = jax.random.split(jax.random.PRNGKey(6), 2)
+    x = (jax.random.uniform(ks[0], (16, 256)) < 0.5).astype(jnp.float32)
+    w = 0.05 * jax.random.normal(ks[1], (256, 32))
+    got = analog.crossbar_matmul(x, w, key=None)
+    exact = x @ w
+    clip = float(analog.adc_clip_of(w))
+    step = clip / (2 ** (analog.DEFAULT.adc_bits - 1) - 1)
+    assert float(jnp.max(jnp.abs(got - exact))) <= 2 * step / 2 + 1e-6
+
+
+def test_crossbar_matmul_batch_shapes():
+    ks = jax.random.split(jax.random.PRNGKey(7), 2)
+    x = (jax.random.uniform(ks[0], (2, 5, 96)) < 0.5).astype(jnp.float32)
+    w = 0.1 * jax.random.normal(ks[1], (96, 24))
+    out = analog.crossbar_matmul(x, w, key=ks[0])
+    assert out.shape == (2, 5, 24)

@@ -1,0 +1,190 @@
+"""Pallas kernels vs pure-jnp oracles — the CORE correctness signal.
+
+Hypothesis sweeps shapes/configs; binary outputs must be bit-exact,
+analog accumulations allclose.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import crossbar_matmul, lif, ref, ssa
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def bern(key, shape, p=0.4):
+    return (jax.random.uniform(key, shape) < p).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# SSA kernel
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(
+    b=st.integers(1, 3), h=st.integers(1, 3),
+    n=st.sampled_from([4, 8, 16, 37]), dk=st.sampled_from([8, 16, 32]),
+    causal=st.booleans(), seed=st.integers(0, 2**31 - 1),
+)
+def test_ssa_matches_ref(b, h, n, dk, causal, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    q = bern(ks[0], (b, h, n, dk))
+    k = bern(ks[1], (b, h, n, dk))
+    v = bern(ks[2], (b, h, n, dk))
+    u_s = jax.random.uniform(ks[3], (b, h, n, n))
+    u_a = jax.random.uniform(ks[4], (b, h, n, dk))
+    out = ssa(q, k, v, u_s, u_a, causal=causal)
+    expect = jnp.stack([
+        jnp.stack([ref.ssa_ref(q[i, j], k[i, j], v[i, j], u_s[i, j],
+                               u_a[i, j], causal=causal)
+                   for j in range(h)]) for i in range(b)])
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+
+def test_ssa_output_is_binary():
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    q = bern(ks[0], (2, 2, 16, 16))
+    out = ssa(q, bern(ks[1], q.shape), bern(ks[2], q.shape),
+              jax.random.uniform(ks[3], (2, 2, 16, 16)),
+              jax.random.uniform(ks[4], q.shape))
+    vals = np.unique(np.asarray(out))
+    assert set(vals).issubset({0.0, 1.0})
+
+
+def test_ssa_causal_mask_zeroes_future():
+    """With causal=True token 0's output can only attend to token 0."""
+    n, dk = 8, 8
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jnp.ones((1, 1, n, dk))
+    k = jnp.ones((1, 1, n, dk))
+    # v: token 0's value is all zeros, others all ones.
+    v = jnp.ones((1, 1, n, dk)).at[0, 0, 0].set(0.0)
+    u_s = jnp.zeros((1, 1, n, n)) + 1e-6  # scores certainly fire
+    u_a = jax.random.uniform(ks[2], (1, 1, n, dk))
+    out = ssa(q, k, v, u_s, u_a, causal=True)
+    # Row 0 attends only to token 0 whose value is 0 => probability 0.
+    assert float(out[0, 0, 0].sum()) == 0.0
+
+
+def test_ssa_rate_converges_to_attention_product():
+    """E[A] -> (QK^T/dk) V / N as the number of Bernoulli draws grows."""
+    n, dk, trials = 8, 16, 3000
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = bern(ks[0], (1, 1, n, dk), 0.5)
+    k = bern(ks[1], (1, 1, n, dk), 0.5)
+    v = bern(ks[2], (1, 1, n, dk), 0.5)
+    scores = (q[0, 0] @ k[0, 0].T) / dk
+    expect = (scores @ v[0, 0]) / n
+    total = np.zeros((n, dk), np.float64)
+    for i in range(trials):
+        ku = jax.random.split(jax.random.PRNGKey(1000 + i), 2)
+        out = ref.ssa_ref(q[0, 0], k[0, 0], v[0, 0],
+                          jax.random.uniform(ku[0], (n, n)),
+                          jax.random.uniform(ku[1], (n, dk)))
+        total += np.asarray(out)
+    rate = total / trials
+    # Monte-Carlo tolerance ~ 4/sqrt(trials)
+    np.testing.assert_allclose(rate, np.asarray(expect), atol=4 / 54.77)
+
+
+# ---------------------------------------------------------------------------
+# LIF kernel
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(
+    t=st.sampled_from([1, 4, 8, 16]),
+    m=st.sampled_from([1, 7, 64, 513, 1200]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lif_matches_ref(t, m, seed):
+    i_seq = 2.0 * jax.random.normal(jax.random.PRNGKey(seed), (t, m))
+    np.testing.assert_array_equal(np.asarray(lif(i_seq)),
+                                  np.asarray(ref.lif_ref(i_seq)))
+
+
+def test_lif_constant_subthreshold_input_never_spikes():
+    # beta=0.5: steady state v = i/(1-beta) = 2i; spikes iff 2i >= 1.
+    i_seq = jnp.full((16, 4), 0.49)
+    assert float(lif(i_seq).sum()) == 0.0
+
+
+def test_lif_constant_suprathreshold_spikes_every_step():
+    i_seq = jnp.full((16, 4), 1.5)
+    np.testing.assert_array_equal(np.asarray(lif(i_seq)),
+                                  np.ones((16, 4), np.float32))
+
+
+def test_lif_spike_count_monotone_in_drive():
+    key = jax.random.PRNGKey(3)
+    base = jax.random.uniform(key, (16, 128))
+    low = np.asarray(lif(0.6 * base)).sum()
+    high = np.asarray(lif(1.4 * base)).sum()
+    assert high >= low
+
+
+# ---------------------------------------------------------------------------
+# Crossbar kernel
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(
+    m=st.sampled_from([1, 5, 32]),
+    din=st.sampled_from([16, 128, 129, 300, 512]),
+    dout=st.sampled_from([8, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_crossbar_matches_ref(m, din, dout, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    x = bern(ks[0], (m, din), 0.5)
+    w = 0.1 * jax.random.normal(ks[1], (din, dout))
+    clip = 4.0 * np.sqrt(128.0) * float(jnp.sqrt(jnp.mean(w * w) + 1e-12))
+    got = crossbar_matmul(x, w, clip)
+    want = ref.crossbar_ref(x, w, clip=clip)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5)
+
+
+def test_crossbar_single_block_equals_quantized_dense():
+    """din <= 128: one ADC conversion; matches direct quantization."""
+    ks = jax.random.split(jax.random.PRNGKey(5), 2)
+    x = bern(ks[0], (4, 100), 0.5)
+    w = 0.1 * jax.random.normal(ks[1], (100, 16))
+    clip = 10.0
+    levels = 15.0
+    dense = jnp.clip(jnp.round((x @ w) / (clip / levels)), -levels,
+                     levels) * (clip / levels)
+    got = crossbar_matmul(x, w, clip)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(dense), atol=1e-5)
+
+
+def test_crossbar_quantization_error_bounded():
+    """Total ADC error <= n_blocks * step/2 per output element."""
+    ks = jax.random.split(jax.random.PRNGKey(6), 2)
+    din = 384  # 3 blocks
+    x = bern(ks[0], (8, din), 0.5)
+    w = 0.05 * jax.random.normal(ks[1], (din, 32))
+    clip = 4.0 * np.sqrt(128.0) * float(jnp.sqrt(jnp.mean(w * w)))
+    step = clip / 15.0
+    got = np.asarray(crossbar_matmul(x, w, clip))
+    exact = np.asarray(x @ w)
+    assert np.max(np.abs(got - exact)) <= 3 * step / 2 + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Stochastic-computing primitive (paper eq. (4))
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(x1=st.floats(0.05, 0.95), x2=st.floats(0.05, 0.95),
+       seed=st.integers(0, 2**31 - 1))
+def test_stochastic_and_multiplies(x1, x2, seed):
+    t = 20000
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    s1 = (jax.random.uniform(k1, (t,)) < x1).astype(jnp.float32)
+    s2 = (jax.random.uniform(k2, (t,)) < x2).astype(jnp.float32)
+    rate = float(jnp.mean(s1 * s2))  # AND of {0,1}
+    assert abs(rate - x1 * x2) < 5.0 / np.sqrt(t)

@@ -1,0 +1,168 @@
+"""Model-level tests: Table-I structure, shapes, determinism, variants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data, model
+from compile.configs import CONFIGS, gpt, vit
+
+TINY_VIT = {i: vit(1, 32, 2, i, t_steps=4, t_max=4) for i in
+            ("ann", "snn", "xpike")}
+TINY_GPT = {i: gpt(1, 32, 2, i, 2, 2, t_steps=4, t_max=4) for i in
+            ("ann", "snn", "xpike")}
+
+
+def _fwd(cfg, batch=2, variant="ideal", seed=0):
+    key = jax.random.PRNGKey(seed)
+    params = model.init_params(key, cfg)
+    x, _ = data.batch_for(cfg, key, batch)
+    return model.forward(params, x, key, cfg, variant)
+
+
+@pytest.mark.parametrize("impl", ["ann", "snn", "xpike"])
+def test_vit_logit_shapes(impl):
+    cfg = TINY_VIT[impl]
+    out = _fwd(cfg)
+    t = 1 if impl == "ann" else cfg.t_steps
+    assert out.shape == (t, 2, cfg.classes)
+
+
+@pytest.mark.parametrize("impl", ["ann", "snn", "xpike"])
+def test_gpt_logit_shapes(impl):
+    cfg = TINY_GPT[impl]
+    out = _fwd(cfg)
+    t = 1 if impl == "ann" else cfg.t_steps
+    assert out.shape == (t, 2, cfg.classes)
+
+
+def test_forward_deterministic_given_key():
+    cfg = TINY_VIT["xpike"]
+    a = np.asarray(_fwd(cfg, seed=5))
+    b = np.asarray(_fwd(cfg, seed=5))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_forward_varies_with_key():
+    cfg = TINY_VIT["xpike"]
+    key = jax.random.PRNGKey(0)
+    params = model.init_params(key, cfg)
+    x, _ = data.batch_for(cfg, key, 2)
+    a = model.forward(params, x, jax.random.PRNGKey(1), cfg)
+    b = model.forward(params, x, jax.random.PRNGKey(2), cfg)
+    assert not np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_param_specs_match_init():
+    for cfg in list(TINY_VIT.values()) + list(TINY_GPT.values()):
+        params = model.init_params(jax.random.PRNGKey(0), cfg)
+        specs = model.param_specs(cfg)
+        assert set(params) == {n for n, _, _ in specs}
+        for n, s, _ in specs:
+            assert params[n].shape == s, (cfg.name, n)
+
+
+def test_analog_params_are_crossbar_matrices():
+    """Every analog-flagged param is a 2-D weight (mappable to crossbars);
+    LayerNorm/positional params are digital-only (Table I: SNN columns
+    have no normalization layers at all)."""
+    for cfg in TINY_VIT.values():
+        for n, s, a in model.param_specs(cfg):
+            if a:
+                assert len(s) == 2, (cfg.name, n)
+            if "ln" in n or n == "pos":
+                assert not a
+
+
+def test_snn_configs_have_no_layernorm_params():
+    """Paper Table I: inter-layer normalization = None for SNNs."""
+    for impl in ("snn", "xpike"):
+        names = [n for n, _, _ in model.param_specs(TINY_VIT[impl])]
+        assert not any("ln" in n for n in names)
+
+
+def test_spiking_state_is_binary_free_logits():
+    """Per-step logits come from a binary-input crossbar: bounded by
+    sum |w| (sanity that spikes, not membrane values, hit the head)."""
+    cfg = TINY_VIT["xpike"]
+    key = jax.random.PRNGKey(0)
+    params = model.init_params(key, cfg)
+    x, _ = data.batch_for(cfg, key, 2)
+    out = model.forward(params, x, key, cfg)
+    bound = float(jnp.abs(params["head.w"]).sum())
+    assert float(jnp.max(jnp.abs(out))) <= bound
+
+
+def test_prefix_logits_matches_manual_means():
+    logits = jnp.arange(24, dtype=jnp.float32).reshape(4, 2, 3)
+    pref = model.prefix_logits(logits)
+    for t in range(4):
+        np.testing.assert_allclose(np.asarray(pref[t]),
+                                   np.asarray(logits[:t + 1].mean(0)),
+                                   rtol=1e-6)
+
+
+def test_shorter_t_is_prefix_of_longer_run():
+    """forward(t_steps=k) logits == first k rows of forward(t_steps=T)."""
+    cfg = TINY_VIT["xpike"]
+    key = jax.random.PRNGKey(0)
+    params = model.init_params(key, cfg)
+    x, _ = data.batch_for(cfg, key, 2)
+    long = model.forward(params, x, key, cfg, t_steps=4)
+    short = model.forward(params, x, key, cfg, t_steps=2)
+    np.testing.assert_array_equal(np.asarray(long[:2]), np.asarray(short))
+
+
+@pytest.mark.parametrize("variant", ["ideal", "hwat", "analog_frozen",
+                                     "pallas"])
+def test_all_variants_run(variant):
+    cfg = TINY_VIT["xpike"]
+    out = _fwd(cfg, variant=variant)
+    assert out.shape == (cfg.t_steps, 2, cfg.classes)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_pallas_variant_close_to_analog_frozen_statistics():
+    """The pallas AOT path and the jnp analog path share quant+ADC
+    semantics; firing statistics must agree (same seed => same rate
+    coding; small divergence only from read-noise placement)."""
+    cfg = TINY_VIT["xpike"]
+    key = jax.random.PRNGKey(0)
+    params = model.program_params(model.init_params(key, cfg), key, cfg)
+    x, _ = data.batch_for(cfg, key, 4)
+    a = model.forward(params, x, key, cfg, "analog_frozen").mean()
+    b = model.forward(params, x, key, cfg, "pallas").mean()
+    assert abs(float(a) - float(b)) < 1.0
+
+
+def test_quantize_params_int8_changes_only_analog():
+    cfg = TINY_VIT["snn"]
+    params = model.init_params(jax.random.PRNGKey(0), cfg)
+    q = model.quantize_params_int8(params, cfg)
+    assert np.array_equal(np.asarray(q["pos"]), np.asarray(params["pos"]))
+    w = np.asarray(params["embed.w"])
+    step = np.abs(w).max() / 127.0
+    assert np.max(np.abs(np.asarray(q["embed.w"]) - w)) <= step / 2 + 1e-7
+
+
+def test_causal_gpt_prediction_ignores_future():
+    """Last-token logits of a causal model must not change when we alter
+    ... nothing after it exists; instead check: altering the *final query
+    token* changes logits (model actually reads it)."""
+    cfg = TINY_GPT["xpike"]
+    key = jax.random.PRNGKey(0)
+    params = model.init_params(key, cfg)
+    x, _ = data.batch_for(cfg, key, 2)
+    base = model.forward(params, x, key, cfg)
+    x2 = x.at[:, -1, :].set(1.0 - x[:, -1, :])
+    mod = model.forward(params, x2, key, cfg)
+    assert not np.array_equal(np.asarray(base), np.asarray(mod))
+
+
+def test_registry_covers_paper_grid():
+    """3 impls x sizes for vit; 3 impls x sizes x antennas for gpt."""
+    vits = [c for c in CONFIGS.values() if c.kind == "vit"]
+    gpts = [c for c in CONFIGS.values() if c.kind == "gpt"]
+    assert len(vits) == 6 and len(gpts) == 12
+    assert {c.impl for c in CONFIGS.values()} == {"ann", "snn", "xpike"}

@@ -1,0 +1,52 @@
+"""XPKT container round-trip (the python<->rust interchange format)."""
+
+import numpy as np
+import pytest
+
+from compile import params_io
+
+
+def test_roundtrip_bit_exact(tmp_path):
+    rng = np.random.default_rng(0)
+    tensors = {
+        "a.weight": rng.standard_normal((3, 4)).astype(np.float32),
+        "b": np.arange(7, dtype=np.int32),
+        "scalar": np.asarray([42], np.uint32),
+        "empty_name_ok": np.zeros((2, 2, 2), np.float32),
+    }
+    p = tmp_path / "t.bin"
+    params_io.save(str(p), tensors)
+    got = params_io.load(str(p))
+    assert list(got) == list(tensors)  # order preserved
+    for k in tensors:
+        np.testing.assert_array_equal(got[k], tensors[k])
+        assert got[k].dtype == tensors[k].dtype
+
+
+def test_float64_downcast_to_f32(tmp_path):
+    p = tmp_path / "t.bin"
+    params_io.save(str(p), {"x": np.ones((2,), np.float64)})
+    got = params_io.load(str(p))
+    assert got["x"].dtype == np.float32
+
+
+def test_bad_magic_rejected(tmp_path):
+    p = tmp_path / "bad.bin"
+    p.write_bytes(b"NOPE" + b"\x00" * 16)
+    with pytest.raises(AssertionError):
+        params_io.load(str(p))
+
+
+def test_golden_fixture_for_rust(tmp_path):
+    """Writes the exact golden file the Rust reader test parses; keep the
+    values in sync with rust/src/tensor/mod.rs::tests."""
+    tensors = {
+        "w": np.asarray([[1.5, -2.0], [0.0, 3.25]], np.float32),
+        "labels": np.asarray([1, 2, 3], np.int32),
+    }
+    p = tmp_path / "golden.bin"
+    params_io.save(str(p), tensors)
+    raw = p.read_bytes()
+    assert raw[:4] == b"XPKT"
+    got = params_io.load(str(p))
+    np.testing.assert_array_equal(got["w"], tensors["w"])

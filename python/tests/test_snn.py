@@ -1,0 +1,82 @@
+"""Neuron-model unit tests: LIF dynamics, Bernoulli neurons, rate coding."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import snn
+
+
+def test_lif_step_integrates_and_leaks():
+    v, s = snn.lif_step(jnp.array(0.4), jnp.array(0.3))
+    # v = 0.5*0.4 + 0.3 = 0.5 < 1 => no spike
+    assert float(s) == 0.0 and abs(float(v) - 0.5) < 1e-6
+
+
+def test_lif_step_fires_and_resets():
+    v, s = snn.lif_step(jnp.array(1.2), jnp.array(0.6))
+    # v = 0.6+0.6 = 1.2 >= 1 => spike, hard reset
+    assert float(s) == 1.0 and float(v) == 0.0
+
+
+def test_lif_seq_equals_manual_unroll():
+    key = jax.random.PRNGKey(0)
+    i_seq = jax.random.normal(key, (10, 5)) * 1.5
+    got = snn.lif_seq(i_seq)
+    v = jnp.zeros((5,))
+    for t in range(10):
+        v, s = snn.lif_step(v, i_seq[t])
+        np.testing.assert_array_equal(np.asarray(got[t]), np.asarray(s))
+
+
+def test_spike_fn_surrogate_gradient_positive():
+    g = jax.grad(lambda v: snn.spike_fn(v))(0.0)
+    assert float(g) == snn.SURROGATE_ALPHA * 0.25  # sigmoid'(0)*alpha
+
+
+def test_bernoulli_ste_forward_thresholds():
+    p = jnp.array([0.3, 0.8])
+    u = jnp.array([0.5, 0.5])
+    np.testing.assert_array_equal(
+        np.asarray(snn.bernoulli_ste(p, u)), [0.0, 1.0])
+
+
+def test_bernoulli_ste_gradient_is_identity():
+    g = jax.grad(lambda p: snn.bernoulli_ste(p, jnp.array(0.9)))(
+        jnp.array(0.5))
+    assert float(g) == 1.0
+
+
+@settings(max_examples=10, deadline=None)
+@given(p=st.floats(0.0, 1.0), seed=st.integers(0, 2**31 - 1))
+def test_rate_encode_expectation(p, seed):
+    t = 4096
+    s = snn.rate_encode(jnp.array([p]), jax.random.PRNGKey(seed), t)
+    assert abs(float(snn.rate_decode(s)[0]) - p) < 5.0 / np.sqrt(t)
+
+
+def test_spike_or_is_binary_or():
+    a = jnp.array([0.0, 0.0, 1.0, 1.0])
+    b = jnp.array([0.0, 1.0, 0.0, 1.0])
+    np.testing.assert_array_equal(np.asarray(snn.spike_or(a, b)),
+                                  [0.0, 1.0, 1.0, 1.0])
+
+
+def test_lif_beta_half_is_right_shift():
+    """The hardware leak is a 1-bit right shift of the membrane register:
+
+    with integer-valued inputs scaled by 2^k, beta=0.5 keeps the membrane
+    on the halved grid exactly (no fp drift over 16 steps)."""
+    i_seq = jnp.array([[0.25], [0.25], [0.25], [0.0], [0.0]])
+    v = 0.0
+    expected = []
+    for t in range(5):
+        v = 0.5 * v + float(i_seq[t, 0])
+        expected.append(v)
+    got = []
+    vv = jnp.zeros((1,))
+    for t in range(5):
+        vv, s = snn.lif_step(vv, i_seq[t])
+        got.append(float(vv[0]))
+    np.testing.assert_allclose(got, expected, rtol=0, atol=0)

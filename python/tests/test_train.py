@@ -1,0 +1,69 @@
+"""Training-harness tests: AdamW, loss, min-T rule, short end-to-end run."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data, model, train
+from compile.configs import gpt, vit
+
+TINY = vit(1, 32, 2, "xpike", t_steps=4, t_max=4)
+
+
+def test_adamw_minimizes_quadratic():
+    params = {"w": jnp.array([5.0, -3.0])}
+    opt = train.adamw_init(params)
+    for _ in range(300):
+        grads = {"w": 2.0 * params["w"]}
+        params, opt = train.adamw_update(grads, opt, params, 0.05, wd=0.0)
+    assert float(jnp.abs(params["w"]).max()) < 0.1
+
+
+def test_adamw_weight_decay_shrinks_params():
+    params = {"w": jnp.array([10.0])}
+    opt = train.adamw_init(params)
+    for _ in range(50):
+        params, opt = train.adamw_update({"w": jnp.array([0.0])}, opt,
+                                         params, 0.1, wd=0.5)
+    assert float(params["w"][0]) < 10.0
+
+
+def test_loss_decreases_over_short_training():
+    key = jax.random.PRNGKey(0)
+    params = model.init_params(key, TINY)
+    opt = train.adamw_init(params)
+    x, y = data.batch_for(TINY, key, 32)
+    first = None
+    for step in range(25):
+        params, opt, ce, _ = train.train_step(
+            params, opt, x, y, jax.random.fold_in(key, step), TINY,
+            "ideal", 1e-3)
+        if first is None:
+            first = float(ce)
+    assert float(ce) < first
+
+
+def test_min_t_rule():
+    acc = np.array([0.50, 0.70, 0.79, 0.795, 0.80])
+    assert train.min_t(acc, lower_better=False, tol=0.01) == 3
+    assert train.min_t(acc, lower_better=False, tol=1e-9) == 5
+    ber = np.array([0.4, 0.2, 0.101, 0.1])
+    assert train.min_t(ber, lower_better=True, tol=0.002) == 3
+
+
+def test_evaluate_shapes_and_range():
+    key = jax.random.PRNGKey(0)
+    params = model.init_params(key, TINY)
+    acc, ber = train.evaluate(params, TINY, key, n=64, batch=32)
+    assert acc.shape == (TINY.t_max,)
+    assert np.all(acc >= 0) and np.all(acc <= 1)
+
+
+def test_gpt_evaluate_reports_ber():
+    cfg = gpt(1, 32, 2, "xpike", 2, 2, t_steps=4, t_max=4)
+    key = jax.random.PRNGKey(0)
+    params = model.init_params(key, cfg)
+    acc, ber = train.evaluate(params, cfg, key, n=64, batch=32)
+    # Untrained model: BER near 0.5 (random bits)
+    assert 0.2 < float(ber[-1]) < 0.8

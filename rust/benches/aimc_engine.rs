@@ -1,0 +1,46 @@
+//! AIMC engine benchmarks: crossbar programming, analog MVM, and the
+//! drifted-weight derivation that feeds the PJRT executable (the
+//! Fig 7 / Table V inner loop). Feeds §Perf in EXPERIMENTS.md.
+//!
+//! Run: `cargo bench --bench aimc_engine`
+
+use std::time::Duration;
+
+use xpikeformer::aimc::MappedMatrix;
+use xpikeformer::config::{DriftConfig, HardwareConfig};
+use xpikeformer::snn::LifArray;
+use xpikeformer::util::bench::{bench, black_box};
+use xpikeformer::util::Rng;
+
+fn main() {
+    println!("== AIMC engine benchmarks ==");
+    let hw = HardwareConfig::default();
+    let budget = Duration::from_millis(400);
+    for &(din, dout) in &[(64usize, 64usize), (128, 512), (384, 512),
+                          (768, 768)] {
+        let mut rng = Rng::seed_from_u64(2);
+        let w: Vec<f32> = (0..din * dout)
+            .map(|i| ((i % 31) as f32 - 15.0) / 150.0)
+            .collect();
+        bench(&format!("program {din}x{dout}"), 1, budget, || {
+            let mut r = Rng::seed_from_u64(3);
+            black_box(MappedMatrix::program(&mut r, &w, din, dout, &hw));
+        });
+        let m = MappedMatrix::program(&mut rng, &w, din, dout, &hw);
+        let spikes: Vec<bool> = (0..din).map(|i| i % 3 == 0).collect();
+        bench(&format!("analog mvm {din}x{dout}"), 2, budget, || {
+            let mut r = Rng::seed_from_u64(4);
+            black_box(m.mvm(&mut r, &spikes, 0.0, &hw));
+        });
+        let mut lif = LifArray::new(dout);
+        bench(&format!("mvm+lif {din}x{dout}"), 2, budget, || {
+            let mut r = Rng::seed_from_u64(5);
+            black_box(m.mvm_lif(&mut r, &spikes, &mut lif, 0.0, &hw));
+        });
+        bench(&format!("drifted weights_at {din}x{dout}"), 2, budget,
+              || {
+            black_box(m.weights_at(3.15e7, &hw));
+        });
+        let _ = DriftConfig::default();
+    }
+}

@@ -1,0 +1,93 @@
+//! Coordinator benchmarks: serving throughput/latency across batching
+//! policies (the L3 ablation for DESIGN.md §8). Skips before
+//! `make artifacts`.
+//!
+//! Run: `cargo bench --bench coordinator`
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use xpikeformer::config::RunConfig;
+use xpikeformer::coordinator::Server;
+use xpikeformer::runtime::{Artifact, Engine};
+use xpikeformer::util::Rng;
+use xpikeformer::workloads::MimoGenerator;
+
+fn run_once(artifacts: &str, tag: &str, max_batch: usize,
+            window_us: u64, n_requests: usize, concurrency: usize) {
+    let engine = match Engine::load(artifacts, tag) {
+        Ok(e) => e,
+        Err(e) => {
+            println!("skip {tag}: {e:#}");
+            return;
+        }
+    };
+    let nt = engine.artifact.manifest.config.nt;
+    let nr = engine.artifact.manifest.config.nr;
+    let cfg = RunConfig {
+        max_batch,
+        batch_window_us: window_us,
+        ..RunConfig::default()
+    };
+    let server = Server::start(engine, cfg);
+    let done = Arc::new(AtomicUsize::new(0));
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for w in 0..concurrency {
+        let client = server.client();
+        let done = Arc::clone(&done);
+        handles.push(std::thread::spawn(move || {
+            let gen = MimoGenerator::new(nt, nr, 10.0);
+            let mut rng = Rng::seed_from_u64(w as u64);
+            loop {
+                let i = done.fetch_add(1, Ordering::Relaxed);
+                if i >= n_requests {
+                    break;
+                }
+                let (x, _) = gen.sample(&mut rng);
+                let _ = client.infer_blocking(x, i as u32);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let wall = t0.elapsed();
+    let snap = server.metrics.snapshot();
+    println!(
+        "max_batch={max_batch:<2} window={window_us:>4}us conc={concurrency:<2} \
+         -> {:.1} req/s  p50={}us p95={}us mean_batch={:.2}",
+        n_requests as f64 / wall.as_secs_f64(),
+        snap.p50_us, snap.p95_us, snap.mean_batch
+    );
+    server.shutdown();
+}
+
+fn main() {
+    let artifacts = "artifacts";
+    let tags = match Artifact::discover(artifacts) {
+        Ok(t) if !t.is_empty() => t,
+        _ => {
+            println!("no artifacts — run `make artifacts`; skipping");
+            return;
+        }
+    };
+    let tag = match tags.iter().find(|t| t.contains("gpt_xpike")
+        && t.ends_with("_b8"))
+        .or_else(|| tags.iter().find(|t| t.contains("gpt_xpike")
+            && t.ends_with("_b32"))) {
+        Some(t) => t.clone(),
+        None => {
+            println!("no gpt_xpike artifact; skipping");
+            return;
+        }
+    };
+    println!("== coordinator serving benchmarks ({tag}) ==");
+    let n = 128;
+    // Batching ablation: no batching vs windows vs full batch.
+    run_once(artifacts, &tag, 1, 0, n, 8);
+    run_once(artifacts, &tag, 4, 500, n, 8);
+    run_once(artifacts, &tag, 8, 500, n, 16);
+    run_once(artifacts, &tag, 8, 2000, n, 16);
+}

@@ -1,0 +1,32 @@
+//! Efficiency-harness bench: regenerates every analytical table/figure of
+//! the paper's evaluation (Fig 8a/8b, Fig 9, Fig 10a/10b, Tables II & VI)
+//! and times the model evaluation itself.
+//!
+//! Run: `cargo bench --bench energy_model`
+//! This is the `cargo bench` face of `xpikeformer repro all-efficiency`.
+
+use std::time::Duration;
+
+use xpikeformer::repro::{efficiency, ReproCtx};
+use xpikeformer::util::bench::{bench, black_box};
+
+fn main() {
+    let ctx = ReproCtx::new("artifacts");
+    // Print the full set of paper tables/figures (the reproduction
+    // artifact reviewers read).
+    println!("{}", efficiency::table2(&ctx));
+    println!("{}", efficiency::fig8(&ctx));
+    println!("{}", efficiency::fig9(&ctx));
+    println!("{}", efficiency::fig10a(&ctx));
+    println!("{}", efficiency::fig10b(&ctx));
+    println!("{}", efficiency::table6(&ctx));
+
+    println!("== harness timing ==");
+    let budget = Duration::from_millis(300);
+    bench("fig8 (8 operating points, 4 architectures)", 2, budget, || {
+        black_box(efficiency::fig8(&ctx));
+    });
+    bench("table6 (3 accelerators)", 2, budget, || {
+        black_box(efficiency::table6(&ctx));
+    });
+}

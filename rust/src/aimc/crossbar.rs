@@ -1,0 +1,182 @@
+//! One synaptic array (SA): a 128x128 differential-pair crossbar with
+//! multiplexed 5-bit SAR ADC readout (paper Fig 2, Table II).
+//!
+//! Binary spike inputs drive bit-lines; Kirchhoff summation yields column
+//! currents; shared ADCs digitize them `adc_sharing` columns at a time.
+//! The MVM is O(1) in crossbar time; readout takes `adc_sharing` MUX
+//! cycles (latency model in [`crate::energy`]).
+
+use crate::aimc::device::{program, DifferentialPair};
+use crate::config::HardwareConfig;
+use crate::util::Rng;
+
+/// A programmed crossbar block of up to `crossbar_dim` rows x cols.
+#[derive(Debug, Clone)]
+pub struct SynapticArray {
+    pub rows: usize,
+    pub cols: usize,
+    /// Row-major differential pairs.
+    pub cells: Vec<DifferentialPair>,
+    /// Tensor full-scale the weights were normalized against.
+    pub w_max: f32,
+    /// ADC full-scale current (set at mapping time from the weights).
+    pub adc_clip: f32,
+}
+
+impl SynapticArray {
+    /// Program a dense weight block (row-major `rows x cols`).
+    pub fn program_block(rng: &mut Rng, weights: &[f32], rows: usize,
+                         cols: usize, w_max: f32, adc_clip: f32,
+                         hw: &HardwareConfig) -> Self {
+        assert!(rows <= hw.crossbar_dim && cols <= hw.crossbar_dim);
+        assert_eq!(weights.len(), rows * cols);
+        let cells = weights
+            .iter()
+            .map(|&w| program(rng, w, w_max, hw))
+            .collect();
+        SynapticArray { rows, cols, cells, w_max, adc_clip }
+    }
+
+    /// Effective weight matrix at drift time `t` (no GDC at SA level; GDC
+    /// is a tile/engine-level output scale).
+    pub fn weights_at(&self, t_seconds: f64, hw: &HardwareConfig) -> Vec<f32> {
+        self.cells.iter().map(|c| c.weight_at(t_seconds, hw)).collect()
+    }
+
+    /// Analog MVM for a binary input vector: column currents -> read noise
+    /// -> shared SAR ADC quantization. Returns the digitized local sums
+    /// (what flows to the LIF unit's carry-save adder).
+    pub fn mvm(&self, rng: &mut Rng, spikes: &[bool], t_seconds: f64,
+               hw: &HardwareConfig) -> Vec<f32> {
+        assert_eq!(spikes.len(), self.rows);
+        let noise_std = hw.sigma_read * self.w_max as f64;
+        let levels = hw.adc_levels() as f32;
+        let step = self.adc_clip / levels;
+        (0..self.cols)
+            .map(|c| {
+                // Kirchhoff column current: sum over active rows.
+                let mut i = 0.0f32;
+                for (r, &s) in spikes.iter().enumerate() {
+                    if s {
+                        i += self.cells[r * self.cols + c]
+                            .weight_at(t_seconds, hw);
+                    }
+                }
+                i += rng.normal_ms(0.0, noise_std) as f32;
+                // 5-bit SAR ADC, symmetric mid-rise.
+                (i / step).round().clamp(-levels, levels) * step
+            })
+            .collect()
+    }
+
+    /// Ideal (noise-free, drift-free, but quantized) MVM — used by tests
+    /// to isolate ADC behaviour.
+    pub fn mvm_ideal(&self, spikes: &[bool], hw: &HardwareConfig) -> Vec<f32> {
+        let levels = hw.adc_levels() as f32;
+        let step = self.adc_clip / levels;
+        (0..self.cols)
+            .map(|c| {
+                let mut i = 0.0f32;
+                for (r, &s) in spikes.iter().enumerate() {
+                    if s {
+                        i += self.cells[r * self.cols + c].weight_at(0.0, hw);
+                    }
+                }
+                (i / step).round().clamp(-levels, levels) * step
+            })
+            .collect()
+    }
+}
+
+/// ADC full-scale for a weight tensor: `kappa * sqrt(rows) * rms(w)`
+/// (same policy as `python/compile/analog.py::adc_clip_of`).
+pub fn adc_clip_of(weights: &[f32], hw: &HardwareConfig) -> f32 {
+    let rms = (weights.iter().map(|&w| (w * w) as f64).sum::<f64>()
+        / weights.len().max(1) as f64
+        + 1e-12)
+        .sqrt();
+    (hw.adc_clip_kappa * (hw.crossbar_dim as f64).sqrt() * rms) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aimc::device::w_max_of;
+
+    fn noise_free_hw() -> HardwareConfig {
+        HardwareConfig { sigma_prog: 0.0, sigma_read: 0.0, nu_std: 0.0,
+                         ..HardwareConfig::default() }
+    }
+
+    #[test]
+    fn mvm_matches_dense_within_adc_step() {
+        let hw = noise_free_hw();
+        let mut rng = Rng::seed_from_u64(5);
+        let rows = 128;
+        let cols = 32;
+        let weights: Vec<f32> = (0..rows * cols)
+            .map(|i| ((i * 2654435761usize) % 1000) as f32 / 5000.0 - 0.1)
+            .collect();
+        let w_max = w_max_of(&weights);
+        let clip = adc_clip_of(&weights, &hw);
+        let sa = SynapticArray::program_block(&mut rng, &weights, rows, cols,
+                                              w_max, clip, &hw);
+        let spikes: Vec<bool> = (0..rows).map(|r| r % 3 == 0).collect();
+        let got = sa.mvm_ideal(&spikes, &hw);
+        let step = clip / hw.adc_levels() as f32;
+        let wq_step = w_max / hw.g_levels() as f32;
+        for c in 0..cols {
+            let exact: f32 = (0..rows)
+                .filter(|&r| spikes[r])
+                .map(|r| weights[r * cols + c])
+                .sum();
+            // error <= weight-quantization accumulation + half ADC step
+            let tol = step / 2.0
+                + wq_step / 2.0 * spikes.iter().filter(|&&s| s).count() as f32;
+            assert!((got[c] - exact).abs() <= tol,
+                    "col {c}: {} vs {exact}", got[c]);
+        }
+    }
+
+    #[test]
+    fn adc_saturates_at_clip() {
+        let hw = noise_free_hw();
+        let mut rng = Rng::seed_from_u64(6);
+        let rows = 128;
+        let weights = vec![1.0f32; rows]; // one column, all max
+        let sa = SynapticArray::program_block(&mut rng, &weights, rows, 1,
+                                              1.0, 4.0, &hw);
+        let spikes = vec![true; rows];
+        let out = sa.mvm_ideal(&spikes, &hw);
+        assert!((out[0] - 4.0).abs() < 1e-5, "clipped to full scale");
+    }
+
+    #[test]
+    fn read_noise_is_fresh_per_access() {
+        // Exaggerated read noise so the 5-bit ADC can't mask it.
+        let hw = HardwareConfig { sigma_read: 0.2,
+                                  ..HardwareConfig::default() };
+        let mut rng = Rng::seed_from_u64(7);
+        let weights = vec![0.05f32; 64];
+        let sa = SynapticArray::program_block(&mut rng, &weights, 64, 1, 1.0,
+                                              adc_clip_of(&weights, &hw), &hw);
+        let spikes: Vec<bool> = (0..64).map(|i| i % 4 == 0).collect();
+        // Same programmed state, fresh read-noise draw per access: over
+        // repeated reads the (ADC-quantized) outputs must not all agree.
+        let first = sa.mvm(&mut rng, &spikes, 0.0, &hw);
+        let differs = (0..64)
+            .any(|_| sa.mvm(&mut rng, &spikes, 0.0, &hw) != first);
+        assert!(differs);
+    }
+
+    #[test]
+    fn empty_input_gives_zero_current() {
+        let hw = noise_free_hw();
+        let mut rng = Rng::seed_from_u64(8);
+        let weights = vec![0.3f32; 16 * 4];
+        let sa = SynapticArray::program_block(&mut rng, &weights, 16, 4, 1.0,
+                                              1.0, &hw);
+        let out = sa.mvm_ideal(&vec![false; 16], &hw);
+        assert!(out.iter().all(|&v| v == 0.0));
+    }
+}

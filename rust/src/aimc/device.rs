@@ -1,0 +1,165 @@
+//! PCM device model: multi-level conductance cells and differential pairs.
+//!
+//! Each crossbar cell is two 4-bit PCM devices (paper Table II): a weight
+//! `w` maps to conductances `(g+, g-)` on a 15-level grid scaled by the
+//! tensor's `w_max`; positive weights program `g+`, negative `g-`. The
+//! effective 5-bit signed weight grid is `{-15..15} * w_max / 15`.
+
+use crate::config::HardwareConfig;
+use crate::util::Rng;
+
+/// One PCM device: a non-negative conductance in "weight units"
+/// (normalized so full conductance == `w_max`), plus its drift exponent.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PcmDevice {
+    /// Programmed conductance at t0, in weight units (>= 0).
+    pub g0: f32,
+    /// Device drift exponent nu (drawn at programming time).
+    pub nu: f32,
+}
+
+impl PcmDevice {
+    /// Conductance at `t` seconds after programming.
+    pub fn g_at(&self, t_seconds: f64, hw: &HardwareConfig) -> f32 {
+        self.g0 * drift_factor(self.nu, t_seconds, hw)
+    }
+}
+
+/// The multiplicative drift factor `(t/t0)^-nu`, identity for `t <= t0`.
+pub fn drift_factor(nu: f32, t_seconds: f64, hw: &HardwareConfig) -> f32 {
+    let t = t_seconds.max(hw.t0_seconds);
+    ((t / hw.t0_seconds) as f32).powf(-nu)
+}
+
+/// A differential pair cell representing one signed weight.
+#[derive(Debug, Clone, Copy)]
+pub struct DifferentialPair {
+    pub pos: PcmDevice,
+    pub neg: PcmDevice,
+}
+
+impl DifferentialPair {
+    /// Effective signed weight at time `t`.
+    pub fn weight_at(&self, t_seconds: f64, hw: &HardwareConfig) -> f32 {
+        self.pos.g_at(t_seconds, hw) - self.neg.g_at(t_seconds, hw)
+    }
+
+    /// Sum of conductances (what a GDC calibration column measures).
+    pub fn total_g_at(&self, t_seconds: f64, hw: &HardwareConfig) -> f32 {
+        self.pos.g_at(t_seconds, hw) + self.neg.g_at(t_seconds, hw)
+    }
+
+    pub fn total_g0(&self) -> f32 {
+        self.pos.g0 + self.neg.g0
+    }
+}
+
+/// Quantize a weight to the differential-pair grid (no noise).
+pub fn quantize(w: f32, w_max: f32, hw: &HardwareConfig) -> f32 {
+    let levels = hw.g_levels() as f32;
+    let step = w_max / levels;
+    (w / step).round().clamp(-levels, levels) * step
+}
+
+/// Full-scale of a weight tensor (max |w|, floored like the python side).
+pub fn w_max_of(weights: &[f32]) -> f32 {
+    weights
+        .iter()
+        .fold(0.0f32, |m, &w| m.max(w.abs()))
+        .max(1e-6)
+}
+
+/// Program one weight into a differential pair: quantize, then apply
+/// iterative-programming residual noise and draw the drift exponents.
+pub fn program(rng: &mut Rng, w: f32, w_max: f32,
+               hw: &HardwareConfig) -> DifferentialPair {
+    let wq = quantize(w, w_max, hw);
+    // Noise lands on whichever device carries the level; the idle device
+    // stays near its reset state (tiny conductance, negligible noise).
+    let wn = wq + rng.normal_ms(0.0, hw.sigma_prog * w_max as f64) as f32;
+    let (gp, gm) = if wn >= 0.0 { (wn, 0.0) } else { (0.0, -wn) };
+    DifferentialPair {
+        pos: PcmDevice { g0: gp,
+                         nu: rng.normal_ms(hw.nu_mean, hw.nu_std) as f32 },
+        neg: PcmDevice { g0: gm,
+                         nu: rng.normal_ms(hw.nu_mean, hw.nu_std) as f32 },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hw() -> HardwareConfig {
+        HardwareConfig::default()
+    }
+
+    #[test]
+    fn quantize_grid_31_levels() {
+        let mut grid: Vec<i32> = (-2000..=2000)
+            .map(|i| (quantize(i as f32 / 1000.0, 1.0, &hw()) * 15.0)
+                .round() as i32)
+            .collect();
+        grid.sort_unstable();
+        grid.dedup();
+        assert_eq!(grid.len(), 31);
+    }
+
+    #[test]
+    fn quantize_error_half_step() {
+        let h = hw();
+        let step = 1.0 / h.g_levels() as f32;
+        for i in -100..=100 {
+            let w = i as f32 / 100.0;
+            assert!((quantize(w, 1.0, &h) - w).abs() <= step / 2.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn programming_noise_statistics() {
+        let h = hw();
+        let mut rng = Rng::seed_from_u64(1);
+        let n = 20_000;
+        let mut sum = 0.0f64;
+        let mut sq = 0.0f64;
+        for _ in 0..n {
+            let p = program(&mut rng, 0.5, 1.0, &h);
+            let resid = (p.weight_at(0.0, &h) - quantize(0.5, 1.0, &h)) as f64;
+            sum += resid;
+            sq += resid * resid;
+        }
+        let mean = sum / n as f64;
+        let std = (sq / n as f64 - mean * mean).sqrt();
+        assert!(mean.abs() < 0.002, "mean {mean}");
+        assert!((std - h.sigma_prog).abs() < 0.002, "std {std}");
+    }
+
+    #[test]
+    fn drift_is_identity_at_t0_and_decays() {
+        let h = hw();
+        let d = PcmDevice { g0: 1.0, nu: 0.05 };
+        assert!((d.g_at(0.0, &h) - 1.0).abs() < 1e-6);
+        assert!((d.g_at(h.t0_seconds, &h) - 1.0).abs() < 1e-6);
+        let hour = d.g_at(3600.0, &h);
+        let year = d.g_at(3.15e7, &h);
+        assert!(year < hour && hour < 1.0);
+        // One-year attenuation with nu=0.05: (3.15e7/25)^-0.05 ~ 0.50.
+        assert!((year - 0.50).abs() < 0.02, "year {year}");
+    }
+
+    #[test]
+    fn negative_weights_program_negative_device() {
+        let h = hw();
+        let mut rng = Rng::seed_from_u64(2);
+        let p = program(&mut rng, -0.8, 1.0, &h);
+        assert_eq!(p.pos.g0, 0.0);
+        assert!(p.neg.g0 > 0.5);
+        assert!(p.weight_at(0.0, &h) < -0.5);
+    }
+
+    #[test]
+    fn w_max_floor() {
+        assert!(w_max_of(&[0.0, 0.0]) >= 1e-6);
+        assert_eq!(w_max_of(&[0.25, -0.5]), 0.5);
+    }
+}

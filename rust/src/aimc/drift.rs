@@ -1,0 +1,106 @@
+//! Conductance drift and global drift compensation (paper §V-B, from [53]).
+//!
+//! GDC periodically drives a known calibration input into sample columns
+//! and measures the aggregate output current; the ratio to the current
+//! measured right after programming gives a *global* scale factor applied
+//! to all outputs. Deterministic mean drift is removed exactly; the
+//! per-device stochastic component (nu dispersion) remains — which is why
+//! HWAT+GDC beats CT+GDC in Table V.
+
+use crate::aimc::device::DifferentialPair;
+use crate::config::HardwareConfig;
+
+/// Measure the GDC calibration factor over a population of cells:
+/// alpha = (sum of drifted conductances) / (sum at programming time).
+/// Outputs are divided by alpha to compensate.
+pub fn gdc_alpha(cells: &[DifferentialPair], t_seconds: f64,
+                 hw: &HardwareConfig) -> f32 {
+    let g0: f64 = cells.iter().map(|c| c.total_g0() as f64).sum();
+    if g0 <= 1e-12 {
+        return 1.0;
+    }
+    let gt: f64 = cells
+        .iter()
+        .map(|c| c.total_g_at(t_seconds, hw) as f64)
+        .sum();
+    ((gt / g0) as f32).max(1e-3)
+}
+
+/// Effective weights of a programmed cell population at time `t`,
+/// optionally GDC-compensated.
+pub fn weights_at(cells: &[DifferentialPair], t_seconds: f64, gdc: bool,
+                  hw: &HardwareConfig) -> Vec<f32> {
+    let alpha = if gdc { gdc_alpha(cells, t_seconds, hw) } else { 1.0 };
+    cells
+        .iter()
+        .map(|c| c.weight_at(t_seconds, hw) / alpha)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aimc::device::program;
+    use crate::util::Rng;
+
+    fn programmed(n: usize, w: f32) -> (Vec<DifferentialPair>, HardwareConfig) {
+        let hw = HardwareConfig::default();
+        let mut rng = Rng::seed_from_u64(3);
+        let cells: Vec<_> =
+            (0..n).map(|_| program(&mut rng, w, 1.0, &hw)).collect();
+        (cells, hw)
+    }
+
+    #[test]
+    fn gdc_alpha_is_one_at_t0() {
+        let (cells, hw) = programmed(1000, 0.5);
+        assert!((gdc_alpha(&cells, 0.0, &hw) - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn gdc_restores_mean_weight() {
+        let (cells, hw) = programmed(5000, 0.5);
+        let year = 3.15e7;
+        let nc = weights_at(&cells, year, false, &hw);
+        let comp = weights_at(&cells, year, true, &hw);
+        let mean = |v: &[f32]| v.iter().sum::<f32>() / v.len() as f32;
+        let w0 = mean(&weights_at(&cells, 0.0, false, &hw));
+        assert!(mean(&nc) < 0.7 * w0, "uncompensated should collapse");
+        assert!((mean(&comp) - w0).abs() / w0 < 0.01, "GDC restores mean");
+    }
+
+    #[test]
+    fn gdc_reduces_mse_for_mixed_signs() {
+        let hw = HardwareConfig::default();
+        let mut rng = Rng::seed_from_u64(4);
+        let targets: Vec<f32> = (0..4000)
+            .map(|i| ((i % 31) as f32 - 15.0) / 15.0 * 0.8)
+            .collect();
+        let cells: Vec<_> = targets
+            .iter()
+            .map(|&w| program(&mut rng, w, 1.0, &hw))
+            .collect();
+        let year = 3.15e7;
+        let mse = |v: &[f32]| -> f32 {
+            v.iter()
+                .zip(&targets)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f32>()
+                / v.len() as f32
+        };
+        let e_nc = mse(&weights_at(&cells, year, false, &hw));
+        let e_gdc = mse(&weights_at(&cells, year, true, &hw));
+        assert!(e_gdc < e_nc, "GDC must reduce weight MSE: {e_gdc} vs {e_nc}");
+    }
+
+    #[test]
+    fn residual_dispersion_grows_with_time_even_with_gdc() {
+        let (cells, hw) = programmed(5000, 0.5);
+        let disp = |t: f64| {
+            let w = weights_at(&cells, t, true, &hw);
+            let m = w.iter().sum::<f32>() / w.len() as f32;
+            w.iter().map(|x| (x - m) * (x - m)).sum::<f32>() / w.len() as f32
+        };
+        assert!(disp(3.15e7) > disp(3600.0));
+    }
+}

@@ -1,0 +1,210 @@
+//! Row-block-wise mapping of a weight matrix across synaptic arrays
+//! (paper §IV-A2, Fig 4).
+//!
+//! A `Din x Dout` weight matrix is split into `ceil(Din/128)` row blocks x
+//! `ceil(Dout/128)` column blocks of 128x128-cell SAs. All SAs holding the
+//! *same row block range* of one output column group live in one spiking
+//! neuron tile and feed a shared LIF unit through a carry-save adder, so
+//! non-binary local sums are accumulated immediately and never buffered —
+//! the paper's key memory-traffic optimization.
+
+use crate::aimc::crossbar::{adc_clip_of, SynapticArray};
+use crate::aimc::device::w_max_of;
+use crate::config::HardwareConfig;
+use crate::snn::LifArray;
+use crate::util::Rng;
+
+/// A full weight matrix mapped onto a grid of synaptic arrays.
+#[derive(Debug, Clone)]
+pub struct MappedMatrix {
+    pub d_in: usize,
+    pub d_out: usize,
+    /// `blocks[rb][cb]` = SA holding rows `rb*128..` and cols `cb*128..`.
+    pub blocks: Vec<Vec<SynapticArray>>,
+    pub w_max: f32,
+    pub adc_clip: f32,
+}
+
+impl MappedMatrix {
+    /// Number of row blocks (crossbars accumulated per output).
+    pub fn row_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn col_blocks(&self) -> usize {
+        self.blocks.first().map_or(0, |r| r.len())
+    }
+
+    /// Total SAs consumed — the paper's area/energy accounting unit.
+    pub fn n_arrays(&self) -> usize {
+        self.row_blocks() * self.col_blocks()
+    }
+
+    /// Program a row-major `d_in x d_out` weight matrix.
+    pub fn program(rng: &mut Rng, weights: &[f32], d_in: usize,
+                   d_out: usize, hw: &HardwareConfig) -> Self {
+        assert_eq!(weights.len(), d_in * d_out);
+        let xb = hw.crossbar_dim;
+        let w_max = w_max_of(weights);
+        let adc_clip = adc_clip_of(weights, hw);
+        let n_rb = d_in.div_ceil(xb);
+        let n_cb = d_out.div_ceil(xb);
+        let mut blocks = Vec::with_capacity(n_rb);
+        for rb in 0..n_rb {
+            let rows = (d_in - rb * xb).min(xb);
+            let mut row = Vec::with_capacity(n_cb);
+            for cb in 0..n_cb {
+                let cols = (d_out - cb * xb).min(xb);
+                let mut sub = Vec::with_capacity(rows * cols);
+                for r in 0..rows {
+                    for c in 0..cols {
+                        sub.push(weights[(rb * xb + r) * d_out
+                            + cb * xb + c]);
+                    }
+                }
+                row.push(SynapticArray::program_block(
+                    rng, &sub, rows, cols, w_max, adc_clip, hw));
+            }
+            blocks.push(row);
+        }
+        MappedMatrix { d_in, d_out, blocks, w_max, adc_clip }
+    }
+
+    /// Analog matrix-vector product for one binary input vector: every
+    /// SA's ADC-quantized local sums are accumulated per output column
+    /// (the carry-save adder in the LIF unit).
+    pub fn mvm(&self, rng: &mut Rng, spikes: &[bool], t_seconds: f64,
+               hw: &HardwareConfig) -> Vec<f32> {
+        assert_eq!(spikes.len(), self.d_in);
+        let xb = hw.crossbar_dim;
+        let mut out = vec![0.0f32; self.d_out];
+        for (rb, row) in self.blocks.iter().enumerate() {
+            let lo = rb * xb;
+            let hi = (lo + xb).min(self.d_in);
+            let sub = &spikes[lo..hi];
+            for (cb, sa) in row.iter().enumerate() {
+                let local = sa.mvm(rng, sub, t_seconds, hw);
+                for (c, v) in local.iter().enumerate() {
+                    out[cb * xb + c] += v;
+                }
+            }
+        }
+        out
+    }
+
+    /// MVM followed by the shared LIF units — one "spiking neuron tile"
+    /// step for a token (used by the standalone engine demo and tests).
+    pub fn mvm_lif(&self, rng: &mut Rng, spikes: &[bool],
+                   lif: &mut LifArray, t_seconds: f64,
+                   hw: &HardwareConfig) -> Vec<bool> {
+        let pre = self.mvm(rng, spikes, t_seconds, hw);
+        lif.step(&pre)
+    }
+
+    /// Effective (drifted) weights, flattened back to `d_in x d_out`
+    /// row-major — what the runtime feeds the HLO executable.
+    pub fn weights_at(&self, t_seconds: f64, hw: &HardwareConfig) -> Vec<f32> {
+        let xb = hw.crossbar_dim;
+        let mut out = vec![0.0f32; self.d_in * self.d_out];
+        for (rb, row) in self.blocks.iter().enumerate() {
+            for (cb, sa) in row.iter().enumerate() {
+                let w = sa.weights_at(t_seconds, hw);
+                for r in 0..sa.rows {
+                    for c in 0..sa.cols {
+                        out[(rb * xb + r) * self.d_out + cb * xb + c] =
+                            w[r * sa.cols + c];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// All cells, flattened — for engine-level GDC calibration.
+    pub fn all_cells(&self) -> Vec<crate::aimc::device::DifferentialPair> {
+        self.blocks
+            .iter()
+            .flat_map(|row| row.iter().flat_map(|sa| sa.cells.iter().copied()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn noise_free_hw() -> HardwareConfig {
+        HardwareConfig { sigma_prog: 0.0, sigma_read: 0.0, nu_std: 0.0,
+                         ..HardwareConfig::default() }
+    }
+
+    fn rand_weights(n: usize, scale: f32) -> Vec<f32> {
+        (0..n)
+            .map(|i| {
+                let h = (i as u64).wrapping_mul(0x9E3779B97F4A7C15);
+                ((h >> 40) as f32 / (1u64 << 24) as f32 - 0.5) * 2.0 * scale
+            })
+            .collect()
+    }
+
+    #[test]
+    fn block_grid_dimensions() {
+        let hw = noise_free_hw();
+        let mut rng = Rng::seed_from_u64(9);
+        // 384x512 -> the paper's example: twelve 128x128 submatrices.
+        let w = rand_weights(384 * 512, 0.1);
+        let m = MappedMatrix::program(&mut rng, &w, 384, 512, &hw);
+        assert_eq!(m.row_blocks(), 3);
+        assert_eq!(m.col_blocks(), 4);
+        assert_eq!(m.n_arrays(), 12);
+    }
+
+    #[test]
+    fn partitioned_mvm_matches_dense_within_quant_error() {
+        let hw = noise_free_hw();
+        let mut rng = Rng::seed_from_u64(10);
+        let (din, dout) = (300, 70); // non-multiples of 128
+        let w = rand_weights(din * dout, 0.05);
+        let m = MappedMatrix::program(&mut rng, &w, din, dout, &hw);
+        let spikes: Vec<bool> = (0..din).map(|i| i % 2 == 0).collect();
+        let got = m.mvm(&mut rng, &spikes, 0.0, &hw);
+        let step = m.adc_clip / hw.adc_levels() as f32;
+        let wq_step = m.w_max / hw.g_levels() as f32;
+        let active = spikes.iter().filter(|&&s| s).count() as f32;
+        for c in 0..dout {
+            let exact: f32 = (0..din)
+                .filter(|&r| spikes[r])
+                .map(|r| w[r * dout + c])
+                .sum();
+            let tol = m.row_blocks() as f32 * step / 2.0
+                + active * wq_step / 2.0;
+            assert!((got[c] - exact).abs() <= tol,
+                    "col {c}: {} vs {exact} (tol {tol})", got[c]);
+        }
+    }
+
+    #[test]
+    fn weights_roundtrip_at_t0_equals_quantized() {
+        let hw = noise_free_hw();
+        let mut rng = Rng::seed_from_u64(11);
+        let w = rand_weights(130 * 60, 0.1);
+        let m = MappedMatrix::program(&mut rng, &w, 130, 60, &hw);
+        let back = m.weights_at(0.0, &hw);
+        let step = m.w_max / hw.g_levels() as f32;
+        for (a, b) in back.iter().zip(&w) {
+            assert!((a - b).abs() <= step / 2.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn mvm_lif_produces_binary_spikes() {
+        let hw = HardwareConfig::default();
+        let mut rng = Rng::seed_from_u64(12);
+        let w = rand_weights(64 * 32, 0.3);
+        let m = MappedMatrix::program(&mut rng, &w, 64, 32, &hw);
+        let mut lif = LifArray::new(32);
+        let spikes: Vec<bool> = (0..64).map(|i| i % 2 == 0).collect();
+        let out = m.mvm_lif(&mut rng, &spikes, &mut lif, 0.0, &hw);
+        assert_eq!(out.len(), 32);
+    }
+}

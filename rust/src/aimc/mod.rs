@@ -1,0 +1,29 @@
+//! AIMC engine simulator (paper §IV-A): PCM devices, crossbars, row-block
+//! mapping, drift + global drift compensation.
+//!
+//! The paper evaluates accuracy through a statistical PCM model (AIHWKit),
+//! not silicon; this module implements the same model natively so the
+//! drift/GDC ablations (Fig 7, Table V) run entirely in Rust: effective
+//! weights are computed here and fed as *inputs* to the AOT-compiled HLO
+//! executable (whose graph applies the per-block ADC, mirroring hardware).
+//!
+//! Submodules:
+//! * [`device`]  — differential-pair PCM cell: conductance quantization,
+//!   programming noise, read noise;
+//! * [`drift`]   — conductance drift `g(t) = g(t0) (t/t0)^-nu` and GDC;
+//! * [`crossbar`]— one 128x128 synaptic array with shared 5-bit SAR ADCs;
+//! * [`mapping`] — row-block-wise mapping of arbitrary weight matrices
+//!   across synaptic arrays and spiking-neuron tiles (Fig 4);
+//! * [`engine`]  — whole-model weight programming + drift application,
+//!   the bridge into the PJRT runtime.
+
+pub mod crossbar;
+pub mod device;
+pub mod drift;
+pub mod engine;
+pub mod mapping;
+
+pub use crossbar::SynapticArray;
+pub use device::{DifferentialPair, PcmDevice};
+pub use engine::AimcEngine;
+pub use mapping::MappedMatrix;

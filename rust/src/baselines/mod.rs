@@ -1,0 +1,266 @@
+//! Baseline accelerator models (paper §VII-A1, Table VI, Fig 10b).
+//!
+//! * [`ann_quant_energy`]       — *ANN-Quant*: SOTA fully digital INT8
+//!   accelerator for ANN transformers (SwiftTron-like [34]).
+//! * [`ann_quant_aimc_energy`]  — *ANN-Quant+AIMC*: same, but feed-forward
+//!   and fully connected layers on PCM crossbars.
+//! * [`snn_digi_opt_energy`]    — *SNN-Digi-Opt*: ideal digital ASIC
+//!   projection of the Spikformer ops [15]: masked INT8 additions for all
+//!   matrix products, LIF units, INT8 pre-activation staging.
+//! * [`xformer_energy`]/[`xformer_latency`] — X-Former [24]: ReRAM AIMC
+//!   feed-forward + SRAM-DIMC attention with online K/V writes.
+//! * [`gpu`]                    — RTX A2000 roofline model for the GPU
+//!   rows of Fig 10b.
+
+use crate::config::{HardwareConfig, ModelDims};
+use crate::energy::constants::*;
+use crate::energy::model::EnergyReport;
+use crate::energy::ops::{self, memory};
+
+/// Split of compute energy we report for baselines (they have no AIMC/SSA
+/// breakdown; the harness prints compute vs memory like Fig 8).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BaselineEnergy {
+    pub compute_pj: f64,
+    pub memory_pj: f64,
+}
+
+impl BaselineEnergy {
+    pub fn total_pj(&self) -> f64 {
+        self.compute_pj + self.memory_pj
+    }
+
+    pub fn total_mj(&self) -> f64 {
+        self.total_pj() * 1e-9
+    }
+}
+
+/// Nonlinearity overhead of an ANN transformer: softmax over scores +
+/// two LayerNorms per layer + GELU in the FFN.
+fn ann_nonlinear_pj(m: &ModelDims) -> f64 {
+    let n = m.n_tokens as f64;
+    let l = m.depth as f64;
+    let softmax = l * m.heads as f64 * n * n * E_SOFTMAX_EL;
+    let layernorm = l * 2.0 * n * m.dim as f64 * E_LAYERNORM_EL;
+    let gelu = l * n * m.hidden() as f64 * E_GELU_EL;
+    softmax + layernorm + gelu
+}
+
+/// ANN-Quant: every MAC on INT8 digital ALUs (paper: MACs dominate >90%).
+pub fn ann_quant_energy(m: &ModelDims) -> BaselineEnergy {
+    let compute = ops::dense_macs(m) * E_MAC_INT8 + ann_nonlinear_pj(m);
+    BaselineEnergy {
+        compute_pj: compute,
+        memory_pj: memory::ann_bytes(m) * E_SRAM_BYTE,
+    }
+}
+
+/// ANN-Quant+AIMC: linear-layer MACs move into PCM crossbars (per-
+/// conversion cost like Xpikeformer, but activations are INT8 so each
+/// input feeds 8 bit-serial crossbar cycles); attention + nonlinearities
+/// stay digital; memory traffic unchanged (paper §VII-A3).
+pub fn ann_quant_aimc_energy(m: &ModelDims, hw: &HardwareConfig)
+                             -> BaselineEnergy {
+    // INT8 activations apply bit-serially (8 crossbar cycles), INT8
+    // weights need two differential pairs, and the readout must resolve
+    // 8 bits (ADC8_PENALTY on the whole conversion bundle).
+    let conv = INT8_BIT_CYCLES * INT8_PAIRS_PER_WEIGHT
+        * ops::aimc_conversions_per_step(m, hw.crossbar_dim);
+    let aimc = conv * ADC8_PENALTY
+        * (E_XBAR_CONV + E_ADC_CONV + E_PERIPH_CONV + E_ACCUM_CONV);
+    let n = m.n_tokens as f64;
+    let attn_macs = m.depth as f64 * 2.0 * n * n * m.dim as f64;
+    let compute = aimc + attn_macs * E_MAC_INT8 + ann_nonlinear_pj(m);
+    BaselineEnergy {
+        compute_pj: compute,
+        memory_pj: memory::ann_bytes(m) * E_SRAM_BYTE,
+    }
+}
+
+/// SNN-Digi-Opt at encoding length `t_snn` (its own minimum-T from
+/// Tables III/IV — fairness rule of §VII-A2).
+pub fn snn_digi_opt_energy(m: &ModelDims, t_snn: usize) -> BaselineEnergy {
+    let t = t_snn as f64;
+    let n = m.n_tokens as f64;
+    // Linear layers: masked additions — an add fires per active input
+    // spike, plus clock/mask control on every position.
+    let lin_positions: f64 = ops::linear_stages(m)
+        .iter()
+        .map(|&(i, o)| n * i as f64 * o as f64)
+        .sum();
+    let lin = lin_positions * (P_SPIKE * E_ADD_INT8 + E_CTRL_GATED);
+    // Attention [15]: QK^T and SV as masked adds + per-score INT scaling.
+    let attn_positions = m.depth as f64 * 2.0 * n * n * m.dim as f64;
+    let attn = attn_positions * (P_SPIKE * E_ADD_INT8 + E_CTRL_GATED)
+        + m.depth as f64 * m.heads as f64 * n * n * E_MUL_INT8;
+    let lif = ops::lif_updates_per_step(m) * E_LIF_UPDATE;
+    let res = ops::residual_ops_per_step(m) * E_ADD_INT8;
+    BaselineEnergy {
+        compute_pj: t * (lin + attn + lif + res),
+        memory_pj: memory::snn_digi_bytes(m, Some(t_snn)) * E_SRAM_BYTE,
+    }
+}
+
+/// X-Former [24]: 1-bit ReRAM AIMC for linear layers (8 bit-serial input
+/// cycles AND 5x more device columns per weight than multi-bit PCM) +
+/// SRAM-DIMC attention requiring online K/V writes and intermediate
+/// storage. Used for the Table VI comparison row.
+pub fn xformer_energy(m: &ModelDims, hw: &HardwareConfig) -> BaselineEnergy {
+    // 1-bit ReRAM cells: 5 columns per 5-bit weight -> 5x conversions,
+    // INT8 inputs bit-serial (8 cycles), 5-bit-class readout.
+    let conv = INT8_BIT_CYCLES * XFORMER_COLS_PER_WEIGHT
+        * ops::aimc_conversions_per_step(m, hw.crossbar_dim);
+    let aimc = conv
+        * (E_XBAR_CONV + E_ADC_CONV + E_PERIPH_CONV + E_ACCUM_CONV);
+    let n = m.n_tokens as f64;
+    // DIMC attention: in-SRAM INT8 MACs ~40% cheaper than ALU MACs, but
+    // K/V matrices must be written into the compute-SRAM each inference.
+    let attn_macs = m.depth as f64 * 2.0 * n * n * m.dim as f64;
+    let dimc = attn_macs * E_MAC_INT8 * 0.6;
+    let kv_writes = m.depth as f64 * 2.0 * n * m.dim as f64 * E_SRAM_BYTE;
+    let compute = aimc + dimc + ann_nonlinear_pj(m);
+    BaselineEnergy {
+        compute_pj: compute,
+        memory_pj: memory::ann_bytes(m) * E_SRAM_BYTE + kv_writes,
+    }
+}
+
+/// X-Former latency: attention DIMC resources are fixed (paper Table VI
+/// note), so attention serializes; plus K/V SRAM write time.
+pub fn xformer_latency_ms(m: &ModelDims) -> f64 {
+    let n = m.n_tokens as f64;
+    let items = n; // one pass, no time axis
+    let l = m.depth as f64;
+    // Same periphery-dominated pipeline as Xpikeformer for linear layers
+    // (x8 bit-serial), plus DIMC attention at ~1 op/cycle per 64 lanes.
+    let linear_cycles = items * l * (LAT_PERIPH_ITEM + LAT_XBAR_ITEM * 8.0
+        + LAT_ACCUM_ITEM);
+    let attn_ops = l * 2.0 * n * n * m.dim as f64;
+    let dimc_cycles = attn_ops / XFORMER_DIMC_LANES; // fixed DIMC macro
+    let kv_cycles = l * 2.0 * n * m.dim as f64 / 64.0; // 64B/cycle SRAM
+    (linear_cycles + dimc_cycles + kv_cycles) * CLOCK_PERIOD_S * 1e3
+}
+
+/// GPU latency models (paper Fig 10b, RTX A2000).
+pub mod gpu {
+    use super::*;
+
+    /// Kernels launched per transformer layer (QKV, 2 attention matmuls,
+    /// softmax, projection, 2 FFN, LN/activations fused ~ 4 more).
+    const KERNELS_PER_LAYER: f64 = 12.0;
+
+    /// ANN transformer, batch 1, FP16.
+    pub fn ann_latency_ms(m: &ModelDims) -> f64 {
+        let flops = 2.0 * ops::dense_macs(m);
+        let bytes = memory::ann_bytes(m) * 2.0; // FP16 activations
+        let launches = m.depth as f64 * KERNELS_PER_LAYER + 4.0;
+        let t = launches * GPU_LAUNCH_S
+            + flops / GPU_EFF_FLOPS
+            + bytes / GPU_EFF_BW;
+        t * 1e3
+    }
+
+    /// Spiking transformer on GPU [15]: the time loop re-launches every
+    /// kernel T times; binary spikes occupy FP16 lanes (precision
+    /// mismatch) and LIF state updates add elementwise kernels.
+    pub fn snn_latency_ms(m: &ModelDims, t_snn: usize) -> f64 {
+        let t_steps = t_snn as f64;
+        let flops = 2.0 * ops::dense_macs(m); // dense on GPU: no sparsity
+        let lif_kernels = 7.0; // per layer: QKV x3 LIF, attn x2, ffn x2
+        let launches = t_steps
+            * (m.depth as f64 * (KERNELS_PER_LAYER + lif_kernels) + 4.0);
+        let bytes = t_steps
+            * (memory::ann_bytes(m) * 2.0 // spikes stored as FP16
+               + ops::lif_updates_per_step(&clone_with_t(m, 1)) * 4.0);
+        let t = launches * GPU_LAUNCH_S
+            + t_steps * flops / GPU_EFF_FLOPS
+            + bytes / GPU_EFF_BW;
+        t * 1e3
+    }
+
+    fn clone_with_t(m: &ModelDims, t: usize) -> ModelDims {
+        let mut c = m.clone();
+        c.t_steps = t;
+        c
+    }
+}
+
+/// Convenience: Xpikeformer report -> BaselineEnergy shape for tables.
+pub fn as_baseline(e: &EnergyReport) -> BaselineEnergy {
+    BaselineEnergy { compute_pj: e.compute_pj(), memory_pj: e.memory_pj }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{imagenet_points, table6_point};
+    use crate::energy::model::{xpikeformer_energy, xpikeformer_latency};
+
+    #[test]
+    fn fig8_energy_ordering_and_ratios_imagenet() {
+        let hw = HardwareConfig::default();
+        for p in imagenet_points() {
+            let xp = as_baseline(&xpikeformer_energy(&p.dims, &hw));
+            let ann = ann_quant_energy(&p.dims);
+            let ann_aimc = ann_quant_aimc_energy(&p.dims, &hw);
+            let snn = snn_digi_opt_energy(&p.dims, p.t_snn);
+            // Ordering: ANN-Quant > ANN+AIMC > SNN-Digi-Opt > Xpikeformer.
+            assert!(ann.total_pj() > ann_aimc.total_pj());
+            assert!(ann_aimc.total_pj() > snn.total_pj());
+            assert!(snn.total_pj() > xp.total_pj());
+            // Paper bands: 9.6-13x vs ANN-Quant; 5.4-5.9x vs ANN+AIMC;
+            // 1.8-1.9x vs SNN-Digi-Opt (we assert the shape with slack).
+            let r_ann = ann.total_pj() / xp.total_pj();
+            let r_aimc = ann_aimc.total_pj() / xp.total_pj();
+            let r_snn = snn.total_pj() / xp.total_pj();
+            assert!(r_ann > 6.5 && r_ann < 16.0,
+                    "{}: ann ratio {r_ann:.2}", p.dims.name);
+            assert!(r_aimc > 2.5 && r_aimc < 8.0,
+                    "{}: ann+aimc ratio {r_aimc:.2}", p.dims.name);
+            assert!(r_snn > 1.5 && r_snn < 3.0,
+                    "{}: snn ratio {r_snn:.2}", p.dims.name);
+        }
+    }
+
+    #[test]
+    fn ann_macs_dominate_ann_quant_compute() {
+        // Paper: MACs are >90% of ANN-Quant compute energy.
+        let p = table6_point();
+        let mac_pj = ops::dense_macs(&p.dims) * E_MAC_INT8;
+        let e = ann_quant_energy(&p.dims);
+        assert!(mac_pj / e.compute_pj > 0.90);
+    }
+
+    #[test]
+    fn table6_absolute_numbers() {
+        let hw = HardwareConfig::default();
+        let p = table6_point();
+        // SwiftTron reports 3.97 mJ / 2.26 ms; X-Former 2.04 mJ / 4.13 ms;
+        // Xpikeformer 0.30 mJ / 2.18 ms. Check order-of-magnitude + order.
+        let ann = ann_quant_energy(&p.dims).total_mj();
+        let xf = xformer_energy(&p.dims, &hw).total_mj();
+        let xp = xpikeformer_energy(&p.dims, &hw).total_mj();
+        assert!(ann > 2.0 && ann < 6.5, "ann {ann}");
+        assert!(xf > 1.0 && xf < 3.5, "xformer {xf}");
+        assert!(xp < 0.6, "xpike {xp}");
+        assert!(ann > xf && xf > xp);
+        let xf_lat = xformer_latency_ms(&p.dims);
+        let xp_lat = xpikeformer_latency(&p.dims, &hw).total_ms();
+        assert!(xf_lat > xp_lat, "X-Former slower: {xf_lat} vs {xp_lat}");
+    }
+
+    #[test]
+    fn fig10b_gpu_speedups() {
+        let hw = HardwareConfig::default();
+        let p = table6_point();
+        let xp_ms = xpikeformer_latency(&p.dims, &hw).total_ms();
+        let ann_ms = gpu::ann_latency_ms(&p.dims);
+        let snn_ms = gpu::snn_latency_ms(&p.dims, 4);
+        // Paper: 2.18x over ANN-GPU, 6.85x over SNN-GPU.
+        let s_ann = ann_ms / xp_ms;
+        let s_snn = snn_ms / xp_ms;
+        assert!(s_ann > 1.5 && s_ann < 3.5, "ann speedup {s_ann:.2}");
+        assert!(s_snn > 4.5 && s_snn < 10.0, "snn speedup {s_snn:.2}");
+        assert!(snn_ms > ann_ms, "SNN suffers more on GPU");
+    }
+}

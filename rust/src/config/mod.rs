@@ -1,0 +1,316 @@
+//! Configuration system: model dimensions, hardware parameters, run options.
+//!
+//! Two families of model presets:
+//! * **paper-scale** presets (`vit_6_512`, `vit_8_768`, `gpt_8_512`, ...) —
+//!   used analytically by the energy/latency/area models to regenerate the
+//!   paper's efficiency figures at the original operating points;
+//! * **trained** presets (`tiny 2-64`, `small 4-128`) — the from-scratch
+//!   checkpoints lowered to HLO artifacts and executed on the PJRT runtime
+//!   for the accuracy experiments.
+//!
+//! `RunConfig::from_json_file` lets the CLI and examples load overrides
+//! from `configs/*.json` (parsed with the in-crate JSON parser).
+
+/// Which transformer family a model belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelKind {
+    /// Encoder-only (image classification, paper Task 1).
+    Vit,
+    /// Decoder-only (ICL symbol detection, paper Task 2).
+    Gpt,
+}
+
+/// Architecture dimensions of one transformer (paper "depth-dim" naming).
+#[derive(Debug, Clone)]
+pub struct ModelDims {
+    pub name: String,
+    pub kind: ModelKind,
+    pub depth: usize,
+    pub dim: usize,
+    pub heads: usize,
+    pub n_tokens: usize,
+    pub in_feat: usize,
+    pub classes: usize,
+    pub mlp_ratio: usize,
+    /// Spike encoding length at which this model converges (Tables III/IV);
+    /// per-inference energy and latency scale with this.
+    pub t_steps: usize,
+}
+
+impl ModelDims {
+    pub fn d_head(&self) -> usize {
+        self.dim / self.heads
+    }
+
+    pub fn hidden(&self) -> usize {
+        self.mlp_ratio * self.dim
+    }
+
+    pub fn size_tag(&self) -> String {
+        format!("{}-{}", self.depth, self.dim)
+    }
+
+    /// Total parameter count of the crossbar-mapped (analog) weights.
+    pub fn analog_params(&self) -> usize {
+        let per_layer = 4 * self.dim * self.dim + 2 * self.dim * self.hidden();
+        self.in_feat * self.dim + self.depth * per_layer
+            + self.dim * self.classes
+    }
+}
+
+/// Paper-scale ImageNet ViT (patch 16 on 224x224 -> 196 tokens + cls).
+pub fn vit_imagenet(depth: usize, dim: usize, heads: usize, t: usize) -> ModelDims {
+    ModelDims {
+        name: format!("vit_{depth}-{dim}_imagenet"),
+        kind: ModelKind::Vit,
+        depth,
+        dim,
+        heads,
+        n_tokens: 197,
+        in_feat: 768, // 16*16*3
+        classes: 1000,
+        mlp_ratio: 4,
+        t_steps: t,
+    }
+}
+
+/// Paper-scale CIFAR ViT (patch 4 on 32x32 -> 64 tokens + cls).
+pub fn vit_cifar(depth: usize, dim: usize, heads: usize, t: usize) -> ModelDims {
+    ModelDims {
+        name: format!("vit_{depth}-{dim}_cifar"),
+        kind: ModelKind::Vit,
+        depth,
+        dim,
+        heads,
+        n_tokens: 65,
+        in_feat: 48,
+        classes: 10,
+        mlp_ratio: 4,
+        t_steps: t,
+    }
+}
+
+/// Paper-scale ICL GPT (18 context pairs + query = 37 tokens).
+pub fn gpt_icl(depth: usize, dim: usize, heads: usize, nt: usize, nr: usize,
+               t: usize) -> ModelDims {
+    ModelDims {
+        name: format!("gpt_{depth}-{dim}_{nt}x{nr}"),
+        kind: ModelKind::Gpt,
+        depth,
+        dim,
+        heads,
+        n_tokens: 37,
+        in_feat: 2 * nr + 2 * nt,
+        classes: 4usize.pow(nt as u32),
+        mlp_ratio: 4,
+        t_steps: t,
+    }
+}
+
+/// Hardware configuration — paper Table II plus clocking (§VII: 200 MHz).
+#[derive(Debug, Clone)]
+pub struct HardwareConfig {
+    /// Conductance levels per PCM device (4 bits -> 15 positive levels).
+    pub g_bits: u32,
+    /// Effective signed weight resolution from the differential pair.
+    pub w_bits: u32,
+    /// PCM devices per differential cell.
+    pub devices_per_cell: u32,
+    /// Crossbar dimension, in cells (square).
+    pub crossbar_dim: usize,
+    /// SAR ADC resolution in bits.
+    pub adc_bits: u32,
+    /// Columns sharing one readout unit.
+    pub adc_sharing: usize,
+    /// System clock in Hz.
+    pub clock_hz: f64,
+    /// PCM programming noise std (fraction of w_max).
+    pub sigma_prog: f64,
+    /// Per-read noise std (fraction of w_max).
+    pub sigma_read: f64,
+    /// Conductance drift exponent mean (nu).
+    pub nu_mean: f64,
+    /// Device-to-device drift exponent std.
+    pub nu_std: f64,
+    /// Drift reference time after programming [s].
+    pub t0_seconds: f64,
+    /// ADC full-scale = kappa * sqrt(rows) * rms(w).
+    pub adc_clip_kappa: f64,
+}
+
+impl Default for HardwareConfig {
+    fn default() -> Self {
+        // Paper Table II + §V noise parameters (Joshi et al. 2020).
+        HardwareConfig {
+            g_bits: 4,
+            w_bits: 5,
+            devices_per_cell: 2,
+            crossbar_dim: 128,
+            adc_bits: 5,
+            adc_sharing: 8,
+            clock_hz: 200e6,
+            sigma_prog: 0.03,
+            sigma_read: 0.02,
+            nu_mean: 0.05,
+            nu_std: 0.01,
+            t0_seconds: 25.0,
+            adc_clip_kappa: 4.0,
+        }
+    }
+}
+
+impl HardwareConfig {
+    pub fn g_levels(&self) -> u32 {
+        (1 << self.g_bits) - 1
+    }
+
+    pub fn adc_levels(&self) -> u32 {
+        (1 << (self.adc_bits - 1)) - 1
+    }
+
+    /// Readout units per synaptic array.
+    pub fn readout_units(&self) -> usize {
+        self.crossbar_dim / self.adc_sharing
+    }
+}
+
+/// Drift / compensation settings for one inference run (paper §V-B, Fig 7).
+#[derive(Debug, Clone, Copy)]
+pub struct DriftConfig {
+    /// Time since programming, seconds (0 => freshly programmed).
+    pub t_seconds: f64,
+    /// Apply global drift compensation.
+    pub gdc: bool,
+    /// RNG seed for per-device drift exponents.
+    pub seed: u64,
+}
+
+impl Default for DriftConfig {
+    fn default() -> Self {
+        DriftConfig { t_seconds: 0.0, gdc: true, seed: 0 }
+    }
+}
+
+/// Coordinator / serving options.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// Maximum dynamic batch size (requests merged per PJRT call).
+    pub max_batch: usize,
+    /// Batching window: how long the batcher waits to fill a batch.
+    pub batch_window_us: u64,
+    /// Bounded queue depth; beyond this, submitters see backpressure.
+    pub queue_depth: usize,
+    /// Inference seed base (per-request seeds are derived from it).
+    pub seed: u64,
+    pub drift: DriftConfig,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            max_batch: 8,
+            batch_window_us: 500,
+            queue_depth: 256,
+            seed: 42,
+            drift: DriftConfig::default(),
+        }
+    }
+}
+
+impl RunConfig {
+    /// Load overrides from a JSON file; absent keys keep defaults.
+    pub fn from_json_file(path: &str) -> anyhow::Result<Self> {
+        let j = crate::util::Json::parse(&std::fs::read_to_string(path)?)?;
+        let mut c = RunConfig::default();
+        if let Some(v) = j.get("max_batch").and_then(|v| v.as_usize()) {
+            c.max_batch = v;
+        }
+        if let Some(v) = j.get("batch_window_us").and_then(|v| v.as_f64()) {
+            c.batch_window_us = v as u64;
+        }
+        if let Some(v) = j.get("queue_depth").and_then(|v| v.as_usize()) {
+            c.queue_depth = v;
+        }
+        if let Some(v) = j.get("seed").and_then(|v| v.as_f64()) {
+            c.seed = v as u64;
+        }
+        if let Some(d) = j.get("drift") {
+            if let Some(v) = d.get("t_seconds").and_then(|v| v.as_f64()) {
+                c.drift.t_seconds = v;
+            }
+            if let Some(v) = d.get("gdc").and_then(|v| v.as_bool()) {
+                c.drift.gdc = v;
+            }
+            if let Some(v) = d.get("seed").and_then(|v| v.as_f64()) {
+                c.drift.seed = v as u64;
+            }
+        }
+        Ok(c)
+    }
+}
+
+/// Paper evaluation grid: (xpikeformer dims, SNN-Digi-Opt minimum T) pairs
+/// for every operating point in Figs 8-10 / Tables III-VI.
+pub struct PaperPoint {
+    pub dims: ModelDims,
+    /// Minimum encoding length for the SNN-Digi-Opt baseline (Table III/IV).
+    pub t_snn: usize,
+}
+
+/// ImageNet points (Fig 8a; Table III's ImageNet columns).
+pub fn imagenet_points() -> Vec<PaperPoint> {
+    vec![
+        PaperPoint { dims: vit_imagenet(6, 512, 8, 8), t_snn: 6 },
+        PaperPoint { dims: vit_imagenet(8, 768, 12, 7), t_snn: 4 },
+    ]
+}
+
+/// ICL 4x4 points (Fig 8b; Table IV's 4x4 columns).
+pub fn icl_points() -> Vec<PaperPoint> {
+    vec![
+        PaperPoint { dims: gpt_icl(4, 256, 4, 4, 4, 11), t_snn: 7 },
+        PaperPoint { dims: gpt_icl(8, 512, 8, 4, 4, 5), t_snn: 4 },
+    ]
+}
+
+/// The Table VI benchmark point: ImageNet ViT-8-768, patch 16.
+pub fn table6_point() -> PaperPoint {
+    PaperPoint { dims: vit_imagenet(8, 768, 12, 7), t_snn: 4 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_defaults() {
+        let hw = HardwareConfig::default();
+        assert_eq!(hw.g_levels(), 15);
+        assert_eq!(hw.adc_levels(), 15);
+        assert_eq!(hw.readout_units(), 16);
+        assert_eq!(hw.crossbar_dim, 128);
+    }
+
+    #[test]
+    fn param_counts_scale() {
+        let small = vit_imagenet(6, 512, 8, 8);
+        let large = vit_imagenet(8, 768, 12, 7);
+        assert!(large.analog_params() > 2 * small.analog_params());
+        // ViT-8-768 ~ 57M params (8 * 12*768^2 + embed + head)
+        let m = large.analog_params() as f64 / 1e6;
+        assert!(m > 40.0 && m < 80.0, "got {m}M");
+    }
+
+    #[test]
+    fn run_config_json_overrides() {
+        let dir = std::env::temp_dir().join("xpk_runcfg.json");
+        std::fs::write(&dir,
+            r#"{"max_batch": 4, "drift": {"t_seconds": 3600.0,
+                "gdc": false}}"#).unwrap();
+        let c = RunConfig::from_json_file(dir.to_str().unwrap()).unwrap();
+        assert_eq!(c.max_batch, 4);
+        assert_eq!(c.drift.t_seconds, 3600.0);
+        assert!(!c.drift.gdc);
+        assert_eq!(c.queue_depth, RunConfig::default().queue_depth);
+    }
+}

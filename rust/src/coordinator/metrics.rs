@@ -1,0 +1,132 @@
+//! Serving metrics: throughput, latency distribution, batch occupancy.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Lock-protected metrics sink shared by the batcher and reporters.
+#[derive(Debug)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+    started: Instant,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    completed: u64,
+    batches: u64,
+    batched_samples: u64,
+    /// End-to-end latencies in microseconds (bounded reservoir).
+    latencies_us: Vec<u64>,
+    queue_waits_us: Vec<u64>,
+    rejected: u64,
+}
+
+const RESERVOIR: usize = 65536;
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics { inner: Mutex::new(Inner::default()), started: Instant::now() }
+    }
+}
+
+impl Metrics {
+    pub fn record_batch(&self, batch_size: usize) {
+        let mut m = self.inner.lock().unwrap();
+        m.batches += 1;
+        m.batched_samples += batch_size as u64;
+    }
+
+    pub fn record_done(&self, e2e_us: u64, queue_us: u64) {
+        let mut m = self.inner.lock().unwrap();
+        m.completed += 1;
+        if m.latencies_us.len() < RESERVOIR {
+            m.latencies_us.push(e2e_us);
+            m.queue_waits_us.push(queue_us);
+        }
+    }
+
+    pub fn record_rejected(&self) {
+        self.inner.lock().unwrap().rejected += 1;
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let m = self.inner.lock().unwrap();
+        let mut lat = m.latencies_us.clone();
+        lat.sort_unstable();
+        let pct = |p: f64| -> u64 {
+            if lat.is_empty() {
+                return 0;
+            }
+            lat[((lat.len() - 1) as f64 * p) as usize]
+        };
+        let elapsed = self.started.elapsed().as_secs_f64();
+        MetricsSnapshot {
+            completed: m.completed,
+            rejected: m.rejected,
+            batches: m.batches,
+            mean_batch: if m.batches == 0 { 0.0 } else {
+                m.batched_samples as f64 / m.batches as f64
+            },
+            throughput_rps: m.completed as f64 / elapsed.max(1e-9),
+            p50_us: pct(0.50),
+            p95_us: pct(0.95),
+            p99_us: pct(0.99),
+            mean_queue_us: if m.queue_waits_us.is_empty() { 0.0 } else {
+                m.queue_waits_us.iter().sum::<u64>() as f64
+                    / m.queue_waits_us.len() as f64
+            },
+        }
+    }
+}
+
+/// Point-in-time metrics view.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    pub completed: u64,
+    pub rejected: u64,
+    pub batches: u64,
+    pub mean_batch: f64,
+    pub throughput_rps: f64,
+    pub p50_us: u64,
+    pub p95_us: u64,
+    pub p99_us: u64,
+    pub mean_queue_us: f64,
+}
+
+impl std::fmt::Display for MetricsSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "completed={} rejected={} batches={} mean_batch={:.2} \
+             throughput={:.1} req/s p50={}us p95={}us p99={}us queue={:.0}us",
+            self.completed, self.rejected, self.batches, self.mean_batch,
+            self.throughput_rps, self.p50_us, self.p95_us, self.p99_us,
+            self.mean_queue_us
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_ordered() {
+        let m = Metrics::default();
+        for i in 0..1000u64 {
+            m.record_done(i, i / 2);
+        }
+        let s = m.snapshot();
+        assert!(s.p50_us <= s.p95_us && s.p95_us <= s.p99_us);
+        assert_eq!(s.completed, 1000);
+        assert!((s.mean_queue_us - 249.75).abs() < 1.0);
+    }
+
+    #[test]
+    fn batch_occupancy() {
+        let m = Metrics::default();
+        m.record_batch(4);
+        m.record_batch(8);
+        assert!((m.snapshot().mean_batch - 6.0).abs() < 1e-9);
+    }
+}

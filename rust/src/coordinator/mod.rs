@@ -1,0 +1,300 @@
+//! L3 inference coordinator: request queue -> dynamic batcher -> PJRT
+//! executor, with backpressure and serving metrics.
+//!
+//! The AOT artifacts are compiled for a fixed batch size B (the engines'
+//! physical parallelism, like the paper's N^2 SAC array); the batcher
+//! merges up to B queued requests per execution and pads the remainder —
+//! classic dynamic batching (vLLM-style) adapted to a fixed-shape
+//! executable. Seeds are per-request so stochastic spiking inference
+//! stays reproducible request-by-request regardless of batching.
+//!
+//! The build is offline (no tokio): the coordinator is a dedicated
+//! batcher thread over a bounded `std::sync::mpsc` channel (the
+//! backpressure boundary) with per-request response channels.
+
+pub mod metrics;
+
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender,
+                      TrySendError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::config::RunConfig;
+use crate::runtime::Engine;
+pub use metrics::{Metrics, MetricsSnapshot};
+
+/// One inference request: flattened input sample + stochastic seed.
+pub struct Request {
+    pub x: Vec<f32>,
+    pub seed: u32,
+    pub enqueued: Instant,
+    pub respond: mpsc::Sender<Response>,
+}
+
+/// Per-request result: the sample's `[t_max, classes]` logits.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub logits_t: Vec<f32>,
+    pub t_max: usize,
+    pub classes: usize,
+    pub queue_us: u64,
+    pub e2e_us: u64,
+}
+
+impl Response {
+    /// Prediction using the full encoding length (prefix mean over T).
+    pub fn predict(&self) -> usize {
+        self.predict_at(self.t_max)
+    }
+
+    /// Prediction using only the first `t` encoding steps.
+    pub fn predict_at(&self, t: usize) -> usize {
+        let t = t.clamp(1, self.t_max);
+        let mut cum = vec![0.0f64; self.classes];
+        for step in 0..t {
+            for (c, cv) in cum.iter_mut().enumerate() {
+                *cv += self.logits_t[step * self.classes + c] as f64;
+            }
+        }
+        cum.iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap()
+    }
+}
+
+/// A submitted request's response handle.
+pub struct Pending(mpsc::Receiver<Response>);
+
+impl Pending {
+    /// Block until the response arrives.
+    pub fn wait(self) -> Result<Response> {
+        Ok(self.0.recv()?)
+    }
+}
+
+/// Handle for submitting requests to a running server.
+#[derive(Clone)]
+pub struct Client {
+    tx: SyncSender<Request>,
+    sample_len: usize,
+}
+
+impl Client {
+    /// Submit one sample (blocks while the queue is full — backpressure).
+    pub fn infer(&self, x: Vec<f32>, seed: u32) -> Result<Pending> {
+        anyhow::ensure!(x.len() == self.sample_len,
+                        "bad input length {} != {}", x.len(),
+                        self.sample_len);
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Request { x, seed, enqueued: Instant::now(), respond: tx })
+            .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        Ok(Pending(rx))
+    }
+
+    /// Non-blocking submit: `None` == queue full (backpressure signal).
+    pub fn try_infer(&self, x: Vec<f32>, seed: u32)
+                     -> Result<Option<Pending>> {
+        anyhow::ensure!(x.len() == self.sample_len, "bad input length");
+        let (tx, rx) = mpsc::channel();
+        match self.tx.try_send(Request {
+            x, seed, enqueued: Instant::now(), respond: tx,
+        }) {
+            Ok(()) => Ok(Some(Pending(rx))),
+            Err(TrySendError::Full(_)) => Ok(None),
+            Err(TrySendError::Disconnected(_)) => {
+                Err(anyhow::anyhow!("server stopped"))
+            }
+        }
+    }
+
+    /// Convenience: submit and wait.
+    pub fn infer_blocking(&self, x: Vec<f32>, seed: u32) -> Result<Response> {
+        self.infer(x, seed)?.wait()
+    }
+}
+
+/// The running coordinator.
+pub struct Server {
+    pub metrics: Arc<Metrics>,
+    client: Option<Client>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Spawn the batcher thread around a compiled engine.
+    pub fn start(engine: Engine, cfg: RunConfig) -> Server {
+        let metrics = Arc::new(Metrics::default());
+        let (tx, rx) = mpsc::sync_channel::<Request>(cfg.queue_depth);
+        let sample_len = engine.x_len_per_sample();
+        let m = Arc::clone(&metrics);
+        let handle = std::thread::Builder::new()
+            .name("xpike-batcher".into())
+            .spawn(move || batcher_loop(engine, cfg, rx, m))
+            .expect("spawn batcher");
+        Server {
+            metrics,
+            client: Some(Client { tx, sample_len }),
+            handle: Some(handle),
+        }
+    }
+
+    pub fn client(&self) -> Client {
+        self.client.as_ref().expect("server running").clone()
+    }
+
+    /// Graceful shutdown: close the submit side and join the batcher.
+    /// The batcher exits once every cloned [`Client`] is dropped too.
+    pub fn shutdown(mut self) {
+        self.client = None;
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.client = None; // close our sender before joining
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Collect up to `max_batch` requests: block for the first, then poll
+/// until the window closes or the batch fills.
+fn gather(rx: &Receiver<Request>, max_batch: usize, window: Duration)
+          -> Option<Vec<Request>> {
+    let first = rx.recv().ok()?;
+    let mut batch = vec![first];
+    let deadline = Instant::now() + window;
+    while batch.len() < max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(req) => batch.push(req),
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    Some(batch)
+}
+
+fn batcher_loop(engine: Engine, cfg: RunConfig, rx: Receiver<Request>,
+                metrics: Arc<Metrics>) {
+    let exe_batch = engine.batch();
+    let sample_len = engine.x_len_per_sample();
+    let t_max = engine.t_max();
+    let classes = engine.classes();
+    let max_batch = cfg.max_batch.min(exe_batch).max(1);
+    let window = Duration::from_micros(cfg.batch_window_us);
+    // Reused input buffer: no per-batch allocation on the hot path.
+    let mut x = vec![0.0f32; exe_batch * sample_len];
+    while let Some(batch) = gather(&rx, max_batch, window) {
+        metrics.record_batch(batch.len());
+        // Assemble the fixed-shape executable input: pad by repeating the
+        // last sample (its outputs are discarded).
+        for (b, req) in batch.iter().enumerate() {
+            x[b * sample_len..(b + 1) * sample_len]
+                .copy_from_slice(&req.x);
+        }
+        let last = batch.len() - 1;
+        for b in batch.len()..exe_batch {
+            x.copy_within(last * sample_len..(last + 1) * sample_len,
+                          b * sample_len);
+        }
+        // One seed per execution, derived from the first request's seed:
+        // a request's logits depend only on its own lane given the seed.
+        let seed = batch[0].seed ^ (cfg.seed as u32);
+        let started = Instant::now();
+        match engine.run(&x, seed) {
+            Ok(logits) => {
+                for (b, req) in batch.into_iter().enumerate() {
+                    // Slice this sample's [t, classes] lanes out of
+                    // [t_max, exe_batch, classes].
+                    let mut mine = Vec::with_capacity(t_max * classes);
+                    for t in 0..t_max {
+                        let off = (t * exe_batch + b) * classes;
+                        mine.extend_from_slice(&logits[off..off + classes]);
+                    }
+                    let queue_us =
+                        (started - req.enqueued).as_micros() as u64;
+                    let e2e_us = req.enqueued.elapsed().as_micros() as u64;
+                    metrics.record_done(e2e_us, queue_us);
+                    let _ = req.respond.send(Response {
+                        logits_t: mine, t_max, classes, queue_us, e2e_us,
+                    });
+                }
+            }
+            Err(e) => {
+                // Execution failure: drop responders (submitters see
+                // channel closure), keep serving subsequent batches.
+                eprintln!("coordinator: execution failed: {e:#}");
+                metrics.record_rejected();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(v: f32, tx_keep: &mut Vec<mpsc::Receiver<Response>>) -> Request {
+        let (tx, rx) = mpsc::channel();
+        tx_keep.push(rx);
+        Request { x: vec![v], seed: 0, enqueued: Instant::now(),
+                  respond: tx }
+    }
+
+    #[test]
+    fn gather_respects_max_batch() {
+        let (tx, rx) = mpsc::sync_channel::<Request>(16);
+        let mut keep = Vec::new();
+        for i in 0..5 {
+            tx.send(req(i as f32, &mut keep)).unwrap();
+        }
+        let b1 = gather(&rx, 3, Duration::from_millis(5)).unwrap();
+        assert_eq!(b1.len(), 3);
+        let b2 = gather(&rx, 3, Duration::from_millis(5)).unwrap();
+        assert_eq!(b2.len(), 2);
+    }
+
+    #[test]
+    fn gather_window_closes_partial_batch() {
+        let (tx, rx) = mpsc::sync_channel::<Request>(16);
+        let mut keep = Vec::new();
+        tx.send(req(1.0, &mut keep)).unwrap();
+        let t0 = Instant::now();
+        let batch = gather(&rx, 8, Duration::from_millis(10)).unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(t0.elapsed() >= Duration::from_millis(9));
+    }
+
+    #[test]
+    fn gather_none_when_all_senders_gone() {
+        let (tx, rx) = mpsc::sync_channel::<Request>(4);
+        drop(tx);
+        assert!(gather(&rx, 4, Duration::from_millis(1)).is_none());
+    }
+
+    #[test]
+    fn response_predict_prefix_mean() {
+        let r = Response {
+            logits_t: vec![0.0, 3.0, /* t0 */ 4.0, 0.0 /* t1 */],
+            t_max: 2,
+            classes: 2,
+            queue_us: 0,
+            e2e_us: 0,
+        };
+        assert_eq!(r.predict_at(1), 1); // only t0: class 1
+        assert_eq!(r.predict(), 0); // cumulative: 4.0 > 3.0
+    }
+}

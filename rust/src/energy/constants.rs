@@ -1,0 +1,147 @@
+//! Unit energies / latencies / areas at 45 nm.
+//!
+//! Sources and calibration (DESIGN.md §2): digital op energies follow the
+//! published 45 nm numbers used by the paper's methodology ([54] Pedram et
+//! al., Horowitz ISSCC'14, via the ACE-SNN accounting [56]). The AIMC
+//! per-conversion constants and SSA gate-event constants are *calibrated*
+//! so that the model reproduces the paper's reported breakdown at the
+//! ViT-8-768/ImageNet operating point (Fig 9: AIMC 78.4% of compute with
+//! periphery 85.9% / accumulation 12.1% / ADC 2.0%; SSA 18.9%) — the
+//! cross-architecture *ratios* (Figs 8, 10, Table VI) then emerge from op
+//! counts, which is the shape the reproduction must preserve.
+//!
+//! All energies in pJ, areas in mm^2, latencies in clock cycles @200 MHz.
+
+// ---------------------------------------------------------------------------
+// Digital arithmetic (45 nm CMOS, [54]/Horowitz)
+// ---------------------------------------------------------------------------
+
+/// INT8 multiply-accumulate (mult + add + operand regs).
+pub const E_MAC_INT8: f64 = 0.25;
+/// INT8 addition (the SNN "AC" op).
+pub const E_ADD_INT8: f64 = 0.03;
+/// INT32 addition (accumulator updates).
+pub const E_ADD_INT32: f64 = 0.10;
+/// INT8 multiply.
+pub const E_MUL_INT8: f64 = 0.20;
+/// FP16 MAC (GPU-class units; used only for GPU-side comparisons).
+pub const E_MAC_FP16: f64 = 1.50;
+/// Per-element cost of softmax (exp LUT + div, amortized INT8/FP mix).
+pub const E_SOFTMAX_EL: f64 = 1.2;
+/// Per-element cost of LayerNorm (two passes + mul/add).
+pub const E_LAYERNORM_EL: f64 = 0.8;
+/// GELU per element (LUT + mul).
+pub const E_GELU_EL: f64 = 0.4;
+/// Control/clock overhead per *gated* (skipped-capable) op position in a
+/// digital event-driven SNN pipeline: the near-ideal ASIC projection
+/// clock-gates skipped positions almost for free (paper's 'ideal digital
+/// ASIC' assumption).
+pub const E_CTRL_GATED: f64 = 0.001;
+/// LIF unit update: shift (leak) + add + compare, INT8 datapath.
+pub const E_LIF_UPDATE: f64 = 0.08;
+/// Residual OR-join per element (binary).
+pub const E_RESIDUAL_EL: f64 = 0.002;
+
+// ---------------------------------------------------------------------------
+// On-chip SRAM (runtime memory access; model weights stay resident)
+// ---------------------------------------------------------------------------
+
+/// SRAM read or write, per byte (large on-chip activation buffers).
+pub const E_SRAM_BYTE: f64 = 2.4;
+
+// ---------------------------------------------------------------------------
+// AIMC engine, per 5-bit ADC conversion event (one column of one 128-row
+// block). NeuroSim-substitute constants, calibrated to Fig 9 (right).
+// ---------------------------------------------------------------------------
+
+/// SAR ADC conversion (shared 8:1, paper Table II).
+pub const E_ADC_CONV: f64 = 0.0064;
+/// Periphery per conversion: MUX decode, switch matrix, BL drivers,
+/// local input/output buffering. Dominates (Fig 9: 85.9% of AIMC).
+pub const E_PERIPH_CONV: f64 = 0.275;
+/// Digital accumulation per conversion: CSA + LIF-unit register update.
+pub const E_ACCUM_CONV: f64 = 0.039;
+/// Crossbar array read itself (charging + cell currents) per conversion.
+pub const E_XBAR_CONV: f64 = 0.0005;
+
+// ---------------------------------------------------------------------------
+// SSA engine gate events (Cadence-synthesis substitute).
+// ---------------------------------------------------------------------------
+
+/// 2-input AND evaluation (incl. local wiring).
+pub const E_AND: f64 = 0.002;
+/// UINT8 counter increment.
+pub const E_CNT_INC: f64 = 0.015;
+/// SAC background per cycle: d_K-bit FIFO shift + clock load.
+pub const E_SAC_CYCLE: f64 = 0.012;
+/// N-input 1-bit population adder evaluation (per output per cycle).
+pub const E_ADDER_EVAL: f64 = 0.8;
+/// Bernoulli encoder comparison + latch.
+pub const E_ENCODER: f64 = 0.10;
+/// LFSR energy per tapped byte (32-bit LFSR / 4 bytes, [48]).
+pub const E_LFSR_BYTE: f64 = 0.01;
+
+// ---------------------------------------------------------------------------
+// Latency (cycles @ 200 MHz; paper §VII-B, calibrated to Fig 10a)
+// ---------------------------------------------------------------------------
+
+/// Clock period in seconds (200 MHz).
+pub const CLOCK_PERIOD_S: f64 = 1.0 / 200e6;
+/// Periphery cycles per (token, timestep, layer) item: global routing,
+/// SRAM handoff, decode — the >92% share of Fig 10a.
+pub const LAT_PERIPH_ITEM: f64 = 36.0;
+/// Accumulation/buffer cycles per item-layer.
+pub const LAT_ACCUM_ITEM: f64 = 2.0;
+/// Crossbar + ADC mux readout per item-layer (deeply pipelined across
+/// column blocks; the analog read itself is O(1)).
+pub const LAT_XBAR_ITEM: f64 = 0.125;
+
+// ---------------------------------------------------------------------------
+// Area (mm^2; Table VI point calibration: 784 mm^2 total at ViT-8-768,
+// periphery+interconnect 76.5%, AIMC core 11.5%, SSA 12%).
+// ---------------------------------------------------------------------------
+
+/// Crossbar array core per SA (128x128 differential PCM pairs).
+pub const A_XBAR_SA: f64 = 0.018;
+/// One readout (SAR ADC + sense amp) unit; 16 per SA.
+pub const A_READOUT: f64 = 0.0004;
+/// Accumulation + LIF units per SA.
+pub const A_ACCUM_SA: f64 = 0.002;
+/// Periphery + interconnect per SA (decoder, MUX, switch matrix, buffers,
+/// global routing share).
+pub const A_PERIPH_SA: f64 = 0.155;
+/// One stochastic attention cell (2 ANDs, UINT8 counter, d_K-bit FIFO,
+/// encoder share).
+pub const A_SAC: f64 = 2.0e-4;
+/// LFSR array + PRN distribution per SSA tile.
+pub const A_LFSR_TILE: f64 = 0.05;
+
+// ---------------------------------------------------------------------------
+// GPU reference platform (Nvidia RTX A2000, Fig 10b)
+// ---------------------------------------------------------------------------
+
+/// Kernel launch + dispatch overhead per kernel [s].
+pub const GPU_LAUNCH_S: f64 = 5.0e-6;
+/// Effective FP16 throughput for these small kernels [FLOP/s]
+/// (A2000 peak 63.9 TFLOPS; short sequences reach only a few %).
+pub const GPU_EFF_FLOPS: f64 = 6.0e12;
+/// Effective memory bandwidth [B/s] (288 GB/s peak, ~70% achievable).
+pub const GPU_EFF_BW: f64 = 2.0e11;
+/// Default firing rate assumed for spiking activity (paper workloads).
+pub const P_SPIKE: f64 = 0.25;
+
+// ---------------------------------------------------------------------------
+// Baseline-specific AIMC factors
+// ---------------------------------------------------------------------------
+
+/// ANN+AIMC (INT8 activations): bit-serial input cycles per activation.
+pub const INT8_BIT_CYCLES: f64 = 8.0;
+/// ANN+AIMC: differential 4-bit pairs per INT8 weight (2 column pairs).
+pub const INT8_PAIRS_PER_WEIGHT: f64 = 2.0;
+/// ANN+AIMC: 8-bit SAR readout penalty vs the 5-bit spiking readout
+/// (more comparisons + tighter settling per conversion).
+pub const ADC8_PENALTY: f64 = 2.2;
+/// X-Former: 1-bit ReRAM cells -> columns per INT8 weight.
+pub const XFORMER_COLS_PER_WEIGHT: f64 = 8.0;
+/// X-Former: effective DIMC attention lanes (fixed macro, Table VI note).
+pub const XFORMER_DIMC_LANES: f64 = 640.0;

@@ -1,0 +1,17 @@
+//! Analytical 45 nm energy / latency / area models (paper §VII).
+//!
+//! This is the NeuroSim + Cadence-synthesis substitute (DESIGN.md §2):
+//! per-inference operation counts ([`ops`]) x unit costs ([`constants`])
+//! with the unit costs calibrated once against the paper's reported
+//! breakdowns at the ViT-8-768 operating point. Baseline architectures
+//! are modeled in [`crate::baselines`].
+
+pub mod constants;
+pub mod model;
+pub mod ops;
+
+pub use model::{
+    n_synaptic_arrays, xpikeformer_area, xpikeformer_energy,
+    xpikeformer_latency, AimcEnergy, AreaReport, EnergyReport,
+    LatencyReport, SsaEnergy,
+};

@@ -1,0 +1,242 @@
+//! Energy / latency / area model of Xpikeformer itself (paper §VII).
+//!
+//! The baselines live in [`crate::baselines`]; together they regenerate
+//! Figs 8-10 and Table VI. All reports are in physical units (mJ, ms,
+//! mm^2) so harness output can be compared to the paper directly.
+
+use crate::config::{HardwareConfig, ModelDims};
+use crate::energy::constants::*;
+use crate::energy::ops::{self, memory};
+
+/// Computational-energy breakdown of the AIMC engine (paper Fig 9 right).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AimcEnergy {
+    pub crossbar_pj: f64,
+    pub adc_pj: f64,
+    pub periphery_pj: f64,
+    pub accumulation_pj: f64,
+}
+
+impl AimcEnergy {
+    pub fn total_pj(&self) -> f64 {
+        self.crossbar_pj + self.adc_pj + self.periphery_pj
+            + self.accumulation_pj
+    }
+}
+
+/// SSA engine energy by gate class.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SsaEnergy {
+    pub and_pj: f64,
+    pub counter_pj: f64,
+    pub sac_background_pj: f64,
+    pub adder_pj: f64,
+    pub encoder_pj: f64,
+    pub prn_pj: f64,
+}
+
+impl SsaEnergy {
+    pub fn total_pj(&self) -> f64 {
+        self.and_pj + self.counter_pj + self.sac_background_pj
+            + self.adder_pj + self.encoder_pj + self.prn_pj
+    }
+}
+
+/// Full per-inference energy report.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EnergyReport {
+    pub aimc: AimcEnergy,
+    pub ssa: SsaEnergy,
+    /// Residual units, LIF digital logic, misc (Fig 9: "other", 2.7%).
+    pub other_pj: f64,
+    /// Runtime SRAM traffic.
+    pub memory_pj: f64,
+}
+
+impl EnergyReport {
+    pub fn compute_pj(&self) -> f64 {
+        self.aimc.total_pj() + self.ssa.total_pj() + self.other_pj
+    }
+
+    pub fn total_pj(&self) -> f64 {
+        self.compute_pj() + self.memory_pj
+    }
+
+    pub fn total_mj(&self) -> f64 {
+        self.total_pj() * 1e-12 * 1e3
+    }
+}
+
+/// Xpikeformer per-inference energy at a paper-scale operating point.
+pub fn xpikeformer_energy(m: &ModelDims, hw: &HardwareConfig)
+                          -> EnergyReport {
+    let t = m.t_steps as f64;
+    let conv = t * ops::aimc_conversions_per_step(m, hw.crossbar_dim);
+    let aimc = AimcEnergy {
+        crossbar_pj: conv * E_XBAR_CONV,
+        adc_pj: conv * E_ADC_CONV,
+        periphery_pj: conv * E_PERIPH_CONV,
+        accumulation_pj: conv * E_ACCUM_CONV,
+    };
+    let s = ops::ssa_ops(m, P_SPIKE);
+    let ssa = SsaEnergy {
+        and_pj: s.and_ops * E_AND,
+        counter_pj: s.counter_incs * E_CNT_INC,
+        sac_background_pj: s.sac_cycles * E_SAC_CYCLE,
+        adder_pj: s.adder_evals * E_ADDER_EVAL,
+        encoder_pj: s.encoder_samples * E_ENCODER,
+        prn_pj: s.prn_bytes * E_LFSR_BYTE,
+    };
+    let other_pj = t
+        * (ops::lif_updates_per_step(m) * E_LIF_UPDATE
+            + ops::residual_ops_per_step(m) * E_RESIDUAL_EL);
+    let memory_pj = memory::xpike_bytes(m) * E_SRAM_BYTE;
+    EnergyReport { aimc, ssa, other_pj, memory_pj }
+}
+
+/// Latency breakdown (paper Fig 10a) in clock cycles.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LatencyReport {
+    pub periphery_cycles: f64,
+    pub aimc_compute_cycles: f64,
+    pub accumulation_cycles: f64,
+    pub ssa_cycles: f64,
+}
+
+impl LatencyReport {
+    pub fn total_cycles(&self) -> f64 {
+        self.periphery_cycles + self.aimc_compute_cycles
+            + self.accumulation_cycles + self.ssa_cycles
+    }
+
+    pub fn total_ms(&self) -> f64 {
+        self.total_cycles() * CLOCK_PERIOD_S * 1e3
+    }
+}
+
+/// Xpikeformer per-inference latency: (token, timestep) items stream
+/// through the layer pipeline; periphery (routing, SRAM handoff, decode)
+/// dominates (paper: >92%). The SSA engine runs serially layer-by-layer
+/// but its tiles pipeline timesteps (latency d_K per step + drain).
+pub fn xpikeformer_latency(m: &ModelDims, _hw: &HardwareConfig)
+                           -> LatencyReport {
+    let items = (m.n_tokens * m.t_steps) as f64;
+    let l = m.depth as f64;
+    let dk = m.d_head() as f64;
+    LatencyReport {
+        periphery_cycles: items * l * LAT_PERIPH_ITEM,
+        aimc_compute_cycles: items * l * LAT_XBAR_ITEM,
+        accumulation_cycles: items * l * LAT_ACCUM_ITEM,
+        ssa_cycles: l * ((m.t_steps as f64 + 1.0) * dk
+            + m.n_tokens as f64),
+    }
+}
+
+/// Area breakdown (paper §VII-B: 784 mm^2 at ViT-8-768; periphery 76.5%,
+/// AIMC core 11.5%, SSA 12%).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AreaReport {
+    pub aimc_core_mm2: f64,
+    pub periphery_mm2: f64,
+    pub ssa_mm2: f64,
+}
+
+impl AreaReport {
+    pub fn total_mm2(&self) -> f64 {
+        self.aimc_core_mm2 + self.periphery_mm2 + self.ssa_mm2
+    }
+}
+
+/// Synaptic arrays required by the row-block-wise mapping.
+pub fn n_synaptic_arrays(m: &ModelDims, hw: &HardwareConfig) -> usize {
+    ops::linear_stages(m)
+        .iter()
+        .map(|&(i, o)| i.div_ceil(hw.crossbar_dim)
+            * o.div_ceil(hw.crossbar_dim))
+        .sum()
+}
+
+pub fn xpikeformer_area(m: &ModelDims, hw: &HardwareConfig) -> AreaReport {
+    let sas = n_synaptic_arrays(m, hw) as f64;
+    let readouts = hw.readout_units() as f64;
+    let aimc_core = sas * (A_XBAR_SA + readouts * A_READOUT + A_ACCUM_SA);
+    let periphery = sas * A_PERIPH_SA;
+    // One tile per head; tiles hold N^2 SACs (N up to 128 per tile; larger
+    // sequences tile in 128-chunks, paper §IV-B2).
+    let n_eff = (m.n_tokens as f64).min(128.0);
+    let tiles_per_head = (m.n_tokens as f64 / 128.0).ceil().powi(2);
+    let ssa = m.heads as f64 * tiles_per_head
+        * (n_eff * n_eff * A_SAC + A_LFSR_TILE);
+    AreaReport { aimc_core_mm2: aimc_core, periphery_mm2: periphery,
+                 ssa_mm2: ssa }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{table6_point, vit_imagenet};
+
+    fn point() -> ModelDims {
+        table6_point().dims
+    }
+
+    #[test]
+    fn fig9_breakdown_fractions() {
+        let hw = HardwareConfig::default();
+        let e = xpikeformer_energy(&point(), &hw);
+        let compute = e.compute_pj();
+        let aimc_frac = e.aimc.total_pj() / compute;
+        let ssa_frac = e.ssa.total_pj() / compute;
+        // Paper: AIMC 78.4%, SSA 18.9%, other 2.7%.
+        assert!((aimc_frac - 0.784).abs() < 0.08, "aimc {aimc_frac:.3}");
+        assert!((ssa_frac - 0.189).abs() < 0.08, "ssa {ssa_frac:.3}");
+        // AIMC-internal: periphery ~85.9%, accumulation ~12.1%, ADC ~2.0%.
+        let at = e.aimc.total_pj();
+        assert!((e.aimc.periphery_pj / at - 0.859).abs() < 0.05);
+        assert!((e.aimc.accumulation_pj / at - 0.121).abs() < 0.04);
+        assert!((e.aimc.adc_pj / at - 0.020).abs() < 0.015);
+    }
+
+    #[test]
+    fn table6_energy_and_latency_magnitudes() {
+        let hw = HardwareConfig::default();
+        let e = xpikeformer_energy(&point(), &hw);
+        // Paper Table VI: 0.30 mJ / 2.18 ms per inference.
+        assert!(e.total_mj() > 0.15 && e.total_mj() < 0.60,
+                "energy {} mJ", e.total_mj());
+        let l = xpikeformer_latency(&point(), &hw);
+        assert!(l.total_ms() > 1.0 && l.total_ms() < 4.5,
+                "latency {} ms", l.total_ms());
+    }
+
+    #[test]
+    fn fig10a_latency_fractions() {
+        let hw = HardwareConfig::default();
+        let l = xpikeformer_latency(&point(), &hw);
+        let tot = l.total_cycles();
+        assert!(l.periphery_cycles / tot > 0.88, "periphery dominates");
+        assert!(l.aimc_compute_cycles / tot < 0.04, "AIMC compute tiny");
+        assert!(l.ssa_cycles / tot < 0.05, "SSA small");
+    }
+
+    #[test]
+    fn area_magnitude_and_fractions() {
+        let hw = HardwareConfig::default();
+        let a = xpikeformer_area(&point(), &hw);
+        // Paper: 784 mm^2; periphery 76.5%, AIMC core 11.5%, SSA 12%.
+        let tot = a.total_mm2();
+        assert!(tot > 500.0 && tot < 1100.0, "total {tot}");
+        assert!((a.periphery_mm2 / tot - 0.765).abs() < 0.10);
+        assert!((a.aimc_core_mm2 / tot - 0.115).abs() < 0.06);
+        assert!((a.ssa_mm2 / tot - 0.120).abs() < 0.08);
+    }
+
+    #[test]
+    fn energy_scales_superlinearly_with_model() {
+        let hw = HardwareConfig::default();
+        let small = xpikeformer_energy(&vit_imagenet(6, 512, 8, 8), &hw);
+        let large = xpikeformer_energy(&vit_imagenet(8, 768, 12, 7), &hw);
+        // Larger model, *fewer* timesteps, still more energy (paper Fig 8).
+        assert!(large.total_pj() > small.total_pj());
+    }
+}

@@ -1,0 +1,46 @@
+//! # Xpikeformer — hybrid analog-digital acceleration for spiking transformers
+//!
+//! Reproduction of *Xpikeformer: Hybrid Analog-Digital Hardware Acceleration
+//! for Spiking Transformers* (Song, Katti, Simeone, Rajendran — IEEE TVLSI
+//! 2025). This crate is the Layer-3 runtime + hardware simulator of the
+//! three-layer stack (see `DESIGN.md`):
+//!
+//! * [`runtime`]      — PJRT CPU client that loads the AOT-compiled HLO
+//!   artifacts produced by `python/compile/aot.py` and executes the spiking
+//!   transformer forward pass. Python is never on the request path.
+//! * [`tensor`]       — the XPKT tensor container (params, eval sets,
+//!   golden vectors) shared with the python build path.
+//! * [`aimc`]         — PCM crossbar simulator: weight quantization,
+//!   programming/read noise, conductance drift, global drift compensation,
+//!   row-block-wise mapping, shared SAR ADCs (paper §IV-A, Table II).
+//! * [`ssa`]          — cycle-level digital simulator of the stochastic
+//!   spiking attention engine: LFSR array, stochastic attention cells,
+//!   N x N tiles with streaming dataflow (paper §IV-B, Algorithm 1).
+//! * [`snn`]          — spike coding + LIF reference models shared by the
+//!   simulators and tests.
+//! * [`energy`]       — analytical 45 nm energy/latency/area models (the
+//!   NeuroSim + Cadence-synthesis substitute) for every paper figure.
+//! * [`baselines`]    — ANN-Quant (SwiftTron-like), ANN-Quant+AIMC,
+//!   SNN-Digi-Opt, X-Former and GPU roofline models (paper §VII).
+//! * [`coordinator`]  — inference server: request queue, dynamic batcher,
+//!   engine scheduler mirroring the alternating AIMC/SSA dataflow (Fig 6).
+//! * [`workloads`]    — synthetic image + ICL MIMO workload generators.
+//! * [`config`]       — model-dimension presets (paper scale + trained
+//!   scaled-down presets) and the Table-II hardware configuration.
+//! * [`repro`]        — the experiment harness regenerating every table
+//!   and figure of the paper's evaluation (Tables II-VI, Figs 7-10).
+
+pub mod aimc;
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod energy;
+pub mod repro;
+pub mod runtime;
+pub mod snn;
+pub mod ssa;
+pub mod tensor;
+pub mod util;
+pub mod workloads;
+
+pub use anyhow::Result;

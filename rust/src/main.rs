@@ -1,0 +1,201 @@
+//! Xpikeformer CLI: artifact inspection, accuracy evaluation, the
+//! paper-experiment harness, and a serving smoke-run.
+//!
+//! ```text
+//! xpikeformer list   [--artifacts DIR]
+//! xpikeformer repro  <table2..table6|fig7..fig10b|all-efficiency>
+//! xpikeformer eval   --model vit_xpike_2-64 [--drift-seconds S] [--gdc]
+//! xpikeformer serve  [--model gpt_xpike_2-64_2x2] [--requests N]
+//! ```
+//!
+//! (Offline build: argument parsing is hand-rolled, no clap.)
+
+use anyhow::{bail, Result};
+
+use xpikeformer::config::{DriftConfig, RunConfig};
+use xpikeformer::coordinator::Server;
+use xpikeformer::repro::{self, ReproCtx};
+use xpikeformer::runtime::{Artifact, Engine};
+use xpikeformer::util::Rng;
+use xpikeformer::workloads::{ber, EvalSet, MimoGenerator};
+
+/// Tiny flag parser: `--key value` and `--switch` forms.
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut positional = Vec::new();
+        let mut flags = std::collections::HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            if let Some(key) = argv[i].strip_prefix("--") {
+                let next_is_value = argv
+                    .get(i + 1)
+                    .map(|v| !v.starts_with("--"))
+                    .unwrap_or(false);
+                if next_is_value {
+                    flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                positional.push(argv[i].clone());
+                i += 1;
+            }
+        }
+        Args { positional, flags }
+    }
+
+    fn get(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+const USAGE: &str = "usage: xpikeformer [--artifacts DIR] <command>\n\
+  list                          list AOT artifacts\n\
+  repro <experiment> [--seed N] regenerate a paper table/figure\n\
+         (table2 table3 table4 table5 table6 fig7 fig8 fig9 fig10a\n\
+          fig10b all-efficiency)\n\
+  eval  --model NAME [--drift-seconds S] [--gdc] [--ideal]\n\
+  serve [--model NAME] [--requests N] [--max-batch B]\n";
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv);
+    let artifacts = args.get("artifacts", "artifacts");
+    let cmd = match args.positional.first() {
+        Some(c) => c.as_str(),
+        None => {
+            eprint!("{USAGE}");
+            bail!("missing command");
+        }
+    };
+    match cmd {
+        "list" => cmd_list(&artifacts),
+        "repro" => {
+            let exp = args
+                .positional
+                .get(1)
+                .map(String::as_str)
+                .unwrap_or("all-efficiency");
+            let mut ctx = ReproCtx::new(&artifacts);
+            ctx.seed = args.get("seed", "7").parse()?;
+            println!("{}", repro::run(&ctx, exp)?);
+            Ok(())
+        }
+        "eval" => cmd_eval(&artifacts, &args),
+        "serve" => cmd_serve(&artifacts, &args),
+        other => {
+            eprint!("{USAGE}");
+            bail!("unknown command '{other}'");
+        }
+    }
+}
+
+fn cmd_list(artifacts: &str) -> Result<()> {
+    for tag in Artifact::discover(artifacts)? {
+        let a = Artifact::open(artifacts, &tag)?;
+        println!(
+            "{tag}: kind={} batch={} T={} classes={} params={}",
+            a.manifest.kind,
+            a.manifest.batch,
+            a.manifest.config.t_max,
+            a.manifest.config.classes,
+            a.manifest.param_inputs().count()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_eval(artifacts: &str, args: &Args) -> Result<()> {
+    let model = args.get("model", "vit_xpike_2-64");
+    let tag = format!("{model}_b32");
+    let mut engine = Engine::load(artifacts, &tag)?;
+    let ctx = ReproCtx::new(artifacts);
+    if !args.has("ideal") {
+        let aimc = repro::accuracy::program_artifact(&engine, &ctx, None)?;
+        let drift = DriftConfig {
+            t_seconds: args.get("drift-seconds", "0").parse()?,
+            gdc: args.has("gdc"),
+            seed: ctx.seed,
+        };
+        repro::accuracy::install_analog(&mut engine, &aimc, &drift)?;
+    }
+    let eval_file = match engine.artifact.manifest.kind.as_str() {
+        "vit" => "image_eval.bin".to_string(),
+        _ => format!(
+            "mimo_{}x{}_eval.bin",
+            engine.artifact.manifest.config.nt,
+            engine.artifact.manifest.config.nr
+        ),
+    };
+    let set = EvalSet::load(std::path::Path::new(artifacts).join(eval_file))?;
+    let curve = repro::accuracy::evaluate(&engine, &set, 1000)?;
+    println!(
+        "acc per T (%): {:?}",
+        curve
+            .acc
+            .iter()
+            .map(|a| (a * 1000.0).round() / 10.0)
+            .collect::<Vec<_>>()
+    );
+    if engine.artifact.manifest.config.nt > 0 {
+        println!(
+            "BER per T: {:?}",
+            curve
+                .ber
+                .iter()
+                .map(|b| (b * 10000.0).round() / 10000.0)
+                .collect::<Vec<_>>()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(artifacts: &str, args: &Args) -> Result<()> {
+    let model = args.get("model", "gpt_xpike_2-64_2x2");
+    let requests: usize = args.get("requests", "64").parse()?;
+    let max_batch: usize = args.get("max-batch", "8").parse()?;
+    let engine = Engine::load(artifacts, &format!("{model}_b8"))
+        .or_else(|_| Engine::load(artifacts, &format!("{model}_b1")))?;
+    let nt = engine.artifact.manifest.config.nt;
+    let nr = engine.artifact.manifest.config.nr;
+    anyhow::ensure!(nt > 0, "serve demo uses the MIMO task");
+    let cfg = RunConfig { max_batch, ..RunConfig::default() };
+    let server = Server::start(engine, cfg);
+    let client = server.client();
+    let gen = MimoGenerator::new(nt, nr, 10.0);
+    let mut rng = Rng::seed_from_u64(1);
+    let mut pendings = Vec::new();
+    let mut truths = Vec::new();
+    for i in 0..requests {
+        let (x, label) = gen.sample(&mut rng);
+        truths.push(label);
+        pendings.push(client.infer(x, i as u32)?);
+    }
+    let mut correct = 0usize;
+    let mut preds = Vec::new();
+    for (p, &truth) in pendings.into_iter().zip(&truths) {
+        let resp = p.wait()?;
+        let pred = resp.predict() as u32;
+        preds.push(pred);
+        if pred == truth {
+            correct += 1;
+        }
+    }
+    println!("accuracy: {correct}/{requests}");
+    println!("BER: {:.4}", ber(&preds, &truths, nt));
+    println!("{}", server.metrics.snapshot());
+    drop(client);
+    server.shutdown();
+    Ok(())
+}

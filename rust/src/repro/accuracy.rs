@@ -1,0 +1,292 @@
+//! Accuracy experiments (paper §VI): Tables III/IV/V and Fig 7.
+//!
+//! GPU-baseline rows (ANN-*/SNN-* at INT8) come from
+//! `artifacts/accuracy_baselines.json`, written at training time. The
+//! Xpikeformer rows are recomputed *live*: the AIMC simulator programs
+//! the checkpoint onto PCM crossbars (quantization + programming noise),
+//! optionally drifts it, and the PJRT runtime executes the AOT-compiled
+//! forward with the perturbed weights.
+
+use anyhow::{Context, Result};
+
+use crate::aimc::AimcEngine;
+use crate::config::DriftConfig;
+use crate::runtime::{prefix_predictions, Engine};
+use crate::util::Json;
+use crate::workloads::{ber, EvalSet};
+
+use super::ReproCtx;
+
+/// Evaluation result per encoding length.
+#[derive(Debug, Clone)]
+pub struct EvalCurve {
+    pub acc: Vec<f64>,
+    pub ber: Vec<f64>,
+}
+
+impl EvalCurve {
+    /// Paper's minimum-T rule: smallest T whose metric is within `tol`
+    /// of the T_max value (ΔAcc < 0.1 pp).
+    pub fn min_t(&self, use_ber: bool, tol: f64) -> usize {
+        let m = if use_ber { &self.ber } else { &self.acc };
+        let last = *m.last().unwrap();
+        m.iter()
+            .position(|&v| (v - last).abs() <= tol + 1e-12)
+            .map(|i| i + 1)
+            .unwrap_or(m.len())
+    }
+}
+
+/// Score an engine over an eval set: per-T accuracy (+ BER for gpt).
+pub fn evaluate(engine: &Engine, set: &EvalSet, seed_base: u32)
+                -> Result<EvalCurve> {
+    let b = engine.batch();
+    let t_max = engine.t_max();
+    let classes = engine.classes();
+    let nt = engine.artifact.manifest.config.nt;
+    let mut correct = vec![0usize; t_max];
+    let mut preds_t: Vec<Vec<u32>> = vec![Vec::new(); t_max];
+    let mut truths: Vec<u32> = Vec::new();
+    for i in 0..set.n_batches(b) {
+        let (x, labels) = set.batch(i, b);
+        let logits = engine.run(x, seed_base.wrapping_add(i as u32))?;
+        let preds = prefix_predictions(&logits, t_max, b, classes);
+        for (t, row) in preds.iter().enumerate() {
+            for (bi, &p) in row.iter().enumerate() {
+                if p as i32 == labels[bi] {
+                    correct[t] += 1;
+                }
+                preds_t[t].push(p as u32);
+            }
+        }
+        truths.extend(labels.iter().map(|&l| l as u32));
+    }
+    let n = truths.len().max(1);
+    let acc = correct.iter().map(|&c| c as f64 / n as f64).collect();
+    let ber_curve = if nt > 0 {
+        preds_t.iter().map(|p| ber(p, &truths, nt)).collect()
+    } else {
+        vec![0.0; t_max]
+    };
+    Ok(EvalCurve { acc, ber: ber_curve })
+}
+
+/// Program an artifact's analog weights onto simulated PCM and install
+/// the effective weights (at `drift`) into the engine.
+pub fn install_analog(engine: &mut Engine, aimc: &AimcEngine,
+                      drift: &DriftConfig) -> Result<()> {
+    let w = aimc.weights_at(drift);
+    engine.set_params(&w)
+}
+
+/// Build the AIMC engine from an artifact's analog parameters
+/// (optionally from an alternative checkpoint, e.g. the CT-only one).
+pub fn program_artifact(engine: &Engine, ctx: &ReproCtx,
+                        alt_ckpt: Option<&str>) -> Result<AimcEngine> {
+    let tensors = match alt_ckpt {
+        Some(p) => crate::tensor::TensorFile::load(
+            engine.artifact.dir.join(p))?,
+        None => engine.artifact.load_params()?,
+    };
+    let mut weights = Vec::new();
+    for spec in engine.artifact.manifest.param_inputs() {
+        if spec.analog {
+            let t = tensors.get(&spec.name)?;
+            weights.push((spec.name.clone(), t.as_f32(), spec.shape[0],
+                          spec.shape[1]));
+        }
+    }
+    Ok(AimcEngine::program(&weights, &ctx.hw, ctx.seed))
+}
+
+fn load_baselines(ctx: &ReproCtx) -> Result<Json> {
+    let p = ctx.artifacts.join("accuracy_baselines.json");
+    let text = std::fs::read_to_string(&p)
+        .with_context(|| format!("{} (run `make train` first)",
+                                 p.display()))?;
+    Json::parse(&text)
+}
+
+fn xpike_curve(ctx: &ReproCtx, model: &str, eval_file: &str)
+               -> Result<EvalCurve> {
+    let tag = format!("{model}_b32");
+    let mut engine = Engine::load(&ctx.artifacts, &tag)?;
+    let aimc = program_artifact(&engine, ctx, None)?;
+    install_analog(&mut engine, &aimc, &DriftConfig::default())?;
+    let set = EvalSet::load(ctx.artifacts.join(eval_file))?;
+    evaluate(&engine, &set, 1000)
+}
+
+/// Table III: image-classification accuracy across implementations/sizes.
+pub fn table3(ctx: &ReproCtx) -> Result<String> {
+    let base = load_baselines(ctx)?;
+    let mut out = String::from(
+        "== Table III: image classification (synthetic 10-class task) ==\n\
+         model                    | size  | accuracy (min T)\n\
+         -------------------------+-------+-----------------\n");
+    for size in ["2-64", "4-128"] {
+        for impl_ in ["ann", "snn"] {
+            let name = format!("vit_{impl_}_{size}");
+            if let Some(e) = base.get(&name) {
+                let acc = e.get("acc_per_t").unwrap().as_arr().unwrap()
+                    .last().unwrap().as_f64().unwrap();
+                let t = e.get("min_t_acc").and_then(|v| v.as_usize());
+                out.push_str(&format!(
+                    "{:<24} | {:<5} | {:.2}%{}\n",
+                    format!("{}-ViT (GPU)",
+                            if impl_ == "ann" { "ANN" } else { "SNN" }),
+                    size, 100.0 * acc,
+                    t.map(|t| format!(" ({t})")).unwrap_or_default()));
+            }
+        }
+        let model = format!("vit_xpike_{size}");
+        match xpike_curve(ctx, &model, "image_eval.bin") {
+            Ok(c) => {
+                let t = c.min_t(false, 0.001);
+                out.push_str(&format!(
+                    "Xpikeformer-ViT (sim)    | {:<5} | {:.2}% ({})\n",
+                    size, 100.0 * c.acc.last().unwrap(), t));
+            }
+            Err(e) => out.push_str(&format!(
+                "Xpikeformer-ViT (sim)    | {:<5} | unavailable: {e}\n",
+                size)),
+        }
+    }
+    Ok(out)
+}
+
+/// Table IV: ICL symbol-detection BER across implementations/sizes.
+pub fn table4(ctx: &ReproCtx) -> Result<String> {
+    let base = load_baselines(ctx)?;
+    let mut out = String::from(
+        "== Table IV: ICL wireless symbol detection (BER, lower=better) ==\n\
+         model                    | size  | 2x2 BER (T) | 4x4 BER (T)\n\
+         -------------------------+-------+-------------+------------\n");
+    for size in ["2-64", "4-128"] {
+        for impl_ in ["ann", "snn", "xpike"] {
+            let mut cells = Vec::new();
+            for ant in ["2x2", "4x4"] {
+                let name = format!("gpt_{impl_}_{size}_{ant}");
+                let cell = if impl_ == "xpike" {
+                    let eval_file = format!("mimo_{ant}_eval.bin");
+                    match xpike_curve(ctx, &name, &eval_file) {
+                        Ok(c) => format!("{:.3} ({})",
+                                         c.ber.last().unwrap(),
+                                         c.min_t(true, 0.002)),
+                        Err(_) => "n/a".into(),
+                    }
+                } else if let Some(e) = base.get(&name) {
+                    let b = e.get("ber_per_t").unwrap().as_arr().unwrap()
+                        .last().unwrap().as_f64().unwrap();
+                    let t = e.get("min_t_ber").and_then(|v| v.as_usize());
+                    format!("{b:.3}{}",
+                            t.map(|t| format!(" ({t})")).unwrap_or_default())
+                } else {
+                    "n/a".into()
+                };
+                cells.push(cell);
+            }
+            let label = match impl_ {
+                "ann" => "ANN-GPT (GPU)",
+                "snn" => "SNN-GPT (GPU)",
+                _ => "Xpikeformer-GPT (sim)",
+            };
+            out.push_str(&format!("{:<24} | {:<5} | {:<11} | {}\n",
+                                  label, size, cells[0], cells[1]));
+        }
+    }
+    Ok(out)
+}
+
+/// Drift evaluation times for Fig 7 (seconds).
+pub const DRIFT_TIMES: &[(f64, &str)] = &[
+    (0.0, "t0"),
+    (3600.0, "1 hour"),
+    (86_400.0, "1 day"),
+    (2_592_000.0, "1 month"),
+    (31_536_000.0, "1 year"),
+];
+
+/// One strategy's accuracy-over-time series.
+fn drift_series(ctx: &ReproCtx, model: &str, ct: bool, gdc: bool)
+                -> Result<Vec<f64>> {
+    let tag = format!("{model}_b32");
+    let mut engine = Engine::load(&ctx.artifacts, &tag)?;
+    let alt = if ct {
+        Some(format!("checkpoints/{model}_ct.params.bin"))
+    } else {
+        None
+    };
+    if let Some(ref p) = alt {
+        // CT rows also need the digital (non-analog) CT parameters.
+        let tensors = crate::tensor::TensorFile::load(
+            engine.artifact.dir.join(p))?;
+        let digital: Vec<(String, Vec<f32>)> = engine
+            .artifact
+            .manifest
+            .param_inputs()
+            .filter(|s| !s.analog)
+            .map(|s| (s.name.clone(),
+                      tensors.get(&s.name).unwrap().as_f32()))
+            .collect();
+        engine.set_params(&digital)?;
+    }
+    let aimc = program_artifact(&engine, ctx, alt.as_deref())?;
+    let set = EvalSet::load(ctx.artifacts.join("image_eval.bin"))?;
+    let mut series = Vec::new();
+    for &(t, _) in DRIFT_TIMES {
+        let drift = DriftConfig { t_seconds: t, gdc, seed: ctx.seed };
+        install_analog(&mut engine, &aimc, &drift)?;
+        let c = evaluate(&engine, &set, 2000)?;
+        series.push(*c.acc.last().unwrap());
+    }
+    Ok(series)
+}
+
+const STRATEGIES: &[(&str, bool, bool)] = &[
+    ("CT+NC", true, false),
+    ("CT+GDC", true, true),
+    ("HWAT+NC", false, false),
+    ("HWAT+GDC", false, true),
+];
+
+/// Fig 7: long-term accuracy under drift, 4 strategies (largest ViT).
+pub fn fig7(ctx: &ReproCtx) -> Result<String> {
+    let model = "vit_xpike_4-128";
+    let mut out = format!(
+        "== Fig 7: long-term accuracy under PCM drift ({model}) ==\n\
+         strategy  |{}\n----------+{}\n",
+        DRIFT_TIMES.iter().map(|(_, l)| format!(" {l:>8} |"))
+            .collect::<String>(),
+        "-".repeat(11 * DRIFT_TIMES.len()));
+    for &(name, ct, gdc) in STRATEGIES {
+        let s = drift_series(ctx, model, ct, gdc)?;
+        out.push_str(&format!(
+            "{:<9} |{}\n", name,
+            s.iter().map(|a| format!(" {:>7.2}% |", 100.0 * a))
+                .collect::<String>()));
+    }
+    Ok(out)
+}
+
+/// Table V: one-year accuracy (and drop vs t0), both ViT sizes.
+pub fn table5(ctx: &ReproCtx) -> Result<String> {
+    let mut out = String::from(
+        "== Table V: one-year accuracy, training x compensation ==\n\
+         size  | CT+NC          | HWAT+NC        | CT+GDC         | HWAT+GDC\n\
+         ------+----------------+----------------+----------------+---------\n");
+    for size in ["2-64", "4-128"] {
+        let model = format!("vit_xpike_{size}");
+        let mut cells = Vec::new();
+        for &(_, ct, gdc) in &[("", true, false), ("", false, false),
+                               ("", true, true), ("", false, true)] {
+            let s = drift_series(ctx, &model, ct, gdc)?;
+            let year = 100.0 * s.last().unwrap();
+            let drop = year - 100.0 * s[0];
+            cells.push(format!("{year:.2} ({drop:+.2})"));
+        }
+        out.push_str(&format!("{:<5} | {:<14} | {:<14} | {:<14} | {}\n",
+                              size, cells[0], cells[1], cells[2], cells[3]));
+    }
+    Ok(out)
+}

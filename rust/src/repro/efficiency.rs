@@ -1,0 +1,194 @@
+//! Efficiency experiments (paper §VII): Figs 8-10, Tables II & VI.
+//! Purely analytical — runs at the paper's original model scales.
+
+use crate::baselines::{
+    ann_quant_aimc_energy, ann_quant_energy, as_baseline, gpu,
+    snn_digi_opt_energy, xformer_energy, xformer_latency_ms,
+};
+use crate::config::{icl_points, imagenet_points, table6_point, PaperPoint};
+use crate::energy::{
+    n_synaptic_arrays, xpikeformer_area, xpikeformer_energy,
+    xpikeformer_latency,
+};
+use crate::repro::ReproCtx;
+
+/// Table II: the synaptic-array configuration actually in effect.
+pub fn table2(ctx: &ReproCtx) -> String {
+    let hw = &ctx.hw;
+    format!(
+        "== Table II: Xpikeformer synaptic-array configuration ==\n\
+         Resistive device              PCM\n\
+         Conductance resolution        {} bits\n\
+         Weight resolution             {} bits\n\
+         # devices per cell            {}\n\
+         Crossbar dimension (by cell)  {}x{}\n\
+         ADC resolution                {} bits\n\
+         ADC sharing ratio             {}\n\
+         Clock                         {:.0} MHz\n",
+        hw.g_bits, hw.w_bits, hw.devices_per_cell, hw.crossbar_dim,
+        hw.crossbar_dim, hw.adc_bits, hw.adc_sharing, hw.clock_hz / 1e6
+    )
+}
+
+fn fig8_rows(ctx: &ReproCtx, points: &[PaperPoint]) -> String {
+    let mut out = String::new();
+    out.push_str(
+        "model      | arch           | compute mJ | memory mJ | total mJ | vs Xpike\n");
+    out.push_str(
+        "-----------+----------------+------------+-----------+----------+---------\n");
+    for p in points {
+        let xp = as_baseline(&xpikeformer_energy(&p.dims, &ctx.hw));
+        let rows = [
+            ("ANN-Quant", ann_quant_energy(&p.dims)),
+            ("ANN-Quant+AIMC", ann_quant_aimc_energy(&p.dims, &ctx.hw)),
+            ("SNN-Digi-Opt", snn_digi_opt_energy(&p.dims, p.t_snn)),
+            ("Xpikeformer", xp),
+        ];
+        for (name, e) in rows {
+            out.push_str(&format!(
+                "{:<10} | {:<14} | {:>10.3} | {:>9.3} | {:>8.3} | {:>6.2}x\n",
+                p.dims.size_tag(), name, e.compute_pj * 1e-9,
+                e.memory_pj * 1e-9, e.total_mj(),
+                e.total_pj() / xp.total_pj()
+            ));
+        }
+    }
+    out
+}
+
+/// Fig 8: per-inference energy vs baselines, (a) ImageNet (b) ICL 4x4.
+pub fn fig8(ctx: &ReproCtx) -> String {
+    format!(
+        "== Fig 8a: energy comparison, ImageNet-1K ==\n{}\n\
+         == Fig 8b: energy comparison, ICL symbol detection (4x4) ==\n{}",
+        fig8_rows(ctx, &imagenet_points()),
+        fig8_rows(ctx, &icl_points())
+    )
+}
+
+/// Fig 9: Xpikeformer computational-energy breakdown at ViT-8-768.
+pub fn fig9(ctx: &ReproCtx) -> String {
+    let p = table6_point();
+    let e = xpikeformer_energy(&p.dims, &ctx.hw);
+    let c = e.compute_pj();
+    let a = e.aimc.total_pj();
+    format!(
+        "== Fig 9: computational energy breakdown (ViT-8-768, ImageNet) ==\n\
+         AIMC engine  {:>5.1}%   (paper: 78.4%)\n\
+         SSA engine   {:>5.1}%   (paper: 18.9%)\n\
+         Other        {:>5.1}%   (paper:  2.7%)\n\
+         -- AIMC internal --\n\
+         Periphery    {:>5.1}%   (paper: 85.9%)\n\
+         Accumulation {:>5.1}%   (paper: 12.1%)\n\
+         ADC          {:>5.1}%   (paper:  2.0%)\n\
+         Crossbar     {:>5.2}%\n",
+        100.0 * a / c,
+        100.0 * e.ssa.total_pj() / c,
+        100.0 * e.other_pj / c,
+        100.0 * e.aimc.periphery_pj / a,
+        100.0 * e.aimc.accumulation_pj / a,
+        100.0 * e.aimc.adc_pj / a,
+        100.0 * e.aimc.crossbar_pj / a,
+    )
+}
+
+/// Fig 10a: latency breakdown.
+pub fn fig10a(ctx: &ReproCtx) -> String {
+    let p = table6_point();
+    let l = xpikeformer_latency(&p.dims, &ctx.hw);
+    let t = l.total_cycles();
+    format!(
+        "== Fig 10a: latency breakdown (ViT-8-768) ==\n\
+         total {:.2} ms @200 MHz ({} cycles)\n\
+         Periphery (routing/control) {:>5.1}%  (paper: >92%)\n\
+         Accumulation/buffers        {:>5.1}%\n\
+         SSA computation             {:>5.1}%  (paper: 2.0%)\n\
+         AIMC computation            {:>5.1}%  (paper: 0.3%)\n",
+        l.total_ms(), t as u64,
+        100.0 * l.periphery_cycles / t,
+        100.0 * l.accumulation_cycles / t,
+        100.0 * l.ssa_cycles / t,
+        100.0 * l.aimc_compute_cycles / t,
+    )
+}
+
+/// Fig 10b: per-inference latency vs GPU implementations.
+pub fn fig10b(ctx: &ReproCtx) -> String {
+    let p = table6_point();
+    let xp = xpikeformer_latency(&p.dims, &ctx.hw).total_ms();
+    let ann = gpu::ann_latency_ms(&p.dims);
+    let snn = gpu::snn_latency_ms(&p.dims, p.t_snn);
+    format!(
+        "== Fig 10b: latency vs GPU (ViT-8-768) ==\n\
+         ANN transformer (GPU)   {:>7.2} ms\n\
+         Spiking transf. (GPU)   {:>7.2} ms\n\
+         Xpikeformer             {:>7.2} ms\n\
+         speedup vs ANN-GPU      {:>7.2}x  (paper: 2.18x)\n\
+         speedup vs SNN-GPU      {:>7.2}x  (paper: 6.85x)\n",
+        ann, snn, xp, ann / xp, snn / xp
+    )
+}
+
+/// Table VI: comparison with SwiftTron [34] and X-Former [24].
+pub fn table6(ctx: &ReproCtx) -> String {
+    let p = table6_point();
+    let xp_e = xpikeformer_energy(&p.dims, &ctx.hw);
+    let xp_l = xpikeformer_latency(&p.dims, &ctx.hw);
+    let xp_a = xpikeformer_area(&p.dims, &ctx.hw);
+    let ann = ann_quant_energy(&p.dims);
+    let xf = xformer_energy(&p.dims, &ctx.hw);
+    let sas = n_synaptic_arrays(&p.dims, &ctx.hw);
+    format!(
+        "== Table VI: SOTA accelerator comparison (ImageNet ViT-8-768) ==\n\
+         metric                | SwiftTron[34] | X-Former[24] | Xpikeformer\n\
+         ----------------------+---------------+--------------+------------\n\
+         paradigm              | ANN           | ANN          | SNN\n\
+         MAC implementation    | digital ALU   | ReRAM-AIMC   | PCM-AIMC\n\
+         MHSA implementation   | digital ALU   | DIMC         | SSA\n\
+         energy/inference (mJ) | {:>13.2} | {:>12.2} | {:>10.2}\n\
+         (paper)               |          3.97 |         2.04 |       0.30\n\
+         latency/inference(ms) | {:>13.2} | {:>12.2} | {:>10.2}\n\
+         (paper)               |          2.26 |         4.13 |       2.18\n\
+         area (mm^2)           |         273.0 |            - | {:>10.0}\n\
+         (paper)               |         273.0 |            - |        784\n\
+         synaptic arrays used  |             - | {:>12} | {:>10}\n",
+        ann.total_mj(),
+        xf.total_mj(),
+        xp_e.total_mj(),
+        // SwiftTron latency is its reported 2.26 ms (fixed silicon);
+        // X-Former latency from its serialization model.
+        2.26f64,
+        xformer_latency_ms(&p.dims),
+        xp_l.total_ms(),
+        xp_a.total_mm2(),
+        sas * 8, // 1-bit ReRAM: 8 columns per INT8 weight
+        sas,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_reports_render() {
+        let ctx = ReproCtx::new("/nonexistent");
+        for f in [table2, fig8, fig9, fig10a, fig10b, table6] {
+            let s = f(&ctx);
+            assert!(s.len() > 100);
+        }
+    }
+
+    #[test]
+    fn fig8_xpike_always_wins() {
+        let ctx = ReproCtx::new("/nonexistent");
+        let s = fig8(&ctx);
+        // Every baseline row reports a >1x ratio vs Xpikeformer.
+        for line in s.lines().filter(|l| l.contains("ANN-")
+            || l.contains("SNN-Digi")) {
+            let ratio: f64 = line.rsplit('|').next().unwrap()
+                .trim().trim_end_matches('x').parse().unwrap();
+            assert!(ratio > 1.0, "line: {line}");
+        }
+    }
+}

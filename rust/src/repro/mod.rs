@@ -1,0 +1,66 @@
+//! Experiment harness: regenerate every table and figure of the paper's
+//! evaluation (DESIGN.md §5 maps each to its modules).
+//!
+//! Efficiency experiments (Fig 8/9/10, Table VI) are analytical and run at
+//! *paper scale*. Accuracy experiments (Tables III/IV/V, Fig 7) execute
+//! the trained scaled-down checkpoints on the PJRT runtime, with the AIMC
+//! simulator supplying programmed / drifted weights.
+
+pub mod accuracy;
+pub mod efficiency;
+
+use anyhow::Result;
+use std::path::PathBuf;
+
+use crate::config::HardwareConfig;
+
+/// Shared context for all experiments.
+pub struct ReproCtx {
+    pub artifacts: PathBuf,
+    pub hw: HardwareConfig,
+    pub seed: u64,
+}
+
+impl ReproCtx {
+    pub fn new(artifacts: impl Into<PathBuf>) -> Self {
+        ReproCtx {
+            artifacts: artifacts.into(),
+            hw: HardwareConfig::default(),
+            seed: 7,
+        }
+    }
+}
+
+/// Run one experiment by paper id; returns the rendered report.
+pub fn run(ctx: &ReproCtx, experiment: &str) -> Result<String> {
+    match experiment {
+        "table2" => Ok(efficiency::table2(ctx)),
+        "table3" => accuracy::table3(ctx),
+        "table4" => accuracy::table4(ctx),
+        "table5" => accuracy::table5(ctx),
+        "fig7" => accuracy::fig7(ctx),
+        "fig8" => Ok(efficiency::fig8(ctx)),
+        "fig9" => Ok(efficiency::fig9(ctx)),
+        "fig10a" => Ok(efficiency::fig10a(ctx)),
+        "fig10b" => Ok(efficiency::fig10b(ctx)),
+        "table6" => Ok(efficiency::table6(ctx)),
+        "all-efficiency" => Ok([
+            efficiency::table2(ctx),
+            efficiency::fig8(ctx),
+            efficiency::fig9(ctx),
+            efficiency::fig10a(ctx),
+            efficiency::fig10b(ctx),
+            efficiency::table6(ctx),
+        ]
+        .join("\n")),
+        other => anyhow::bail!(
+            "unknown experiment '{other}' (try table2..table6, fig7..fig10b)"
+        ),
+    }
+}
+
+/// Every experiment id, in paper order.
+pub const ALL: &[&str] = &[
+    "table2", "table3", "table4", "fig7", "table5", "fig8", "fig9",
+    "fig10a", "fig10b", "table6",
+];

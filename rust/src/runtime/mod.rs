@@ -1,0 +1,369 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them.
+//!
+//! `python/compile/aot.py` lowers the full T-step spiking-transformer
+//! forward (Pallas SSA + crossbar kernels included) to HLO *text*; this
+//! module compiles it once on the PJRT CPU client and runs it from the
+//! request path with zero python involvement. Parameters are executable
+//! *inputs* (manifest order), so the AIMC simulator can substitute
+//! quantized / noisy / drifted weights per run.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::tensor::TensorFile;
+use crate::util::Json;
+
+/// One input slot of the lowered function.
+#[derive(Debug, Clone)]
+pub struct InputSpec {
+    pub name: String,
+    /// "param" | "data" | "seed".
+    pub kind: String,
+    pub shape: Vec<usize>,
+    pub analog: bool,
+}
+
+/// Echo of the model configuration the artifact was lowered with.
+#[derive(Debug, Clone)]
+pub struct ManifestConfig {
+    pub depth: usize,
+    pub dim: usize,
+    pub heads: usize,
+    pub n_tokens: usize,
+    pub in_feat: usize,
+    pub classes: usize,
+    pub t_max: usize,
+    pub t_train: usize,
+    pub mlp_ratio: usize,
+    pub causal: bool,
+    pub nt: usize,
+    pub nr: usize,
+    pub size: String,
+}
+
+/// `<model>_b<batch>.manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub name: String,
+    pub model: String,
+    pub kind: String,
+    pub batch: usize,
+    pub hlo: String,
+    pub params_bin: String,
+    pub golden: String,
+    pub config: ManifestConfig,
+    pub inputs: Vec<InputSpec>,
+    pub output_shape: Vec<usize>,
+}
+
+fn jstr(j: &Json, k: &str) -> Result<String> {
+    Ok(j.get(k)
+        .and_then(|v| v.as_str())
+        .with_context(|| format!("manifest: missing string '{k}'"))?
+        .to_string())
+}
+
+fn jnum(j: &Json, k: &str) -> Result<usize> {
+    j.get(k)
+        .and_then(|v| v.as_usize())
+        .with_context(|| format!("manifest: missing number '{k}'"))
+}
+
+fn jshape(j: &Json, k: &str) -> Result<Vec<usize>> {
+    Ok(j.get(k)
+        .and_then(|v| v.as_arr())
+        .with_context(|| format!("manifest: missing array '{k}'"))?
+        .iter()
+        .map(|v| v.as_usize().unwrap_or(0))
+        .collect())
+}
+
+impl Manifest {
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let cfg = j.get("config").context("manifest: missing 'config'")?;
+        let inputs = j
+            .get("inputs")
+            .and_then(|v| v.as_arr())
+            .context("manifest: missing 'inputs'")?
+            .iter()
+            .map(|i| -> Result<InputSpec> {
+                Ok(InputSpec {
+                    name: jstr(i, "name")?,
+                    kind: jstr(i, "kind")?,
+                    shape: jshape(i, "shape")?,
+                    analog: i.get("analog").and_then(|v| v.as_bool())
+                        .unwrap_or(false),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest {
+            name: jstr(j, "name")?,
+            model: jstr(j, "model")?,
+            kind: jstr(j, "kind")?,
+            batch: jnum(j, "batch")?,
+            hlo: jstr(j, "hlo")?,
+            params_bin: jstr(j, "params_bin")?,
+            golden: jstr(j, "golden")?,
+            config: ManifestConfig {
+                depth: jnum(cfg, "depth")?,
+                dim: jnum(cfg, "dim")?,
+                heads: jnum(cfg, "heads")?,
+                n_tokens: jnum(cfg, "n_tokens")?,
+                in_feat: jnum(cfg, "in_feat")?,
+                classes: jnum(cfg, "classes")?,
+                t_max: jnum(cfg, "t_max")?,
+                t_train: jnum(cfg, "t_train")?,
+                mlp_ratio: jnum(cfg, "mlp_ratio")?,
+                causal: cfg.get("causal").and_then(|v| v.as_bool())
+                    .unwrap_or(false),
+                nt: jnum(cfg, "nt")?,
+                nr: jnum(cfg, "nr")?,
+                size: jstr(cfg, "size")?,
+            },
+            inputs,
+            output_shape: jshape(j, "output_shape")?,
+        })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("read {}", path.as_ref().display()))?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    pub fn param_inputs(&self) -> impl Iterator<Item = &InputSpec> {
+        self.inputs.iter().filter(|i| i.kind == "param")
+    }
+}
+
+/// A discovered artifact directory entry (manifest + file paths).
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+}
+
+impl Artifact {
+    /// Load `<dir>/<tag>.manifest.json`.
+    pub fn open(dir: impl AsRef<Path>, tag: &str) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join(format!(
+            "{tag}.manifest.json")))?;
+        Ok(Artifact { dir, manifest })
+    }
+
+    /// Every artifact tag in a directory.
+    pub fn discover(dir: impl AsRef<Path>) -> Result<Vec<String>> {
+        let mut tags = Vec::new();
+        for entry in std::fs::read_dir(dir.as_ref())? {
+            let name = entry?.file_name().to_string_lossy().to_string();
+            if let Some(tag) = name.strip_suffix(".manifest.json") {
+                tags.push(tag.to_string());
+            }
+        }
+        tags.sort();
+        Ok(tags)
+    }
+
+    pub fn hlo_path(&self) -> PathBuf {
+        self.dir.join(&self.manifest.hlo)
+    }
+
+    pub fn load_params(&self) -> Result<TensorFile> {
+        TensorFile::load(self.dir.join(&self.manifest.params_bin))
+    }
+
+    pub fn load_golden(&self) -> Result<TensorFile> {
+        TensorFile::load(self.dir.join(&self.manifest.golden))
+    }
+}
+
+/// A compiled spiking-transformer executable bound to the PJRT CPU client.
+pub struct Engine {
+    pub artifact: Artifact,
+    client: Arc<xla::PjRtClient>,
+    exe: xla::PjRtLoadedExecutable,
+    /// Parameter literals in manifest order (replaceable via
+    /// [`Engine::set_params`]).
+    params: Vec<xla::Literal>,
+}
+
+// The PJRT CPU client and loaded executables are internally synchronized;
+// the raw pointers the xla crate holds are safe to move across threads.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+fn literal_f32(values: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    ensure!(shape.iter().product::<usize>() == values.len(),
+            "shape/value mismatch");
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(values).reshape(&dims)?)
+}
+
+impl Engine {
+    /// Compile the artifact on a fresh CPU client.
+    pub fn load(dir: impl AsRef<Path>, tag: &str) -> Result<Self> {
+        let client = Arc::new(xla::PjRtClient::cpu()?);
+        Self::load_with_client(client, dir, tag)
+    }
+
+    /// Compile the artifact on a shared client (one client per process).
+    pub fn load_with_client(client: Arc<xla::PjRtClient>,
+                            dir: impl AsRef<Path>, tag: &str)
+                            -> Result<Self> {
+        let artifact = Artifact::open(dir, tag)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            artifact.hlo_path().to_str().unwrap())?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        let tensors = artifact.load_params()?;
+        let mut params = Vec::new();
+        for spec in artifact.manifest.param_inputs() {
+            let t = tensors.get(&spec.name)?;
+            ensure!(t.shape == spec.shape,
+                    "param {}: shape {:?} != manifest {:?}", spec.name,
+                    t.shape, spec.shape);
+            params.push(literal_f32(&t.as_f32(), &spec.shape)?);
+        }
+        Ok(Engine { artifact, client, exe, params })
+    }
+
+    pub fn client(&self) -> Arc<xla::PjRtClient> {
+        Arc::clone(&self.client)
+    }
+
+    pub fn batch(&self) -> usize {
+        self.artifact.manifest.batch
+    }
+
+    pub fn classes(&self) -> usize {
+        self.artifact.manifest.config.classes
+    }
+
+    pub fn t_max(&self) -> usize {
+        self.artifact.manifest.config.t_max
+    }
+
+    /// Per-sample flattened input length.
+    pub fn x_len_per_sample(&self) -> usize {
+        let spec = self.artifact.manifest.inputs.iter()
+            .find(|i| i.kind == "data").expect("manifest has data input");
+        spec.shape[1..].iter().product()
+    }
+
+    /// Replace (a subset of) parameters, e.g. with AIMC-drifted weights.
+    /// Names not in `new` keep their current values.
+    pub fn set_params(&mut self, new: &[(String, Vec<f32>)]) -> Result<()> {
+        for (name, values) in new {
+            let idx = self
+                .artifact
+                .manifest
+                .param_inputs()
+                .position(|s| &s.name == name)
+                .ok_or_else(|| anyhow::anyhow!("unknown param '{name}'"))?;
+            let spec = self.artifact.manifest.param_inputs().nth(idx)
+                .unwrap();
+            self.params[idx] = literal_f32(values, &spec.shape)?;
+        }
+        Ok(())
+    }
+
+    /// Reset parameters to the checkpoint values.
+    pub fn reset_params(&mut self) -> Result<()> {
+        let tensors = self.artifact.load_params()?;
+        let mut params = Vec::new();
+        for spec in self.artifact.manifest.param_inputs() {
+            let t = tensors.get(&spec.name)?;
+            params.push(literal_f32(&t.as_f32(), &spec.shape)?);
+        }
+        self.params = params;
+        Ok(())
+    }
+
+    /// Execute the forward pass: `x` is the flattened data batch
+    /// (manifest `data` shape), `seed` drives all stochastic elements.
+    /// Returns flattened logits `[t_max, batch, classes]`.
+    pub fn run(&self, x: &[f32], seed: u32) -> Result<Vec<f32>> {
+        let spec = self.artifact.manifest.inputs.iter()
+            .find(|i| i.kind == "data").unwrap();
+        let mut args: Vec<&xla::Literal> = self.params.iter().collect();
+        let x_lit = literal_f32(x, &spec.shape)?;
+        let seed_lit = xla::Literal::scalar(seed);
+        args.push(&x_lit);
+        args.push(&seed_lit);
+        let result = self.exe.execute::<&xla::Literal>(&args)?;
+        let out = result[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True -> 1-tuple.
+        let logits = out.to_tuple1()?;
+        Ok(logits.to_vec::<f32>()?)
+    }
+}
+
+/// Argmax over the last axis of `[t, batch, classes]` prefix-mean logits:
+/// returns `pred[t][b]` where entry `t` uses encoding length `t+1`.
+pub fn prefix_predictions(logits: &[f32], t_max: usize, batch: usize,
+                          classes: usize) -> Vec<Vec<usize>> {
+    let mut cum = vec![0.0f64; batch * classes];
+    let mut preds = Vec::with_capacity(t_max);
+    for t in 0..t_max {
+        let step = &logits[t * batch * classes..(t + 1) * batch * classes];
+        for (c, &v) in cum.iter_mut().zip(step) {
+            *c += v as f64;
+        }
+        preds.push(
+            (0..batch)
+                .map(|b| {
+                    let row = &cum[b * classes..(b + 1) * classes];
+                    row.iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .map(|(i, _)| i)
+                        .unwrap()
+                })
+                .collect(),
+        );
+    }
+    preds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefix_predictions_accumulate() {
+        // t=0: class1 wins for b0; t=1 flips it to class0.
+        let logits = vec![
+            0.0, 1.0, /* b0 t0 */ 2.0, 0.0, /* b1 t0 */
+            5.0, 0.0, /* b0 t1 */ 0.0, 1.0, /* b1 t1 */
+        ];
+        let p = prefix_predictions(&logits, 2, 2, 2);
+        assert_eq!(p[0], vec![1, 0]);
+        assert_eq!(p[1], vec![0, 0]);
+    }
+
+    #[test]
+    fn manifest_parses() {
+        let json = r#"{
+            "name": "m_b2", "model": "m", "kind": "vit", "batch": 2,
+            "hlo": "m_b2.hlo.txt", "params_bin": "c/m.params.bin",
+            "golden": "m_b2.golden.bin",
+            "config": {"depth":1,"dim":32,"heads":2,"n_tokens":16,
+                       "in_feat":192,"classes":10,"t_max":4,"t_train":4,
+                       "mlp_ratio":2,"causal":false,"nt":0,"nr":0,
+                       "size":"1-32"},
+            "inputs": [
+              {"name":"pos","kind":"param","shape":[16,192],"analog":false},
+              {"name":"x","kind":"data","shape":[2,3,32,32],"analog":false},
+              {"name":"seed","kind":"seed","shape":[],"analog":false}
+            ],
+            "output_shape": [4,2,10]
+        }"#;
+        let m = Manifest::from_json(
+            &crate::util::Json::parse(json).unwrap()).unwrap();
+        assert_eq!(m.param_inputs().count(), 1);
+        assert_eq!(m.config.t_max, 4);
+    }
+}

@@ -1,0 +1,138 @@
+//! Spiking-neuron reference models and spike coding (paper §II-A).
+//!
+//! These are the *digital-exact* reference implementations the hardware
+//! simulators ([`crate::aimc`], [`crate::ssa`]) are validated against:
+//! the LIF unit in an AIMC tile is a shift register + adder + comparator,
+//! which for `beta = 0.5` matches [`LifNeuron`] bit-for-bit on dyadic
+//! inputs.
+
+use crate::util::Rng;
+
+/// Leaky integrate-and-fire neuron, hard reset (paper eqs. (2)-(3)).
+#[derive(Debug, Clone)]
+pub struct LifNeuron {
+    pub beta: f32,
+    pub v_thresh: f32,
+    pub v: f32,
+}
+
+impl Default for LifNeuron {
+    fn default() -> Self {
+        // Hardware values: shift-register leak (x0.5), unit threshold.
+        LifNeuron { beta: 0.5, v_thresh: 1.0, v: 0.0 }
+    }
+}
+
+impl LifNeuron {
+    pub fn new(beta: f32, v_thresh: f32) -> Self {
+        LifNeuron { beta, v_thresh, v: 0.0 }
+    }
+
+    /// Integrate one timestep; returns `true` iff the neuron fires.
+    pub fn step(&mut self, input: f32) -> bool {
+        self.v = self.beta * self.v + input;
+        if self.v >= self.v_thresh {
+            self.v = 0.0;
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.v = 0.0;
+    }
+}
+
+/// A bank of LIF neurons (one AIMC tile's LIF units for a feature vector).
+#[derive(Debug, Clone)]
+pub struct LifArray {
+    pub neurons: Vec<LifNeuron>,
+}
+
+impl LifArray {
+    pub fn new(n: usize) -> Self {
+        LifArray { neurons: vec![LifNeuron::default(); n] }
+    }
+
+    /// One timestep over the whole array -> spike bitmap.
+    pub fn step(&mut self, inputs: &[f32]) -> Vec<bool> {
+        assert_eq!(inputs.len(), self.neurons.len());
+        self.neurons
+            .iter_mut()
+            .zip(inputs)
+            .map(|(n, &i)| n.step(i))
+            .collect()
+    }
+
+    pub fn reset(&mut self) {
+        for n in &mut self.neurons {
+            n.reset();
+        }
+    }
+}
+
+/// Bernoulli rate coding (paper eq. (1)): value in [0,1] -> spike train.
+pub fn rate_encode(rng: &mut Rng, x: f32, t_steps: usize) -> Vec<bool> {
+    (0..t_steps).map(|_| rng.uniform_f32() < x).collect()
+}
+
+/// Firing-rate decoder (mean over the time axis).
+pub fn rate_decode(spikes: &[bool]) -> f32 {
+    if spikes.is_empty() {
+        return 0.0;
+    }
+    spikes.iter().filter(|&&s| s).count() as f32 / spikes.len() as f32
+}
+
+/// Run LIF over a `[T]` pre-activation sequence (scalar neuron).
+pub fn lif_seq(inputs: &[f32], beta: f32, v_thresh: f32) -> Vec<bool> {
+    let mut n = LifNeuron::new(beta, v_thresh);
+    inputs.iter().map(|&i| n.step(i)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lif_integrates_and_leaks() {
+        let mut n = LifNeuron::default();
+        assert!(!n.step(0.4)); // v = 0.4
+        assert!(!n.step(0.4)); // v = 0.6
+        assert!(!n.step(0.2)); // v = 0.5
+        assert!(n.step(0.8)); // v = 1.05 >= 1 -> fire
+        assert_eq!(n.v, 0.0); // hard reset
+    }
+
+    #[test]
+    fn lif_subthreshold_never_fires() {
+        // Steady state v = i / (1 - beta) = 2i < 1 for i < 0.5.
+        let spikes = lif_seq(&[0.49; 64], 0.5, 1.0);
+        assert!(spikes.iter().all(|&s| !s));
+    }
+
+    #[test]
+    fn lif_suprathreshold_fires_every_step() {
+        let spikes = lif_seq(&[1.5; 16], 0.5, 1.0);
+        assert!(spikes.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn rate_coding_expectation() {
+        let mut rng = Rng::seed_from_u64(0);
+        let s = rate_encode(&mut rng, 0.3, 100_000);
+        assert!((rate_decode(&s) - 0.3).abs() < 0.01);
+    }
+
+    #[test]
+    fn lif_array_matches_scalar() {
+        let inputs = [0.7f32, 1.2, 0.1];
+        let mut arr = LifArray::new(3);
+        let got = arr.step(&inputs);
+        for (i, &inp) in inputs.iter().enumerate() {
+            let mut n = LifNeuron::default();
+            assert_eq!(got[i], n.step(inp));
+        }
+    }
+}

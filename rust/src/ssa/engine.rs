@@ -1,0 +1,166 @@
+//! SSA engine: one tile per attention head (paper §IV-B3) plus the
+//! algorithm-level reference (Algorithm 1) used to prove the cycle-level
+//! tile bit-exact.
+
+use crate::ssa::lfsr::LfsrArray;
+use crate::ssa::tile::{draw_uniform, SsaStats, SsaTile};
+use crate::ssa::BitMatrix;
+
+/// Algorithm-level SSA (paper Algorithm 1) consuming the LFSR stream in
+/// *exactly* the order the pipelined tile does, so it must reproduce the
+/// tile output bit-for-bit — the key hardware-correctness test.
+pub fn ssa_reference(q: &[BitMatrix], k: &[BitMatrix], v: &[BitMatrix],
+                     n: usize, d_k: usize, causal: bool, seed: u32)
+                     -> Vec<BitMatrix> {
+    let t_steps = q.len();
+    let mut lfsr = LfsrArray::new(seed);
+    let mut stats = SsaStats::default();
+    let mut scores: Vec<Vec<Vec<bool>>> = Vec::with_capacity(t_steps);
+    let mut out = vec![vec![vec![false; d_k]; n]; t_steps];
+    for t in 0..=t_steps {
+        // Output draws for timestep t-1 happen first, column by column.
+        if t >= 1 {
+            for c in 0..d_k {
+                for (i, row) in out[t - 1].iter_mut().enumerate() {
+                    let sum: u32 = (0..n)
+                        .map(|j| {
+                            (scores[t - 1][i][j] && v[t - 1][j][c]) as u32
+                        })
+                        .sum();
+                    let r = draw_uniform(&mut lfsr, n as u32, &mut stats);
+                    row[c] = sum >= r;
+                }
+            }
+        }
+        // Score draws for timestep t at the end of its window.
+        if t < t_steps {
+            let mut s = vec![vec![false; n]; n];
+            for (i, si) in s.iter_mut().enumerate() {
+                for (j, sij) in si.iter_mut().enumerate() {
+                    let count: u32 = (0..d_k)
+                        .map(|c| (q[t][i][c] && k[t][j][c]) as u32)
+                        .sum();
+                    let masked = causal && j > i;
+                    let r = draw_uniform(&mut lfsr, d_k as u32, &mut stats);
+                    *sij = !masked && count >= r;
+                }
+            }
+            scores.push(s);
+        }
+    }
+    out
+}
+
+/// The full SSA engine: `heads` tiles operating in parallel, reused across
+/// transformer layers (the tiles are stateless between calls after
+/// `reset`).
+pub struct SsaEngine {
+    pub tiles: Vec<SsaTile>,
+}
+
+impl SsaEngine {
+    pub fn new(heads: usize, n: usize, d_k: usize, causal: bool,
+               seed: u32) -> Self {
+        SsaEngine {
+            tiles: (0..heads)
+                .map(|h| SsaTile::new(n, d_k, causal, seed ^ (h as u32 + 1)))
+                .collect(),
+        }
+    }
+
+    /// Run multi-head attention for one layer: per-head Q/K/V spike
+    /// matrices over T timesteps. Returns per-head outputs and merged
+    /// stats (cycles take the max across parallel tiles, events sum).
+    pub fn run_mhsa(&mut self, qkv: &[(Vec<BitMatrix>, Vec<BitMatrix>,
+                                       Vec<BitMatrix>)])
+                    -> (Vec<Vec<BitMatrix>>, SsaStats) {
+        assert_eq!(qkv.len(), self.tiles.len());
+        let mut stats = SsaStats::default();
+        let mut outs = Vec::with_capacity(qkv.len());
+        for (tile, (q, k, v)) in self.tiles.iter_mut().zip(qkv) {
+            tile.reset();
+            let (o, s) = tile.run(q, k, v);
+            stats.add(&s);
+            outs.push(o);
+        }
+        (outs, stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pseudo(t: usize, i: usize, c: usize, salt: usize, p: f64) -> bool {
+        let h = ((t * 131 + i * 31 + c * 7 + salt * 1009) as u64)
+            .wrapping_mul(0x9E3779B97F4A7C15);
+        (h >> 11) as f64 / (1u64 << 53) as f64 * 2.0 < p * 2.0
+    }
+
+    fn mats(t_steps: usize, n: usize, d_k: usize, salt: usize, p: f64)
+            -> Vec<BitMatrix> {
+        (0..t_steps)
+            .map(|t| {
+                (0..n)
+                    .map(|i| (0..d_k).map(|c| pseudo(t, i, c, salt, p))
+                        .collect())
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn tile_matches_algorithm_reference_bit_exactly() {
+        for &(n, d_k, causal) in
+            &[(4usize, 8usize, false), (8, 16, true), (5, 32, false)]
+        {
+            let q = mats(6, n, d_k, 1, 0.4);
+            let k = mats(6, n, d_k, 2, 0.4);
+            let v = mats(6, n, d_k, 3, 0.4);
+            let mut tile = SsaTile::new(n, d_k, causal, 99);
+            let (got, _) = tile.run(&q, &k, &v);
+            let want = ssa_reference(&q, &k, &v, n, d_k, causal, 99);
+            assert_eq!(got, want, "n={n} d_k={d_k} causal={causal}");
+        }
+    }
+
+    #[test]
+    fn tile_reuse_after_reset_is_clean() {
+        let n = 4;
+        let d_k = 8;
+        let q = mats(3, n, d_k, 4, 0.5);
+        let k = mats(3, n, d_k, 5, 0.5);
+        let v = mats(3, n, d_k, 6, 0.5);
+        let mut tile = SsaTile::new(n, d_k, false, 7);
+        let (a, _) = tile.run(&q, &k, &v);
+        // After reset + fresh tile with the same seed state? The LFSR
+        // advances, so outputs differ, but state (counters/FIFOs) must be
+        // clean: an all-zero run after reset yields all-zero output.
+        tile.reset();
+        let z = vec![vec![vec![false; d_k]; n]; 2];
+        let (b, _) = tile.run(&z, &z, &z);
+        assert!(b.iter().flatten().flatten().all(|&x| !x));
+        drop(a);
+    }
+
+    #[test]
+    fn engine_runs_heads_in_parallel_cycles() {
+        let n = 4;
+        let d_k = 8;
+        let heads = 3;
+        let qkv: Vec<_> = (0..heads)
+            .map(|h| (mats(2, n, d_k, h * 3 + 1, 0.5),
+                      mats(2, n, d_k, h * 3 + 2, 0.5),
+                      mats(2, n, d_k, h * 3 + 3, 0.5)))
+            .collect();
+        let mut engine = SsaEngine::new(heads, n, d_k, false, 11);
+        let (outs, stats) = engine.run_mhsa(&qkv);
+        assert_eq!(outs.len(), heads);
+        // Parallel tiles: cycle count equals a single tile's.
+        assert_eq!(stats.cycles, (2 + 1) * d_k as u64);
+        // Events sum across heads.
+        assert_eq!(stats.encoder_samples,
+                   heads as u64 * ((2 * n * n) + (2 + 1) * n * d_k) as u64
+                       - heads as u64 * n as u64 * d_k as u64);
+    }
+}

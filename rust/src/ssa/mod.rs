@@ -1,0 +1,25 @@
+//! SSA engine simulator (paper §IV-B): stochastic spiking attention as a
+//! cycle-level digital-logic model.
+//!
+//! * [`lfsr`]      — the shared 32-bit LFSR array with 4-byte tapping
+//!   (paper §IV-B3, [48][49]) supplying every Bernoulli encoder;
+//! * [`sac`]       — one stochastic attention cell: AND gate, UINT8
+//!   counter, score latch, d_K-bit FIFO for V alignment, output AND;
+//! * [`tile`]      — the N x N SAC array with streaming dataflow, column
+//!   adders and Bernoulli encoders; counts cycles and gate events;
+//! * [`engine`]    — multi-tile (one tile per head) engine + the
+//!   algorithm-level reference (paper Algorithm 1) used to prove the
+//!   cycle-level model bit-exact.
+
+pub mod engine;
+pub mod lfsr;
+pub mod sac;
+pub mod tile;
+
+pub use engine::{ssa_reference, SsaEngine};
+pub use lfsr::{Lfsr32, LfsrArray};
+pub use sac::{bernoulli_encode, Sac};
+pub use tile::{SsaStats, SsaTile};
+
+/// A binary matrix `[rows][cols]` (token-major spike matrix).
+pub type BitMatrix = Vec<Vec<bool>>;

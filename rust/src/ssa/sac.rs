@@ -1,0 +1,122 @@
+//! One stochastic attention cell (SAC) — paper Fig 5, §IV-B2.
+//!
+//! Per timestep the (i,j)-th SAC:
+//! 1. streams `d_K` (Q_i, K_j) bit pairs through its AND gate, counting
+//!    matches in a UINT8 counter (d_K <= 256);
+//! 2. Bernoulli-encodes the count against a PRN byte -> score bit `S_ij`,
+//!    held for the next `d_K` cycles;
+//! 3. streams V_j through a d_K-bit FIFO (aligning V with the score
+//!    pipeline) and ANDs each bit with the held `S_ij`.
+
+use std::collections::VecDeque;
+
+/// Bernoulli encoder (paper §IV-B2): compare the *unnormalized* integer
+/// `i` in `[0, i_max]` against a uniform integer from `(0, i_max]` derived
+/// from a PRN byte. `i_max` must be a power of two <= 256.
+pub fn bernoulli_encode(i: u32, prn_byte: u8, i_max: u32) -> bool {
+    debug_assert!(i_max.is_power_of_two() && i_max <= 256);
+    debug_assert!(i <= i_max);
+    let r = (prn_byte as u32 & (i_max - 1)) + 1; // uniform on 1..=i_max
+    i >= r
+}
+
+/// Cycle-accurate SAC state.
+#[derive(Debug, Clone)]
+pub struct Sac {
+    /// UINT8 popcount of Q AND K for the current timestep.
+    pub counter: u8,
+    /// Latched score bit S_ij for the streaming phase.
+    pub score: bool,
+    /// d_K-deep FIFO shift register buffering V_j.
+    pub v_fifo: VecDeque<bool>,
+}
+
+impl Sac {
+    pub fn new(d_k: usize) -> Self {
+        Sac {
+            counter: 0,
+            score: false,
+            v_fifo: VecDeque::from(vec![false; d_k]),
+        }
+    }
+
+    /// Phase-1 cycle: AND + count, and push V into the alignment FIFO.
+    /// Returns the V bit popped out of the FIFO (aligned with the held
+    /// score) for the phase-2 AND.
+    pub fn cycle(&mut self, q_bit: bool, k_bit: bool, v_bit: bool) -> bool {
+        if q_bit && k_bit {
+            self.counter = self.counter.saturating_add(1);
+        }
+        self.v_fifo.push_back(v_bit);
+        let v_aligned = self.v_fifo.pop_front().unwrap_or(false);
+        self.score && v_aligned
+    }
+
+    /// End-of-window: encode the counter into the score latch and clear.
+    pub fn latch_score(&mut self, prn_byte: u8, d_k: u32, masked: bool) {
+        self.score = !masked
+            && bernoulli_encode(self.counter as u32, prn_byte, d_k);
+        self.counter = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encoder_extremes() {
+        for b in 0..=255u8 {
+            assert!(!bernoulli_encode(0, b, 64), "0 never fires");
+            assert!(bernoulli_encode(64, b, 64), "full count always fires");
+        }
+    }
+
+    #[test]
+    fn encoder_rate_matches_probability() {
+        let i_max = 64u32;
+        for i in [1u32, 16, 32, 48, 63] {
+            let fired: u32 = (0..=255u8)
+                .map(|b| bernoulli_encode(i, b, i_max) as u32)
+                .sum();
+            // Exactly i/i_max over a full uniform byte sweep (256 bytes
+            // cover each residue 256/i_max = 4 times).
+            assert_eq!(fired, i * 256 / i_max, "i={i}");
+        }
+    }
+
+    #[test]
+    fn counter_counts_and_pairs() {
+        let mut sac = Sac::new(4);
+        let q = [true, true, false, true];
+        let k = [true, false, true, true];
+        for c in 0..4 {
+            sac.cycle(q[c], k[c], false);
+        }
+        assert_eq!(sac.counter, 2); // positions 0 and 3
+    }
+
+    #[test]
+    fn v_fifo_aligns_by_d_k_cycles() {
+        let d_k = 4;
+        let mut sac = Sac::new(d_k);
+        sac.score = true;
+        // Push a marked bit; it must emerge exactly d_k cycles later.
+        let out0 = sac.cycle(false, false, true);
+        assert!(!out0, "FIFO is primed with zeros");
+        for _ in 0..d_k - 1 {
+            assert!(!sac.cycle(false, false, false));
+        }
+        assert!(sac.cycle(false, false, false),
+                "marked bit emerges after d_k cycles AND with held score");
+    }
+
+    #[test]
+    fn masked_latch_forces_zero_score() {
+        let mut sac = Sac::new(4);
+        sac.counter = 4;
+        sac.latch_score(0, 4, true);
+        assert!(!sac.score);
+        assert_eq!(sac.counter, 0, "counter clears on latch");
+    }
+}

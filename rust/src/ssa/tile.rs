@@ -1,0 +1,270 @@
+//! The N x N SSA tile: cycle-accurate streaming simulation (paper Fig 5).
+//!
+//! Dataflow (paper §IV-B2/§IV-C, *matrix-wise event-driven*): Q streams
+//! across rows, K and V across columns, one bit-column per clock cycle;
+//! a timestep occupies `d_K` cycles. Scores for timestep `t` are latched
+//! at the end of its window while the *output* phase for timestep `t-1`
+//! runs concurrently (V is re-aligned by the in-SAC d_K-deep FIFO), so the
+//! tile is fully pipelined over timesteps: total cycles = (T+1) * d_K.
+
+use crate::ssa::lfsr::LfsrArray;
+use crate::ssa::sac::Sac;
+use crate::ssa::BitMatrix;
+
+/// Gate-event counters for the energy model.
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct SsaStats {
+    /// Clock cycles consumed (pipelined).
+    pub cycles: u64,
+    /// 2-input AND evaluations (both phases).
+    pub and_ops: u64,
+    /// UINT8 counter increments actually performed.
+    pub counter_incs: u64,
+    /// N-input column-adder evaluations.
+    pub adder_ops: u64,
+    /// Bernoulli encoder comparisons (score + output).
+    pub encoder_samples: u64,
+    /// PRN bytes consumed.
+    pub prn_bytes: u64,
+}
+
+impl SsaStats {
+    pub fn add(&mut self, o: &SsaStats) {
+        self.cycles = self.cycles.max(o.cycles); // tiles run in parallel
+        self.and_ops += o.and_ops;
+        self.counter_incs += o.counter_incs;
+        self.adder_ops += o.adder_ops;
+        self.encoder_samples += o.encoder_samples;
+        self.prn_bytes += o.prn_bytes;
+    }
+}
+
+/// Draw a uniform integer on `1..=i_max` from the LFSR byte stream:
+/// one byte when `i_max` is a power of two <= 256 (the paper's fast path),
+/// two bytes otherwise (16-bit compare, modulo bias < i_max/65536).
+pub fn draw_uniform(lfsr: &mut LfsrArray, i_max: u32, stats: &mut SsaStats)
+                    -> u32 {
+    if i_max.is_power_of_two() && i_max <= 256 {
+        stats.prn_bytes += 1;
+        (lfsr.next_byte() as u32 & (i_max - 1)) + 1
+    } else {
+        stats.prn_bytes += 2;
+        let hi = lfsr.next_byte() as u32;
+        let lo = lfsr.next_byte() as u32;
+        (((hi << 8) | lo) % i_max) + 1
+    }
+}
+
+/// One SSA tile (= one attention head). Stateless across calls except the
+/// PRN stream: `reset` re-primes the SAC array for reuse across layers.
+pub struct SsaTile {
+    pub n: usize,
+    pub d_k: usize,
+    pub causal: bool,
+    sacs: Vec<Sac>,
+    lfsr: LfsrArray,
+}
+
+impl SsaTile {
+    pub fn new(n: usize, d_k: usize, causal: bool, seed: u32) -> Self {
+        assert!(d_k <= 256, "UINT8 counter bounds d_K at 256 (paper IV-B2)");
+        SsaTile {
+            n,
+            d_k,
+            causal,
+            sacs: (0..n * n).map(|_| Sac::new(d_k)).collect(),
+            lfsr: LfsrArray::new(seed),
+        }
+    }
+
+    /// Re-prime for the next layer (the tile is reused layer-wise).
+    pub fn reset(&mut self) {
+        for s in &mut self.sacs {
+            *s = Sac::new(self.d_k);
+        }
+    }
+
+    /// Run T timesteps of attention for one head.
+    ///
+    /// `q[t]`, `k[t]`, `v[t]` are `[N][d_K]` binary matrices. Returns the
+    /// per-timestep `[N][d_K]` binary attention outputs plus gate stats.
+    ///
+    /// Implementation note (§Perf, EXPERIMENTS.md): the simulation is
+    /// cycle- and bit-faithful to the SAC array (see [`Sac`] for the
+    /// cell-level model and the `ssa_reference` cross-check test), but is
+    /// computed with bit-parallel tricks: score rows live in u64 bitset
+    /// words so the phase-2 column adder is `popcount(scores & v_mask)`,
+    /// and phase-1 counting iterates only over *set* Q/K bits (the AND
+    /// output is zero elsewhere). The PRN draw order is unchanged, so
+    /// outputs are bit-identical to the naive cell-by-cell simulation.
+    pub fn run(&mut self, q: &[BitMatrix], k: &[BitMatrix], v: &[BitMatrix])
+               -> (Vec<BitMatrix>, SsaStats) {
+        let t_steps = q.len();
+        let (n, d_k) = (self.n, self.d_k);
+        let words = n.div_ceil(64);
+        let mut stats = SsaStats::default();
+        let mut out = vec![vec![vec![false; d_k]; n]; t_steps];
+        // Flat SAC state (same semantics as the Sac structs).
+        let mut counters = vec![0u8; n * n];
+        let mut score_rows = vec![0u64; n * words];
+        let mut qset: Vec<usize> = Vec::with_capacity(n);
+        let mut kset: Vec<usize> = Vec::with_capacity(n);
+        let mut v_mask = vec![0u64; words];
+        // t ranges one past the data: the extra window drains the pipeline.
+        for t in 0..=t_steps {
+            for c in 0..d_k {
+                stats.cycles += 1;
+                stats.and_ops += 2 * (n * n) as u64; // hardware events
+                if t < t_steps {
+                    // Phase 1: count Q AND K, skipping zero bits.
+                    qset.clear();
+                    kset.clear();
+                    for (i, row) in q[t].iter().enumerate() {
+                        if row[c] {
+                            qset.push(i);
+                        }
+                    }
+                    for (j, row) in k[t].iter().enumerate() {
+                        if row[c] {
+                            kset.push(j);
+                        }
+                    }
+                    for &i in &qset {
+                        let base = i * n;
+                        for &j in &kset {
+                            counters[base + j] =
+                                counters[base + j].saturating_add(1);
+                        }
+                    }
+                    stats.counter_incs +=
+                        (qset.len() * kset.len()) as u64;
+                }
+                if t >= 1 {
+                    // Phase 2: column adders = popcount(score & V mask).
+                    for w in v_mask.iter_mut() {
+                        *w = 0;
+                    }
+                    for (j, row) in v[t - 1].iter().enumerate() {
+                        if row[c] {
+                            v_mask[j / 64] |= 1u64 << (j % 64);
+                        }
+                    }
+                    for i in 0..n {
+                        let mut sum = 0u32;
+                        for w in 0..words {
+                            sum += (score_rows[i * words + w]
+                                & v_mask[w]).count_ones();
+                        }
+                        stats.adder_ops += 1;
+                        stats.encoder_samples += 1;
+                        let r = draw_uniform(&mut self.lfsr, n as u32,
+                                             &mut stats);
+                        out[t - 1][i][c] = sum >= r;
+                    }
+                }
+            }
+            if t < t_steps {
+                // End of window: latch all N^2 scores (row-major draws).
+                for i in 0..n {
+                    for w in 0..words {
+                        score_rows[i * words + w] = 0;
+                    }
+                    for j in 0..n {
+                        stats.encoder_samples += 1;
+                        let masked = self.causal && j > i;
+                        let r = draw_uniform(&mut self.lfsr, d_k as u32,
+                                             &mut stats);
+                        let fire = !masked
+                            && (counters[i * n + j] as u32) >= r;
+                        if fire {
+                            score_rows[i * words + j / 64] |=
+                                1u64 << (j % 64);
+                        }
+                        counters[i * n + j] = 0;
+                    }
+                }
+            }
+        }
+        (out, stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bits(n: usize, d: usize, f: impl Fn(usize, usize) -> bool)
+            -> BitMatrix {
+        (0..n).map(|i| (0..d).map(|c| f(i, c)).collect()).collect()
+    }
+
+    #[test]
+    fn pipeline_cycle_count() {
+        let mut tile = SsaTile::new(4, 8, false, 1);
+        let z = vec![bits(4, 8, |_, _| false); 3];
+        let (_, stats) = tile.run(&z, &z, &z);
+        assert_eq!(stats.cycles, (3 + 1) * 8);
+    }
+
+    #[test]
+    fn zero_inputs_give_zero_outputs() {
+        let mut tile = SsaTile::new(4, 8, false, 2);
+        let z = vec![bits(4, 8, |_, _| false); 2];
+        let (out, _) = tile.run(&z, &z, &z);
+        assert!(out.iter().flatten().flatten().all(|&b| !b));
+    }
+
+    #[test]
+    fn saturated_inputs_fire_everywhere() {
+        // Q=K=V=1 => counts == d_k and sums == N => encoders always fire.
+        let mut tile = SsaTile::new(4, 8, false, 3);
+        let ones = vec![bits(4, 8, |_, _| true); 2];
+        let (out, _) = tile.run(&ones, &ones, &ones);
+        assert!(out.iter().flatten().flatten().all(|&b| b));
+    }
+
+    #[test]
+    fn causal_tile_first_token_sees_only_itself() {
+        // Token 0's V is all-zero, others all-one; with causal masking the
+        // first row of A must stay zero at every timestep.
+        let n = 4;
+        let d_k = 8;
+        let mut tile = SsaTile::new(n, d_k, true, 4);
+        let q = vec![bits(n, d_k, |_, _| true); 3];
+        let k = q.clone();
+        let v = vec![bits(n, d_k, |i, _| i != 0); 3];
+        let (out, _) = tile.run(&q, &k, &v);
+        for t in 0..3 {
+            assert!(out[t][0].iter().all(|&b| !b), "t={t}");
+        }
+    }
+
+    #[test]
+    fn output_rate_tracks_attention_product() {
+        // Q,K ~ Bern(0.5), V all ones: E[A] = E[S]*N/N = mean score rate.
+        let n = 8;
+        let d_k = 32;
+        let t_steps = 400;
+        let mut tile = SsaTile::new(n, d_k, false, 5);
+        // Deterministic pseudo-random Q/K pattern.
+        let pat = |t: usize, i: usize, c: usize, salt: usize| {
+            let h = (t * 1315423911 + i * 2654435761 + c * 97 + salt)
+                as u64;
+            (h.wrapping_mul(0x9E3779B97F4A7C15) >> 63) & 1 == 1
+        };
+        let q: Vec<_> =
+            (0..t_steps).map(|t| bits(n, d_k, |i, c| pat(t, i, c, 1))).collect();
+        let k: Vec<_> =
+            (0..t_steps).map(|t| bits(n, d_k, |i, c| pat(t, i, c, 2))).collect();
+        let v = vec![bits(n, d_k, |_, _| true); t_steps];
+        let (out, _) = tile.run(&q, &k, &v);
+        let rate: f64 = out
+            .iter()
+            .flat_map(|m| m.iter().flatten())
+            .map(|&b| b as u32 as f64)
+            .sum::<f64>()
+            / (t_steps * n * d_k) as f64;
+        // E[score] = E[QK dot]/d_k = 0.25; V=1 => E[A] = ceil-ish 0.25.
+        assert!((rate - 0.25).abs() < 0.03, "rate {rate}");
+    }
+}

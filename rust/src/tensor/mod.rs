@@ -1,0 +1,254 @@
+//! XPKT tensor container — the python<->rust interchange format.
+//!
+//! Mirrors `python/compile/params_io.py` byte-for-byte (little-endian,
+//! magic `XPKT`, version 1). Used for model checkpoints, eval datasets and
+//! golden parity vectors. Order of tensors is preserved: the runtime feeds
+//! parameters to the PJRT executable in manifest order.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+const MAGIC: &[u8; 4] = b"XPKT";
+const VERSION: u32 = 1;
+
+/// Element type of a stored tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    U32,
+}
+
+impl DType {
+    fn code(self) -> u32 {
+        match self {
+            DType::F32 => 0,
+            DType::I32 => 1,
+            DType::U32 => 2,
+        }
+    }
+
+    fn from_code(c: u32) -> Result<Self> {
+        Ok(match c {
+            0 => DType::F32,
+            1 => DType::I32,
+            2 => DType::U32,
+            _ => bail!("unknown dtype code {c}"),
+        })
+    }
+}
+
+/// A dense row-major tensor. Data is stored as raw little-endian bytes and
+/// exposed through typed views to avoid copies on load.
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    data: Vec<u8>,
+}
+
+impl Tensor {
+    pub fn from_f32(shape: Vec<usize>, values: &[f32]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), values.len());
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Tensor { dtype: DType::F32, shape, data }
+    }
+
+    pub fn from_i32(shape: Vec<usize>, values: &[i32]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), values.len());
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Tensor { dtype: DType::I32, shape, data }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// f32 view; panics if dtype differs (programming error).
+    pub fn as_f32(&self) -> Vec<f32> {
+        assert_eq!(self.dtype, DType::F32, "tensor is not f32");
+        self.data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    }
+
+    pub fn as_i32(&self) -> Vec<i32> {
+        assert_eq!(self.dtype, DType::I32, "tensor is not i32");
+        self.data
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    }
+
+    pub fn as_u32(&self) -> Vec<u32> {
+        assert_eq!(self.dtype, DType::U32, "tensor is not u32");
+        self.data
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    }
+}
+
+/// An ordered named-tensor collection (insertion order == file order).
+#[derive(Debug, Default, Clone)]
+pub struct TensorFile {
+    pub names: Vec<String>,
+    pub tensors: HashMap<String, Tensor>,
+}
+
+impl TensorFile {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, name: &str, t: Tensor) {
+        if !self.tensors.contains_key(name) {
+            self.names.push(name.to_string());
+        }
+        self.tensors.insert(name.to_string(), t);
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("tensor '{name}' not in file"))
+    }
+
+    /// Read a container written by either side.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("open {}", path.display()))?;
+        let mut buf = Vec::new();
+        f.read_to_end(&mut buf)?;
+        Self::parse(&buf).with_context(|| format!("parse {}", path.display()))
+    }
+
+    pub fn parse(buf: &[u8]) -> Result<Self> {
+        let mut pos = 0usize;
+        let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
+            ensure!(*pos + n <= buf.len(), "truncated container");
+            let s = &buf[*pos..*pos + n];
+            *pos += n;
+            Ok(s)
+        };
+        let u32_at = |pos: &mut usize| -> Result<u32> {
+            let s = take(pos, 4)?;
+            Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+        };
+        ensure!(take(&mut pos, 4)? == MAGIC, "bad magic");
+        let version = u32_at(&mut pos)?;
+        ensure!(version == VERSION, "unsupported version {version}");
+        let count = u32_at(&mut pos)?;
+        let mut out = TensorFile::new();
+        for _ in 0..count {
+            let name_len = u32_at(&mut pos)? as usize;
+            let name = String::from_utf8(take(&mut pos, name_len)?.to_vec())?;
+            let dtype = DType::from_code(u32_at(&mut pos)?)?;
+            let ndim = u32_at(&mut pos)? as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(u32_at(&mut pos)? as usize);
+            }
+            let nbytes = {
+                let s = take(&mut pos, 8)?;
+                u64::from_le_bytes(s.try_into().unwrap()) as usize
+            };
+            let data = take(&mut pos, nbytes)?.to_vec();
+            ensure!(
+                data.len() == shape.iter().product::<usize>() * 4,
+                "tensor '{name}': byte length mismatch"
+            );
+            out.insert(&name, Tensor { dtype, shape, data });
+        }
+        Ok(out)
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut f = std::fs::File::create(path.as_ref())?;
+        f.write_all(MAGIC)?;
+        f.write_all(&VERSION.to_le_bytes())?;
+        f.write_all(&(self.names.len() as u32).to_le_bytes())?;
+        for name in &self.names {
+            let t = &self.tensors[name];
+            f.write_all(&(name.len() as u32).to_le_bytes())?;
+            f.write_all(name.as_bytes())?;
+            f.write_all(&t.dtype.code().to_le_bytes())?;
+            f.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+            for d in &t.shape {
+                f.write_all(&(*d as u32).to_le_bytes())?;
+            }
+            f.write_all(&(t.data.len() as u64).to_le_bytes())?;
+            f.write_all(&t.data)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_bit_exact() {
+        let mut tf = TensorFile::new();
+        tf.insert("w", Tensor::from_f32(vec![2, 2], &[1.5, -2.0, 0.0, 3.25]));
+        tf.insert("labels", Tensor::from_i32(vec![3], &[1, 2, 3]));
+        let dir = std::env::temp_dir().join("xpkt_test.bin");
+        tf.save(&dir).unwrap();
+        let back = TensorFile::load(&dir).unwrap();
+        assert_eq!(back.names, vec!["w", "labels"]);
+        assert_eq!(back.get("w").unwrap().as_f32(), vec![1.5, -2.0, 0.0, 3.25]);
+        assert_eq!(back.get("labels").unwrap().as_i32(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn parse_python_written_layout() {
+        // Byte-level fixture matching python params_io.save output for
+        // {"w": [[1.5]]} (f32).
+        let mut buf = Vec::new();
+        buf.extend_from_slice(b"XPKT");
+        buf.extend_from_slice(&1u32.to_le_bytes()); // version
+        buf.extend_from_slice(&1u32.to_le_bytes()); // count
+        buf.extend_from_slice(&1u32.to_le_bytes()); // name len
+        buf.extend_from_slice(b"w");
+        buf.extend_from_slice(&0u32.to_le_bytes()); // dtype f32
+        buf.extend_from_slice(&2u32.to_le_bytes()); // ndim
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        buf.extend_from_slice(&4u64.to_le_bytes());
+        buf.extend_from_slice(&1.5f32.to_le_bytes());
+        let tf = TensorFile::parse(&buf).unwrap();
+        assert_eq!(tf.get("w").unwrap().as_f32(), vec![1.5]);
+        assert_eq!(tf.get("w").unwrap().shape, vec![1, 1]);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        assert!(TensorFile::parse(b"NOPE\x00\x00\x00\x00").is_err());
+    }
+
+    #[test]
+    fn truncated_rejected() {
+        let mut tf = TensorFile::new();
+        tf.insert("w", Tensor::from_f32(vec![4], &[1.0, 2.0, 3.0, 4.0]));
+        let p = std::env::temp_dir().join("xpkt_trunc.bin");
+        tf.save(&p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        assert!(TensorFile::parse(&bytes[..bytes.len() - 3]).is_err());
+    }
+}

@@ -1,0 +1,79 @@
+//! Micro-benchmark harness (offline build: no criterion). Used by the
+//! `rust/benches/*.rs` targets (`cargo bench`).
+//!
+//! Measures wall-clock per iteration with warmup, reports mean / p50 /
+//! p95 and derived throughput. Deliberately simple: the paper benches
+//! compare *relative* architecture numbers, and the §Perf pass tracks
+//! before/after deltas, both of which a mean-of-N harness serves fine.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+}
+
+impl std::fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<44} {:>10.3?} mean  {:>10.3?} p50  {:>10.3?} p95  ({} iters)",
+            self.name, self.mean, self.p50, self.p95, self.iters
+        )
+    }
+}
+
+/// Run `f` repeatedly for ~`budget` after `warmup` iterations.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, budget: Duration,
+                         mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while start.elapsed() < budget || samples.is_empty() {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+        if samples.len() >= 10_000 {
+            break;
+        }
+    }
+    samples.sort_unstable();
+    let mean = samples.iter().sum::<Duration>() / samples.len() as u32;
+    let p = |q: f64| samples[((samples.len() - 1) as f64 * q) as usize];
+    let r = BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean,
+        p50: p(0.50),
+        p95: p(0.95),
+    };
+    println!("{r}");
+    r
+}
+
+/// Black-box to defeat dead-code elimination.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let r = bench("noop-ish", 2, Duration::from_millis(20), || {
+            black_box((0..100u64).sum::<u64>());
+        });
+        assert!(r.iters > 10);
+        assert!(r.p50 <= r.p95);
+    }
+}

@@ -1,0 +1,9 @@
+//! In-crate utility substrates (the build is offline — DESIGN.md §2):
+//! deterministic RNG, JSON parsing, and a micro-benchmark harness.
+
+pub mod bench;
+pub mod json;
+pub mod rng;
+
+pub use json::Json;
+pub use rng::Rng;

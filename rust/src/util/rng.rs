@@ -1,0 +1,132 @@
+//! Deterministic RNG (SplitMix64) + Gaussian sampling (Box-Muller).
+//!
+//! The build environment is offline, so instead of the `rand` crate the
+//! simulators use this small, fully deterministic generator. SplitMix64
+//! passes BigCrush for the 64-bit stream and is the standard seeding
+//! function for larger PRNGs; it is *not* used for the SSA hardware model
+//! (which uses the LFSR in [`crate::ssa::lfsr`], as the paper's silicon
+//! does) — only for device-statistics sampling (programming noise, drift
+//! exponents, workload generation).
+
+/// SplitMix64 PRNG.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+    /// Cached second Box-Muller sample.
+    spare: Option<f64>,
+}
+
+impl Rng {
+    pub fn seed_from_u64(seed: u64) -> Self {
+        Rng { state: seed, spare: None }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn uniform_f32(&mut self) -> f32 {
+        self.uniform() as f32
+    }
+
+    /// Uniform integer in `[0, n)`.
+    #[inline]
+    pub fn gen_range(&mut self, n: u64) -> u64 {
+        // Multiply-shift; bias < n / 2^64, negligible for simulator use.
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    pub fn gen_bool(&mut self, p: f64) -> bool {
+        self.uniform() < p
+    }
+
+    /// Standard normal via Box-Muller (cached pair).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(s) = self.spare.take() {
+            return s;
+        }
+        let u1 = (1.0 - self.uniform()).max(1e-300); // avoid ln(0)
+        let u2 = self.uniform();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * u2;
+        self.spare = Some(r * theta.sin());
+        r * theta.cos()
+    }
+
+    /// Normal with given mean/std.
+    pub fn normal_ms(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Rng::seed_from_u64(42);
+        let mut b = Rng::seed_from_u64(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Rng::seed_from_u64(43);
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn uniform_moments() {
+        let mut r = Rng::seed_from_u64(1);
+        let n = 200_000;
+        let (mut s, mut sq) = (0.0, 0.0);
+        for _ in 0..n {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+            s += u;
+            sq += u * u;
+        }
+        let mean = s / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!((mean - 0.5).abs() < 0.005, "mean {mean}");
+        assert!((var - 1.0 / 12.0).abs() < 0.005, "var {var}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::seed_from_u64(2);
+        let n = 200_000;
+        let (mut s, mut sq, mut s3) = (0.0, 0.0, 0.0);
+        for _ in 0..n {
+            let x = r.normal();
+            s += x;
+            sq += x * x;
+            s3 += x * x * x;
+        }
+        assert!((s / n as f64).abs() < 0.01);
+        assert!((sq / n as f64 - 1.0).abs() < 0.02);
+        assert!((s3 / n as f64).abs() < 0.05, "skew");
+    }
+
+    #[test]
+    fn gen_range_covers_domain() {
+        let mut r = Rng::seed_from_u64(3);
+        let mut seen = [false; 7];
+        for _ in 0..1000 {
+            seen[r.gen_range(7) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}

@@ -1,0 +1,255 @@
+//! Workload generators and dataset loaders (the Rust mirror of
+//! `python/compile/data.py`).
+//!
+//! * [`EvalSet`] loads the exported fixed eval sets (`*_eval.bin`) so the
+//!   accuracy harness scores exactly the samples python scored.
+//! * [`MimoGenerator`] regenerates the ICL MIMO symbol-detection task
+//!   natively (same featurization; used by the serving example to create
+//!   live request streams).
+
+use anyhow::Result;
+
+use crate::tensor::TensorFile;
+use crate::util::Rng;
+
+/// A fixed evaluation set: flattened inputs + labels.
+#[derive(Debug, Clone)]
+pub struct EvalSet {
+    pub x: Vec<f32>,
+    pub labels: Vec<i32>,
+    pub n: usize,
+    /// Flattened feature length per sample.
+    pub sample_len: usize,
+}
+
+impl EvalSet {
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<Self> {
+        let tf = TensorFile::load(path)?;
+        let xt = tf.get("x")?;
+        let labels = tf.get("labels")?.as_i32();
+        let n = xt.shape[0];
+        let sample_len = xt.shape[1..].iter().product();
+        Ok(EvalSet { x: xt.as_f32(), labels, n, sample_len })
+    }
+
+    /// Batch `i` of size `b` (must divide into the set).
+    pub fn batch(&self, i: usize, b: usize) -> (&[f32], &[i32]) {
+        let lo = i * b;
+        (&self.x[lo * self.sample_len..(lo + b) * self.sample_len],
+         &self.labels[lo..lo + b])
+    }
+
+    pub fn n_batches(&self, b: usize) -> usize {
+        self.n / b
+    }
+}
+
+/// QPSK symbol for index 0..3: bit0 -> real sign, bit1 -> imag sign
+/// (matches `data.qpsk_symbols`).
+pub fn qpsk(idx: u32) -> (f64, f64) {
+    let b0 = (idx % 2) as f64;
+    let b1 = (idx / 2) as f64;
+    let s = 1.0 / std::f64::consts::SQRT_2;
+    ((1.0 - 2.0 * b0) * s, (1.0 - 2.0 * b1) * s)
+}
+
+/// Class code -> transmitted bits (2 per antenna), matching
+/// `data.class_to_bits`.
+pub fn class_to_bits(mut cls: u32, nt: usize) -> Vec<u8> {
+    let mut bits = Vec::with_capacity(2 * nt);
+    for _ in 0..nt {
+        let idx = cls % 4;
+        bits.push((idx % 2) as u8);
+        bits.push((idx / 2) as u8);
+        cls /= 4;
+    }
+    bits
+}
+
+/// Bit error rate between predicted and true class codes.
+pub fn ber(pred: &[u32], truth: &[u32], nt: usize) -> f64 {
+    let mut errs = 0usize;
+    let mut total = 0usize;
+    for (&p, &t) in pred.iter().zip(truth) {
+        let pb = class_to_bits(p, nt);
+        let tb = class_to_bits(t, nt);
+        errs += pb.iter().zip(&tb).filter(|(a, b)| a != b).count();
+        total += 2 * nt;
+    }
+    errs as f64 / total.max(1) as f64
+}
+
+/// Live ICL MIMO sequence generator (paper §VI-A Task 2 / [30]).
+#[derive(Debug, Clone)]
+pub struct MimoGenerator {
+    pub nt: usize,
+    pub nr: usize,
+    pub snr_db: f64,
+    pub n_pairs: usize,
+}
+
+impl MimoGenerator {
+    pub fn new(nt: usize, nr: usize, snr_db: f64) -> Self {
+        MimoGenerator { nt, nr, snr_db, n_pairs: 18 }
+    }
+
+    pub fn n_tokens(&self) -> usize {
+        self.n_pairs + 1 // pair-joint tokens + query
+    }
+
+    pub fn feat_dim(&self) -> usize {
+        2 * self.nr + 2 * self.nt
+    }
+
+    pub fn classes(&self) -> u32 {
+        4u32.pow(self.nt as u32)
+    }
+
+    /// One sequence: (tokens `[n_tokens * feat]` flattened, label).
+    pub fn sample(&self, rng: &mut Rng) -> (Vec<f32>, u32) {
+        let (nt, nr) = (self.nt, self.nr);
+        let scale = 1.0 / ((2 * nt) as f64).sqrt();
+        // Rayleigh channel, fixed over the sequence (the ICL premise).
+        let h: Vec<(f64, f64)> = (0..nr * nt)
+            .map(|_| (rng.normal() * scale, rng.normal() * scale))
+            .collect();
+        let noise_std = (10f64.powf(-self.snr_db / 10.0) / 2.0).sqrt();
+        let n_seq = self.n_pairs + 1;
+        let feat = self.feat_dim();
+        let mut tokens = vec![0.5f32; self.n_tokens() * feat];
+        let mut last_cls = 0u32;
+        for s in 0..n_seq {
+            let cls: u32 = rng.gen_range(self.classes() as u64) as u32;
+            last_cls = cls;
+            // Transmit.
+            let x: Vec<(f64, f64)> = (0..nt)
+                .map(|a| qpsk((cls / 4u32.pow(a as u32)) % 4))
+                .collect();
+            // y = Hx + n.
+            let mut y = vec![(0.0f64, 0.0f64); nr];
+            for r in 0..nr {
+                for (a, &(xr, xi)) in x.iter().enumerate() {
+                    let (hr, hi) = h[r * nt + a];
+                    y[r].0 += hr * xr - hi * xi;
+                    y[r].1 += hr * xi + hi * xr;
+                }
+                y[r].0 += rng.normal_ms(0.0, noise_std);
+                y[r].1 += rng.normal_ms(0.0, noise_std);
+            }
+            // Pair-joint token s: y features + (context only) x bits.
+            let base = s * feat;
+            for r in 0..nr {
+                tokens[base + r] = sigmoid(1.5 * y[r].0);
+                tokens[base + nr + r] = sigmoid(1.5 * y[r].1);
+            }
+            if s < self.n_pairs {
+                for (b, &bit) in class_to_bits(cls, nt).iter().enumerate() {
+                    tokens[base + 2 * nr + b] = bit as f32;
+                }
+            }
+        }
+        (tokens, last_cls)
+    }
+
+    /// A batch of sequences, flattened.
+    pub fn batch(&self, rng: &mut Rng, b: usize) -> (Vec<f32>, Vec<u32>) {
+        let mut xs = Vec::with_capacity(b * self.n_tokens() * self.feat_dim());
+        let mut ys = Vec::with_capacity(b);
+        for _ in 0..b {
+            let (x, y) = self.sample(rng);
+            xs.extend_from_slice(&x);
+            ys.push(y);
+        }
+        (xs, ys)
+    }
+}
+
+fn sigmoid(x: f64) -> f32 {
+    (1.0 / (1.0 + (-x).exp())) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qpsk_unit_power() {
+        for i in 0..4 {
+            let (re, im) = qpsk(i);
+            assert!((re * re + im * im - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn class_bits_roundtrip() {
+        for nt in [1usize, 2, 4] {
+            for cls in 0..4u32.pow(nt as u32) {
+                let bits = class_to_bits(cls, nt);
+                let mut rec = 0u32;
+                for a in 0..nt {
+                    let idx = bits[2 * a] as u32 + 2 * bits[2 * a + 1] as u32;
+                    rec += idx * 4u32.pow(a as u32);
+                }
+                assert_eq!(rec, cls);
+            }
+        }
+    }
+
+    #[test]
+    fn ber_bounds() {
+        assert_eq!(ber(&[3, 7], &[3, 7], 2), 0.0);
+        assert!(ber(&[0], &[3], 1) == 1.0); // both bits flipped
+    }
+
+    #[test]
+    fn generator_shapes_and_ranges() {
+        let g = MimoGenerator::new(2, 2, 10.0);
+        let mut rng = Rng::seed_from_u64(0);
+        let (x, y) = g.sample(&mut rng);
+        assert_eq!(x.len(), 19 * 8);
+        assert!(y < 16);
+        assert!(x.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn context_tokens_carry_answer_bits() {
+        let g = MimoGenerator::new(2, 2, 10.0);
+        let mut rng = Rng::seed_from_u64(1);
+        let (x, _) = g.sample(&mut rng);
+        let feat = g.feat_dim();
+        // Context tokens carry the transmitted bits exactly.
+        for s in 0..g.n_pairs {
+            let base = s * feat;
+            for b in 0..4 {
+                let v = x[base + 4 + b];
+                assert!(v == 0.0 || v == 1.0);
+            }
+        }
+        // The query token's answer slots stay neutral 0.5.
+        let qbase = g.n_pairs * feat;
+        for b in 0..4 {
+            assert_eq!(x[qbase + 4 + b], 0.5);
+        }
+    }
+
+    #[test]
+    fn snr_controls_feature_spread() {
+        let g_hi = MimoGenerator::new(2, 2, 20.0);
+        let g_lo = MimoGenerator::new(2, 2, -10.0);
+        let spread = |g: &MimoGenerator| {
+            let mut rng = Rng::seed_from_u64(2);
+            let (x, _) = g.batch(&mut rng, 64);
+            let feat = g.feat_dim();
+            let mut s = 0.0f64;
+            let mut c = 0usize;
+            for (i, &v) in x.iter().enumerate() {
+                if (i % feat) < 4 {
+                    s += (v as f64 - 0.5).abs();
+                    c += 1;
+                }
+            }
+            s / c as f64
+        };
+        assert!(spread(&g_lo) > spread(&g_hi));
+    }
+}

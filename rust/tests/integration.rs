@@ -1,0 +1,268 @@
+//! Integration tests across runtime + AIMC + coordinator + workloads.
+//!
+//! Tests that need AOT artifacts skip (with a notice) until
+//! `make train && make artifacts` has produced them, so `cargo test`
+//! stays green on a fresh checkout while exercising the full stack on a
+//! built one.
+
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use xpikeformer::aimc::AimcEngine;
+use xpikeformer::config::{DriftConfig, HardwareConfig, RunConfig};
+use xpikeformer::coordinator::Server;
+use xpikeformer::repro::accuracy::{evaluate, install_analog,
+                                   program_artifact};
+use xpikeformer::repro::ReproCtx;
+use xpikeformer::runtime::{Artifact, Engine};
+use xpikeformer::snn::LifArray;
+use xpikeformer::ssa::{ssa_reference, SsaTile};
+use xpikeformer::util::Rng;
+use xpikeformer::workloads::{EvalSet, MimoGenerator};
+
+const ARTIFACTS: &str = "artifacts";
+
+fn find_artifact(prefix: &str, suffix: &str) -> Option<String> {
+    Artifact::discover(ARTIFACTS).ok()?.into_iter()
+        .find(|t| t.starts_with(prefix) && t.ends_with(suffix))
+}
+
+macro_rules! require_artifact {
+    ($prefix:expr, $suffix:expr) => {
+        match find_artifact($prefix, $suffix) {
+            Some(t) => t,
+            None => {
+                eprintln!("skipping: no {}*{} artifact (run `make \
+                           artifacts`)", $prefix, $suffix);
+                return;
+            }
+        }
+    };
+}
+
+// ---------------------------------------------------------------------------
+// Substrate cross-checks (no artifacts required)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn ssa_tile_crosscheck_larger_shapes() {
+    // Beyond the unit tests: paper-scale-ish tiles stay bit-exact vs the
+    // algorithm reference.
+    for &(n, dk, t, causal) in &[(37usize, 32usize, 4usize, true),
+                                 (64, 64, 3, false)] {
+        let mut rng = Rng::seed_from_u64(7);
+        let mk = |rng: &mut Rng| -> Vec<Vec<Vec<bool>>> {
+            (0..t).map(|_| (0..n).map(|_| (0..dk)
+                .map(|_| rng.gen_bool(0.3)).collect()).collect()).collect()
+        };
+        let (q, k, v) = (mk(&mut rng), mk(&mut rng), mk(&mut rng));
+        let mut tile = SsaTile::new(n, dk, causal, 99);
+        let (got, stats) = tile.run(&q, &k, &v);
+        let want = ssa_reference(&q, &k, &v, n, dk, causal, 99);
+        assert_eq!(got, want);
+        assert_eq!(stats.cycles, ((t + 1) * dk) as u64);
+    }
+}
+
+#[test]
+fn aimc_end_to_end_spiking_layer() {
+    // A full spiking linear layer on the hardware simulators: rate-encode
+    // -> crossbar MVM -> LIF, averaged over trials, must track the ideal
+    // rate-domain product within tolerance.
+    let hw = HardwareConfig::default();
+    let mut rng = Rng::seed_from_u64(11);
+    let (din, dout) = (96usize, 8usize);
+    let w: Vec<f32> = (0..din * dout)
+        .map(|_| (rng.uniform_f32() - 0.3) * 0.25)
+        .collect();
+    let rates: Vec<f32> = (0..din).map(|_| rng.uniform_f32()).collect();
+    let engine = AimcEngine::program(
+        &[("l".into(), w.clone(), din, dout)], &hw, 3);
+    let m = engine.layer("l").unwrap();
+    let trials = 400;
+    let mut lif = LifArray::new(dout);
+    let mut fired = vec![0f64; dout];
+    for _ in 0..trials {
+        let spikes: Vec<bool> =
+            rates.iter().map(|&p| rng.gen_bool(p as f64)).collect();
+        for (o, f) in m.mvm_lif(&mut rng, &spikes, &mut lif, 0.0, &hw)
+            .iter().zip(fired.iter_mut())
+        {
+            *f += *o as u8 as f64;
+        }
+    }
+    // Ideal rate-domain pre-activation and the LIF steady-state rate:
+    // for beta=0.5 a neuron with mean drive I fires at ~min(1, I/(vth
+    // steady)); we only check monotone consistency: outputs with larger
+    // ideal drive fire at least as often (with slack for noise).
+    let ideal: Vec<f32> = (0..dout)
+        .map(|c| (0..din).map(|r| rates[r] * w[r * dout + c]).sum())
+        .collect();
+    let mut idx: Vec<usize> = (0..dout).collect();
+    idx.sort_by(|&a, &b| ideal[a].partial_cmp(&ideal[b]).unwrap());
+    let lowest = fired[idx[0]] / trials as f64;
+    let highest = fired[idx[dout - 1]] / trials as f64;
+    assert!(highest >= lowest,
+            "firing rate must track drive: {lowest} vs {highest}");
+}
+
+#[test]
+fn mimo_generator_statistics() {
+    // High SNR, many context pairs: the label distribution is uniform
+    // and the channel is fresh per sequence.
+    let g = MimoGenerator::new(2, 2, 10.0);
+    let mut rng = Rng::seed_from_u64(5);
+    let mut counts = [0u32; 16];
+    for _ in 0..4000 {
+        let (_, y) = g.sample(&mut rng);
+        counts[y as usize] += 1;
+    }
+    for (i, &c) in counts.iter().enumerate() {
+        assert!((c as f64 - 250.0).abs() < 80.0, "class {i}: {c}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Artifact-gated end-to-end tests
+// ---------------------------------------------------------------------------
+
+#[test]
+fn golden_parity_all_artifacts() {
+    let tags = match Artifact::discover(ARTIFACTS) {
+        Ok(t) if !t.is_empty() => t,
+        _ => {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+    };
+    // One artifact is enough per run; the quickstart example covers more.
+    let tag = &tags[0];
+    let engine = Engine::load(ARTIFACTS, tag).unwrap();
+    let golden = engine.artifact.load_golden().unwrap();
+    let x = golden.get("x").unwrap().as_f32();
+    let seed = golden.get("seed").unwrap().as_u32()[0];
+    let expect = golden.get("logits").unwrap().as_f32();
+    let got = engine.run(&x, seed).unwrap();
+    assert_eq!(got.len(), expect.len());
+    let max_err = got.iter().zip(&expect).map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_err < 1e-4, "{tag}: golden mismatch {max_err}");
+}
+
+#[test]
+fn runs_are_seed_deterministic_and_seed_sensitive() {
+    let tag = require_artifact!("vit_xpike", "_b1");
+    let engine = Engine::load(ARTIFACTS, &tag).unwrap();
+    let x: Vec<f32> = (0..engine.x_len_per_sample())
+        .map(|i| (i % 7) as f32 / 7.0)
+        .collect();
+    let a = engine.run(&x, 1).unwrap();
+    let b = engine.run(&x, 1).unwrap();
+    let c = engine.run(&x, 2).unwrap();
+    assert_eq!(a, b, "same seed => identical logits");
+    assert_ne!(a, c, "different seed => different stochastic run");
+}
+
+#[test]
+fn drift_degrades_without_gdc_and_gdc_recovers() {
+    let tag = require_artifact!("vit_xpike", "_b32");
+    let model = tag.trim_end_matches("_b32").to_string();
+    let ctx = ReproCtx::new(ARTIFACTS);
+    let mut engine = Engine::load(ARTIFACTS, &tag).unwrap();
+    let aimc = program_artifact(&engine, &ctx, None).unwrap();
+    let set = EvalSet::load(Path::new(ARTIFACTS).join("image_eval.bin"))
+        .unwrap();
+    let year = 3.15e7;
+    let mut acc = |t: f64, gdc: bool| -> f64 {
+        install_analog(&mut engine, &aimc,
+                       &DriftConfig { t_seconds: t, gdc, seed: 1 }).unwrap();
+        *evaluate(&engine, &set, 42).unwrap().acc.last().unwrap()
+    };
+    let fresh = acc(0.0, false);
+    let aged_nc = acc(year, false);
+    let aged_gdc = acc(year, true);
+    assert!(fresh > 0.3, "model must be trained ({model}: {fresh})");
+    assert!(aged_nc < fresh - 0.15,
+            "uncompensated 1-year drift must collapse accuracy: \
+             {fresh} -> {aged_nc}");
+    assert!(aged_gdc > aged_nc + 0.1,
+            "GDC must recover most of it: {aged_nc} -> {aged_gdc}");
+}
+
+#[test]
+fn coordinator_serves_batched_requests_correctly() {
+    let tag = require_artifact!("vit_xpike", "_b8");
+    // Batching changes a sample's *lane*, which (like LFSR phase in the
+    // ASIC) selects different Bernoulli draws — so per-request bit
+    // equality is only guaranteed for an identical (seed, lane) pair.
+    // We assert (a) lane-0 equality between a batched head-of-batch
+    // request and a solo request, and (b) full determinism of an
+    // identical resubmission.
+    let engine = Engine::load(ARTIFACTS, &tag).unwrap();
+    let sample_len = engine.x_len_per_sample();
+    let cfg = RunConfig { max_batch: 8, batch_window_us: 2000,
+                          ..RunConfig::default() };
+    let server = Server::start(engine, cfg);
+    let client = server.client();
+    let mut rng = Rng::seed_from_u64(1);
+    let xs: Vec<Vec<f32>> = (0..8)
+        .map(|_| (0..sample_len).map(|_| rng.uniform_f32()).collect())
+        .collect();
+    let submit_all = |client: &xpikeformer::coordinator::Client|
+        -> Vec<Vec<f32>> {
+        let pendings: Vec<_> = xs.iter()
+            .map(|x| client.infer(x.clone(), 9).unwrap())
+            .collect();
+        pendings.into_iter().map(|p| p.wait().unwrap().logits_t).collect()
+    };
+    let first = submit_all(&client);
+    let again = submit_all(&client);
+    // The head request of a batch always occupies lane 0: bit-equal
+    // across resubmissions even if the batcher splits differently.
+    assert_eq!(first[0], again[0],
+               "identical resubmission must be bit-equal at lane 0");
+    // Head-of-batch == solo run (both occupy lane 0 with the same seed).
+    let solo = client.infer_blocking(xs[0].clone(), 9).unwrap();
+    assert_eq!(first[0], solo.logits_t,
+               "lane-0 logits must match a solo submission");
+    for r in &first {
+        assert_eq!(r.len(), first[0].len());
+    }
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.completed, 17);
+    let done = Arc::new(AtomicUsize::new(0));
+    done.fetch_add(1, Ordering::Relaxed);
+    drop(client);
+    server.shutdown();
+}
+
+#[test]
+fn backpressure_rejects_when_queue_full() {
+    let tag = require_artifact!("vit_xpike", "_b1");
+    let engine = Engine::load(ARTIFACTS, &tag).unwrap();
+    let sample_len = engine.x_len_per_sample();
+    let cfg = RunConfig { max_batch: 1, batch_window_us: 0, queue_depth: 2,
+                          ..RunConfig::default() };
+    let server = Server::start(engine, cfg);
+    let client = server.client();
+    let x: Vec<f32> = vec![0.5; sample_len];
+    // Flood without consuming: eventually try_infer must signal Full.
+    let mut pend = Vec::new();
+    let mut saw_full = false;
+    for i in 0..256 {
+        match client.try_infer(x.clone(), i).unwrap() {
+            Some(p) => pend.push(p),
+            None => {
+                saw_full = true;
+                break;
+            }
+        }
+    }
+    assert!(saw_full, "bounded queue must exert backpressure");
+    for p in pend {
+        let _ = p.wait();
+    }
+    drop(client);
+    server.shutdown();
+}
