@@ -9,6 +9,7 @@ use std::time::Duration;
 use xpikeformer::aimc::MappedMatrix;
 use xpikeformer::config::{DriftConfig, HardwareConfig};
 use xpikeformer::snn::LifArray;
+use xpikeformer::spike::SpikeVector;
 use xpikeformer::util::bench::{bench, black_box};
 use xpikeformer::util::Rng;
 
@@ -27,7 +28,8 @@ fn main() {
             black_box(MappedMatrix::program(&mut r, &w, din, dout, &hw));
         });
         let m = MappedMatrix::program(&mut rng, &w, din, dout, &hw);
-        let spikes: Vec<bool> = (0..din).map(|i| i % 3 == 0).collect();
+        let spikes = SpikeVector::from_bools(
+            &(0..din).map(|i| i % 3 == 0).collect::<Vec<_>>());
         bench(&format!("analog mvm {din}x{dout}"), 2, budget, || {
             let mut r = Rng::seed_from_u64(4);
             black_box(m.mvm(&mut r, &spikes, 0.0, &hw));

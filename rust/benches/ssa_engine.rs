@@ -1,14 +1,20 @@
 //! SSA engine benchmarks: cycle-level tile simulation throughput at the
 //! trained scales and at the paper's edge-workload scales (N=16..128),
-//! plus the algorithm-level reference for comparison. Feeds §Perf in
-//! EXPERIMENTS.md (L3 hot path: the tile inner loop).
+//! plus the packed-vs-legacy and serial-vs-parallel MHSA comparisons the
+//! bit-packing refactor was made for. Feeds §Perf in EXPERIMENTS.md
+//! (L3 hot path: the tile inner loop) and overwrites the repo-root
+//! `BENCH_ssa.json` (override the path with `BENCH_SSA_JSON=...`) so
+//! the perf trajectory is tracked across PRs.
 //!
 //! Run: `cargo bench --bench ssa_engine`
 
 use std::time::Duration;
 
-use xpikeformer::ssa::{ssa_reference, BitMatrix, SsaTile};
-use xpikeformer::util::bench::{bench, black_box};
+use xpikeformer::spike::SpikeVolume;
+use xpikeformer::ssa::legacy::LegacyTile;
+use xpikeformer::ssa::{BitMatrix, SsaEngine, SsaTile};
+use xpikeformer::util::bench::{bench, black_box, BenchResult};
+use xpikeformer::util::json::escape;
 use xpikeformer::util::Rng;
 
 fn mats(rng: &mut Rng, t: usize, n: usize, dk: usize, p: f64)
@@ -22,9 +28,24 @@ fn mats(rng: &mut Rng, t: usize, n: usize, dk: usize, p: f64)
         .collect()
 }
 
+fn result_json(r: &BenchResult) -> String {
+    format!(
+        "{{\"name\": \"{}\", \"mean_us\": {:.3}, \"p50_us\": {:.3}, \
+         \"p95_us\": {:.3}, \"iters\": {}}}",
+        escape(&r.name),
+        r.mean.as_secs_f64() * 1e6,
+        r.p50.as_secs_f64() * 1e6,
+        r.p95.as_secs_f64() * 1e6,
+        r.iters
+    )
+}
+
 fn main() {
     println!("== SSA engine benchmarks ==");
     let budget = Duration::from_millis(400);
+    let mut records: Vec<String> = Vec::new();
+
+    // ---- Single-tile: packed vs the frozen pre-refactor bool tile ----
     for &(n, dk, t) in &[
         (16usize, 32usize, 8usize), // trained tiny model head
         (37, 32, 8),                // ICL sequence length
@@ -35,14 +56,16 @@ fn main() {
         let q = mats(&mut rng, t, n, dk, 0.25);
         let k = mats(&mut rng, t, n, dk, 0.25);
         let v = mats(&mut rng, t, n, dk, 0.25);
-        let r = bench(
-            &format!("tile cycle-sim N={n} dk={dk} T={t}"),
+        let (qp, kp, vp) = (SpikeVolume::from_bools(&q),
+                            SpikeVolume::from_bools(&k),
+                            SpikeVolume::from_bools(&v));
+        let r_packed = bench(
+            &format!("tile packed N={n} dk={dk} T={t}"),
             1,
             budget,
             || {
                 let mut tile = SsaTile::new(n, dk, false, 7);
-                let (out, stats) = tile.run(&q, &k, &v);
-                black_box((out, stats));
+                black_box(tile.run(&qp, &kp, &vp));
             },
         );
         // Simulated cycles per wall-second: the simulator's own speed.
@@ -50,16 +73,103 @@ fn main() {
         let sac_cycles = cycles * (n * n) as f64;
         println!(
             "    -> {:.1} M SAC-cycles/s simulated",
-            sac_cycles / r.mean.as_secs_f64() / 1e6
+            sac_cycles / r_packed.mean.as_secs_f64() / 1e6
         );
-
-        bench(
-            &format!("algorithm reference N={n} dk={dk} T={t}"),
+        let r_legacy = bench(
+            &format!("tile legacy-bool N={n} dk={dk} T={t}"),
             1,
             budget,
             || {
-                black_box(ssa_reference(&q, &k, &v, n, dk, false, 7));
+                let mut tile = LegacyTile::new(n, dk, false, 7);
+                black_box(tile.run(&q, &k, &v));
             },
         );
+        println!(
+            "    -> packed speedup vs legacy bool: {:.2}x",
+            r_legacy.mean.as_secs_f64() / r_packed.mean.as_secs_f64()
+        );
+        records.push(result_json(&r_packed));
+        records.push(result_json(&r_legacy));
+    }
+
+    // ---- MHSA layer: seed bool/serial vs packed serial vs packed
+    // parallel (the ISSUE's acceptance shape: n=64, d_k=64, 8 heads) ----
+    let (heads, n, dk, t) = (8usize, 64usize, 64usize, 7usize);
+    let mut rng = Rng::seed_from_u64(2);
+    let qkv_bools: Vec<_> = (0..heads)
+        .map(|_| (mats(&mut rng, t, n, dk, 0.25),
+                  mats(&mut rng, t, n, dk, 0.25),
+                  mats(&mut rng, t, n, dk, 0.25)))
+        .collect();
+    let qkv: Vec<_> = qkv_bools.iter()
+        .map(|(q, k, v)| (SpikeVolume::from_bools(q),
+                          SpikeVolume::from_bools(k),
+                          SpikeVolume::from_bools(v)))
+        .collect();
+    let r_bool_serial = bench(
+        &format!("mhsa serial-bool H={heads} N={n} dk={dk} T={t}"),
+        1,
+        budget,
+        || {
+            // The seed path: one legacy tile per head, run back to back.
+            for (h, (q, k, v)) in qkv_bools.iter().enumerate() {
+                let mut tile = LegacyTile::new(n, dk, false,
+                                               7 ^ (h as u32 + 1));
+                black_box(tile.run(q, k, v));
+            }
+        },
+    );
+    let mut engine = SsaEngine::new(heads, n, dk, false, 7);
+    let r_packed_serial = bench(
+        &format!("mhsa serial-packed H={heads} N={n} dk={dk} T={t}"),
+        1,
+        budget,
+        || {
+            black_box(engine.run_mhsa_serial(&qkv));
+        },
+    );
+    let r_packed_parallel = bench(
+        &format!("mhsa parallel-packed H={heads} N={n} dk={dk} T={t}"),
+        1,
+        budget,
+        || {
+            black_box(engine.run_mhsa(&qkv));
+        },
+    );
+    let speedup_total = r_bool_serial.mean.as_secs_f64()
+        / r_packed_parallel.mean.as_secs_f64();
+    let speedup_pack = r_bool_serial.mean.as_secs_f64()
+        / r_packed_serial.mean.as_secs_f64();
+    let speedup_par = r_packed_serial.mean.as_secs_f64()
+        / r_packed_parallel.mean.as_secs_f64();
+    println!("    -> packing speedup  : {speedup_pack:.2}x");
+    println!("    -> threading speedup: {speedup_par:.2}x");
+    println!("    -> total speedup    : {speedup_total:.2}x \
+              (acceptance floor: 3x)");
+    records.push(result_json(&r_bool_serial));
+    records.push(result_json(&r_packed_serial));
+    records.push(result_json(&r_packed_parallel));
+
+    // ---- BENCH_ssa.json ----
+    // Default to the repo root (one level above the crate) regardless of
+    // the invocation cwd, so `cargo bench` from rust/ updates the
+    // committed record in place.
+    let path = std::env::var("BENCH_SSA_JSON").unwrap_or_else(|_| {
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_ssa.json").into()
+    });
+    let json = format!(
+        "{{\n  \"bench\": \"ssa_engine\",\n  \"measured\": true,\n  \
+         \"threads\": {},\n  \"mhsa\": {{\"heads\": {heads}, \"n\": {n}, \
+         \"d_k\": {dk}, \"t_steps\": {t},\n    \"speedup_packed\": \
+         {speedup_pack:.3}, \"speedup_parallel\": {speedup_par:.3}, \
+         \"speedup_total\": {speedup_total:.3}}},\n  \"results\": [\n    \
+         {}\n  ]\n}}\n",
+        std::thread::available_parallelism()
+            .map(|p| p.get()).unwrap_or(1),
+        records.join(",\n    ")
+    );
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
     }
 }

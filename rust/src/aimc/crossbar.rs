@@ -5,9 +5,15 @@
 //! currents; shared ADCs digitize them `adc_sharing` columns at a time.
 //! The MVM is O(1) in crossbar time; readout takes `adc_sharing` MUX
 //! cycles (latency model in [`crate::energy`]).
+//!
+//! Spike inputs arrive word-packed ([`SpikeVector`], 64 bit-lines per
+//! `u64`): the Kirchhoff sum traverses only the *set* bits of each word
+//! (event-driven, zero spikes cost zero adds), so simulator work scales
+//! with spike density exactly like the hardware's bit-line energy.
 
 use crate::aimc::device::{program, DifferentialPair};
 use crate::config::HardwareConfig;
+use crate::spike::SpikeVector;
 use crate::util::Rng;
 
 /// A programmed crossbar block of up to `crossbar_dim` rows x cols.
@@ -43,25 +49,34 @@ impl SynapticArray {
         self.cells.iter().map(|c| c.weight_at(t_seconds, hw)).collect()
     }
 
-    /// Analog MVM for a binary input vector: column currents -> read noise
-    /// -> shared SAR ADC quantization. Returns the digitized local sums
-    /// (what flows to the LIF unit's carry-save adder).
-    pub fn mvm(&self, rng: &mut Rng, spikes: &[bool], t_seconds: f64,
+    /// Raw Kirchhoff column currents for a packed spike vector at drift
+    /// time `t_seconds`: the event-driven sum over *set* bit-lines only.
+    fn column_currents(&self, spikes: &SpikeVector, t_seconds: f64,
+                       hw: &HardwareConfig) -> Vec<f32> {
+        assert_eq!(spikes.len(), self.rows,
+                   "spike vector length {} != {} crossbar rows",
+                   spikes.len(), self.rows);
+        let mut currents = vec![0.0f32; self.cols];
+        spikes.for_each_set(|r| {
+            let row = &self.cells[r * self.cols..(r + 1) * self.cols];
+            for (acc, cell) in currents.iter_mut().zip(row) {
+                *acc += cell.weight_at(t_seconds, hw);
+            }
+        });
+        currents
+    }
+
+    /// Analog MVM for a packed binary input vector: column currents ->
+    /// read noise -> shared SAR ADC quantization. Returns the digitized
+    /// local sums (what flows to the LIF unit's carry-save adder).
+    pub fn mvm(&self, rng: &mut Rng, spikes: &SpikeVector, t_seconds: f64,
                hw: &HardwareConfig) -> Vec<f32> {
-        assert_eq!(spikes.len(), self.rows);
         let noise_std = hw.sigma_read * self.w_max as f64;
         let levels = hw.adc_levels() as f32;
         let step = self.adc_clip / levels;
-        (0..self.cols)
-            .map(|c| {
-                // Kirchhoff column current: sum over active rows.
-                let mut i = 0.0f32;
-                for (r, &s) in spikes.iter().enumerate() {
-                    if s {
-                        i += self.cells[r * self.cols + c]
-                            .weight_at(t_seconds, hw);
-                    }
-                }
+        self.column_currents(spikes, t_seconds, hw)
+            .into_iter()
+            .map(|mut i| {
                 i += rng.normal_ms(0.0, noise_std) as f32;
                 // 5-bit SAR ADC, symmetric mid-rise.
                 (i / step).round().clamp(-levels, levels) * step
@@ -71,19 +86,13 @@ impl SynapticArray {
 
     /// Ideal (noise-free, drift-free, but quantized) MVM — used by tests
     /// to isolate ADC behaviour.
-    pub fn mvm_ideal(&self, spikes: &[bool], hw: &HardwareConfig) -> Vec<f32> {
+    pub fn mvm_ideal(&self, spikes: &SpikeVector, hw: &HardwareConfig)
+                     -> Vec<f32> {
         let levels = hw.adc_levels() as f32;
         let step = self.adc_clip / levels;
-        (0..self.cols)
-            .map(|c| {
-                let mut i = 0.0f32;
-                for (r, &s) in spikes.iter().enumerate() {
-                    if s {
-                        i += self.cells[r * self.cols + c].weight_at(0.0, hw);
-                    }
-                }
-                (i / step).round().clamp(-levels, levels) * step
-            })
+        self.column_currents(spikes, 0.0, hw)
+            .into_iter()
+            .map(|i| (i / step).round().clamp(-levels, levels) * step)
             .collect()
     }
 }
@@ -121,18 +130,19 @@ mod tests {
         let clip = adc_clip_of(&weights, &hw);
         let sa = SynapticArray::program_block(&mut rng, &weights, rows, cols,
                                               w_max, clip, &hw);
-        let spikes: Vec<bool> = (0..rows).map(|r| r % 3 == 0).collect();
+        let bools: Vec<bool> = (0..rows).map(|r| r % 3 == 0).collect();
+        let spikes = SpikeVector::from_bools(&bools);
         let got = sa.mvm_ideal(&spikes, &hw);
         let step = clip / hw.adc_levels() as f32;
         let wq_step = w_max / hw.g_levels() as f32;
         for c in 0..cols {
             let exact: f32 = (0..rows)
-                .filter(|&r| spikes[r])
+                .filter(|&r| bools[r])
                 .map(|r| weights[r * cols + c])
                 .sum();
             // error <= weight-quantization accumulation + half ADC step
             let tol = step / 2.0
-                + wq_step / 2.0 * spikes.iter().filter(|&&s| s).count() as f32;
+                + wq_step / 2.0 * spikes.count_ones() as f32;
             assert!((got[c] - exact).abs() <= tol,
                     "col {c}: {} vs {exact}", got[c]);
         }
@@ -146,7 +156,8 @@ mod tests {
         let weights = vec![1.0f32; rows]; // one column, all max
         let sa = SynapticArray::program_block(&mut rng, &weights, rows, 1,
                                               1.0, 4.0, &hw);
-        let spikes = vec![true; rows];
+        let all_on = vec![true; rows];
+        let spikes = SpikeVector::from_bools(&all_on);
         let out = sa.mvm_ideal(&spikes, &hw);
         assert!((out[0] - 4.0).abs() < 1e-5, "clipped to full scale");
     }
@@ -160,7 +171,8 @@ mod tests {
         let weights = vec![0.05f32; 64];
         let sa = SynapticArray::program_block(&mut rng, &weights, 64, 1, 1.0,
                                               adc_clip_of(&weights, &hw), &hw);
-        let spikes: Vec<bool> = (0..64).map(|i| i % 4 == 0).collect();
+        let spikes = SpikeVector::from_bools(
+            &(0..64).map(|i| i % 4 == 0).collect::<Vec<_>>());
         // Same programmed state, fresh read-noise draw per access: over
         // repeated reads the (ADC-quantized) outputs must not all agree.
         let first = sa.mvm(&mut rng, &spikes, 0.0, &hw);
@@ -176,7 +188,7 @@ mod tests {
         let weights = vec![0.3f32; 16 * 4];
         let sa = SynapticArray::program_block(&mut rng, &weights, 16, 4, 1.0,
                                               1.0, &hw);
-        let out = sa.mvm_ideal(&vec![false; 16], &hw);
+        let out = sa.mvm_ideal(&SpikeVector::zeros(16), &hw);
         assert!(out.iter().all(|&v| v == 0.0));
     }
 }

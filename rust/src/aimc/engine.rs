@@ -13,6 +13,8 @@ use std::collections::HashMap;
 use crate::aimc::drift::gdc_alpha;
 use crate::aimc::mapping::MappedMatrix;
 use crate::config::{DriftConfig, HardwareConfig};
+use crate::snn::LifArray;
+use crate::spike::SpikeVector;
 use crate::util::Rng;
 
 /// A model's analog weights programmed onto crossbars.
@@ -45,6 +47,18 @@ impl AimcEngine {
     /// Total synaptic arrays consumed by the model (area accounting).
     pub fn total_arrays(&self) -> usize {
         self.layers.iter().map(|(_, m)| m.n_arrays()).sum()
+    }
+
+    /// One spiking forward step through a named layer on the crossbar
+    /// simulator: packed spike vector -> analog MVM (set-bit traversal
+    /// per word) -> shared LIF bank -> packed spike vector. `None` when
+    /// the layer is unknown. This is the packed spike-vector x crossbar
+    /// input path the standalone hardware demos and tests exercise.
+    pub fn forward_spiking(&self, name: &str, rng: &mut Rng,
+                           spikes: &SpikeVector, lif: &mut LifArray,
+                           t_seconds: f64) -> Option<SpikeVector> {
+        self.layer(name)
+            .map(|m| m.mvm_lif(rng, spikes, lif, t_seconds, &self.hw))
     }
 
     /// Effective weights of every layer at the given drift time.
@@ -122,6 +136,21 @@ mod tests {
                 "uncompensated drift must be large");
         assert!(err(&year_gdc[0].1, &t0[0].1) / norm0 < 0.2,
                 "GDC must hold weights near programmed values");
+    }
+
+    #[test]
+    fn forward_spiking_runs_packed_path() {
+        let hw = HardwareConfig::default();
+        let e = AimcEngine::program(&weights(), &hw, 2);
+        let mut rng = Rng::seed_from_u64(13);
+        let mut lif = LifArray::new(32);
+        let spikes = SpikeVector::from_bools(
+            &(0..64).map(|i| i % 2 == 0).collect::<Vec<_>>());
+        let out = e.forward_spiking("a.w", &mut rng, &spikes, &mut lif, 0.0)
+            .expect("known layer");
+        assert_eq!(out.len(), 32);
+        assert!(e.forward_spiking("nope", &mut rng, &spikes, &mut lif, 0.0)
+            .is_none());
     }
 
     #[test]

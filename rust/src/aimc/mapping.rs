@@ -12,6 +12,7 @@ use crate::aimc::crossbar::{adc_clip_of, SynapticArray};
 use crate::aimc::device::w_max_of;
 use crate::config::HardwareConfig;
 use crate::snn::LifArray;
+use crate::spike::SpikeVector;
 use crate::util::Rng;
 
 /// A full weight matrix mapped onto a grid of synaptic arrays.
@@ -70,20 +71,23 @@ impl MappedMatrix {
         MappedMatrix { d_in, d_out, blocks, w_max, adc_clip }
     }
 
-    /// Analog matrix-vector product for one binary input vector: every
-    /// SA's ADC-quantized local sums are accumulated per output column
-    /// (the carry-save adder in the LIF unit).
-    pub fn mvm(&self, rng: &mut Rng, spikes: &[bool], t_seconds: f64,
+    /// Analog matrix-vector product for one packed binary input vector:
+    /// every SA's ADC-quantized local sums are accumulated per output
+    /// column (the carry-save adder in the LIF unit). Each row block's
+    /// bit-line drive is a word-shifted slice of the packed input.
+    pub fn mvm(&self, rng: &mut Rng, spikes: &SpikeVector, t_seconds: f64,
                hw: &HardwareConfig) -> Vec<f32> {
-        assert_eq!(spikes.len(), self.d_in);
+        assert_eq!(spikes.len(), self.d_in,
+                   "spike vector length {} != d_in {}", spikes.len(),
+                   self.d_in);
         let xb = hw.crossbar_dim;
         let mut out = vec![0.0f32; self.d_out];
         for (rb, row) in self.blocks.iter().enumerate() {
             let lo = rb * xb;
             let hi = (lo + xb).min(self.d_in);
-            let sub = &spikes[lo..hi];
+            let sub = spikes.extract(lo, hi);
             for (cb, sa) in row.iter().enumerate() {
-                let local = sa.mvm(rng, sub, t_seconds, hw);
+                let local = sa.mvm(rng, &sub, t_seconds, hw);
                 for (c, v) in local.iter().enumerate() {
                     out[cb * xb + c] += v;
                 }
@@ -94,9 +98,11 @@ impl MappedMatrix {
 
     /// MVM followed by the shared LIF units — one "spiking neuron tile"
     /// step for a token (used by the standalone engine demo and tests).
-    pub fn mvm_lif(&self, rng: &mut Rng, spikes: &[bool],
+    /// Packed spikes in, packed spikes out: the whole spiking linear
+    /// layer stays in the 1-bit representation.
+    pub fn mvm_lif(&self, rng: &mut Rng, spikes: &SpikeVector,
                    lif: &mut LifArray, t_seconds: f64,
-                   hw: &HardwareConfig) -> Vec<bool> {
+                   hw: &HardwareConfig) -> SpikeVector {
         let pre = self.mvm(rng, spikes, t_seconds, hw);
         lif.step(&pre)
     }
@@ -166,14 +172,15 @@ mod tests {
         let (din, dout) = (300, 70); // non-multiples of 128
         let w = rand_weights(din * dout, 0.05);
         let m = MappedMatrix::program(&mut rng, &w, din, dout, &hw);
-        let spikes: Vec<bool> = (0..din).map(|i| i % 2 == 0).collect();
+        let bools: Vec<bool> = (0..din).map(|i| i % 2 == 0).collect();
+        let spikes = SpikeVector::from_bools(&bools);
         let got = m.mvm(&mut rng, &spikes, 0.0, &hw);
         let step = m.adc_clip / hw.adc_levels() as f32;
         let wq_step = m.w_max / hw.g_levels() as f32;
-        let active = spikes.iter().filter(|&&s| s).count() as f32;
+        let active = spikes.count_ones() as f32;
         for c in 0..dout {
             let exact: f32 = (0..din)
-                .filter(|&r| spikes[r])
+                .filter(|&r| bools[r])
                 .map(|r| w[r * dout + c])
                 .sum();
             let tol = m.row_blocks() as f32 * step / 2.0
@@ -203,7 +210,8 @@ mod tests {
         let w = rand_weights(64 * 32, 0.3);
         let m = MappedMatrix::program(&mut rng, &w, 64, 32, &hw);
         let mut lif = LifArray::new(32);
-        let spikes: Vec<bool> = (0..64).map(|i| i % 2 == 0).collect();
+        let spikes = SpikeVector::from_bools(
+            &(0..64).map(|i| i % 2 == 0).collect::<Vec<_>>());
         let out = m.mvm_lif(&mut rng, &spikes, &mut lif, 0.0, &hw);
         assert_eq!(out.len(), 32);
     }

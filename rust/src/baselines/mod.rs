@@ -78,8 +78,22 @@ pub fn ann_quant_aimc_energy(m: &ModelDims, hw: &HardwareConfig)
 }
 
 /// SNN-Digi-Opt at encoding length `t_snn` (its own minimum-T from
-/// Tables III/IV — fairness rule of §VII-A2).
+/// Tables III/IV — fairness rule of §VII-A2) and the paper's nominal
+/// firing rate [`P_SPIKE`].
 pub fn snn_digi_opt_energy(m: &ModelDims, t_snn: usize) -> BaselineEnergy {
+    snn_digi_opt_energy_at_density(m, t_snn, P_SPIKE)
+}
+
+/// SNN-Digi-Opt at a *measured* spike density — e.g. the
+/// [`crate::spike::SpikeVolume::density`] of the packed spike tensors an
+/// actual simulated workload produced — instead of the nominal
+/// [`P_SPIKE`]. Masked-add energy is spatiotemporal-sparsity-aware: only
+/// active input spikes fire adders, so compute scales linearly with the
+/// density while clock/mask control stays per-position.
+pub fn snn_digi_opt_energy_at_density(m: &ModelDims, t_snn: usize,
+                                      p_spike: f64) -> BaselineEnergy {
+    assert!((0.0..=1.0).contains(&p_spike),
+            "spike density {p_spike} outside [0, 1]");
     let t = t_snn as f64;
     let n = m.n_tokens as f64;
     // Linear layers: masked additions — an add fires per active input
@@ -88,10 +102,10 @@ pub fn snn_digi_opt_energy(m: &ModelDims, t_snn: usize) -> BaselineEnergy {
         .iter()
         .map(|&(i, o)| n * i as f64 * o as f64)
         .sum();
-    let lin = lin_positions * (P_SPIKE * E_ADD_INT8 + E_CTRL_GATED);
+    let lin = lin_positions * (p_spike * E_ADD_INT8 + E_CTRL_GATED);
     // Attention [15]: QK^T and SV as masked adds + per-score INT scaling.
     let attn_positions = m.depth as f64 * 2.0 * n * n * m.dim as f64;
-    let attn = attn_positions * (P_SPIKE * E_ADD_INT8 + E_CTRL_GATED)
+    let attn = attn_positions * (p_spike * E_ADD_INT8 + E_CTRL_GATED)
         + m.depth as f64 * m.heads as f64 * n * n * E_MUL_INT8;
     let lif = ops::lif_updates_per_step(m) * E_LIF_UPDATE;
     let res = ops::residual_ops_per_step(m) * E_ADD_INT8;
@@ -220,6 +234,38 @@ mod tests {
             assert!(r_snn > 1.5 && r_snn < 3.0,
                     "{}: snn ratio {r_snn:.2}", p.dims.name);
         }
+    }
+
+    #[test]
+    fn measured_density_scales_masked_add_energy() {
+        use crate::spike::SpikeVolume;
+        let p = table6_point();
+        // Nominal entry point is exactly the density-parameterized model
+        // at P_SPIKE.
+        let nominal = snn_digi_opt_energy(&p.dims, p.t_snn);
+        let at = snn_digi_opt_energy_at_density(&p.dims, p.t_snn, P_SPIKE);
+        assert_eq!(nominal.total_pj(), at.total_pj());
+        // A measured density from packed spike tensors feeds the model:
+        // denser spikes -> more masked adds -> more compute energy;
+        // memory traffic is density-independent.
+        let mut dense = SpikeVolume::zeros(2, 8, 8);
+        for t in 0..2 {
+            for r in 0..8 {
+                for c in 0..8 {
+                    if (t + r + c) % 2 == 0 {
+                        dense.step_mut(t).set(r, c, true);
+                    }
+                }
+            }
+        }
+        let sparse = SpikeVolume::zeros(2, 8, 8);
+        let e_dense = snn_digi_opt_energy_at_density(
+            &p.dims, p.t_snn, dense.density());
+        let e_sparse = snn_digi_opt_energy_at_density(
+            &p.dims, p.t_snn, sparse.density());
+        assert!(dense.density() > 0.4 && dense.density() < 0.6);
+        assert!(e_dense.compute_pj > e_sparse.compute_pj);
+        assert_eq!(e_dense.memory_pj, e_sparse.memory_pj);
     }
 
     #[test]

@@ -50,6 +50,13 @@ impl Response {
     }
 
     /// Prediction using only the first `t` encoding steps.
+    ///
+    /// Argmax uses a NaN-tolerant fold (`f64::max`-style total order): a
+    /// NaN logit — which stochastic analog inference can produce under
+    /// extreme drift — never wins and never panics; if *every* cumulative
+    /// logit is NaN the prediction falls back to class 0. Ties keep the
+    /// *last* maximal class, matching the pre-fix `max_by` behaviour so
+    /// reproduced accuracy numbers are unchanged.
     pub fn predict_at(&self, t: usize) -> usize {
         let t = t.clamp(1, self.t_max);
         let mut cum = vec![0.0f64; self.classes];
@@ -60,9 +67,10 @@ impl Response {
         }
         cum.iter()
             .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .map(|(i, _)| i)
-            .unwrap()
+            .fold((0usize, f64::NEG_INFINITY), |(bi, bv), (i, &v)| {
+                if v >= bv { (i, v) } else { (bi, bv) }
+            })
+            .0
     }
 }
 
@@ -283,6 +291,32 @@ mod tests {
         let (tx, rx) = mpsc::sync_channel::<Request>(4);
         drop(tx);
         assert!(gather(&rx, 4, Duration::from_millis(1)).is_none());
+    }
+
+    #[test]
+    fn predict_tolerates_nan_logits() {
+        // Regression: a NaN logit used to panic partial_cmp().unwrap().
+        let r = Response {
+            logits_t: vec![f32::NAN, 1.0, 2.0, /* t0 */
+                           f32::NAN, 1.0, 0.0 /* t1 */],
+            t_max: 2,
+            classes: 3,
+            queue_us: 0,
+            e2e_us: 0,
+        };
+        // NaN never wins: cumulative logits are [NaN, 2.0, 2.0]; ties
+        // keep the last maximal class (pre-fix max_by semantics).
+        assert_eq!(r.predict(), 2);
+        assert_eq!(r.predict_at(1), 2);
+        // All-NaN falls back to class 0 rather than panicking.
+        let all_nan = Response {
+            logits_t: vec![f32::NAN, f32::NAN],
+            t_max: 1,
+            classes: 2,
+            queue_us: 0,
+            e2e_us: 0,
+        };
+        assert_eq!(all_nan.predict(), 0);
     }
 
     #[test]

@@ -182,6 +182,7 @@ mod tests {
 
     #[test]
     fn ssa_ops_match_simulator_formulae() {
+        use crate::spike::SpikeVolume;
         use crate::ssa::SsaTile;
         let m = gpt_icl(1, 64, 1, 2, 2, 3); // 1 layer, 1 head, T=3
         let ops = ssa_ops(&m, 0.25);
@@ -189,7 +190,7 @@ mod tests {
         let dk = m.d_head();
         // Run the actual cycle simulator with zero inputs; structural
         // counts (cycles, adders, encoders) must agree exactly.
-        let z = vec![vec![vec![false; dk]; n]; m.t_steps];
+        let z = SpikeVolume::zeros(m.t_steps, n, dk);
         let mut tile = SsaTile::new(n, dk, true, 1);
         let (_, stats) = tile.run(&z, &z, &z);
         assert_eq!(stats.cycles as f64, ops.sac_cycles / n as f64 / n as f64);

@@ -16,6 +16,9 @@
 //! * [`ssa`]          — cycle-level digital simulator of the stochastic
 //!   spiking attention engine: LFSR array, stochastic attention cells,
 //!   N x N tiles with streaming dataflow (paper §IV-B, Algorithm 1).
+//! * [`spike`]        — word-packed spike tensors (`SpikeVector`,
+//!   `SpikeMatrix`, `SpikeVolume`): the 1-bit AND/popcount dataflow
+//!   representation shared by the SSA, SNN and AIMC layers.
 //! * [`snn`]          — spike coding + LIF reference models shared by the
 //!   simulators and tests.
 //! * [`energy`]       — analytical 45 nm energy/latency/area models (the
@@ -38,6 +41,7 @@ pub mod energy;
 pub mod repro;
 pub mod runtime;
 pub mod snn;
+pub mod spike;
 pub mod ssa;
 pub mod tensor;
 pub mod util;

@@ -47,8 +47,8 @@ pub fn evaluate(engine: &Engine, set: &EvalSet, seed_base: u32)
     let mut correct = vec![0usize; t_max];
     let mut preds_t: Vec<Vec<u32>> = vec![Vec::new(); t_max];
     let mut truths: Vec<u32> = Vec::new();
-    for i in 0..set.n_batches(b) {
-        let (x, labels) = set.batch(i, b);
+    for i in 0..set.n_batches(b)? {
+        let (x, labels) = set.batch(i, b)?;
         let logits = engine.run(x, seed_base.wrapping_add(i as u32))?;
         let preds = prefix_predictions(&logits, t_max, b, classes);
         for (t, row) in preds.iter().enumerate() {

@@ -6,6 +6,7 @@
 //! which for `beta = 0.5` matches [`LifNeuron`] bit-for-bit on dyadic
 //! inputs.
 
+use crate::spike::SpikeVector;
 use crate::util::Rng;
 
 /// Leaky integrate-and-fire neuron, hard reset (paper eqs. (2)-(3)).
@@ -55,14 +56,24 @@ impl LifArray {
         LifArray { neurons: vec![LifNeuron::default(); n] }
     }
 
-    /// One timestep over the whole array -> spike bitmap.
-    pub fn step(&mut self, inputs: &[f32]) -> Vec<bool> {
+    /// One timestep over the whole array -> packed spike row (the LIF
+    /// bank's output register, 64 neurons per word).
+    pub fn step(&mut self, inputs: &[f32]) -> SpikeVector {
         assert_eq!(inputs.len(), self.neurons.len());
-        self.neurons
-            .iter_mut()
-            .zip(inputs)
-            .map(|(n, &i)| n.step(i))
-            .collect()
+        let mut out = SpikeVector::zeros(inputs.len());
+        for (i, (n, &x)) in
+            self.neurons.iter_mut().zip(inputs).enumerate()
+        {
+            if n.step(x) {
+                out.set(i, true);
+            }
+        }
+        out
+    }
+
+    /// Legacy unpacked variant of [`Self::step`].
+    pub fn step_bools(&mut self, inputs: &[f32]) -> Vec<bool> {
+        self.step(inputs).to_bools()
     }
 
     pub fn reset(&mut self) {
@@ -75,6 +86,18 @@ impl LifArray {
 /// Bernoulli rate coding (paper eq. (1)): value in [0,1] -> spike train.
 pub fn rate_encode(rng: &mut Rng, x: f32, t_steps: usize) -> Vec<bool> {
     (0..t_steps).map(|_| rng.uniform_f32() < x).collect()
+}
+
+/// Rate-encode a feature vector into one packed spike row per call site
+/// (one timestep across `xs.len()` features).
+pub fn rate_encode_row(rng: &mut Rng, xs: &[f32]) -> SpikeVector {
+    let mut out = SpikeVector::zeros(xs.len());
+    for (i, &x) in xs.iter().enumerate() {
+        if rng.uniform_f32() < x {
+            out.set(i, true);
+        }
+    }
+    out
 }
 
 /// Firing-rate decoder (mean over the time axis).
@@ -132,7 +155,31 @@ mod tests {
         let got = arr.step(&inputs);
         for (i, &inp) in inputs.iter().enumerate() {
             let mut n = LifNeuron::default();
-            assert_eq!(got[i], n.step(inp));
+            assert_eq!(got.get(i), n.step(inp));
         }
+    }
+
+    #[test]
+    fn lif_array_packed_matches_bools() {
+        let inputs: Vec<f32> = (0..130).map(|i| (i % 5) as f32 / 3.0)
+            .collect();
+        let mut a = LifArray::new(130);
+        let mut b = LifArray::new(130);
+        let packed = a.step(&inputs);
+        let bools = b.step_bools(&inputs);
+        assert_eq!(packed.to_bools(), bools);
+        assert!(packed.count_ones() > 0, "suprathreshold inputs spike");
+    }
+
+    #[test]
+    fn rate_encode_row_matches_rate() {
+        let mut rng = Rng::seed_from_u64(3);
+        let xs = vec![0.25f32; 200];
+        let mut ones = 0u32;
+        for _ in 0..200 {
+            ones += rate_encode_row(&mut rng, &xs).count_ones();
+        }
+        let rate = ones as f64 / (200.0 * 200.0);
+        assert!((rate - 0.25).abs() < 0.02, "rate {rate}");
     }
 }

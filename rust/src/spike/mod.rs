@@ -1,0 +1,611 @@
+//! Word-packed spike tensors — the 1-bit dataflow representation shared
+//! by the whole spike datapath ([`crate::ssa`], [`crate::snn`],
+//! [`crate::aimc`]).
+//!
+//! The paper's core claim (§IV) is that spiking transformers win because
+//! attention and feedforward collapse to 1-bit AND/popcount dataflow: the
+//! SSA engine's SACs are AND gates + counters, and AIMC crossbars take
+//! binary spike vectors on their bit-lines. Simulating that with one heap
+//! `bool` per spike burns 8 bits and a cache line per event; this module
+//! packs spikes 64-per-word so the simulator's inner loops become the
+//! same AND/popcount operations the hardware performs:
+//!
+//! * [`SpikeVector`] — a packed 1-D spike vector (one token's features,
+//!   one crossbar's bit-line drive, one LIF bank's output row);
+//! * [`SpikeMatrix`] — `rows x ceil(cols/64)` `u64` words in one flat
+//!   row-major buffer (a token-major spike matrix for one timestep);
+//! * [`SpikeVolume`] — the T-step stack of equally-shaped matrices;
+//! * [`and_popcount`] — the row-dot-product primitive
+//!   `popcount(a AND b)` (a SAC column's Q.K count, a column adder's
+//!   score.V sum);
+//! * [`causal_row_mask`] — precomputed per-row word masks for causal
+//!   attention (row `i` keeps columns `0..=i`).
+//!
+//! Invariant: pad bits past `cols`/`len` in the last word of every row
+//! are always zero, so popcounts and word-wise AND/OR never see garbage.
+//! All conversions to/from the legacy `Vec<Vec<bool>>` ([`crate::ssa::
+//! BitMatrix`]) are lossless and covered by round-trip tests at odd
+//! widths.
+
+/// Number of `u64` words needed for `bits` bits.
+#[inline]
+pub fn words_for(bits: usize) -> usize {
+    bits.div_ceil(64)
+}
+
+/// `popcount(a AND b)` over two equally-long word slices — the packed
+/// row dot product of two binary vectors.
+#[inline]
+pub fn and_popcount(a: &[u64], b: &[u64]) -> u32 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x & y).count_ones()).sum()
+}
+
+/// Word mask keeping bits `0..=i` of an `n`-bit row: the causal
+/// attention mask for query row `i` (keys `j <= i` visible).
+pub fn causal_row_mask(i: usize, n: usize) -> Vec<u64> {
+    let mut words = vec![0u64; words_for(n)];
+    let keep = (i + 1).min(n);
+    for (w, word) in words.iter_mut().enumerate() {
+        let lo = w * 64;
+        if keep >= lo + 64 {
+            *word = u64::MAX;
+        } else if keep > lo {
+            *word = (1u64 << (keep - lo)) - 1;
+        }
+    }
+    words
+}
+
+/// Mask keeping the valid low `bits % 64` bits of a row's last word
+/// (all-ones when the row is word-aligned).
+#[inline]
+fn tail_mask(bits: usize) -> u64 {
+    if bits % 64 == 0 {
+        u64::MAX
+    } else {
+        (1u64 << (bits % 64)) - 1
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SpikeVector
+// ---------------------------------------------------------------------------
+
+/// A packed 1-D binary spike vector.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpikeVector {
+    len: usize,
+    words: Vec<u64>,
+}
+
+impl SpikeVector {
+    /// All-zero vector of `len` bits.
+    pub fn zeros(len: usize) -> Self {
+        SpikeVector { len, words: vec![0; words_for(len)] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Backing words (pad bits are guaranteed zero).
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, b: bool) {
+        debug_assert!(i < self.len);
+        if b {
+            self.words[i / 64] |= 1u64 << (i % 64);
+        } else {
+            self.words[i / 64] &= !(1u64 << (i % 64));
+        }
+    }
+
+    /// Number of set bits (spike count — the hardware's event count).
+    pub fn count_ones(&self) -> u32 {
+        self.words.iter().map(|w| w.count_ones()).sum()
+    }
+
+    /// Spike density in `[0, 1]`.
+    pub fn density(&self) -> f64 {
+        if self.len == 0 {
+            0.0
+        } else {
+            self.count_ones() as f64 / self.len as f64
+        }
+    }
+
+    /// Lossless conversion from the legacy bool representation.
+    pub fn from_bools(bools: &[bool]) -> Self {
+        let mut v = SpikeVector::zeros(bools.len());
+        for (i, &b) in bools.iter().enumerate() {
+            if b {
+                v.words[i / 64] |= 1u64 << (i % 64);
+            }
+        }
+        v
+    }
+
+    /// Lossless conversion back to the legacy bool representation.
+    pub fn to_bools(&self) -> Vec<bool> {
+        (0..self.len).map(|i| self.get(i)).collect()
+    }
+
+    /// Iterate all bits in order.
+    pub fn iter(&self) -> impl Iterator<Item = bool> + '_ {
+        (0..self.len).map(move |i| self.get(i))
+    }
+
+    /// Visit the index of every *set* bit in ascending order — the
+    /// event-driven traversal (zero spikes cost zero work).
+    #[inline]
+    pub fn for_each_set(&self, mut f: impl FnMut(usize)) {
+        for (wi, &word) in self.words.iter().enumerate() {
+            let mut bits = word;
+            while bits != 0 {
+                f(wi * 64 + bits.trailing_zeros() as usize);
+                bits &= bits - 1;
+            }
+        }
+    }
+
+    /// Extract bits `lo..hi` into a new vector (word-shifted, not
+    /// bit-by-bit) — slicing a row-block's bit-line drive out of a full
+    /// input vector.
+    pub fn extract(&self, lo: usize, hi: usize) -> SpikeVector {
+        assert!(lo <= hi && hi <= self.len,
+                "extract {lo}..{hi} out of range for len {}", self.len);
+        let len = hi - lo;
+        let mut out = SpikeVector::zeros(len);
+        let wlo = lo / 64;
+        let shift = lo % 64;
+        for (w, slot) in out.words.iter_mut().enumerate() {
+            let a = self.words.get(wlo + w).copied().unwrap_or(0);
+            *slot = if shift == 0 {
+                a
+            } else {
+                let b = self.words.get(wlo + w + 1).copied().unwrap_or(0);
+                (a >> shift) | (b << (64 - shift))
+            };
+        }
+        if let Some(last) = out.words.last_mut() {
+            *last &= tail_mask(len);
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SpikeMatrix
+// ---------------------------------------------------------------------------
+
+/// A packed binary `rows x cols` spike matrix: each row occupies
+/// `ceil(cols/64)` `u64` words of one flat row-major buffer.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpikeMatrix {
+    rows: usize,
+    cols: usize,
+    words_per_row: usize,
+    words: Vec<u64>,
+}
+
+impl SpikeMatrix {
+    /// All-zero `rows x cols` matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        let words_per_row = words_for(cols);
+        SpikeMatrix {
+            rows,
+            cols,
+            words_per_row,
+            words: vec![0; rows * words_per_row],
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn words_per_row(&self) -> usize {
+        self.words_per_row
+    }
+
+    /// Packed row `r` (pad bits are guaranteed zero).
+    #[inline]
+    pub fn row(&self, r: usize) -> &[u64] {
+        &self.words[r * self.words_per_row..(r + 1) * self.words_per_row]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [u64] {
+        &mut self.words[r * self.words_per_row
+            ..(r + 1) * self.words_per_row]
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> bool {
+        debug_assert!(r < self.rows && c < self.cols);
+        (self.words[r * self.words_per_row + c / 64] >> (c % 64)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, b: bool) {
+        debug_assert!(r < self.rows && c < self.cols);
+        let w = r * self.words_per_row + c / 64;
+        if b {
+            self.words[w] |= 1u64 << (c % 64);
+        } else {
+            self.words[w] &= !(1u64 << (c % 64));
+        }
+    }
+
+    /// Zero one row.
+    pub fn clear_row(&mut self, r: usize) {
+        self.row_mut(r).fill(0);
+    }
+
+    /// AND-popcount dot product of row `r` against an external packed
+    /// row (e.g. a SAC's Q_i . K_j count).
+    #[inline]
+    pub fn row_and_popcount(&self, r: usize, other: &[u64]) -> u32 {
+        and_popcount(self.row(r), other)
+    }
+
+    /// Total spike count.
+    pub fn count_ones(&self) -> u64 {
+        self.words.iter().map(|w| w.count_ones() as u64).sum()
+    }
+
+    /// Spike density in `[0, 1]`.
+    pub fn density(&self) -> f64 {
+        let bits = (self.rows * self.cols) as f64;
+        if bits == 0.0 {
+            0.0
+        } else {
+            self.count_ones() as f64 / bits
+        }
+    }
+
+    /// Column `c` as a packed `rows`-bit vector — the V-FIFO path's
+    /// per-cycle bit-column (prefer [`Self::transposed`] when all
+    /// columns are consumed).
+    pub fn column(&self, c: usize) -> SpikeVector {
+        assert!(c < self.cols);
+        let mut v = SpikeVector::zeros(self.rows);
+        for r in 0..self.rows {
+            if self.get(r, c) {
+                v.set(r, true);
+            }
+        }
+        v
+    }
+
+    /// The transposed matrix (`cols x rows`): one pass extracting every
+    /// bit-column for the streaming V path.
+    pub fn transposed(&self) -> SpikeMatrix {
+        let mut out = SpikeMatrix::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            let row = self.row(r);
+            for (wi, &word) in row.iter().enumerate() {
+                let mut bits = word;
+                while bits != 0 {
+                    let c = wi * 64 + bits.trailing_zeros() as usize;
+                    bits &= bits - 1;
+                    out.words[c * out.words_per_row + r / 64] |=
+                        1u64 << (r % 64);
+                }
+            }
+        }
+        out
+    }
+
+    /// Row `r` as a [`SpikeVector`] (copies the row words).
+    pub fn row_vector(&self, r: usize) -> SpikeVector {
+        SpikeVector { len: self.cols, words: self.row(r).to_vec() }
+    }
+
+    /// Overwrite row `r` from a packed vector of matching width.
+    pub fn set_row(&mut self, r: usize, v: &SpikeVector) {
+        assert_eq!(v.len, self.cols, "row width mismatch");
+        self.row_mut(r).copy_from_slice(&v.words);
+    }
+
+    /// Lossless conversion from the legacy `Vec<Vec<bool>>`.
+    pub fn from_bools(bools: &[Vec<bool>]) -> Self {
+        let rows = bools.len();
+        let cols = bools.first().map_or(0, |r| r.len());
+        let mut m = SpikeMatrix::zeros(rows, cols);
+        for (r, row) in bools.iter().enumerate() {
+            assert_eq!(row.len(), cols, "ragged bool matrix");
+            for (c, &b) in row.iter().enumerate() {
+                if b {
+                    m.words[r * m.words_per_row + c / 64] |=
+                        1u64 << (c % 64);
+                }
+            }
+        }
+        m
+    }
+
+    /// Lossless conversion back to the legacy `Vec<Vec<bool>>`.
+    pub fn to_bools(&self) -> Vec<Vec<bool>> {
+        (0..self.rows)
+            .map(|r| (0..self.cols).map(|c| self.get(r, c)).collect())
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SpikeVolume
+// ---------------------------------------------------------------------------
+
+/// A T-step stack of equally-shaped [`SpikeMatrix`] timesteps — the unit
+/// the SSA tile streams (Q/K/V over the encoding window).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpikeVolume {
+    rows: usize,
+    cols: usize,
+    steps: Vec<SpikeMatrix>,
+}
+
+impl SpikeVolume {
+    /// All-zero volume of `t_steps` timesteps of `rows x cols`.
+    pub fn zeros(t_steps: usize, rows: usize, cols: usize) -> Self {
+        SpikeVolume {
+            rows,
+            cols,
+            steps: (0..t_steps).map(|_| SpikeMatrix::zeros(rows, cols))
+                .collect(),
+        }
+    }
+
+    pub fn t_steps(&self) -> usize {
+        self.steps.len()
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn step(&self, t: usize) -> &SpikeMatrix {
+        &self.steps[t]
+    }
+
+    #[inline]
+    pub fn step_mut(&mut self, t: usize) -> &mut SpikeMatrix {
+        &mut self.steps[t]
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &SpikeMatrix> {
+        self.steps.iter()
+    }
+
+    /// Append a timestep of matching shape.
+    pub fn push(&mut self, m: SpikeMatrix) {
+        assert!(m.rows == self.rows && m.cols == self.cols,
+                "timestep shape {}x{} != volume {}x{}", m.rows, m.cols,
+                self.rows, self.cols);
+        self.steps.push(m);
+    }
+
+    /// Total spike count over all timesteps.
+    pub fn count_ones(&self) -> u64 {
+        self.steps.iter().map(|m| m.count_ones()).sum()
+    }
+
+    /// Spike density in `[0, 1]` over the whole volume — feeds the
+    /// sparsity-aware energy models ([`crate::baselines`]).
+    pub fn density(&self) -> f64 {
+        let bits = (self.t_steps() * self.rows * self.cols) as f64;
+        if bits == 0.0 {
+            0.0
+        } else {
+            self.count_ones() as f64 / bits
+        }
+    }
+
+    /// Lossless conversion from the legacy `[T][rows][cols]` bools.
+    pub fn from_bools(bools: &[Vec<Vec<bool>>]) -> Self {
+        let steps: Vec<SpikeMatrix> =
+            bools.iter().map(|m| SpikeMatrix::from_bools(m)).collect();
+        let rows = steps.first().map_or(0, |m| m.rows);
+        let cols = steps.first().map_or(0, |m| m.cols);
+        for m in &steps {
+            assert!(m.rows == rows && m.cols == cols,
+                    "ragged timestep shapes");
+        }
+        SpikeVolume { rows, cols, steps }
+    }
+
+    /// Lossless conversion back to the legacy `[T][rows][cols]` bools.
+    pub fn to_bools(&self) -> Vec<Vec<Vec<bool>>> {
+        self.steps.iter().map(|m| m.to_bools()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic pseudo-random bool pattern.
+    fn pat(r: usize, c: usize, salt: usize, p: f64) -> bool {
+        let h = ((r * 2654435761 + c * 97 + salt * 1315423911) as u64)
+            .wrapping_mul(0x9E3779B97F4A7C15);
+        (h >> 11) as f64 / (1u64 << 53) as f64 < p
+    }
+
+    fn bool_mat(rows: usize, cols: usize, salt: usize, p: f64)
+                -> Vec<Vec<bool>> {
+        (0..rows)
+            .map(|r| (0..cols).map(|c| pat(r, c, salt, p)).collect())
+            .collect()
+    }
+
+    // Widths the ISSUE calls out: word-boundary and odd sizes.
+    const WIDTHS: &[usize] = &[1, 63, 64, 65, 127];
+
+    #[test]
+    fn matrix_roundtrip_odd_widths_and_densities() {
+        for &cols in WIDTHS {
+            for &rows in WIDTHS {
+                for &p in &[0.0, 0.5, 1.0] {
+                    let b = bool_mat(rows, cols, 7, p);
+                    let m = SpikeMatrix::from_bools(&b);
+                    assert_eq!(m.to_bools(), b, "{rows}x{cols} p={p}");
+                    // Pad bits stay zero: density computed over cols,
+                    // not words * 64.
+                    let ones: usize = b.iter().flatten()
+                        .filter(|&&x| x).count();
+                    assert_eq!(m.count_ones(), ones as u64);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_shapes_are_well_defined() {
+        let m = SpikeMatrix::zeros(0, 0);
+        assert_eq!(m.to_bools(), Vec::<Vec<bool>>::new());
+        assert_eq!(m.count_ones(), 0);
+        assert_eq!(m.density(), 0.0);
+        let m = SpikeMatrix::from_bools(&[]);
+        assert_eq!(m.rows(), 0);
+        let v = SpikeVector::zeros(0);
+        assert_eq!(v.count_ones(), 0);
+        assert_eq!(v.density(), 0.0);
+        let vol = SpikeVolume::from_bools(&[]);
+        assert_eq!(vol.t_steps(), 0);
+        assert_eq!(vol.density(), 0.0);
+    }
+
+    #[test]
+    fn vector_roundtrip_and_set_iteration() {
+        for &len in WIDTHS {
+            let b: Vec<bool> = (0..len).map(|i| pat(i, 0, 3, 0.4)).collect();
+            let v = SpikeVector::from_bools(&b);
+            assert_eq!(v.to_bools(), b);
+            let mut seen = Vec::new();
+            v.for_each_set(|i| seen.push(i));
+            let want: Vec<usize> = (0..len).filter(|&i| b[i]).collect();
+            assert_eq!(seen, want, "len={len}");
+            assert_eq!(v.count_ones() as usize, want.len());
+        }
+    }
+
+    #[test]
+    fn vector_extract_matches_slice() {
+        let len = 200;
+        let b: Vec<bool> = (0..len).map(|i| pat(i, 1, 5, 0.5)).collect();
+        let v = SpikeVector::from_bools(&b);
+        for &(lo, hi) in &[(0usize, 200usize), (0, 64), (1, 65), (63, 127),
+                           (64, 128), (65, 200), (100, 100), (199, 200)] {
+            assert_eq!(v.extract(lo, hi).to_bools(), &b[lo..hi],
+                       "{lo}..{hi}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn vector_extract_out_of_range_panics() {
+        SpikeVector::zeros(10).extract(5, 11);
+    }
+
+    #[test]
+    fn and_popcount_is_dot_product() {
+        for &len in WIDTHS {
+            let a: Vec<bool> = (0..len).map(|i| pat(i, 0, 8, 0.6)).collect();
+            let b: Vec<bool> = (0..len).map(|i| pat(i, 0, 9, 0.6)).collect();
+            let pa = SpikeVector::from_bools(&a);
+            let pb = SpikeVector::from_bools(&b);
+            let want = a.iter().zip(&b).filter(|(&x, &y)| x && y).count();
+            assert_eq!(and_popcount(pa.words(), pb.words()), want as u32);
+        }
+    }
+
+    #[test]
+    fn transpose_and_column_agree() {
+        for &(rows, cols) in &[(1usize, 1usize), (5, 63), (64, 65),
+                               (127, 3)] {
+            let b = bool_mat(rows, cols, 11, 0.4);
+            let m = SpikeMatrix::from_bools(&b);
+            let t = m.transposed();
+            assert_eq!(t.rows(), cols);
+            assert_eq!(t.cols(), rows);
+            for c in 0..cols {
+                let col = m.column(c);
+                assert_eq!(col.words(), t.row(c), "col {c}");
+                for r in 0..rows {
+                    assert_eq!(t.get(c, r), b[r][c]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn causal_mask_keeps_prefix() {
+        for &n in WIDTHS {
+            for i in [0, n / 2, n - 1] {
+                let mask = causal_row_mask(i, n);
+                for j in 0..n {
+                    let bit = (mask[j / 64] >> (j % 64)) & 1 == 1;
+                    assert_eq!(bit, j <= i, "n={n} i={i} j={j}");
+                }
+                // Pad bits clear.
+                if n % 64 != 0 {
+                    assert_eq!(mask[n / 64] & !tail_mask(n), 0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn volume_roundtrip_and_density() {
+        let b: Vec<Vec<Vec<bool>>> =
+            (0..3).map(|t| bool_mat(5, 65, t, 0.5)).collect();
+        let vol = SpikeVolume::from_bools(&b);
+        assert_eq!(vol.t_steps(), 3);
+        assert_eq!(vol.rows(), 5);
+        assert_eq!(vol.cols(), 65);
+        assert_eq!(vol.to_bools(), b);
+        let ones: usize =
+            b.iter().flatten().flatten().filter(|&&x| x).count();
+        let want = ones as f64 / (3 * 5 * 65) as f64;
+        assert!((vol.density() - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn set_and_clear_row() {
+        let mut m = SpikeMatrix::zeros(4, 65);
+        m.set(2, 64, true);
+        m.set(2, 0, true);
+        assert!(m.get(2, 64) && m.get(2, 0));
+        assert_eq!(m.count_ones(), 2);
+        let rv = m.row_vector(2);
+        assert_eq!(rv.count_ones(), 2);
+        m.clear_row(2);
+        assert_eq!(m.count_ones(), 0);
+        m.set_row(1, &rv);
+        assert!(m.get(1, 64) && m.get(1, 0));
+    }
+}

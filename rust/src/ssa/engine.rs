@@ -1,48 +1,67 @@
 //! SSA engine: one tile per attention head (paper §IV-B3) plus the
 //! algorithm-level reference (Algorithm 1) used to prove the cycle-level
 //! tile bit-exact.
+//!
+//! Heads are independent hardware tiles with private LFSRs, so
+//! [`SsaEngine::run_mhsa`] executes them on scoped OS threads — the
+//! simulator's wall-clock now matches the cycle model's "tiles run in
+//! parallel" accounting ([`SsaStats::add`] takes the max of cycles).
 
+use crate::spike::{and_popcount, causal_row_mask, SpikeMatrix, SpikeVolume};
 use crate::ssa::lfsr::LfsrArray;
 use crate::ssa::tile::{draw_uniform, SsaStats, SsaTile};
 use crate::ssa::BitMatrix;
 
-/// Algorithm-level SSA (paper Algorithm 1) consuming the LFSR stream in
-/// *exactly* the order the pipelined tile does, so it must reproduce the
-/// tile output bit-for-bit — the key hardware-correctness test.
-pub fn ssa_reference(q: &[BitMatrix], k: &[BitMatrix], v: &[BitMatrix],
+/// Algorithm-level SSA (paper Algorithm 1) on packed spike volumes,
+/// consuming the LFSR stream in *exactly* the order the pipelined tile
+/// does, so it must reproduce the tile output bit-for-bit — the key
+/// hardware-correctness test. Bit-identical to the pre-refactor bool
+/// implementation ([`crate::ssa::legacy::legacy_ssa_reference`]).
+pub fn ssa_reference(q: &SpikeVolume, k: &SpikeVolume, v: &SpikeVolume,
                      n: usize, d_k: usize, causal: bool, seed: u32)
-                     -> Vec<BitMatrix> {
-    let t_steps = q.len();
+                     -> SpikeVolume {
+    let t_steps = q.t_steps();
     let mut lfsr = LfsrArray::new(seed);
     let mut stats = SsaStats::default();
-    let mut scores: Vec<Vec<Vec<bool>>> = Vec::with_capacity(t_steps);
-    let mut out = vec![vec![vec![false; d_k]; n]; t_steps];
+    let causal_masks: Option<Vec<Vec<u64>>> = causal.then(|| {
+        (0..n).map(|i| causal_row_mask(i, n)).collect()
+    });
+    let mut scores: Vec<SpikeMatrix> = Vec::with_capacity(t_steps);
+    let mut out = SpikeVolume::zeros(t_steps, n, d_k);
     for t in 0..=t_steps {
         // Output draws for timestep t-1 happen first, column by column.
         if t >= 1 {
+            let v_t = v.step(t - 1).transposed();
+            let s = &scores[t - 1];
+            let out_m = out.step_mut(t - 1);
             for c in 0..d_k {
-                for (i, row) in out[t - 1].iter_mut().enumerate() {
-                    let sum: u32 = (0..n)
-                        .map(|j| {
-                            (scores[t - 1][i][j] && v[t - 1][j][c]) as u32
-                        })
-                        .sum();
+                let v_mask = v_t.row(c);
+                for i in 0..n {
+                    let sum = s.row_and_popcount(i, v_mask);
                     let r = draw_uniform(&mut lfsr, n as u32, &mut stats);
-                    row[c] = sum >= r;
+                    if sum >= r {
+                        out_m.set(i, c, true);
+                    }
                 }
             }
         }
         // Score draws for timestep t at the end of its window.
         if t < t_steps {
-            let mut s = vec![vec![false; n]; n];
-            for (i, si) in s.iter_mut().enumerate() {
-                for (j, sij) in si.iter_mut().enumerate() {
-                    let count: u32 = (0..d_k)
-                        .map(|c| (q[t][i][c] && k[t][j][c]) as u32)
-                        .sum();
-                    let masked = causal && j > i;
+            let qm = q.step(t);
+            let km = k.step(t);
+            let mut s = SpikeMatrix::zeros(n, n);
+            for i in 0..n {
+                for j in 0..n {
+                    let count = and_popcount(qm.row(i), km.row(j));
                     let r = draw_uniform(&mut lfsr, d_k as u32, &mut stats);
-                    *sij = !masked && count >= r;
+                    if count >= r {
+                        s.set(i, j, true);
+                    }
+                }
+                if let Some(masks) = &causal_masks {
+                    for (w, m) in s.row_mut(i).iter_mut().zip(&masks[i]) {
+                        *w &= m;
+                    }
                 }
             }
             scores.push(s);
@@ -51,12 +70,24 @@ pub fn ssa_reference(q: &[BitMatrix], k: &[BitMatrix], v: &[BitMatrix],
     out
 }
 
+/// Legacy-format convenience wrapper around [`ssa_reference`].
+pub fn ssa_reference_bools(q: &[BitMatrix], k: &[BitMatrix],
+                           v: &[BitMatrix], n: usize, d_k: usize,
+                           causal: bool, seed: u32) -> Vec<BitMatrix> {
+    ssa_reference(&SpikeVolume::from_bools(q), &SpikeVolume::from_bools(k),
+                  &SpikeVolume::from_bools(v), n, d_k, causal, seed)
+        .to_bools()
+}
+
 /// The full SSA engine: `heads` tiles operating in parallel, reused across
 /// transformer layers (the tiles are stateless between calls after
 /// `reset`).
 pub struct SsaEngine {
     pub tiles: Vec<SsaTile>,
 }
+
+/// Per-head Q/K/V spike volumes for one layer.
+pub type HeadQkv = (SpikeVolume, SpikeVolume, SpikeVolume);
 
 impl SsaEngine {
     pub fn new(heads: usize, n: usize, d_k: usize, causal: bool,
@@ -69,11 +100,43 @@ impl SsaEngine {
     }
 
     /// Run multi-head attention for one layer: per-head Q/K/V spike
-    /// matrices over T timesteps. Returns per-head outputs and merged
+    /// volumes over T timesteps. Returns per-head outputs and merged
     /// stats (cycles take the max across parallel tiles, events sum).
-    pub fn run_mhsa(&mut self, qkv: &[(Vec<BitMatrix>, Vec<BitMatrix>,
-                                       Vec<BitMatrix>)])
-                    -> (Vec<Vec<BitMatrix>>, SsaStats) {
+    ///
+    /// Tiles execute on scoped OS threads (offline build: no rayon), one
+    /// per head, mirroring the parallel-tile cycle model. Each head's
+    /// output is bit-identical to [`Self::run_mhsa_serial`]: tiles share
+    /// no state (private LFSRs), so scheduling cannot reorder draws.
+    pub fn run_mhsa(&mut self, qkv: &[HeadQkv])
+                    -> (Vec<SpikeVolume>, SsaStats) {
+        assert_eq!(qkv.len(), self.tiles.len());
+        let mut results: Vec<Option<(SpikeVolume, SsaStats)>> =
+            (0..qkv.len()).map(|_| None).collect();
+        std::thread::scope(|scope| {
+            for ((tile, (q, k, v)), slot) in
+                self.tiles.iter_mut().zip(qkv).zip(results.iter_mut())
+            {
+                scope.spawn(move || {
+                    tile.reset();
+                    *slot = Some(tile.run(q, k, v));
+                });
+            }
+        });
+        let mut stats = SsaStats::default();
+        let mut outs = Vec::with_capacity(qkv.len());
+        for r in results {
+            let (o, s) = r.expect("tile thread completed");
+            stats.add(&s);
+            outs.push(o);
+        }
+        (outs, stats)
+    }
+
+    /// Serial variant of [`Self::run_mhsa`] (one head after another on
+    /// the calling thread). Kept for benchmarking the parallel speedup
+    /// and for single-core environments.
+    pub fn run_mhsa_serial(&mut self, qkv: &[HeadQkv])
+                           -> (Vec<SpikeVolume>, SsaStats) {
         assert_eq!(qkv.len(), self.tiles.len());
         let mut stats = SsaStats::default();
         let mut outs = Vec::with_capacity(qkv.len());
@@ -98,15 +161,16 @@ mod tests {
     }
 
     fn mats(t_steps: usize, n: usize, d_k: usize, salt: usize, p: f64)
-            -> Vec<BitMatrix> {
-        (0..t_steps)
+            -> SpikeVolume {
+        let bools: Vec<Vec<Vec<bool>>> = (0..t_steps)
             .map(|t| {
                 (0..n)
                     .map(|i| (0..d_k).map(|c| pseudo(t, i, c, salt, p))
                         .collect())
                     .collect()
             })
-            .collect()
+            .collect();
+        SpikeVolume::from_bools(&bools)
     }
 
     #[test]
@@ -137,9 +201,9 @@ mod tests {
         // advances, so outputs differ, but state (counters/FIFOs) must be
         // clean: an all-zero run after reset yields all-zero output.
         tile.reset();
-        let z = vec![vec![vec![false; d_k]; n]; 2];
+        let z = SpikeVolume::zeros(2, n, d_k);
         let (b, _) = tile.run(&z, &z, &z);
-        assert!(b.iter().flatten().flatten().all(|&x| !x));
+        assert_eq!(b.count_ones(), 0);
         drop(a);
     }
 
@@ -162,5 +226,23 @@ mod tests {
         assert_eq!(stats.encoder_samples,
                    heads as u64 * ((2 * n * n) + (2 + 1) * n * d_k) as u64
                        - heads as u64 * n as u64 * d_k as u64);
+    }
+
+    #[test]
+    fn parallel_mhsa_bit_identical_to_serial() {
+        let n = 8;
+        let d_k = 16;
+        let heads = 4;
+        let qkv: Vec<_> = (0..heads)
+            .map(|h| (mats(3, n, d_k, h * 7 + 1, 0.4),
+                      mats(3, n, d_k, h * 7 + 2, 0.4),
+                      mats(3, n, d_k, h * 7 + 3, 0.4)))
+            .collect();
+        let mut par = SsaEngine::new(heads, n, d_k, true, 21);
+        let mut ser = SsaEngine::new(heads, n, d_k, true, 21);
+        let (po, ps) = par.run_mhsa(&qkv);
+        let (so, ss) = ser.run_mhsa_serial(&qkv);
+        assert_eq!(po, so, "thread scheduling must not change outputs");
+        assert_eq!(ps, ss);
     }
 }

@@ -1,0 +1,211 @@
+//! Frozen pre-refactor bool-matrix SSA implementations.
+//!
+//! This module preserves, verbatim, the seed's `Vec<Vec<bool>>` tile
+//! simulation and algorithm-level reference from before the word-packed
+//! [`crate::spike`] refactor. They are *not* on any hot path; they exist
+//! so that
+//!
+//! * the equivalence tests can assert the packed datapath is bit-identical
+//!   to the pre-refactor implementation (same LFSR draw order, same
+//!   outputs, same stats), and
+//! * `benches/ssa_engine.rs` can measure the packed/parallel speedup
+//!   against the true seed baseline rather than a reconstruction.
+//!
+//! Known seed quirk, preserved here: the legacy tile counts Q.K matches
+//! in a *saturating* u8, so at `d_K = 256` a full-match count reads 255
+//! while [`legacy_ssa_reference`] (and the packed datapath) count 256.
+//! The divergence is observable only when a score draw hits exactly
+//! `r = 256`.
+
+use crate::ssa::lfsr::LfsrArray;
+use crate::ssa::tile::{draw_uniform, SsaStats};
+use crate::ssa::BitMatrix;
+
+/// The seed's cycle-level tile (one attention head) on bool matrices.
+pub struct LegacyTile {
+    pub n: usize,
+    pub d_k: usize,
+    pub causal: bool,
+    lfsr: LfsrArray,
+}
+
+impl LegacyTile {
+    pub fn new(n: usize, d_k: usize, causal: bool, seed: u32) -> Self {
+        assert!(d_k <= 256, "UINT8 counter bounds d_K at 256 (paper IV-B2)");
+        LegacyTile { n, d_k, causal, lfsr: LfsrArray::new(seed) }
+    }
+
+    /// The seed's `SsaTile::run`, unchanged.
+    pub fn run(&mut self, q: &[BitMatrix], k: &[BitMatrix],
+               v: &[BitMatrix]) -> (Vec<BitMatrix>, SsaStats) {
+        let t_steps = q.len();
+        let (n, d_k) = (self.n, self.d_k);
+        let words = n.div_ceil(64);
+        let mut stats = SsaStats::default();
+        let mut out = vec![vec![vec![false; d_k]; n]; t_steps];
+        // Flat SAC state (same semantics as the Sac structs).
+        let mut counters = vec![0u8; n * n];
+        let mut score_rows = vec![0u64; n * words];
+        let mut qset: Vec<usize> = Vec::with_capacity(n);
+        let mut kset: Vec<usize> = Vec::with_capacity(n);
+        let mut v_mask = vec![0u64; words];
+        // t ranges one past the data: the extra window drains the pipeline.
+        for t in 0..=t_steps {
+            for c in 0..d_k {
+                stats.cycles += 1;
+                stats.and_ops += 2 * (n * n) as u64; // hardware events
+                if t < t_steps {
+                    // Phase 1: count Q AND K, skipping zero bits.
+                    qset.clear();
+                    kset.clear();
+                    for (i, row) in q[t].iter().enumerate() {
+                        if row[c] {
+                            qset.push(i);
+                        }
+                    }
+                    for (j, row) in k[t].iter().enumerate() {
+                        if row[c] {
+                            kset.push(j);
+                        }
+                    }
+                    for &i in &qset {
+                        let base = i * n;
+                        for &j in &kset {
+                            counters[base + j] =
+                                counters[base + j].saturating_add(1);
+                        }
+                    }
+                    stats.counter_incs +=
+                        (qset.len() * kset.len()) as u64;
+                }
+                if t >= 1 {
+                    // Phase 2: column adders = popcount(score & V mask).
+                    for w in v_mask.iter_mut() {
+                        *w = 0;
+                    }
+                    for (j, row) in v[t - 1].iter().enumerate() {
+                        if row[c] {
+                            v_mask[j / 64] |= 1u64 << (j % 64);
+                        }
+                    }
+                    for i in 0..n {
+                        let mut sum = 0u32;
+                        for w in 0..words {
+                            sum += (score_rows[i * words + w]
+                                & v_mask[w]).count_ones();
+                        }
+                        stats.adder_ops += 1;
+                        stats.encoder_samples += 1;
+                        let r = draw_uniform(&mut self.lfsr, n as u32,
+                                             &mut stats);
+                        out[t - 1][i][c] = sum >= r;
+                    }
+                }
+            }
+            if t < t_steps {
+                // End of window: latch all N^2 scores (row-major draws).
+                for i in 0..n {
+                    for w in 0..words {
+                        score_rows[i * words + w] = 0;
+                    }
+                    for j in 0..n {
+                        stats.encoder_samples += 1;
+                        let masked = self.causal && j > i;
+                        let r = draw_uniform(&mut self.lfsr, d_k as u32,
+                                             &mut stats);
+                        let fire = !masked
+                            && (counters[i * n + j] as u32) >= r;
+                        if fire {
+                            score_rows[i * words + j / 64] |=
+                                1u64 << (j % 64);
+                        }
+                        counters[i * n + j] = 0;
+                    }
+                }
+            }
+        }
+        (out, stats)
+    }
+}
+
+/// The seed's algorithm-level `ssa_reference`, unchanged: consumes the
+/// LFSR stream in exactly the pipelined tile's order.
+pub fn legacy_ssa_reference(q: &[BitMatrix], k: &[BitMatrix],
+                            v: &[BitMatrix], n: usize, d_k: usize,
+                            causal: bool, seed: u32) -> Vec<BitMatrix> {
+    let t_steps = q.len();
+    let mut lfsr = LfsrArray::new(seed);
+    let mut stats = SsaStats::default();
+    let mut scores: Vec<Vec<Vec<bool>>> = Vec::with_capacity(t_steps);
+    let mut out = vec![vec![vec![false; d_k]; n]; t_steps];
+    for t in 0..=t_steps {
+        // Output draws for timestep t-1 happen first, column by column.
+        if t >= 1 {
+            for c in 0..d_k {
+                for (i, row) in out[t - 1].iter_mut().enumerate() {
+                    let sum: u32 = (0..n)
+                        .map(|j| {
+                            (scores[t - 1][i][j] && v[t - 1][j][c]) as u32
+                        })
+                        .sum();
+                    let r = draw_uniform(&mut lfsr, n as u32, &mut stats);
+                    row[c] = sum >= r;
+                }
+            }
+        }
+        // Score draws for timestep t at the end of its window.
+        if t < t_steps {
+            let mut s = vec![vec![false; n]; n];
+            for (i, si) in s.iter_mut().enumerate() {
+                for (j, sij) in si.iter_mut().enumerate() {
+                    let count: u32 = (0..d_k)
+                        .map(|c| (q[t][i][c] && k[t][j][c]) as u32)
+                        .sum();
+                    let masked = causal && j > i;
+                    let r = draw_uniform(&mut lfsr, d_k as u32, &mut stats);
+                    *sij = !masked && count >= r;
+                }
+            }
+            scores.push(s);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mats(t: usize, n: usize, d_k: usize, salt: usize, p: f64)
+            -> Vec<BitMatrix> {
+        (0..t)
+            .map(|ts| {
+                (0..n)
+                    .map(|i| {
+                        (0..d_k)
+                            .map(|c| {
+                                let h = ((ts * 131 + i * 31 + c * 7
+                                    + salt * 1009) as u64)
+                                    .wrapping_mul(0x9E3779B97F4A7C15);
+                                (h >> 11) as f64 / (1u64 << 53) as f64 < p
+                            })
+                            .collect()
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn legacy_tile_matches_legacy_reference() {
+        for &(n, d_k, causal) in &[(4usize, 8usize, false), (8, 16, true)] {
+            let q = mats(4, n, d_k, 1, 0.4);
+            let k = mats(4, n, d_k, 2, 0.4);
+            let v = mats(4, n, d_k, 3, 0.4);
+            let mut tile = LegacyTile::new(n, d_k, causal, 99);
+            let (got, _) = tile.run(&q, &k, &v);
+            let want = legacy_ssa_reference(&q, &k, &v, n, d_k, causal, 99);
+            assert_eq!(got, want, "n={n} d_k={d_k} causal={causal}");
+        }
+    }
+}

@@ -7,19 +7,48 @@
 //!   counter, score latch, d_K-bit FIFO for V alignment, output AND;
 //! * [`tile`]      — the N x N SAC array with streaming dataflow, column
 //!   adders and Bernoulli encoders; counts cycles and gate events;
-//! * [`engine`]    — multi-tile (one tile per head) engine + the
-//!   algorithm-level reference (paper Algorithm 1) used to prove the
-//!   cycle-level model bit-exact.
+//! * [`engine`]    — multi-tile (one tile per head) engine running heads
+//!   on parallel OS threads + the algorithm-level reference (paper
+//!   Algorithm 1) used to prove the cycle-level model bit-exact;
+//! * [`legacy`]    — the frozen pre-refactor `Vec<Vec<bool>>`
+//!   implementations, kept as the bit-exactness oracle and the
+//!   benchmark baseline.
+//!
+//! # Dataflow on packed spike words
+//!
+//! Since the bit-packing refactor the whole datapath runs on
+//! [`crate::spike`] tensors: Q/K/V arrive as [`SpikeVolume`]s (T packed
+//! `N x d_K` matrices), score rows are latched as packed `N`-bit words,
+//! and both SAC phases reduce to the hardware's own primitive —
+//! `popcount(a AND b)`:
+//!
+//! * phase 1 (score): the per-cycle UINT8 counter increments of the
+//!   (i,j)-SAC sum to `popcount(Q_i AND K_j)`, evaluated once per window
+//!   at latch time;
+//! * phase 2 (output): the N-input column adder is
+//!   `popcount(S_i AND V_col)` against the previous timestep's
+//!   transposed V (the d_K-deep FIFO alignment);
+//! * causal masking ANDs each latched score row with a precomputed
+//!   word mask ([`crate::spike::causal_row_mask`]).
+//!
+//! The LFSR byte-draw order is *identical* to the naive cell-by-cell
+//! simulation, so outputs are bit-exact against both the pre-refactor
+//! implementation and `ssa_reference` — the invariant the
+//! `tile_matches_algorithm_reference_bit_exactly` test enforces.
 
 pub mod engine;
+pub mod legacy;
 pub mod lfsr;
 pub mod sac;
 pub mod tile;
 
-pub use engine::{ssa_reference, SsaEngine};
+pub use crate::spike::{SpikeMatrix, SpikeVector, SpikeVolume};
+pub use engine::{ssa_reference, ssa_reference_bools, HeadQkv, SsaEngine};
 pub use lfsr::{Lfsr32, LfsrArray};
 pub use sac::{bernoulli_encode, Sac};
 pub use tile::{SsaStats, SsaTile};
 
-/// A binary matrix `[rows][cols]` (token-major spike matrix).
+/// A binary matrix `[rows][cols]` (token-major spike matrix) — the legacy
+/// unpacked interchange format. The datapath itself runs on
+/// [`SpikeMatrix`]/[`SpikeVolume`]; conversions are lossless.
 pub type BitMatrix = Vec<Vec<bool>>;

@@ -1,4 +1,5 @@
-//! The N x N SSA tile: cycle-accurate streaming simulation (paper Fig 5).
+//! The N x N SSA tile: cycle-accurate streaming simulation (paper Fig 5)
+//! on word-packed spike tensors.
 //!
 //! Dataflow (paper §IV-B2/§IV-C, *matrix-wise event-driven*): Q streams
 //! across rows, K and V across columns, one bit-column per clock cycle;
@@ -7,8 +8,8 @@
 //! runs concurrently (V is re-aligned by the in-SAC d_K-deep FIFO), so the
 //! tile is fully pipelined over timesteps: total cycles = (T+1) * d_K.
 
+use crate::spike::{and_popcount, causal_row_mask, SpikeMatrix, SpikeVolume};
 use crate::ssa::lfsr::LfsrArray;
-use crate::ssa::sac::Sac;
 use crate::ssa::BitMatrix;
 
 /// Gate-event counters for the energy model.
@@ -56,12 +57,13 @@ pub fn draw_uniform(lfsr: &mut LfsrArray, i_max: u32, stats: &mut SsaStats)
 }
 
 /// One SSA tile (= one attention head). Stateless across calls except the
-/// PRN stream: `reset` re-primes the SAC array for reuse across layers.
+/// PRN stream: `reset` re-primes the tile for reuse across layers.
 pub struct SsaTile {
     pub n: usize,
     pub d_k: usize,
     pub causal: bool,
-    sacs: Vec<Sac>,
+    /// Precomputed per-row causal word masks (row i keeps keys j <= i).
+    causal_masks: Option<Vec<Vec<u64>>>,
     lfsr: LfsrArray,
 }
 
@@ -72,120 +74,116 @@ impl SsaTile {
             n,
             d_k,
             causal,
-            sacs: (0..n * n).map(|_| Sac::new(d_k)).collect(),
+            causal_masks: causal.then(|| {
+                (0..n).map(|i| causal_row_mask(i, n)).collect()
+            }),
             lfsr: LfsrArray::new(seed),
         }
     }
 
-    /// Re-prime for the next layer (the tile is reused layer-wise).
-    pub fn reset(&mut self) {
-        for s in &mut self.sacs {
-            *s = Sac::new(self.d_k);
-        }
-    }
+    /// Re-prime for the next layer (the tile is reused layer-wise). All
+    /// per-run SAC state (counters, score latches, V FIFOs) lives on the
+    /// `run` stack, so only the PRN stream carries over — exactly the
+    /// hardware's behaviour, where the LFSR free-runs across layers.
+    pub fn reset(&mut self) {}
 
     /// Run T timesteps of attention for one head.
     ///
-    /// `q[t]`, `k[t]`, `v[t]` are `[N][d_K]` binary matrices. Returns the
-    /// per-timestep `[N][d_K]` binary attention outputs plus gate stats.
+    /// `q`, `k`, `v` are `[N x d_K]` spike volumes over T timesteps.
+    /// Returns the per-timestep `[N x d_K]` packed attention outputs plus
+    /// gate stats.
     ///
     /// Implementation note (§Perf, EXPERIMENTS.md): the simulation is
-    /// cycle- and bit-faithful to the SAC array (see [`Sac`] for the
-    /// cell-level model and the `ssa_reference` cross-check test), but is
-    /// computed with bit-parallel tricks: score rows live in u64 bitset
-    /// words so the phase-2 column adder is `popcount(scores & v_mask)`,
-    /// and phase-1 counting iterates only over *set* Q/K bits (the AND
-    /// output is zero elsewhere). The PRN draw order is unchanged, so
-    /// outputs are bit-identical to the naive cell-by-cell simulation.
-    pub fn run(&mut self, q: &[BitMatrix], k: &[BitMatrix], v: &[BitMatrix])
-               -> (Vec<BitMatrix>, SsaStats) {
-        let t_steps = q.len();
+    /// cycle- and bit-faithful to the SAC array (see [`crate::ssa::Sac`]
+    /// for the cell-level model and the `ssa_reference` cross-check
+    /// test), but is computed with the packed-word tricks the hardware
+    /// itself embodies: Q.K counts are `popcount(q_row AND k_row)` at
+    /// latch time (the per-cycle UINT8 increments sum to exactly that),
+    /// score rows live as packed words so the phase-2 column adder is
+    /// `popcount(scores AND v_column)`, and causal masking ANDs the
+    /// latched score row with a precomputed word mask. The PRN draw
+    /// order is unchanged, so outputs are bit-identical to the naive
+    /// cell-by-cell simulation (`legacy::LegacyTile`) — with one caveat
+    /// at `d_K = 256` where the legacy u8 counter saturates at 255 while
+    /// popcount (like `ssa_reference`) correctly counts 256.
+    pub fn run(&mut self, q: &SpikeVolume, k: &SpikeVolume, v: &SpikeVolume)
+               -> (SpikeVolume, SsaStats) {
+        let t_steps = q.t_steps();
         let (n, d_k) = (self.n, self.d_k);
-        let words = n.div_ceil(64);
+        for (name, vol) in [("q", q), ("k", k), ("v", v)] {
+            assert_eq!(vol.t_steps(), t_steps, "{name}: timestep mismatch");
+            // An empty volume (e.g. from_bools(&[])) has no shape to check.
+            assert!(t_steps == 0 || (vol.rows() == n && vol.cols() == d_k),
+                    "{name}: {}x{} spikes for a {n}x{d_k} tile",
+                    vol.rows(), vol.cols());
+        }
         let mut stats = SsaStats::default();
-        let mut out = vec![vec![vec![false; d_k]; n]; t_steps];
-        // Flat SAC state (same semantics as the Sac structs).
-        let mut counters = vec![0u8; n * n];
-        let mut score_rows = vec![0u64; n * words];
-        let mut qset: Vec<usize> = Vec::with_capacity(n);
-        let mut kset: Vec<usize> = Vec::with_capacity(n);
-        let mut v_mask = vec![0u64; words];
+        let mut out = SpikeVolume::zeros(t_steps, n, d_k);
+        // Latched score rows: S[i][j] packed along j.
+        let mut scores = SpikeMatrix::zeros(n, n);
         // t ranges one past the data: the extra window drains the pipeline.
         for t in 0..=t_steps {
+            // V of the *previous* timestep, transposed so each streaming
+            // cycle's bit-column is one packed row (the V-FIFO alignment).
+            let v_prev_t = (t >= 1).then(|| v.step(t - 1).transposed());
             for c in 0..d_k {
                 stats.cycles += 1;
                 stats.and_ops += 2 * (n * n) as u64; // hardware events
-                if t < t_steps {
-                    // Phase 1: count Q AND K, skipping zero bits.
-                    qset.clear();
-                    kset.clear();
-                    for (i, row) in q[t].iter().enumerate() {
-                        if row[c] {
-                            qset.push(i);
-                        }
-                    }
-                    for (j, row) in k[t].iter().enumerate() {
-                        if row[c] {
-                            kset.push(j);
-                        }
-                    }
-                    for &i in &qset {
-                        let base = i * n;
-                        for &j in &kset {
-                            counters[base + j] =
-                                counters[base + j].saturating_add(1);
-                        }
-                    }
-                    stats.counter_incs +=
-                        (qset.len() * kset.len()) as u64;
-                }
-                if t >= 1 {
-                    // Phase 2: column adders = popcount(score & V mask).
-                    for w in v_mask.iter_mut() {
-                        *w = 0;
-                    }
-                    for (j, row) in v[t - 1].iter().enumerate() {
-                        if row[c] {
-                            v_mask[j / 64] |= 1u64 << (j % 64);
-                        }
-                    }
+                if let Some(v_prev_t) = &v_prev_t {
+                    // Phase 2: column adders = popcount(score & V column).
+                    let v_mask = v_prev_t.row(c);
+                    let out_m = out.step_mut(t - 1);
                     for i in 0..n {
-                        let mut sum = 0u32;
-                        for w in 0..words {
-                            sum += (score_rows[i * words + w]
-                                & v_mask[w]).count_ones();
-                        }
+                        let sum = scores.row_and_popcount(i, v_mask);
                         stats.adder_ops += 1;
                         stats.encoder_samples += 1;
                         let r = draw_uniform(&mut self.lfsr, n as u32,
                                              &mut stats);
-                        out[t - 1][i][c] = sum >= r;
+                        if sum >= r {
+                            out_m.set(i, c, true);
+                        }
                     }
                 }
             }
             if t < t_steps {
                 // End of window: latch all N^2 scores (row-major draws).
+                // The packed Q.K popcount equals the sum of the per-cycle
+                // phase-1 counter increments.
+                let qm = q.step(t);
+                let km = k.step(t);
                 for i in 0..n {
-                    for w in 0..words {
-                        score_rows[i * words + w] = 0;
-                    }
+                    scores.clear_row(i);
                     for j in 0..n {
+                        let count = and_popcount(qm.row(i), km.row(j));
+                        stats.counter_incs += count as u64;
                         stats.encoder_samples += 1;
-                        let masked = self.causal && j > i;
                         let r = draw_uniform(&mut self.lfsr, d_k as u32,
                                              &mut stats);
-                        let fire = !masked
-                            && (counters[i * n + j] as u32) >= r;
-                        if fire {
-                            score_rows[i * words + j / 64] |=
-                                1u64 << (j % 64);
+                        if count >= r {
+                            scores.set(i, j, true);
                         }
-                        counters[i * n + j] = 0;
+                    }
+                    if let Some(masks) = &self.causal_masks {
+                        for (w, m) in
+                            scores.row_mut(i).iter_mut().zip(&masks[i])
+                        {
+                            *w &= m;
+                        }
                     }
                 }
             }
         }
         (out, stats)
+    }
+
+    /// Legacy-format convenience: run on `Vec<Vec<bool>>` timesteps.
+    /// Lossless pack/unpack around [`Self::run`].
+    pub fn run_bools(&mut self, q: &[BitMatrix], k: &[BitMatrix],
+                     v: &[BitMatrix]) -> (Vec<BitMatrix>, SsaStats) {
+        let (out, stats) = self.run(&SpikeVolume::from_bools(q),
+                                    &SpikeVolume::from_bools(k),
+                                    &SpikeVolume::from_bools(v));
+        (out.to_bools(), stats)
     }
 }
 
@@ -198,10 +196,14 @@ mod tests {
         (0..n).map(|i| (0..d).map(|c| f(i, c)).collect()).collect()
     }
 
+    fn vol(mats: Vec<BitMatrix>) -> SpikeVolume {
+        SpikeVolume::from_bools(&mats)
+    }
+
     #[test]
     fn pipeline_cycle_count() {
         let mut tile = SsaTile::new(4, 8, false, 1);
-        let z = vec![bits(4, 8, |_, _| false); 3];
+        let z = vol(vec![bits(4, 8, |_, _| false); 3]);
         let (_, stats) = tile.run(&z, &z, &z);
         assert_eq!(stats.cycles, (3 + 1) * 8);
     }
@@ -209,18 +211,18 @@ mod tests {
     #[test]
     fn zero_inputs_give_zero_outputs() {
         let mut tile = SsaTile::new(4, 8, false, 2);
-        let z = vec![bits(4, 8, |_, _| false); 2];
+        let z = vol(vec![bits(4, 8, |_, _| false); 2]);
         let (out, _) = tile.run(&z, &z, &z);
-        assert!(out.iter().flatten().flatten().all(|&b| !b));
+        assert_eq!(out.count_ones(), 0);
     }
 
     #[test]
     fn saturated_inputs_fire_everywhere() {
         // Q=K=V=1 => counts == d_k and sums == N => encoders always fire.
         let mut tile = SsaTile::new(4, 8, false, 3);
-        let ones = vec![bits(4, 8, |_, _| true); 2];
+        let ones = vol(vec![bits(4, 8, |_, _| true); 2]);
         let (out, _) = tile.run(&ones, &ones, &ones);
-        assert!(out.iter().flatten().flatten().all(|&b| b));
+        assert_eq!(out.count_ones(), 2 * 4 * 8);
     }
 
     #[test]
@@ -230,12 +232,12 @@ mod tests {
         let n = 4;
         let d_k = 8;
         let mut tile = SsaTile::new(n, d_k, true, 4);
-        let q = vec![bits(n, d_k, |_, _| true); 3];
+        let q = vol(vec![bits(n, d_k, |_, _| true); 3]);
         let k = q.clone();
-        let v = vec![bits(n, d_k, |i, _| i != 0); 3];
+        let v = vol(vec![bits(n, d_k, |i, _| i != 0); 3]);
         let (out, _) = tile.run(&q, &k, &v);
         for t in 0..3 {
-            assert!(out[t][0].iter().all(|&b| !b), "t={t}");
+            assert_eq!(out.step(t).row_vector(0).count_ones(), 0, "t={t}");
         }
     }
 
@@ -252,19 +254,29 @@ mod tests {
                 as u64;
             (h.wrapping_mul(0x9E3779B97F4A7C15) >> 63) & 1 == 1
         };
-        let q: Vec<_> =
-            (0..t_steps).map(|t| bits(n, d_k, |i, c| pat(t, i, c, 1))).collect();
-        let k: Vec<_> =
-            (0..t_steps).map(|t| bits(n, d_k, |i, c| pat(t, i, c, 2))).collect();
-        let v = vec![bits(n, d_k, |_, _| true); t_steps];
+        let q = vol((0..t_steps)
+            .map(|t| bits(n, d_k, |i, c| pat(t, i, c, 1))).collect());
+        let k = vol((0..t_steps)
+            .map(|t| bits(n, d_k, |i, c| pat(t, i, c, 2))).collect());
+        let v = vol(vec![bits(n, d_k, |_, _| true); t_steps]);
         let (out, _) = tile.run(&q, &k, &v);
-        let rate: f64 = out
-            .iter()
-            .flat_map(|m| m.iter().flatten())
-            .map(|&b| b as u32 as f64)
-            .sum::<f64>()
-            / (t_steps * n * d_k) as f64;
+        let rate = out.density();
         // E[score] = E[QK dot]/d_k = 0.25; V=1 => E[A] = ceil-ish 0.25.
         assert!((rate - 0.25).abs() < 0.03, "rate {rate}");
+    }
+
+    #[test]
+    fn run_bools_wrapper_roundtrips() {
+        let n = 5;
+        let d_k = 16;
+        let q = vec![bits(n, d_k, |i, c| (i + c) % 3 == 0); 2];
+        let k = vec![bits(n, d_k, |i, c| (i * c) % 5 == 1); 2];
+        let v = vec![bits(n, d_k, |i, c| (i ^ c) % 2 == 0); 2];
+        let (a, sa) = SsaTile::new(n, d_k, false, 6).run_bools(&q, &k, &v);
+        let (b, sb) = SsaTile::new(n, d_k, false, 6).run(
+            &SpikeVolume::from_bools(&q), &SpikeVolume::from_bools(&k),
+            &SpikeVolume::from_bools(&v));
+        assert_eq!(a, b.to_bools());
+        assert_eq!(sa, sb);
     }
 }

@@ -7,7 +7,7 @@
 //!   natively (same featurization; used by the serving example to create
 //!   live request streams).
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
 use crate::tensor::TensorFile;
 use crate::util::Rng;
@@ -32,15 +32,30 @@ impl EvalSet {
         Ok(EvalSet { x: xt.as_f32(), labels, n, sample_len })
     }
 
-    /// Batch `i` of size `b` (must divide into the set).
-    pub fn batch(&self, i: usize, b: usize) -> (&[f32], &[i32]) {
+    /// Batch `i` of size `b`. Errors (instead of panicking on a bad
+    /// slice) when the batch would run past the end of the set.
+    pub fn batch(&self, i: usize, b: usize) -> Result<(&[f32], &[i32])> {
+        ensure!(b > 0, "batch size must be positive");
         let lo = i * b;
-        (&self.x[lo * self.sample_len..(lo + b) * self.sample_len],
-         &self.labels[lo..lo + b])
+        ensure!(lo + b <= self.n,
+                "batch {i} of size {b} overruns the eval set: samples \
+                 {lo}..{} of {}", lo + b, self.n);
+        Ok((&self.x[lo * self.sample_len..(lo + b) * self.sample_len],
+            &self.labels[lo..lo + b]))
     }
 
-    pub fn n_batches(&self, b: usize) -> usize {
-        self.n / b
+    /// Number of batches of size `b`. Errors when `b` does not divide the
+    /// set size — the old behaviour silently dropped the remainder, so an
+    /// accuracy sweep could quietly score a subset of the exported
+    /// samples.
+    pub fn n_batches(&self, b: usize) -> Result<usize> {
+        ensure!(b > 0, "batch size must be positive");
+        ensure!(self.n % b == 0,
+                "eval set of {} samples does not divide into batches of \
+                 {b}: {} trailing samples would be silently dropped \
+                 (re-export the eval set or change the batch size)",
+                self.n, self.n % b);
+        Ok(self.n / b)
     }
 }
 
@@ -171,6 +186,44 @@ fn sigmoid(x: f64) -> f32 {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn toy_set(n: usize, sample_len: usize) -> EvalSet {
+        EvalSet {
+            x: vec![0.5; n * sample_len],
+            labels: vec![1; n],
+            n,
+            sample_len,
+        }
+    }
+
+    #[test]
+    fn eval_set_serves_full_batches() {
+        let set = toy_set(10, 3);
+        assert_eq!(set.n_batches(5).unwrap(), 2);
+        assert_eq!(set.n_batches(1).unwrap(), 10);
+        let (x, l) = set.batch(1, 5).unwrap();
+        assert_eq!(x.len(), 5 * 3);
+        assert_eq!(l.len(), 5);
+    }
+
+    #[test]
+    fn eval_set_rejects_non_dividing_batch_size() {
+        // Regression: 10 % 4 != 0 used to silently score only 8 samples.
+        let set = toy_set(10, 3);
+        let err = set.n_batches(4).unwrap_err().to_string();
+        assert!(err.contains("silently dropped"), "{err}");
+        assert!(set.n_batches(0).is_err());
+    }
+
+    #[test]
+    fn eval_set_rejects_out_of_range_batch() {
+        // Regression: batch(2, 5) on 10 samples used to panic on a bad
+        // slice; batch(1, 6) used to slice out of range.
+        let set = toy_set(10, 3);
+        assert!(set.batch(2, 5).is_err());
+        assert!(set.batch(1, 6).is_err());
+        assert!(set.batch(0, 0).is_err());
+    }
 
     #[test]
     fn qpsk_unit_power() {

@@ -17,7 +17,10 @@ use xpikeformer::repro::accuracy::{evaluate, install_analog,
 use xpikeformer::repro::ReproCtx;
 use xpikeformer::runtime::{Artifact, Engine};
 use xpikeformer::snn::LifArray;
-use xpikeformer::ssa::{ssa_reference, SsaTile};
+use xpikeformer::spike::{SpikeVector, SpikeVolume};
+use xpikeformer::ssa::legacy::{legacy_ssa_reference, LegacyTile};
+use xpikeformer::ssa::{ssa_reference, ssa_reference_bools, SsaEngine,
+                       SsaTile};
 use xpikeformer::util::Rng;
 use xpikeformer::workloads::{EvalSet, MimoGenerator};
 
@@ -45,6 +48,12 @@ macro_rules! require_artifact {
 // Substrate cross-checks (no artifacts required)
 // ---------------------------------------------------------------------------
 
+fn random_bool_mats(rng: &mut Rng, t: usize, n: usize, dk: usize, p: f64)
+                    -> Vec<Vec<Vec<bool>>> {
+    (0..t).map(|_| (0..n).map(|_| (0..dk)
+        .map(|_| rng.gen_bool(p)).collect()).collect()).collect()
+}
+
 #[test]
 fn ssa_tile_crosscheck_larger_shapes() {
     // Beyond the unit tests: paper-scale-ish tiles stay bit-exact vs the
@@ -52,16 +61,86 @@ fn ssa_tile_crosscheck_larger_shapes() {
     for &(n, dk, t, causal) in &[(37usize, 32usize, 4usize, true),
                                  (64, 64, 3, false)] {
         let mut rng = Rng::seed_from_u64(7);
-        let mk = |rng: &mut Rng| -> Vec<Vec<Vec<bool>>> {
-            (0..t).map(|_| (0..n).map(|_| (0..dk)
-                .map(|_| rng.gen_bool(0.3)).collect()).collect()).collect()
-        };
-        let (q, k, v) = (mk(&mut rng), mk(&mut rng), mk(&mut rng));
+        let q = SpikeVolume::from_bools(
+            &random_bool_mats(&mut rng, t, n, dk, 0.3));
+        let k = SpikeVolume::from_bools(
+            &random_bool_mats(&mut rng, t, n, dk, 0.3));
+        let v = SpikeVolume::from_bools(
+            &random_bool_mats(&mut rng, t, n, dk, 0.3));
         let mut tile = SsaTile::new(n, dk, causal, 99);
         let (got, stats) = tile.run(&q, &k, &v);
         let want = ssa_reference(&q, &k, &v, n, dk, causal, 99);
         assert_eq!(got, want);
         assert_eq!(stats.cycles, ((t + 1) * dk) as u64);
+    }
+}
+
+#[test]
+fn packed_datapath_bit_identical_to_pre_refactor_bools() {
+    // The ISSUE's equivalence matrix: odd widths (1, 63, 64, 65, 127),
+    // empty volumes, zero and full density. The packed tile, the packed
+    // reference, the frozen legacy tile and the frozen legacy reference
+    // must all agree bit-for-bit (identical LFSR draw order).
+    let shapes: &[(usize, usize, usize, bool, f64)] = &[
+        (1, 8, 3, false, 0.5),
+        (63, 16, 2, true, 0.4),
+        (64, 16, 2, false, 0.4),
+        (65, 16, 2, true, 0.4),
+        (127, 8, 2, false, 0.3),
+        (5, 8, 0, false, 0.5),  // empty: zero timesteps
+        (9, 32, 2, true, 0.0),  // zero density
+        (9, 32, 2, false, 1.0), // full density
+    ];
+    for &(n, dk, t, causal, p) in shapes {
+        let mut rng = Rng::seed_from_u64(17);
+        let q = random_bool_mats(&mut rng, t, n, dk, p);
+        let k = random_bool_mats(&mut rng, t, n, dk, p);
+        let v = random_bool_mats(&mut rng, t, n, dk, p);
+        let tag = format!("n={n} dk={dk} t={t} causal={causal} p={p}");
+        // Lossless round-trip.
+        let qp = SpikeVolume::from_bools(&q);
+        assert_eq!(qp.to_bools(), q, "{tag}: roundtrip");
+        let kp = SpikeVolume::from_bools(&k);
+        let vp = SpikeVolume::from_bools(&v);
+        // Packed reference == pre-refactor bool reference.
+        let r_packed = ssa_reference_bools(&q, &k, &v, n, dk, causal, 99);
+        let r_legacy = legacy_ssa_reference(&q, &k, &v, n, dk, causal, 99);
+        assert_eq!(r_packed, r_legacy, "{tag}: reference");
+        // Packed tile == pre-refactor bool tile (outputs and stats).
+        let (t_packed, s_packed) =
+            SsaTile::new(n, dk, causal, 99).run(&qp, &kp, &vp);
+        let (t_legacy, s_legacy) =
+            LegacyTile::new(n, dk, causal, 99).run(&q, &k, &v);
+        assert_eq!(t_packed.to_bools(), t_legacy, "{tag}: tile");
+        assert_eq!(s_packed, s_legacy, "{tag}: stats");
+        // And the tile still matches the algorithm reference.
+        assert_eq!(t_packed.to_bools(), r_packed, "{tag}: tile vs ref");
+    }
+}
+
+#[test]
+fn parallel_mhsa_matches_legacy_per_head() {
+    // The threaded engine's per-head outputs equal a legacy bool tile
+    // run head-by-head with the engine's per-head seeds.
+    let (heads, n, dk, t) = (4usize, 16usize, 16usize, 3usize);
+    let seed = 31u32;
+    let mut rng = Rng::seed_from_u64(23);
+    let qkv_bools: Vec<_> = (0..heads)
+        .map(|_| (random_bool_mats(&mut rng, t, n, dk, 0.4),
+                  random_bool_mats(&mut rng, t, n, dk, 0.4),
+                  random_bool_mats(&mut rng, t, n, dk, 0.4)))
+        .collect();
+    let qkv: Vec<_> = qkv_bools.iter()
+        .map(|(q, k, v)| (SpikeVolume::from_bools(q),
+                          SpikeVolume::from_bools(k),
+                          SpikeVolume::from_bools(v)))
+        .collect();
+    let mut engine = SsaEngine::new(heads, n, dk, true, seed);
+    let (outs, _) = engine.run_mhsa(&qkv);
+    for (h, ((q, k, v), out)) in qkv_bools.iter().zip(&outs).enumerate() {
+        let mut tile = LegacyTile::new(n, dk, true, seed ^ (h as u32 + 1));
+        let (want, _) = tile.run(q, k, v);
+        assert_eq!(out.to_bools(), want, "head {h}");
     }
 }
 
@@ -84,12 +163,13 @@ fn aimc_end_to_end_spiking_layer() {
     let mut lif = LifArray::new(dout);
     let mut fired = vec![0f64; dout];
     for _ in 0..trials {
-        let spikes: Vec<bool> =
-            rates.iter().map(|&p| rng.gen_bool(p as f64)).collect();
+        let spikes = SpikeVector::from_bools(
+            &rates.iter().map(|&p| rng.gen_bool(p as f64))
+                .collect::<Vec<_>>());
         for (o, f) in m.mvm_lif(&mut rng, &spikes, &mut lif, 0.0, &hw)
             .iter().zip(fired.iter_mut())
         {
-            *f += *o as u8 as f64;
+            *f += o as u8 as f64;
         }
     }
     // Ideal rate-domain pre-activation and the LIF steady-state rate:
