@@ -1,6 +1,7 @@
 //! Coordinator benchmarks: serving throughput/latency across batching
-//! policies (the L3 ablation for DESIGN.md §8). Skips before
-//! `make artifacts`.
+//! policies (the L3 ablation for DESIGN.md §8), on the native simulator
+//! backend — no artifacts required, so the numbers are reproducible on
+//! any machine.
 //!
 //! Run: `cargo bench --bench coordinator`
 
@@ -8,29 +9,24 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
-use xpikeformer::config::RunConfig;
+use xpikeformer::config::{gpt_native, HardwareConfig, RunConfig};
 use xpikeformer::coordinator::Server;
-use xpikeformer::runtime::{Artifact, Engine};
+use xpikeformer::model::{NativeBackend, XpikeModel};
 use xpikeformer::util::Rng;
 use xpikeformer::workloads::MimoGenerator;
 
-fn run_once(artifacts: &str, tag: &str, max_batch: usize,
-            window_us: u64, n_requests: usize, concurrency: usize) {
-    let engine = match Engine::load(artifacts, tag) {
-        Ok(e) => e,
-        Err(e) => {
-            println!("skip {tag}: {e:#}");
-            return;
-        }
-    };
-    let nt = engine.artifact.manifest.config.nt;
-    let nr = engine.artifact.manifest.config.nr;
+fn run_once(max_batch: usize, window_us: u64, n_requests: usize,
+            concurrency: usize) {
+    let (nt, nr) = (2usize, 2usize);
+    let dims = gpt_native(2, 64, 2, nt, nr, 4);
+    let model = XpikeModel::new(&dims, &HardwareConfig::default(), 42);
+    let backend = NativeBackend::new(model, max_batch.max(1));
     let cfg = RunConfig {
         max_batch,
         batch_window_us: window_us,
         ..RunConfig::default()
     };
-    let server = Server::start(engine, cfg);
+    let server = Server::start(backend, cfg);
     let done = Arc::new(AtomicUsize::new(0));
     let t0 = Instant::now();
     let mut handles = Vec::new();
@@ -65,29 +61,11 @@ fn run_once(artifacts: &str, tag: &str, max_batch: usize,
 }
 
 fn main() {
-    let artifacts = "artifacts";
-    let tags = match Artifact::discover(artifacts) {
-        Ok(t) if !t.is_empty() => t,
-        _ => {
-            println!("no artifacts — run `make artifacts`; skipping");
-            return;
-        }
-    };
-    let tag = match tags.iter().find(|t| t.contains("gpt_xpike")
-        && t.ends_with("_b8"))
-        .or_else(|| tags.iter().find(|t| t.contains("gpt_xpike")
-            && t.ends_with("_b32"))) {
-        Some(t) => t.clone(),
-        None => {
-            println!("no gpt_xpike artifact; skipping");
-            return;
-        }
-    };
-    println!("== coordinator serving benchmarks ({tag}) ==");
+    println!("== coordinator serving benchmarks (native backend) ==");
     let n = 128;
     // Batching ablation: no batching vs windows vs full batch.
-    run_once(artifacts, &tag, 1, 0, n, 8);
-    run_once(artifacts, &tag, 4, 500, n, 8);
-    run_once(artifacts, &tag, 8, 500, n, 16);
-    run_once(artifacts, &tag, 8, 2000, n, 16);
+    run_once(1, 0, n, 8);
+    run_once(4, 500, n, 8);
+    run_once(8, 500, n, 16);
+    run_once(8, 2000, n, 16);
 }

@@ -1,0 +1,108 @@
+//! Native model forward benchmarks: whole spiking-transformer inferences
+//! on the composed hardware simulators (AIMC crossbars + SSA tiles +
+//! LIF banks), at the native presets and a scaled-up stress point.
+//! Overwrites the repo-root `BENCH_model.json` (override the path with
+//! `BENCH_MODEL_JSON=...`) so the native-pipeline perf trajectory is
+//! tracked across PRs.
+//!
+//! Run: `cargo bench --bench model_forward`
+
+use std::time::Duration;
+
+use xpikeformer::backend::InferenceBackend;
+use xpikeformer::config::{gpt_native, vit_native, HardwareConfig,
+                          ModelDims};
+use xpikeformer::model::{NativeBackend, XpikeModel};
+use xpikeformer::util::bench::{bench, black_box, BenchResult};
+use xpikeformer::util::json::escape;
+use xpikeformer::util::Rng;
+
+fn result_json(r: &BenchResult) -> String {
+    format!(
+        "{{\"name\": \"{}\", \"mean_us\": {:.3}, \"p50_us\": {:.3}, \
+         \"p95_us\": {:.3}, \"iters\": {}}}",
+        escape(&r.name),
+        r.mean.as_secs_f64() * 1e6,
+        r.p50.as_secs_f64() * 1e6,
+        r.p95.as_secs_f64() * 1e6,
+        r.iters
+    )
+}
+
+fn bench_model(dims: &ModelDims, budget: Duration, records: &mut Vec<String>)
+               -> f64 {
+    let model = XpikeModel::new(dims, &HardwareConfig::default(), 42);
+    let mut rng = Rng::seed_from_u64(1);
+    let x: Vec<f32> = (0..model.sample_len())
+        .map(|_| rng.uniform_f32())
+        .collect();
+    let r = bench(
+        &format!("forward {} (T={})", dims.name, dims.t_steps),
+        1,
+        budget,
+        || {
+            black_box(model.forward(&x, 7).unwrap());
+        },
+    );
+    let per_inf = r.mean.as_secs_f64();
+    println!("    -> {:.2} ms/inference, {:.1} inf/s", per_inf * 1e3,
+             1.0 / per_inf);
+    records.push(result_json(&r));
+    per_inf
+}
+
+fn main() {
+    println!("== native model forward benchmarks ==");
+    let budget = Duration::from_millis(800);
+    let mut records: Vec<String> = Vec::new();
+
+    let vit = vit_native(2, 64, 2, 4);
+    let vit_s = bench_model(&vit, budget, &mut records);
+    let gpt = gpt_native(2, 64, 2, 2, 2, 4);
+    let gpt_s = bench_model(&gpt, budget, &mut records);
+    // Stress point: deeper/wider than the serving presets.
+    let big = vit_native(4, 128, 4, 6);
+    let big_s = bench_model(&big, budget, &mut records);
+
+    // Batched backend throughput (parallel lanes on scoped threads).
+    let batch = 8usize;
+    let model = XpikeModel::new(&vit, &HardwareConfig::default(), 42);
+    let backend = NativeBackend::new(model, batch);
+    let mut rng = Rng::seed_from_u64(2);
+    let xb: Vec<f32> = (0..batch * backend.x_len_per_sample())
+        .map(|_| rng.uniform_f32())
+        .collect();
+    let r_batch = bench(
+        &format!("backend batch={batch} {}", vit.name),
+        1,
+        budget,
+        || {
+            black_box(backend.run(&xb, 7).unwrap());
+        },
+    );
+    let lane_par = vit_s * batch as f64 / r_batch.mean.as_secs_f64();
+    println!("    -> lane parallelism: {lane_par:.2}x of serial");
+    records.push(result_json(&r_batch));
+
+    let path = std::env::var("BENCH_MODEL_JSON").unwrap_or_else(|_| {
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_model.json").into()
+    });
+    let json = format!(
+        "{{\n  \"bench\": \"model_forward\",\n  \"measured\": true,\n  \
+         \"threads\": {},\n  \"forward_ms\": {{\"vit_native_2-64\": \
+         {:.3}, \"gpt_native_2-64_2x2\": {:.3}, \"vit_native_4-128\": \
+         {:.3}}},\n  \"batch\": {{\"lanes\": {batch}, \
+         \"lane_parallelism\": {lane_par:.3}}},\n  \"results\": [\n    \
+         {}\n  ]\n}}\n",
+        std::thread::available_parallelism()
+            .map(|p| p.get()).unwrap_or(1),
+        vit_s * 1e3,
+        gpt_s * 1e3,
+        big_s * 1e3,
+        records.join(",\n    ")
+    );
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

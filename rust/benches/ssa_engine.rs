@@ -10,7 +10,7 @@
 
 use std::time::Duration;
 
-use xpikeformer::spike::SpikeVolume;
+use xpikeformer::spike::{and_popcount, and_popcount_scalar, SpikeVolume};
 use xpikeformer::ssa::legacy::LegacyTile;
 use xpikeformer::ssa::{BitMatrix, SsaEngine, SsaTile};
 use xpikeformer::util::bench::{bench, black_box, BenchResult};
@@ -44,6 +44,49 @@ fn main() {
     println!("== SSA engine benchmarks ==");
     let budget = Duration::from_millis(400);
     let mut records: Vec<String> = Vec::new();
+
+    // ---- and_popcount: scalar loop vs the SIMD dispatch --------------
+    // Row widths from one SSA tile row (2 words at N=128) up to the
+    // long-sequence regime where the AVX2/NEON path earns its keep.
+    let mut popcount_speedup_widest = 0.0f64;
+    for &words in &[2usize, 4, 16, 64, 256] {
+        let mut rng = Rng::seed_from_u64(3);
+        let a: Vec<u64> = (0..words).map(|_| rng.next_u64()).collect();
+        let b: Vec<u64> = (0..words).map(|_| rng.next_u64()).collect();
+        assert_eq!(and_popcount(&a, &b), and_popcount_scalar(&a, &b));
+        // Many rows per iteration so the timer sees real work.
+        let reps = 4096;
+        let r_simd = bench(
+            &format!("and_popcount simd-dispatch {words}w"),
+            2,
+            budget / 4,
+            || {
+                let mut acc = 0u32;
+                for _ in 0..reps {
+                    acc = acc.wrapping_add(and_popcount(&a, &b));
+                }
+                black_box(acc);
+            },
+        );
+        let r_scalar = bench(
+            &format!("and_popcount scalar {words}w"),
+            2,
+            budget / 4,
+            || {
+                let mut acc = 0u32;
+                for _ in 0..reps {
+                    acc = acc.wrapping_add(and_popcount_scalar(&a, &b));
+                }
+                black_box(acc);
+            },
+        );
+        let speedup =
+            r_scalar.mean.as_secs_f64() / r_simd.mean.as_secs_f64();
+        popcount_speedup_widest = speedup; // last (widest) wins
+        println!("    -> simd speedup at {words} words: {speedup:.2}x");
+        records.push(result_json(&r_simd));
+        records.push(result_json(&r_scalar));
+    }
 
     // ---- Single-tile: packed vs the frozen pre-refactor bool tile ----
     for &(n, dk, t) in &[
@@ -159,11 +202,12 @@ fn main() {
     });
     let json = format!(
         "{{\n  \"bench\": \"ssa_engine\",\n  \"measured\": true,\n  \
-         \"threads\": {},\n  \"mhsa\": {{\"heads\": {heads}, \"n\": {n}, \
-         \"d_k\": {dk}, \"t_steps\": {t},\n    \"speedup_packed\": \
-         {speedup_pack:.3}, \"speedup_parallel\": {speedup_par:.3}, \
-         \"speedup_total\": {speedup_total:.3}}},\n  \"results\": [\n    \
-         {}\n  ]\n}}\n",
+         \"threads\": {},\n  \"popcount\": {{\"speedup_simd_256w\": \
+         {popcount_speedup_widest:.3}}},\n  \"mhsa\": {{\"heads\": \
+         {heads}, \"n\": {n}, \"d_k\": {dk}, \"t_steps\": {t},\n    \
+         \"speedup_packed\": {speedup_pack:.3}, \"speedup_parallel\": \
+         {speedup_par:.3}, \"speedup_total\": {speedup_total:.3}}},\n  \
+         \"results\": [\n    {}\n  ]\n}}\n",
         std::thread::available_parallelism()
             .map(|p| p.get()).unwrap_or(1),
         records.join(",\n    ")

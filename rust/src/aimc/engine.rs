@@ -61,6 +61,21 @@ impl AimcEngine {
             .map(|m| m.mvm_lif(rng, spikes, lif, t_seconds, &self.hw))
     }
 
+    /// GDC output scale of one layer at the given drift setting: outputs
+    /// are divided by this alpha (1.0 when GDC is off or the layer is
+    /// freshly programmed). The native model caches these per drift
+    /// setting rather than re-measuring the whole cell population per
+    /// MVM — exactly the hardware's periodic-calibration behaviour.
+    pub fn gdc_scale(&self, name: &str, drift: &DriftConfig) -> Option<f32> {
+        self.layer(name).map(|m| {
+            if drift.gdc {
+                gdc_alpha(&m.all_cells(), drift.t_seconds, &self.hw)
+            } else {
+                1.0
+            }
+        })
+    }
+
     /// Effective weights of every layer at the given drift time.
     ///
     /// GDC is *global per layer*: hardware calibrates each tile group with

@@ -107,6 +107,33 @@ impl MappedMatrix {
         lif.step(&pre)
     }
 
+    /// ADC conversions one MVM performs: every output column digitizes
+    /// once per row block (the shared-SAR readout of each SA).
+    pub fn conversions_per_mvm(&self) -> u64 {
+        (self.row_blocks() * self.d_out) as u64
+    }
+
+    /// Word-line (DAC driver) pulses one MVM fires for this packed drive:
+    /// each *set* bit of every row-block slice pulses its row line across
+    /// all column blocks it spans — `count_ones` over the actual packed
+    /// bit-line drive words, the measured input-path count behind
+    /// [`crate::energy::constants::E_WL_PULSE`]. Allocation-free (range
+    /// popcounts, no slice materialization): this runs once per MVM on
+    /// the native forward hot path.
+    pub fn wl_pulses(&self, spikes: &SpikeVector, hw: &HardwareConfig)
+                     -> u64 {
+        assert_eq!(spikes.len(), self.d_in);
+        let xb = hw.crossbar_dim;
+        let cb = self.col_blocks() as u64;
+        (0..self.row_blocks())
+            .map(|rb| {
+                let lo = rb * xb;
+                let hi = (lo + xb).min(self.d_in);
+                spikes.count_ones_range(lo, hi) as u64 * cb
+            })
+            .sum()
+    }
+
     /// Effective (drifted) weights, flattened back to `d_in x d_out`
     /// row-major — what the runtime feeds the HLO executable.
     pub fn weights_at(&self, t_seconds: f64, hw: &HardwareConfig) -> Vec<f32> {
@@ -201,6 +228,21 @@ mod tests {
         for (a, b) in back.iter().zip(&w) {
             assert!((a - b).abs() <= step / 2.0 + 1e-6);
         }
+    }
+
+    #[test]
+    fn wl_pulses_count_active_rows_times_col_blocks() {
+        let hw = noise_free_hw();
+        let mut rng = Rng::seed_from_u64(13);
+        // 300x300 -> 3 row blocks x 3 col blocks.
+        let w = rand_weights(300 * 300, 0.05);
+        let m = MappedMatrix::program(&mut rng, &w, 300, 300, &hw);
+        assert_eq!(m.conversions_per_mvm(), 3 * 300);
+        let bools: Vec<bool> = (0..300).map(|i| i % 3 == 0).collect();
+        let spikes = SpikeVector::from_bools(&bools);
+        // 100 active rows, each spanning 3 column blocks.
+        assert_eq!(m.wl_pulses(&spikes, &hw), 100 * 3);
+        assert_eq!(m.wl_pulses(&SpikeVector::zeros(300), &hw), 0);
     }
 
     #[test]

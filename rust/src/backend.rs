@@ -1,0 +1,107 @@
+//! Backend abstraction: anything that can run the fixed-shape spiking
+//! transformer forward pass for the serving stack.
+//!
+//! The coordinator ([`crate::coordinator`]) batches requests against a
+//! fixed executable batch size, and the accuracy harness
+//! ([`crate::repro::accuracy`]) sweeps eval sets — neither cares *what*
+//! executes the forward: the native Rust hardware simulator
+//! ([`crate::model::NativeBackend`], the default), the PJRT/HLO runtime
+//! ([`crate::runtime::Engine`], behind the `pjrt` feature), or a test
+//! mock. This trait is that seam.
+
+use anyhow::Result;
+
+/// A fixed-shape spiking-transformer executor.
+///
+/// Contract (shared with the AOT/HLO artifacts):
+/// * `run` takes the flattened data batch of `batch() *
+///   x_len_per_sample()` f32 features and a seed driving every stochastic
+///   element, and returns flattened logits `[t_max, batch, classes]`
+///   (timestep-major, then batch lane, then class).
+/// * A sample's logits depend only on its own lane given the seed, so the
+///   dynamic batcher may pad unused lanes with copies of real samples and
+///   discard their outputs.
+/// * Identical `(x, seed)` pairs must produce bit-identical logits.
+pub trait InferenceBackend: Send + 'static {
+    /// Execute one fixed-shape forward pass.
+    fn run(&self, x: &[f32], seed: u32) -> Result<Vec<f32>>;
+
+    /// Executable batch size (the hardware's physical parallelism).
+    fn batch(&self) -> usize;
+
+    /// Spike-encoding length T of the compiled model.
+    fn t_max(&self) -> usize;
+
+    /// Output classes per sample.
+    fn classes(&self) -> usize;
+
+    /// Flattened feature length of one sample.
+    fn x_len_per_sample(&self) -> usize;
+
+    /// Transmit antennas of the ICL MIMO task (0 for non-MIMO models);
+    /// used by the BER decoding path of the accuracy harness.
+    fn nt(&self) -> usize {
+        0
+    }
+}
+
+/// Argmax over the last axis of `[t, batch, classes]` prefix-mean logits:
+/// returns `pred[t][b]` where entry `t` uses encoding length `t+1`.
+///
+/// NaN-tolerant like [`crate::coordinator::Response::predict_at`]: a NaN
+/// logit (possible under extreme analog drift) never wins and never
+/// panics; all-NaN rows fall back to class 0. Ties keep the *last*
+/// maximal class, matching the old `max_by` semantics.
+pub fn prefix_predictions(logits: &[f32], t_max: usize, batch: usize,
+                          classes: usize) -> Vec<Vec<usize>> {
+    let mut cum = vec![0.0f64; batch * classes];
+    let mut preds = Vec::with_capacity(t_max);
+    for t in 0..t_max {
+        let step = &logits[t * batch * classes..(t + 1) * batch * classes];
+        for (c, &v) in cum.iter_mut().zip(step) {
+            *c += v as f64;
+        }
+        preds.push(
+            (0..batch)
+                .map(|b| {
+                    let row = &cum[b * classes..(b + 1) * classes];
+                    row.iter()
+                        .enumerate()
+                        .fold((0usize, f64::NEG_INFINITY),
+                              |(bi, bv), (i, &v)| {
+                                  if v >= bv { (i, v) } else { (bi, bv) }
+                              })
+                        .0
+                })
+                .collect(),
+        );
+    }
+    preds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefix_predictions_accumulate() {
+        // t=0: class1 wins for b0; t=1 flips it to class0.
+        let logits = vec![
+            0.0, 1.0, /* b0 t0 */ 2.0, 0.0, /* b1 t0 */
+            5.0, 0.0, /* b0 t1 */ 0.0, 1.0, /* b1 t1 */
+        ];
+        let p = prefix_predictions(&logits, 2, 2, 2);
+        assert_eq!(p[0], vec![1, 0]);
+        assert_eq!(p[1], vec![0, 0]);
+    }
+
+    #[test]
+    fn prefix_predictions_tolerate_nan() {
+        // NaN never wins; ties keep the last maximal class; an all-NaN
+        // row falls back to class 0 instead of panicking.
+        let logits = vec![f32::NAN, 1.0, 1.0, /* b0 t0 */
+                          f32::NAN, f32::NAN, f32::NAN /* b1 t0 */];
+        let p = prefix_predictions(&logits, 1, 2, 3);
+        assert_eq!(p[0], vec![2, 0]);
+    }
+}

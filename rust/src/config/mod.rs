@@ -35,6 +35,11 @@ pub struct ModelDims {
     /// Spike encoding length at which this model converges (Tables III/IV);
     /// per-inference energy and latency scale with this.
     pub t_steps: usize,
+    /// MIMO transmit antennas when the model decodes the ICL symbol task
+    /// (`classes = 4^nt`); 0 for every non-MIMO model. Stored explicitly
+    /// rather than inferred from `classes`, so a non-MIMO head that
+    /// happens to have 4/16/64 classes never grows a bogus BER curve.
+    pub nt: usize,
 }
 
 impl ModelDims {
@@ -56,6 +61,12 @@ impl ModelDims {
         self.in_feat * self.dim + self.depth * per_layer
             + self.dim * self.classes
     }
+
+    /// Transmit antennas of the ICL MIMO task this model decodes;
+    /// 0 for non-MIMO models.
+    pub fn mimo_nt(&self) -> usize {
+        self.nt
+    }
 }
 
 /// Paper-scale ImageNet ViT (patch 16 on 224x224 -> 196 tokens + cls).
@@ -71,6 +82,7 @@ pub fn vit_imagenet(depth: usize, dim: usize, heads: usize, t: usize) -> ModelDi
         classes: 1000,
         mlp_ratio: 4,
         t_steps: t,
+        nt: 0,
     }
 }
 
@@ -87,6 +99,7 @@ pub fn vit_cifar(depth: usize, dim: usize, heads: usize, t: usize) -> ModelDims 
         classes: 10,
         mlp_ratio: 4,
         t_steps: t,
+        nt: 0,
     }
 }
 
@@ -104,6 +117,47 @@ pub fn gpt_icl(depth: usize, dim: usize, heads: usize, nt: usize, nr: usize,
         classes: 4usize.pow(nt as u32),
         mlp_ratio: 4,
         t_steps: t,
+        nt,
+    }
+}
+
+/// Native-simulator ViT preset: small enough for the cycle-level SSA and
+/// analog crossbar simulators to run whole forward passes interactively
+/// (the `tiny 2-64` trained scale; 4x4-patch 16x16 synthetic images).
+pub fn vit_native(depth: usize, dim: usize, heads: usize, t: usize)
+                  -> ModelDims {
+    ModelDims {
+        name: format!("vit_native_{depth}-{dim}"),
+        kind: ModelKind::Vit,
+        depth,
+        dim,
+        heads,
+        n_tokens: 16,
+        in_feat: 48,
+        classes: 10,
+        mlp_ratio: 2,
+        t_steps: t,
+        nt: 0,
+    }
+}
+
+/// Native-simulator ICL GPT preset matching
+/// [`crate::workloads::MimoGenerator`]'s pair-joint tokenization
+/// (18 context pairs + query = 19 tokens).
+pub fn gpt_native(depth: usize, dim: usize, heads: usize, nt: usize,
+                  nr: usize, t: usize) -> ModelDims {
+    ModelDims {
+        name: format!("gpt_native_{depth}-{dim}_{nt}x{nr}"),
+        kind: ModelKind::Gpt,
+        depth,
+        dim,
+        heads,
+        n_tokens: 19,
+        in_feat: 2 * nr + 2 * nt,
+        classes: 4usize.pow(nt as u32),
+        mlp_ratio: 2,
+        t_steps: t,
+        nt,
     }
 }
 
@@ -299,6 +353,19 @@ mod tests {
         // ViT-8-768 ~ 57M params (8 * 12*768^2 + embed + head)
         let m = large.analog_params() as f64 / 1e6;
         assert!(m > 40.0 && m < 80.0, "got {m}M");
+    }
+
+    #[test]
+    fn native_presets_are_simulator_sized() {
+        let v = vit_native(2, 64, 2, 4);
+        assert_eq!(v.d_head(), 32);
+        assert_eq!(v.mimo_nt(), 0);
+        let g = gpt_native(2, 64, 2, 2, 2, 4);
+        assert_eq!(g.n_tokens, 19);
+        assert_eq!(g.in_feat, 8);
+        assert_eq!(g.classes, 16);
+        assert_eq!(g.mimo_nt(), 2);
+        assert_eq!(gpt_icl(4, 256, 4, 4, 4, 11).mimo_nt(), 4);
     }
 
     #[test]

@@ -19,6 +19,8 @@ struct Inner {
     latencies_us: Vec<u64>,
     queue_waits_us: Vec<u64>,
     rejected: u64,
+    /// Requests lost to backend execution failures.
+    failed: u64,
 }
 
 const RESERVOIR: usize = 65536;
@@ -45,8 +47,14 @@ impl Metrics {
         }
     }
 
+    /// Count one submission shed by queue-full backpressure.
     pub fn record_rejected(&self) {
         self.inner.lock().unwrap().rejected += 1;
+    }
+
+    /// Count `n` requests dropped by one failed backend execution.
+    pub fn record_failed(&self, n: u64) {
+        self.inner.lock().unwrap().failed += n;
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
@@ -63,6 +71,7 @@ impl Metrics {
         MetricsSnapshot {
             completed: m.completed,
             rejected: m.rejected,
+            failed: m.failed,
             batches: m.batches,
             mean_batch: if m.batches == 0 { 0.0 } else {
                 m.batched_samples as f64 / m.batches as f64
@@ -84,6 +93,8 @@ impl Metrics {
 pub struct MetricsSnapshot {
     pub completed: u64,
     pub rejected: u64,
+    /// Requests dropped by backend execution failures.
+    pub failed: u64,
     pub batches: u64,
     pub mean_batch: f64,
     pub throughput_rps: f64,
@@ -97,11 +108,12 @@ impl std::fmt::Display for MetricsSnapshot {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "completed={} rejected={} batches={} mean_batch={:.2} \
-             throughput={:.1} req/s p50={}us p95={}us p99={}us queue={:.0}us",
-            self.completed, self.rejected, self.batches, self.mean_batch,
-            self.throughput_rps, self.p50_us, self.p95_us, self.p99_us,
-            self.mean_queue_us
+            "completed={} rejected={} failed={} batches={} \
+             mean_batch={:.2} throughput={:.1} req/s p50={}us p95={}us \
+             p99={}us queue={:.0}us",
+            self.completed, self.rejected, self.failed, self.batches,
+            self.mean_batch, self.throughput_rps, self.p50_us, self.p95_us,
+            self.p99_us, self.mean_queue_us
         )
     }
 }
@@ -128,5 +140,15 @@ mod tests {
         m.record_batch(4);
         m.record_batch(8);
         assert!((m.snapshot().mean_batch - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn failed_counts_per_request() {
+        let m = Metrics::default();
+        m.record_failed(3);
+        m.record_failed(1);
+        let s = m.snapshot();
+        assert_eq!(s.failed, 4);
+        assert!(s.to_string().contains("failed=4"));
     }
 }

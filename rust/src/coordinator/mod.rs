@@ -1,12 +1,16 @@
-//! L3 inference coordinator: request queue -> dynamic batcher -> PJRT
+//! L3 inference coordinator: request queue -> dynamic batcher -> backend
 //! executor, with backpressure and serving metrics.
 //!
-//! The AOT artifacts are compiled for a fixed batch size B (the engines'
-//! physical parallelism, like the paper's N^2 SAC array); the batcher
-//! merges up to B queued requests per execution and pads the remainder —
-//! classic dynamic batching (vLLM-style) adapted to a fixed-shape
-//! executable. Seeds are per-request so stochastic spiking inference
-//! stays reproducible request-by-request regardless of batching.
+//! The executor is anything implementing
+//! [`InferenceBackend`](crate::backend::InferenceBackend) — the native
+//! simulator ([`crate::model::NativeBackend`], the default), the PJRT
+//! runtime behind the `pjrt` feature, or a test mock. Backends run a
+//! fixed batch size B (the engines' physical parallelism, like the
+//! paper's N^2 SAC array); the batcher merges up to B queued requests
+//! per execution and pads the remainder — classic dynamic batching
+//! (vLLM-style) adapted to a fixed-shape executable. Seeds are
+//! per-request so stochastic spiking inference stays reproducible
+//! request-by-request regardless of batching.
 //!
 //! The build is offline (no tokio): the coordinator is a dedicated
 //! batcher thread over a bounded `std::sync::mpsc` channel (the
@@ -21,8 +25,8 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::backend::InferenceBackend;
 use crate::config::RunConfig;
-use crate::runtime::Engine;
 pub use metrics::{Metrics, MetricsSnapshot};
 
 /// One inference request: flattened input sample + stochastic seed.
@@ -89,6 +93,7 @@ impl Pending {
 pub struct Client {
     tx: SyncSender<Request>,
     sample_len: usize,
+    metrics: Arc<Metrics>,
 }
 
 impl Client {
@@ -104,7 +109,8 @@ impl Client {
         Ok(Pending(rx))
     }
 
-    /// Non-blocking submit: `None` == queue full (backpressure signal).
+    /// Non-blocking submit: `None` == queue full (backpressure signal,
+    /// counted in the server's `rejected` metric).
     pub fn try_infer(&self, x: Vec<f32>, seed: u32)
                      -> Result<Option<Pending>> {
         anyhow::ensure!(x.len() == self.sample_len, "bad input length");
@@ -113,7 +119,10 @@ impl Client {
             x, seed, enqueued: Instant::now(), respond: tx,
         }) {
             Ok(()) => Ok(Some(Pending(rx))),
-            Err(TrySendError::Full(_)) => Ok(None),
+            Err(TrySendError::Full(_)) => {
+                self.metrics.record_rejected();
+                Ok(None)
+            }
             Err(TrySendError::Disconnected(_)) => {
                 Err(anyhow::anyhow!("server stopped"))
             }
@@ -134,19 +143,21 @@ pub struct Server {
 }
 
 impl Server {
-    /// Spawn the batcher thread around a compiled engine.
-    pub fn start(engine: Engine, cfg: RunConfig) -> Server {
+    /// Spawn the batcher thread around any inference backend (the native
+    /// simulator, the PJRT engine, a mock, ...).
+    pub fn start<B: InferenceBackend>(backend: B, cfg: RunConfig) -> Server {
         let metrics = Arc::new(Metrics::default());
         let (tx, rx) = mpsc::sync_channel::<Request>(cfg.queue_depth);
-        let sample_len = engine.x_len_per_sample();
+        let sample_len = backend.x_len_per_sample();
         let m = Arc::clone(&metrics);
         let handle = std::thread::Builder::new()
             .name("xpike-batcher".into())
-            .spawn(move || batcher_loop(engine, cfg, rx, m))
+            .spawn(move || batcher_loop(backend, cfg, rx, m))
             .expect("spawn batcher");
+        let client = Client { tx, sample_len, metrics: Arc::clone(&metrics) };
         Server {
             metrics,
-            client: Some(Client { tx, sample_len }),
+            client: Some(client),
             handle: Some(handle),
         }
     }
@@ -195,12 +206,13 @@ fn gather(rx: &Receiver<Request>, max_batch: usize, window: Duration)
     Some(batch)
 }
 
-fn batcher_loop(engine: Engine, cfg: RunConfig, rx: Receiver<Request>,
-                metrics: Arc<Metrics>) {
-    let exe_batch = engine.batch();
-    let sample_len = engine.x_len_per_sample();
-    let t_max = engine.t_max();
-    let classes = engine.classes();
+fn batcher_loop<B: InferenceBackend>(backend: B, cfg: RunConfig,
+                                     rx: Receiver<Request>,
+                                     metrics: Arc<Metrics>) {
+    let exe_batch = backend.batch();
+    let sample_len = backend.x_len_per_sample();
+    let t_max = backend.t_max();
+    let classes = backend.classes();
     let max_batch = cfg.max_batch.min(exe_batch).max(1);
     let window = Duration::from_micros(cfg.batch_window_us);
     // Reused input buffer: no per-batch allocation on the hot path.
@@ -222,7 +234,7 @@ fn batcher_loop(engine: Engine, cfg: RunConfig, rx: Receiver<Request>,
         // a request's logits depend only on its own lane given the seed.
         let seed = batch[0].seed ^ (cfg.seed as u32);
         let started = Instant::now();
-        match engine.run(&x, seed) {
+        match backend.run(&x, seed) {
             Ok(logits) => {
                 for (b, req) in batch.into_iter().enumerate() {
                     // Slice this sample's [t, classes] lanes out of
@@ -243,9 +255,10 @@ fn batcher_loop(engine: Engine, cfg: RunConfig, rx: Receiver<Request>,
             }
             Err(e) => {
                 // Execution failure: drop responders (submitters see
-                // channel closure), keep serving subsequent batches.
+                // channel closure), count every affected request, keep
+                // serving subsequent batches.
                 eprintln!("coordinator: execution failed: {e:#}");
-                metrics.record_rejected();
+                metrics.record_failed(batch.len() as u64);
             }
         }
     }

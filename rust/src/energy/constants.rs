@@ -63,6 +63,16 @@ pub const E_PERIPH_CONV: f64 = 0.275;
 pub const E_ACCUM_CONV: f64 = 0.039;
 /// Crossbar array read itself (charging + cell currents) per conversion.
 pub const E_XBAR_CONV: f64 = 0.0005;
+/// DAC/WL-driver energy per word-line pulse: charging one active row
+/// line across one column block (1-bit spiking DAC = a WL driver firing
+/// a read pulse). This is the *input-path* term the packed-spike model
+/// derives from `count_ones` over the actual bit-line drive words
+/// ([`crate::energy::ops::aimc_wl_pulses_per_step`] analytically,
+/// [`crate::aimc::MappedMatrix::wl_pulses`] measured) instead of folding
+/// a nominal spike rate into the per-conversion periphery constant. Kept
+/// small relative to `E_PERIPH_CONV` (the MUX/decode/buffer share still
+/// dominates, Fig 9), so the calibrated breakdown shifts by < 1%.
+pub const E_WL_PULSE: f64 = 0.01;
 
 // ---------------------------------------------------------------------------
 // SSA engine gate events (Cadence-synthesis substitute).

@@ -13,5 +13,5 @@ pub mod ops;
 pub use model::{
     n_synaptic_arrays, xpikeformer_area, xpikeformer_energy,
     xpikeformer_latency, AimcEnergy, AreaReport, EnergyReport,
-    LatencyReport, SsaEnergy,
+    LatencyReport, LayerEnergy, ModelEnergy, SsaEnergy,
 };

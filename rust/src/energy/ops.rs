@@ -45,6 +45,23 @@ pub fn aimc_conversions_per_step(m: &ModelDims, crossbar_rows: usize)
         .sum()
 }
 
+/// Expected word-line (DAC driver) pulses of the AIMC engine for one
+/// timestep: every *active* input bit fires one WL read pulse into each
+/// column block its row spans. The analytical mirror of the measured
+/// count [`crate::aimc::MappedMatrix::wl_pulses`] takes from the packed
+/// bit-line drive words (`count_ones` per row-block slice), using the
+/// expected firing rate `p_spike` for the data-dependent activity.
+pub fn aimc_wl_pulses_per_step(m: &ModelDims, crossbar_dim: usize,
+                               p_spike: f64) -> f64 {
+    let n = m.n_tokens as f64;
+    linear_stages(m)
+        .iter()
+        .map(|&(i, o)| {
+            n * p_spike * i as f64 * o.div_ceil(crossbar_dim) as f64
+        })
+        .sum()
+}
+
 /// Gate-event counts of the SSA engine for a full inference
 /// (analytical mirror of `ssa::SsaStats`, using the expected firing rate
 /// for data-dependent counts).
@@ -197,6 +214,20 @@ mod tests {
         assert_eq!(stats.adder_ops as f64, ops.adder_evals);
         assert_eq!(stats.encoder_samples as f64, ops.encoder_samples);
         assert_eq!(stats.and_ops as f64, ops.and_ops);
+    }
+
+    #[test]
+    fn wl_pulses_scale_with_density_and_blocks() {
+        let m = vit_imagenet(8, 768, 12, 7);
+        let half = aimc_wl_pulses_per_step(&m, 128, 0.5);
+        let quarter = aimc_wl_pulses_per_step(&m, 128, 0.25);
+        assert!((half / quarter - 2.0).abs() < 1e-9);
+        // Hand count at one stage: a lone 768->3072 layer on 128-wide
+        // crossbars drives 24 column blocks per active row.
+        let tiny = ModelDims { depth: 0, ..vit_imagenet(8, 768, 12, 7) };
+        let base = aimc_wl_pulses_per_step(&tiny, 128, 1.0);
+        // embed (768 rows x 6 col blocks) + head (768 x 8) per token.
+        assert_eq!(base, 197.0 * (768.0 * 6.0 + 768.0 * 8.0));
     }
 
     #[test]

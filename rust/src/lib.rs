@@ -5,9 +5,18 @@
 //! 2025). This crate is the Layer-3 runtime + hardware simulator of the
 //! three-layer stack (see `DESIGN.md`):
 //!
-//! * [`runtime`]      — PJRT CPU client that loads the AOT-compiled HLO
-//!   artifacts produced by `python/compile/aot.py` and executes the spiking
-//!   transformer forward pass. Python is never on the request path.
+//! * [`model`]        — the native Rust forward pass: spike encoding →
+//!   per-block AIMC crossbar projections + SSA attention + LIF neurons +
+//!   spike-driven residuals → classification head, end-to-end on packed
+//!   spike tensors with measured per-layer energy accounting. The default
+//!   serving backend.
+//! * [`backend`]      — the `InferenceBackend` seam between executors
+//!   (native simulator, PJRT runtime, test mocks) and the serving /
+//!   evaluation stack.
+//! * [`runtime`]      — (feature `pjrt`) PJRT CPU client that loads the
+//!   AOT-compiled HLO artifacts produced by `python/compile/aot.py` and
+//!   executes the spiking transformer forward pass. Off by default; the
+//!   in-tree `vendor/xla-stub` crate keeps it type-checking offline.
 //! * [`tensor`]       — the XPKT tensor container (params, eval sets,
 //!   golden vectors) shared with the python build path.
 //! * [`aimc`]         — PCM crossbar simulator: weight quantization,
@@ -18,27 +27,33 @@
 //!   N x N tiles with streaming dataflow (paper §IV-B, Algorithm 1).
 //! * [`spike`]        — word-packed spike tensors (`SpikeVector`,
 //!   `SpikeMatrix`, `SpikeVolume`): the 1-bit AND/popcount dataflow
-//!   representation shared by the SSA, SNN and AIMC layers.
+//!   representation shared by the SSA, SNN and AIMC layers, with
+//!   SIMD-accelerated AND-popcount (AVX2/NEON, scalar fallback).
 //! * [`snn`]          — spike coding + LIF reference models shared by the
 //!   simulators and tests.
 //! * [`energy`]       — analytical 45 nm energy/latency/area models (the
-//!   NeuroSim + Cadence-synthesis substitute) for every paper figure.
+//!   NeuroSim + Cadence-synthesis substitute) for every paper figure,
+//!   plus the measured per-layer breakdown the native model produces.
 //! * [`baselines`]    — ANN-Quant (SwiftTron-like), ANN-Quant+AIMC,
 //!   SNN-Digi-Opt, X-Former and GPU roofline models (paper §VII).
 //! * [`coordinator`]  — inference server: request queue, dynamic batcher,
-//!   engine scheduler mirroring the alternating AIMC/SSA dataflow (Fig 6).
+//!   generic over any `InferenceBackend` (Fig 6 dataflow scheduling).
 //! * [`workloads`]    — synthetic image + ICL MIMO workload generators.
-//! * [`config`]       — model-dimension presets (paper scale + trained
-//!   scaled-down presets) and the Table-II hardware configuration.
+//! * [`config`]       — model-dimension presets (paper scale, native
+//!   simulator scale) and the Table-II hardware configuration.
 //! * [`repro`]        — the experiment harness regenerating every table
-//!   and figure of the paper's evaluation (Tables II-VI, Figs 7-10).
+//!   and figure of the paper's evaluation (Tables II-VI, Figs 7-10);
+//!   artifact-based accuracy rows require the `pjrt` feature.
 
 pub mod aimc;
+pub mod backend;
 pub mod baselines;
 pub mod config;
 pub mod coordinator;
 pub mod energy;
+pub mod model;
 pub mod repro;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod snn;
 pub mod spike;
@@ -48,3 +63,4 @@ pub mod util;
 pub mod workloads;
 
 pub use anyhow::Result;
+pub use backend::InferenceBackend;

@@ -2,22 +2,27 @@
 //! paper-experiment harness, and a serving smoke-run.
 //!
 //! ```text
-//! xpikeformer list   [--artifacts DIR]
+//! xpikeformer serve  [--backend native|pjrt] [--requests N] [--max-batch B]
 //! xpikeformer repro  <table2..table6|fig7..fig10b|all-efficiency>
-//! xpikeformer eval   --model vit_xpike_2-64 [--drift-seconds S] [--gdc]
-//! xpikeformer serve  [--model gpt_xpike_2-64_2x2] [--requests N]
+//! xpikeformer list   [--artifacts DIR]            (requires --features pjrt)
+//! xpikeformer eval   --model vit_xpike_2-64 ...   (requires --features pjrt)
 //! ```
+//!
+//! `serve` defaults to the native simulator backend (no artifacts, no
+//! PJRT): it programs a random-initialized MIMO model onto the simulated
+//! crossbars and serves live generator traffic through the dynamic
+//! batcher. The artifact-based commands need the `pjrt` feature.
 //!
 //! (Offline build: argument parsing is hand-rolled, no clap.)
 
 use anyhow::{bail, Result};
 
-use xpikeformer::config::{DriftConfig, RunConfig};
+use xpikeformer::config::{gpt_native, HardwareConfig, RunConfig};
 use xpikeformer::coordinator::Server;
+use xpikeformer::model::{NativeBackend, XpikeModel};
 use xpikeformer::repro::{self, ReproCtx};
-use xpikeformer::runtime::{Artifact, Engine};
 use xpikeformer::util::Rng;
-use xpikeformer::workloads::{ber, EvalSet, MimoGenerator};
+use xpikeformer::workloads::{ber, MimoGenerator};
 
 /// Tiny flag parser: `--key value` and `--switch` forms.
 struct Args {
@@ -55,18 +60,21 @@ impl Args {
         self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
     }
 
+    #[cfg(feature = "pjrt")]
     fn has(&self, key: &str) -> bool {
         self.flags.contains_key(key)
     }
 }
 
 const USAGE: &str = "usage: xpikeformer [--artifacts DIR] <command>\n\
-  list                          list AOT artifacts\n\
+  serve [--backend native|pjrt] [--requests N] [--max-batch B]\n\
+        [--model NAME]          serve live MIMO traffic (native default)\n\
   repro <experiment> [--seed N] regenerate a paper table/figure\n\
          (table2 table3 table4 table5 table6 fig7 fig8 fig9 fig10a\n\
           fig10b all-efficiency)\n\
+  list                          list AOT artifacts    [--features pjrt]\n\
   eval  --model NAME [--drift-seconds S] [--gdc] [--ideal]\n\
-  serve [--model NAME] [--requests N] [--max-batch B]\n";
+                                artifact accuracy     [--features pjrt]\n";
 
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -101,7 +109,9 @@ fn main() -> Result<()> {
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_list(artifacts: &str) -> Result<()> {
+    use xpikeformer::runtime::Artifact;
     for tag in Artifact::discover(artifacts)? {
         let a = Artifact::open(artifacts, &tag)?;
         println!(
@@ -116,7 +126,16 @@ fn cmd_list(artifacts: &str) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_list(_artifacts: &str) -> Result<()> {
+    bail!("`list` inspects AOT artifacts; rebuild with `--features pjrt`")
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_eval(artifacts: &str, args: &Args) -> Result<()> {
+    use xpikeformer::config::DriftConfig;
+    use xpikeformer::runtime::Engine;
+    use xpikeformer::workloads::EvalSet;
     let model = args.get("model", "vit_xpike_2-64");
     let tag = format!("{model}_b32");
     let mut engine = Engine::load(artifacts, &tag)?;
@@ -161,10 +180,84 @@ fn cmd_eval(artifacts: &str, args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_eval(_artifacts: &str, _args: &Args) -> Result<()> {
+    bail!("`eval` executes AOT artifacts; rebuild with `--features pjrt`")
+}
+
 fn cmd_serve(artifacts: &str, args: &Args) -> Result<()> {
-    let model = args.get("model", "gpt_xpike_2-64_2x2");
+    let backend = args.get("backend", "native");
     let requests: usize = args.get("requests", "64").parse()?;
     let max_batch: usize = args.get("max-batch", "8").parse()?;
+    match backend.as_str() {
+        "native" => serve_native(args, requests, max_batch),
+        "pjrt" => serve_pjrt(artifacts, args, requests, max_batch),
+        other => bail!("unknown backend '{other}' (native|pjrt)"),
+    }
+}
+
+/// Serve the live MIMO task on the native simulator backend: no python,
+/// no artifacts — the whole request path is the Rust hardware model.
+fn serve_native(args: &Args, requests: usize, max_batch: usize)
+                -> Result<()> {
+    let (nt, nr) = (2usize, 2usize);
+    // `--model` selects a native MIMO preset (the serve demo drives the
+    // 2x2 generator, so only 2x2 presets apply); unknown names error
+    // rather than silently serving something else.
+    let model_name = args.get("model", "gpt_native_2-64_2x2");
+    let dims = match model_name.as_str() {
+        "gpt_native_2-64_2x2" => gpt_native(2, 64, 2, nt, nr, 4),
+        "gpt_native_4-128_2x2" => gpt_native(4, 128, 4, nt, nr, 4),
+        other => bail!(
+            "unknown native serve preset '{other}' (available: \
+             gpt_native_2-64_2x2, gpt_native_4-128_2x2; artifact models \
+             need --backend pjrt)"
+        ),
+    };
+    println!("native backend: {} ({} analog params)", dims.name,
+             dims.analog_params());
+    let model = XpikeModel::new(&dims, &HardwareConfig::default(), 42);
+    println!("programmed {} synaptic arrays", model.total_arrays());
+    let native = NativeBackend::new(model, max_batch.max(1));
+    let energy_handle = native.clone();
+    let cfg = RunConfig { max_batch, ..RunConfig::default() };
+    let server = Server::start(native, cfg);
+    let client = server.client();
+    let gen = MimoGenerator::new(nt, nr, 10.0);
+    let mut rng = Rng::seed_from_u64(1);
+    let mut pendings = Vec::new();
+    let mut truths = Vec::new();
+    for i in 0..requests {
+        let (x, label) = gen.sample(&mut rng);
+        truths.push(label);
+        pendings.push(client.infer(x, i as u32)?);
+    }
+    let mut correct = 0usize;
+    let mut preds = Vec::new();
+    for (p, &truth) in pendings.into_iter().zip(&truths) {
+        let resp = p.wait()?;
+        let pred = resp.predict() as u32;
+        preds.push(pred);
+        if pred == truth {
+            correct += 1;
+        }
+    }
+    println!("accuracy: {correct}/{requests} (untrained weights: \
+              chance-level is expected)");
+    println!("BER: {:.4}", ber(&preds, &truths, nt));
+    println!("{}", server.metrics.snapshot());
+    println!("\nmeasured energy per layer:\n{}",
+             energy_handle.energy().report());
+    drop(client);
+    server.shutdown();
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
+fn serve_pjrt(artifacts: &str, args: &Args, requests: usize,
+              max_batch: usize) -> Result<()> {
+    use xpikeformer::runtime::Engine;
+    let model = args.get("model", "gpt_xpike_2-64_2x2");
     let engine = Engine::load(artifacts, &format!("{model}_b8"))
         .or_else(|_| Engine::load(artifacts, &format!("{model}_b1")))?;
     let nt = engine.artifact.manifest.config.nt;
@@ -198,4 +291,11 @@ fn cmd_serve(artifacts: &str, args: &Args) -> Result<()> {
     drop(client);
     server.shutdown();
     Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn serve_pjrt(_artifacts: &str, _args: &Args, _requests: usize,
+              _max_batch: usize) -> Result<()> {
+    bail!("the pjrt backend requires `--features pjrt`; \
+           `serve --backend native` runs without it")
 }

@@ -1,0 +1,171 @@
+//! The native serving backend: batch lanes of [`XpikeModel::forward`]
+//! behind the [`InferenceBackend`] seam, with a rolling per-layer energy
+//! accumulator.
+//!
+//! Lanes are independent forward passes (per-lane RNG streams derived
+//! from the execution seed), so they run on scoped OS threads — the
+//! simulator's wall-clock mirrors the hardware's batch parallelism the
+//! same way [`crate::ssa::SsaEngine::run_mhsa`] mirrors parallel tiles.
+//! Lane 0 uses the execution seed itself, so a request at the head of a
+//! batch is bit-identical to the same request run solo (the coordinator
+//! contract).
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::{ensure, Result};
+
+use crate::backend::InferenceBackend;
+use crate::energy::ModelEnergy;
+use crate::model::XpikeModel;
+
+/// Per-lane seed derivation: lane 0 keeps the execution seed.
+fn lane_seed(seed: u32, lane: usize) -> u64 {
+    seed as u64 ^ (lane as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+/// Shareable native backend (clones serve the same model + accumulator).
+#[derive(Clone)]
+pub struct NativeBackend {
+    model: Arc<XpikeModel>,
+    batch: usize,
+    energy: Arc<Mutex<ModelEnergy>>,
+}
+
+impl NativeBackend {
+    /// Wrap a model with a fixed executable batch size.
+    pub fn new(model: XpikeModel, batch: usize) -> NativeBackend {
+        assert!(batch > 0, "batch must be positive");
+        NativeBackend {
+            model: Arc::new(model),
+            batch,
+            energy: Arc::new(Mutex::new(ModelEnergy::default())),
+        }
+    }
+
+    pub fn model(&self) -> &XpikeModel {
+        &self.model
+    }
+
+    /// Snapshot of the per-layer energy accumulated over every lane of
+    /// every execution so far (padding lanes included — they do real
+    /// simulator work).
+    pub fn energy(&self) -> ModelEnergy {
+        self.energy.lock().unwrap().clone()
+    }
+}
+
+impl InferenceBackend for NativeBackend {
+    fn run(&self, x: &[f32], seed: u32) -> Result<Vec<f32>> {
+        let sl = self.model.sample_len();
+        let (t_max, classes) = (self.t_max(), self.classes());
+        ensure!(x.len() == self.batch * sl,
+                "input length {} != batch {} x sample {}", x.len(),
+                self.batch, sl);
+        let mut lanes: Vec<Option<Result<(Vec<f32>, ModelEnergy)>>> =
+            (0..self.batch).map(|_| None).collect();
+        std::thread::scope(|scope| {
+            for (lane, slot) in lanes.iter_mut().enumerate() {
+                let model = &self.model;
+                let xs = &x[lane * sl..(lane + 1) * sl];
+                scope.spawn(move || {
+                    *slot = Some(model.forward(xs, lane_seed(seed, lane)));
+                });
+            }
+        });
+        // Assemble [t_max, batch, classes] from the per-lane [t, classes]
+        // results; fold every lane's measured energy into the accumulator.
+        let mut per_lane = Vec::with_capacity(self.batch);
+        {
+            let mut acc = self.energy.lock().unwrap();
+            for slot in lanes {
+                let (logits, energy) =
+                    slot.expect("lane thread completed")?;
+                acc.add(&energy);
+                per_lane.push(logits);
+            }
+        }
+        let mut out = vec![0.0f32; t_max * self.batch * classes];
+        for (lane, logits) in per_lane.iter().enumerate() {
+            for t in 0..t_max {
+                let src = &logits[t * classes..(t + 1) * classes];
+                let off = (t * self.batch + lane) * classes;
+                out[off..off + classes].copy_from_slice(src);
+            }
+        }
+        Ok(out)
+    }
+
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn t_max(&self) -> usize {
+        self.model.dims.t_steps
+    }
+
+    fn classes(&self) -> usize {
+        self.model.dims.classes
+    }
+
+    fn x_len_per_sample(&self) -> usize {
+        self.model.sample_len()
+    }
+
+    fn nt(&self) -> usize {
+        self.model.dims.mimo_nt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{vit_native, HardwareConfig};
+    use crate::util::Rng;
+
+    fn backend(batch: usize) -> NativeBackend {
+        let dims = vit_native(1, 64, 2, 4);
+        NativeBackend::new(
+            XpikeModel::new(&dims, &HardwareConfig::default(), 5), batch)
+    }
+
+    #[test]
+    fn lane0_matches_solo_run() {
+        let b2 = backend(2);
+        let b1 = NativeBackend::new(
+            XpikeModel::new(&vit_native(1, 64, 2, 4),
+                            &HardwareConfig::default(), 5),
+            1);
+        let mut rng = Rng::seed_from_u64(1);
+        let sl = b2.x_len_per_sample();
+        let x: Vec<f32> = (0..2 * sl).map(|_| rng.uniform_f32()).collect();
+        let batched = b2.run(&x, 77).unwrap();
+        let solo = b1.run(&x[..sl], 77).unwrap();
+        let (t_max, classes) = (b2.t_max(), b2.classes());
+        for t in 0..t_max {
+            let lane0 = &batched[(t * 2) * classes..(t * 2 + 1) * classes];
+            let s = &solo[t * classes..(t + 1) * classes];
+            assert_eq!(lane0, s, "t={t}");
+        }
+    }
+
+    #[test]
+    fn run_is_deterministic_and_lane_independent() {
+        let b = backend(3);
+        let sl = b.x_len_per_sample();
+        let mut rng = Rng::seed_from_u64(2);
+        let x: Vec<f32> = (0..3 * sl).map(|_| rng.uniform_f32()).collect();
+        let a = b.run(&x, 9).unwrap();
+        let c = b.run(&x, 9).unwrap();
+        assert_eq!(a, c, "scheduling must not change outputs");
+        assert_eq!(a.len(), b.t_max() * 3 * b.classes());
+        // Energy accumulates per execution (3 lanes x 2 runs).
+        assert_eq!(b.energy().inferences, 6);
+        assert!(b.energy().total_pj() > 0.0);
+    }
+
+    #[test]
+    fn rejects_bad_batch_length() {
+        let b = backend(2);
+        assert!(b.run(&[0.5; 7], 0).is_err());
+    }
+}

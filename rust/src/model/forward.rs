@@ -1,0 +1,422 @@
+//! The native Xpikeformer forward pass: the paper's hybrid dataflow
+//! (Fig 6) composed from the in-crate hardware simulators, end-to-end on
+//! packed spike tensors.
+//!
+//! Per inference: Bernoulli rate coding of the input features → AIMC
+//! patch embedding (crossbar MVM + shared LIF bank) → for each encoder
+//! block, AIMC Q/K/V projections, the SSA engine's multi-head stochastic
+//! spiking attention over the full T-step window, AIMC output projection,
+//! spike-driven OR residual, AIMC 2-layer FFN, second residual → analog
+//! classification head read out per timestep. Everything between the
+//! float input and the float logits is a 1-bit packed spike tensor, and
+//! every stage deposits *measured* event counts (ADC conversions, WL
+//! pulses over the actual packed drive words, SSA gate stats, LIF
+//! updates) into a per-layer [`ModelEnergy`] breakdown.
+
+use anyhow::{ensure, Result};
+
+use crate::aimc::{AimcEngine, MappedMatrix};
+use crate::config::{DriftConfig, HardwareConfig, ModelDims, ModelKind};
+use crate::energy::constants::{E_LIF_UPDATE, E_RESIDUAL_EL};
+use crate::energy::{AimcEnergy, LayerEnergy, ModelEnergy, SsaEnergy};
+use crate::model::params::ModelParams;
+use crate::snn::{rate_encode_row, LifArray};
+use crate::spike::{SpikeVector, SpikeVolume};
+use crate::ssa::{HeadQkv, SsaEngine};
+use crate::util::Rng;
+
+/// Rolling AIMC event counters for one pipeline stage.
+#[derive(Default)]
+struct AimcCounts {
+    conversions: u64,
+    wl_pulses: u64,
+}
+
+/// One spiking linear layer bound to its crossbar mapping + GDC scale.
+struct Stage<'m> {
+    matrix: &'m MappedMatrix,
+    /// GDC output scale for the active drift setting (outputs / alpha).
+    alpha: f32,
+}
+
+impl Stage<'_> {
+    /// Crossbar MVM (+GDC) for one packed token row, with event counting.
+    fn mvm(&self, rng: &mut Rng, spikes: &SpikeVector, t_seconds: f64,
+           hw: &HardwareConfig, counts: &mut AimcCounts) -> Vec<f32> {
+        counts.conversions += self.matrix.conversions_per_mvm();
+        counts.wl_pulses += self.matrix.wl_pulses(spikes, hw);
+        let mut pre = self.matrix.mvm(rng, spikes, t_seconds, hw);
+        if self.alpha != 1.0 {
+            for v in &mut pre {
+                *v /= self.alpha;
+            }
+        }
+        pre
+    }
+
+    /// MVM followed by the stage's shared LIF bank for one token.
+    fn step(&self, rng: &mut Rng, spikes: &SpikeVector, lif: &mut LifArray,
+            t_seconds: f64, hw: &HardwareConfig, counts: &mut AimcCounts)
+            -> SpikeVector {
+        let pre = self.mvm(rng, spikes, t_seconds, hw, counts);
+        lif.step(&pre)
+    }
+}
+
+/// The native model: a checkpoint programmed onto simulated PCM crossbars
+/// plus the per-block SSA attention configuration. Immutable during
+/// inference ([`Self::forward`] takes `&self`), so batch lanes run on
+/// parallel threads.
+pub struct XpikeModel {
+    pub dims: ModelDims,
+    pub hw: HardwareConfig,
+    /// Active drift setting; see [`Self::set_drift`].
+    pub drift: DriftConfig,
+    aimc: AimcEngine,
+    /// Per-stage GDC scales cached for the active drift setting
+    /// (stage name, alpha) — the periodic-calibration measurement.
+    gdc: Vec<(String, f32)>,
+    /// Causal attention (decoder-only models).
+    pub causal: bool,
+}
+
+impl XpikeModel {
+    /// Build a model with deterministic random weights (see
+    /// [`ModelParams::init`]) programmed onto simulated crossbars.
+    pub fn new(dims: &ModelDims, hw: &HardwareConfig, seed: u64)
+               -> XpikeModel {
+        let params = ModelParams::init(dims, seed);
+        Self::from_params(dims, hw, &params, seed)
+    }
+
+    /// Build from an explicit parameter set (e.g. a trained checkpoint).
+    pub fn from_params(dims: &ModelDims, hw: &HardwareConfig,
+                       params: &ModelParams, seed: u64) -> XpikeModel {
+        let aimc = AimcEngine::program(&params.tensors, hw, seed);
+        let mut model = XpikeModel {
+            dims: dims.clone(),
+            hw: hw.clone(),
+            drift: DriftConfig { t_seconds: 0.0, gdc: false, seed },
+            aimc,
+            gdc: Vec::new(),
+            causal: dims.kind == ModelKind::Gpt,
+        };
+        model.refresh_gdc();
+        model
+    }
+
+    /// Flattened feature length of one sample.
+    pub fn sample_len(&self) -> usize {
+        self.dims.n_tokens * self.dims.in_feat
+    }
+
+    /// Synaptic arrays consumed by the programmed weights.
+    pub fn total_arrays(&self) -> usize {
+        self.aimc.total_arrays()
+    }
+
+    /// Change the drift time / compensation for subsequent inferences;
+    /// re-measures the per-layer GDC calibration scales once.
+    pub fn set_drift(&mut self, drift: DriftConfig) {
+        self.drift = drift;
+        self.refresh_gdc();
+    }
+
+    fn refresh_gdc(&mut self) {
+        self.gdc = self
+            .aimc
+            .layers
+            .iter()
+            .map(|(name, _)| {
+                let a = self.aimc.gdc_scale(name, &self.drift)
+                    .expect("programmed layer");
+                (name.clone(), a)
+            })
+            .collect();
+    }
+
+    fn stage(&self, name: &str) -> Stage<'_> {
+        let matrix = self.aimc.layer(name).expect("programmed stage");
+        let alpha = self
+            .gdc
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|&(_, a)| a)
+            .unwrap_or(1.0);
+        Stage { matrix, alpha }
+    }
+
+    /// One full forward pass for a single sample.
+    ///
+    /// `x` is the flattened `[n_tokens, in_feat]` feature matrix in
+    /// `[0, 1]`; `seed` drives every stochastic element (rate encoders,
+    /// crossbar read noise, SSA PRN streams). Returns flattened
+    /// per-timestep logits `[t_max, classes]` plus the measured per-layer
+    /// energy breakdown. Identical `(x, seed)` pairs produce bit-identical
+    /// results.
+    pub fn forward(&self, x: &[f32], seed: u64)
+                   -> Result<(Vec<f32>, ModelEnergy)> {
+        let d = &self.dims;
+        let (n, dim, t_max) = (d.n_tokens, d.dim, d.t_steps);
+        let (heads, dh, hidden) = (d.heads, d.d_head(), d.hidden());
+        ensure!(x.len() == self.sample_len(),
+                "input length {} != {} (n_tokens x in_feat)", x.len(),
+                self.sample_len());
+        ensure!(dim % heads == 0, "dim {dim} not divisible by {heads} heads");
+        let mut rng = Rng::seed_from_u64(seed);
+        let t_sec = self.drift.t_seconds;
+        let hw = &self.hw;
+        let mut layers: Vec<LayerEnergy> = Vec::with_capacity(d.depth + 2);
+
+        // -- Spike encoding + AIMC patch embedding ------------------------
+        let embed = self.stage("embed");
+        let mut embed_lifs = vec![LifArray::new(dim); n];
+        let mut counts = AimcCounts::default();
+        let mut cur = SpikeVolume::zeros(t_max, n, dim);
+        for t in 0..t_max {
+            for tok in 0..n {
+                let feats = &x[tok * d.in_feat..(tok + 1) * d.in_feat];
+                let enc = rate_encode_row(&mut rng, feats);
+                let sp = embed.step(&mut rng, &enc, &mut embed_lifs[tok],
+                                    t_sec, hw, &mut counts);
+                cur.step_mut(t).set_row(tok, &sp);
+            }
+        }
+        layers.push(LayerEnergy {
+            name: "embed".into(),
+            aimc: AimcEnergy::from_counts(counts.conversions,
+                                          counts.wl_pulses),
+            ssa: SsaEnergy::default(),
+            lif_pj: (t_max * n * dim) as f64 * E_LIF_UPDATE,
+            residual_pj: 0.0,
+        });
+
+        // -- Encoder blocks ----------------------------------------------
+        for b in 0..d.depth {
+            let wq = self.stage(&format!("blk{b}.wq"));
+            let wk = self.stage(&format!("blk{b}.wk"));
+            let wv = self.stage(&format!("blk{b}.wv"));
+            let wo = self.stage(&format!("blk{b}.wo"));
+            let w1 = self.stage(&format!("blk{b}.w1"));
+            let w2 = self.stage(&format!("blk{b}.w2"));
+            let mut counts = AimcCounts::default();
+            let mut qkv: Vec<HeadQkv> = (0..heads)
+                .map(|_| (SpikeVolume::zeros(t_max, n, dh),
+                          SpikeVolume::zeros(t_max, n, dh),
+                          SpikeVolume::zeros(t_max, n, dh)))
+                .collect();
+            // Q/K/V projections stream token-by-token per timestep (the
+            // LIF banks integrate across t), splitting each packed
+            // dim-wide row into per-head d_k slices.
+            let mut qkv_lifs: Vec<Vec<LifArray>> =
+                (0..3).map(|_| vec![LifArray::new(dim); n]).collect();
+            for t in 0..t_max {
+                let xt = cur.step(t);
+                for tok in 0..n {
+                    let row = xt.row_vector(tok);
+                    for (which, stage) in [&wq, &wk, &wv].into_iter()
+                        .enumerate()
+                    {
+                        let sp = stage.step(&mut rng, &row,
+                                            &mut qkv_lifs[which][tok],
+                                            t_sec, hw, &mut counts);
+                        for (h, hv) in qkv.iter_mut().enumerate() {
+                            let slice = sp.extract(h * dh, (h + 1) * dh);
+                            let vol = match which {
+                                0 => &mut hv.0,
+                                1 => &mut hv.1,
+                                _ => &mut hv.2,
+                            };
+                            vol.step_mut(t).set_row(tok, &slice);
+                        }
+                    }
+                }
+            }
+            // Multi-head SSA over the whole encoding window (tiles run in
+            // parallel; the PRN seed is derived per (run, block)).
+            let mut ssa = SsaEngine::new(
+                heads, n, dh, self.causal,
+                (seed as u32) ^ (0x51CA_D0 + b as u32));
+            let (head_outs, stats) = ssa.run_mhsa(&qkv);
+            // Concatenate head outputs back to dim-wide rows.
+            let mut attn = SpikeVolume::zeros(t_max, n, dim);
+            for (h, vol) in head_outs.iter().enumerate() {
+                for t in 0..t_max {
+                    let step = vol.step(t);
+                    let out = attn.step_mut(t);
+                    for tok in 0..n {
+                        step.row_vector(tok)
+                            .for_each_set(|i| out.set(tok, h * dh + i, true));
+                    }
+                }
+            }
+            // Output projection + residual + FFN + residual, per token.
+            let mut wo_lifs = vec![LifArray::new(dim); n];
+            let mut w1_lifs = vec![LifArray::new(hidden); n];
+            let mut w2_lifs = vec![LifArray::new(dim); n];
+            let mut blk_out = SpikeVolume::zeros(t_max, n, dim);
+            for t in 0..t_max {
+                for tok in 0..n {
+                    let a_row = attn.step(t).row_vector(tok);
+                    let o = wo.step(&mut rng, &a_row, &mut wo_lifs[tok],
+                                    t_sec, hw, &mut counts);
+                    let mut r1 = o;
+                    r1.or_assign(&cur.step(t).row_vector(tok));
+                    let h_sp = w1.step(&mut rng, &r1, &mut w1_lifs[tok],
+                                       t_sec, hw, &mut counts);
+                    let f_sp = w2.step(&mut rng, &h_sp, &mut w2_lifs[tok],
+                                       t_sec, hw, &mut counts);
+                    let mut r2 = f_sp;
+                    r2.or_assign(&r1);
+                    blk_out.step_mut(t).set_row(tok, &r2);
+                }
+            }
+            cur = blk_out;
+            layers.push(LayerEnergy {
+                name: format!("blk{b}"),
+                aimc: AimcEnergy::from_counts(counts.conversions,
+                                              counts.wl_pulses),
+                ssa: SsaEnergy::from_stats(&stats, (heads * n * n) as u64),
+                lif_pj: (t_max * n * (5 * dim + hidden)) as f64
+                    * E_LIF_UPDATE,
+                residual_pj: (2 * t_max * n * dim) as f64 * E_RESIDUAL_EL,
+            });
+        }
+
+        // -- Classification head (analog readout per step) ---------------
+        // ViT: token-mean (GAP) readout. Causal ICL models: the *query*
+        // (last) token carries the in-context answer, so only it is read
+        // out — averaging the 18 context-pair tokens in would dilute the
+        // prediction 19x (paper Task 2 semantics).
+        let head = self.stage("head");
+        let mut counts = AimcCounts::default();
+        let mut logits = Vec::with_capacity(t_max * d.classes);
+        for t in 0..t_max {
+            if self.causal {
+                let row = cur.step(t).row_vector(n - 1);
+                let out = head.mvm(&mut rng, &row, t_sec, hw, &mut counts);
+                logits.extend(out);
+            } else {
+                let mut acc = vec![0.0f64; d.classes];
+                for tok in 0..n {
+                    let row = cur.step(t).row_vector(tok);
+                    let out =
+                        head.mvm(&mut rng, &row, t_sec, hw, &mut counts);
+                    for (a, v) in acc.iter_mut().zip(&out) {
+                        *a += *v as f64;
+                    }
+                }
+                logits.extend(acc.iter().map(|&a| (a / n as f64) as f32));
+            }
+        }
+        layers.push(LayerEnergy {
+            name: "head".into(),
+            aimc: AimcEnergy::from_counts(counts.conversions,
+                                          counts.wl_pulses),
+            ssa: SsaEnergy::default(),
+            lif_pj: 0.0,
+            residual_pj: 0.0,
+        });
+
+        Ok((logits, ModelEnergy { layers, inferences: 1 }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{gpt_native, vit_native};
+
+    fn sample(model: &XpikeModel, salt: u64) -> Vec<f32> {
+        let mut rng = Rng::seed_from_u64(salt);
+        (0..model.sample_len()).map(|_| rng.uniform_f32()).collect()
+    }
+
+    #[test]
+    fn forward_is_seed_deterministic_and_seed_sensitive() {
+        let dims = vit_native(2, 64, 2, 4);
+        let model = XpikeModel::new(&dims, &HardwareConfig::default(), 11);
+        let x = sample(&model, 1);
+        let (a, _) = model.forward(&x, 5).unwrap();
+        let (b, _) = model.forward(&x, 5).unwrap();
+        let (c, _) = model.forward(&x, 6).unwrap();
+        assert_eq!(a.len(), 4 * 10);
+        assert_eq!(a, b, "same seed => identical logits");
+        assert_ne!(a, c, "different seed => different stochastic run");
+        assert!(a.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn forward_reports_nonzero_per_layer_energy() {
+        let dims = vit_native(2, 64, 2, 4);
+        let model = XpikeModel::new(&dims, &HardwareConfig::default(), 3);
+        let x = sample(&model, 2);
+        let (_, energy) = model.forward(&x, 1).unwrap();
+        let names: Vec<&str> =
+            energy.layers.iter().map(|l| l.name.as_str()).collect();
+        assert_eq!(names, ["embed", "blk0", "blk1", "head"]);
+        for l in &energy.layers {
+            assert!(l.total_pj() > 0.0, "{} must cost energy", l.name);
+            assert!(l.aimc.dac_wl_pj >= 0.0);
+        }
+        // Blocks exercise the SSA engine; embed/head do not.
+        assert!(energy.layers[1].ssa.total_pj() > 0.0);
+        assert_eq!(energy.layers[0].ssa.total_pj(), 0.0);
+        // WL pulses are measured from real spike words: the embedding
+        // stage sees dense rate-coded input, so pulses must be nonzero.
+        assert!(energy.layers[0].aimc.dac_wl_pj > 0.0);
+        assert_eq!(energy.inferences, 1);
+    }
+
+    #[test]
+    fn causal_gpt_forward_runs() {
+        let dims = gpt_native(2, 64, 2, 2, 2, 4);
+        let model = XpikeModel::new(&dims, &HardwareConfig::default(), 9);
+        assert!(model.causal);
+        let x = sample(&model, 3);
+        let (logits, _) = model.forward(&x, 2).unwrap();
+        assert_eq!(logits.len(), 4 * 16);
+    }
+
+    #[test]
+    fn rejects_wrong_input_length() {
+        let dims = vit_native(1, 64, 2, 2);
+        let model = XpikeModel::new(&dims, &HardwareConfig::default(), 1);
+        assert!(model.forward(&[0.5; 3], 0).is_err());
+    }
+
+    #[test]
+    fn gdc_pulls_drifted_logits_toward_fresh() {
+        // Untrained weights still give a real drift signal: logits at one
+        // year drift, GDC-compensated, must sit closer to the fresh
+        // logits than uncompensated ones (averaged over seeds).
+        let dims = vit_native(1, 64, 2, 4);
+        let hw = HardwareConfig::default();
+        let mut model = XpikeModel::new(&dims, &hw, 21);
+        let x = sample(&model, 4);
+        let dist = |a: &[f32], b: &[f32]| -> f64 {
+            a.iter()
+                .zip(b)
+                .map(|(p, q)| ((p - q) as f64).powi(2))
+                .sum::<f64>()
+                .sqrt()
+        };
+        let year = 3.15e7;
+        let (mut d_nc, mut d_gdc) = (0.0, 0.0);
+        for seed in 0..6 {
+            model.set_drift(DriftConfig { t_seconds: 0.0, gdc: false,
+                                          seed: 0 });
+            let (fresh, _) = model.forward(&x, seed).unwrap();
+            model.set_drift(DriftConfig { t_seconds: year, gdc: false,
+                                          seed: 0 });
+            let (nc, _) = model.forward(&x, seed).unwrap();
+            model.set_drift(DriftConfig { t_seconds: year, gdc: true,
+                                          seed: 0 });
+            let (gdc, _) = model.forward(&x, seed).unwrap();
+            d_nc += dist(&nc, &fresh);
+            d_gdc += dist(&gdc, &fresh);
+        }
+        assert!(d_gdc < d_nc,
+                "GDC must reduce logit drift: {d_gdc} vs {d_nc}");
+    }
+}

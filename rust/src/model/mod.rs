@@ -1,0 +1,22 @@
+//! Native Xpikeformer model pipeline: the full spiking-transformer
+//! forward pass composed from the in-crate hardware simulators — no AOT
+//! artifacts, no PJRT, no python.
+//!
+//! * [`params`]  — named weight tensors in crossbar programming order
+//!   (deterministic variance-scaled init until a training export lands);
+//! * [`forward`] — [`XpikeModel`]: spike encoding → per-block AIMC
+//!   QKV/FFN crossbar MVMs + LIF banks, SSA multi-head attention,
+//!   spike-driven OR residuals → analog classification head, end-to-end
+//!   on packed [`crate::spike`] tensors with measured per-layer energy
+//!   accounting ([`crate::energy::ModelEnergy`]);
+//! * [`backend`] — [`NativeBackend`]: batch lanes on scoped threads
+//!   behind the [`crate::backend::InferenceBackend`] seam, the default
+//!   executor for [`crate::coordinator::Server`].
+
+pub mod backend;
+pub mod forward;
+pub mod params;
+
+pub use backend::NativeBackend;
+pub use forward::XpikeModel;
+pub use params::{stage_shapes, ModelParams};

@@ -1,0 +1,99 @@
+//! Parameter set of the native Xpikeformer model: named 2-D weight
+//! tensors in crossbar programming order.
+//!
+//! Stage names and shapes mirror [`crate::energy::ops::linear_stages`]
+//! (embedding, per-block `wq/wk/wv/wo/w1/w2`, classification head), so
+//! the analytical op counts and the programmed [`crate::aimc::AimcEngine`]
+//! describe the same pipeline. Until a training path exports real
+//! checkpoints, [`ModelParams::init`] draws deterministic
+//! variance-scaled random weights — enough to drive spikes through every
+//! stage and make the serving/energy plumbing measurable end-to-end.
+
+use crate::config::ModelDims;
+use crate::util::Rng;
+
+/// Named `(name, row-major weights, d_in, d_out)` tensors, in execution
+/// order — the exact input [`crate::aimc::AimcEngine::program`] takes.
+#[derive(Debug, Clone)]
+pub struct ModelParams {
+    pub tensors: Vec<(String, Vec<f32>, usize, usize)>,
+}
+
+/// Stage names + shapes of one model, in execution order.
+pub fn stage_shapes(dims: &ModelDims) -> Vec<(String, usize, usize)> {
+    let d = dims.dim;
+    let h = dims.hidden();
+    let mut stages = vec![("embed".to_string(), dims.in_feat, d)];
+    for b in 0..dims.depth {
+        stages.push((format!("blk{b}.wq"), d, d));
+        stages.push((format!("blk{b}.wk"), d, d));
+        stages.push((format!("blk{b}.wv"), d, d));
+        stages.push((format!("blk{b}.wo"), d, d));
+        stages.push((format!("blk{b}.w1"), d, h));
+        stages.push((format!("blk{b}.w2"), h, d));
+    }
+    stages.push(("head".to_string(), d, dims.classes));
+    stages
+}
+
+impl ModelParams {
+    /// Deterministic variance-scaled init: `w ~ N(0, 1/d_in)`, so the
+    /// expected LIF drive std at spike density p is `sqrt(p)` — inside
+    /// the firing range of the unit-threshold hardware LIF.
+    pub fn init(dims: &ModelDims, seed: u64) -> ModelParams {
+        let mut rng = Rng::seed_from_u64(seed);
+        let tensors = stage_shapes(dims)
+            .into_iter()
+            .map(|(name, d_in, d_out)| {
+                let std = 1.0 / (d_in as f64).sqrt();
+                let w: Vec<f32> = (0..d_in * d_out)
+                    .map(|_| rng.normal_ms(0.0, std) as f32)
+                    .collect();
+                (name, w, d_in, d_out)
+            })
+            .collect();
+        ModelParams { tensors }
+    }
+
+    /// Look up one tensor by name.
+    pub fn get(&self, name: &str) -> Option<&(String, Vec<f32>, usize, usize)> {
+        self.tensors.iter().find(|(n, ..)| n == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::vit_native;
+
+    #[test]
+    fn shapes_cover_every_stage() {
+        let dims = vit_native(2, 64, 2, 4);
+        let stages = stage_shapes(&dims);
+        assert_eq!(stages.len(), 1 + 2 * 6 + 1);
+        assert_eq!(stages[0], ("embed".into(), 48, 64));
+        assert_eq!(stages[5], ("blk0.w1".into(), 64, 128));
+        assert_eq!(*stages.last().unwrap(), ("head".into(), 64, 10));
+        // Same order as the analytical op-count stage list.
+        let analytic = crate::energy::ops::linear_stages(&dims);
+        let shapes: Vec<(usize, usize)> =
+            stages.iter().map(|&(_, i, o)| (i, o)).collect();
+        assert_eq!(shapes, analytic);
+    }
+
+    #[test]
+    fn init_is_seed_deterministic_and_scaled() {
+        let dims = vit_native(2, 64, 2, 4);
+        let a = ModelParams::init(&dims, 7);
+        let b = ModelParams::init(&dims, 7);
+        let c = ModelParams::init(&dims, 8);
+        assert_eq!(a.tensors[1].1, b.tensors[1].1);
+        assert_ne!(a.tensors[1].1, c.tensors[1].1);
+        // Variance roughly 1/d_in.
+        let (_, w, d_in, _) = a.get("blk0.wq").unwrap();
+        let var = w.iter().map(|&x| (x as f64).powi(2)).sum::<f64>()
+            / w.len() as f64;
+        assert!((var - 1.0 / *d_in as f64).abs() < 0.3 / *d_in as f64,
+                "var {var}");
+    }
+}

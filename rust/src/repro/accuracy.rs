@@ -6,15 +6,30 @@
 //! the checkpoint onto PCM crossbars (quantization + programming noise),
 //! optionally drifts it, and the PJRT runtime executes the AOT-compiled
 //! forward with the perturbed weights.
+//!
+//! [`evaluate`] is backend-generic (any
+//! [`InferenceBackend`](crate::backend::InferenceBackend), including the
+//! native simulator); the artifact-loading table/figure harnesses need
+//! the `pjrt` feature.
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
-use crate::aimc::AimcEngine;
-use crate::config::DriftConfig;
-use crate::runtime::{prefix_predictions, Engine};
-use crate::util::Json;
+use crate::backend::{prefix_predictions, InferenceBackend};
 use crate::workloads::{ber, EvalSet};
 
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
+
+#[cfg(feature = "pjrt")]
+use crate::aimc::AimcEngine;
+#[cfg(feature = "pjrt")]
+use crate::config::DriftConfig;
+#[cfg(feature = "pjrt")]
+use crate::runtime::Engine;
+#[cfg(feature = "pjrt")]
+use crate::util::Json;
+
+#[cfg(feature = "pjrt")]
 use super::ReproCtx;
 
 /// Evaluation result per encoding length.
@@ -37,13 +52,14 @@ impl EvalCurve {
     }
 }
 
-/// Score an engine over an eval set: per-T accuracy (+ BER for gpt).
-pub fn evaluate(engine: &Engine, set: &EvalSet, seed_base: u32)
-                -> Result<EvalCurve> {
+/// Score any inference backend over an eval set: per-T accuracy (+ BER
+/// for MIMO models).
+pub fn evaluate<B: InferenceBackend>(engine: &B, set: &EvalSet,
+                                     seed_base: u32) -> Result<EvalCurve> {
     let b = engine.batch();
     let t_max = engine.t_max();
     let classes = engine.classes();
-    let nt = engine.artifact.manifest.config.nt;
+    let nt = engine.nt();
     let mut correct = vec![0usize; t_max];
     let mut preds_t: Vec<Vec<u32>> = vec![Vec::new(); t_max];
     let mut truths: Vec<u32> = Vec::new();
@@ -71,6 +87,7 @@ pub fn evaluate(engine: &Engine, set: &EvalSet, seed_base: u32)
     Ok(EvalCurve { acc, ber: ber_curve })
 }
 
+#[cfg(feature = "pjrt")]
 /// Program an artifact's analog weights onto simulated PCM and install
 /// the effective weights (at `drift`) into the engine.
 pub fn install_analog(engine: &mut Engine, aimc: &AimcEngine,
@@ -79,6 +96,7 @@ pub fn install_analog(engine: &mut Engine, aimc: &AimcEngine,
     engine.set_params(&w)
 }
 
+#[cfg(feature = "pjrt")]
 /// Build the AIMC engine from an artifact's analog parameters
 /// (optionally from an alternative checkpoint, e.g. the CT-only one).
 pub fn program_artifact(engine: &Engine, ctx: &ReproCtx,
@@ -99,6 +117,7 @@ pub fn program_artifact(engine: &Engine, ctx: &ReproCtx,
     Ok(AimcEngine::program(&weights, &ctx.hw, ctx.seed))
 }
 
+#[cfg(feature = "pjrt")]
 fn load_baselines(ctx: &ReproCtx) -> Result<Json> {
     let p = ctx.artifacts.join("accuracy_baselines.json");
     let text = std::fs::read_to_string(&p)
@@ -107,6 +126,7 @@ fn load_baselines(ctx: &ReproCtx) -> Result<Json> {
     Json::parse(&text)
 }
 
+#[cfg(feature = "pjrt")]
 fn xpike_curve(ctx: &ReproCtx, model: &str, eval_file: &str)
                -> Result<EvalCurve> {
     let tag = format!("{model}_b32");
@@ -117,6 +137,7 @@ fn xpike_curve(ctx: &ReproCtx, model: &str, eval_file: &str)
     evaluate(&engine, &set, 1000)
 }
 
+#[cfg(feature = "pjrt")]
 /// Table III: image-classification accuracy across implementations/sizes.
 pub fn table3(ctx: &ReproCtx) -> Result<String> {
     let base = load_baselines(ctx)?;
@@ -155,6 +176,7 @@ pub fn table3(ctx: &ReproCtx) -> Result<String> {
     Ok(out)
 }
 
+#[cfg(feature = "pjrt")]
 /// Table IV: ICL symbol-detection BER across implementations/sizes.
 pub fn table4(ctx: &ReproCtx) -> Result<String> {
     let base = load_baselines(ctx)?;
@@ -207,6 +229,7 @@ pub const DRIFT_TIMES: &[(f64, &str)] = &[
     (31_536_000.0, "1 year"),
 ];
 
+#[cfg(feature = "pjrt")]
 /// One strategy's accuracy-over-time series.
 fn drift_series(ctx: &ReproCtx, model: &str, ct: bool, gdc: bool)
                 -> Result<Vec<f64>> {
@@ -243,6 +266,7 @@ fn drift_series(ctx: &ReproCtx, model: &str, ct: bool, gdc: bool)
     Ok(series)
 }
 
+#[cfg(feature = "pjrt")]
 const STRATEGIES: &[(&str, bool, bool)] = &[
     ("CT+NC", true, false),
     ("CT+GDC", true, true),
@@ -250,6 +274,7 @@ const STRATEGIES: &[(&str, bool, bool)] = &[
     ("HWAT+GDC", false, true),
 ];
 
+#[cfg(feature = "pjrt")]
 /// Fig 7: long-term accuracy under drift, 4 strategies (largest ViT).
 pub fn fig7(ctx: &ReproCtx) -> Result<String> {
     let model = "vit_xpike_4-128";
@@ -269,6 +294,7 @@ pub fn fig7(ctx: &ReproCtx) -> Result<String> {
     Ok(out)
 }
 
+#[cfg(feature = "pjrt")]
 /// Table V: one-year accuracy (and drop vs t0), both ViT sizes.
 pub fn table5(ctx: &ReproCtx) -> Result<String> {
     let mut out = String::from(

@@ -31,14 +31,35 @@ impl ReproCtx {
     }
 }
 
-/// Run one experiment by paper id; returns the rendered report.
-pub fn run(ctx: &ReproCtx, experiment: &str) -> Result<String> {
-    match experiment {
-        "table2" => Ok(efficiency::table2(ctx)),
+/// Accuracy experiments execute AOT artifacts: point users at the
+/// feature gate when the runtime is compiled out.
+#[cfg(not(feature = "pjrt"))]
+fn accuracy_experiment(_ctx: &ReproCtx, id: &str) -> Result<String> {
+    anyhow::bail!(
+        "experiment '{id}' executes AOT artifacts on the PJRT runtime; \
+         rebuild with `--features pjrt` (and provide artifacts via `make \
+         artifacts`)"
+    )
+}
+
+#[cfg(feature = "pjrt")]
+fn accuracy_experiment(ctx: &ReproCtx, id: &str) -> Result<String> {
+    match id {
         "table3" => accuracy::table3(ctx),
         "table4" => accuracy::table4(ctx),
         "table5" => accuracy::table5(ctx),
         "fig7" => accuracy::fig7(ctx),
+        other => anyhow::bail!("not an accuracy experiment: '{other}'"),
+    }
+}
+
+/// Run one experiment by paper id; returns the rendered report.
+pub fn run(ctx: &ReproCtx, experiment: &str) -> Result<String> {
+    match experiment {
+        "table2" => Ok(efficiency::table2(ctx)),
+        id @ ("table3" | "table4" | "table5" | "fig7") => {
+            accuracy_experiment(ctx, id)
+        }
         "fig8" => Ok(efficiency::fig8(ctx)),
         "fig9" => Ok(efficiency::fig9(ctx)),
         "fig10a" => Ok(efficiency::fig10a(ctx)),

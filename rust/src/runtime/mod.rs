@@ -1,4 +1,5 @@
-//! PJRT runtime: load AOT-compiled HLO artifacts and execute them.
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them
+//! (feature `pjrt`, off by default).
 //!
 //! `python/compile/aot.py` lowers the full T-step spiking-transformer
 //! forward (Pallas SSA + crossbar kernels included) to HLO *text*; this
@@ -6,6 +7,13 @@
 //! request path with zero python involvement. Parameters are executable
 //! *inputs* (manifest order), so the AIMC simulator can substitute
 //! quantized / noisy / drifted weights per run.
+//!
+//! The `xla` dependency is optional: the default build serves through
+//! the native simulator ([`crate::model`]) instead, and the in-tree
+//! `vendor/xla-stub` crate keeps `--features pjrt` type-checking on
+//! machines without the real PJRT bindings. [`Engine`] implements
+//! [`crate::backend::InferenceBackend`], so the coordinator and the
+//! accuracy harness are backend-agnostic.
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
@@ -301,48 +309,38 @@ impl Engine {
     }
 }
 
-/// Argmax over the last axis of `[t, batch, classes]` prefix-mean logits:
-/// returns `pred[t][b]` where entry `t` uses encoding length `t+1`.
-pub fn prefix_predictions(logits: &[f32], t_max: usize, batch: usize,
-                          classes: usize) -> Vec<Vec<usize>> {
-    let mut cum = vec![0.0f64; batch * classes];
-    let mut preds = Vec::with_capacity(t_max);
-    for t in 0..t_max {
-        let step = &logits[t * batch * classes..(t + 1) * batch * classes];
-        for (c, &v) in cum.iter_mut().zip(step) {
-            *c += v as f64;
-        }
-        preds.push(
-            (0..batch)
-                .map(|b| {
-                    let row = &cum[b * classes..(b + 1) * classes];
-                    row.iter()
-                        .enumerate()
-                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                        .map(|(i, _)| i)
-                        .unwrap()
-                })
-                .collect(),
-        );
+impl crate::backend::InferenceBackend for Engine {
+    fn run(&self, x: &[f32], seed: u32) -> Result<Vec<f32>> {
+        Engine::run(self, x, seed)
     }
-    preds
+
+    fn batch(&self) -> usize {
+        Engine::batch(self)
+    }
+
+    fn t_max(&self) -> usize {
+        Engine::t_max(self)
+    }
+
+    fn classes(&self) -> usize {
+        Engine::classes(self)
+    }
+
+    fn x_len_per_sample(&self) -> usize {
+        Engine::x_len_per_sample(self)
+    }
+
+    fn nt(&self) -> usize {
+        self.artifact.manifest.config.nt
+    }
 }
+
+// Logits decoding lives with the backend contract (always compiled).
+pub use crate::backend::prefix_predictions;
 
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn prefix_predictions_accumulate() {
-        // t=0: class1 wins for b0; t=1 flips it to class0.
-        let logits = vec![
-            0.0, 1.0, /* b0 t0 */ 2.0, 0.0, /* b1 t0 */
-            5.0, 0.0, /* b0 t1 */ 0.0, 1.0, /* b1 t1 */
-        ];
-        let p = prefix_predictions(&logits, 2, 2, 2);
-        assert_eq!(p[0], vec![1, 0]);
-        assert_eq!(p[1], vec![0, 0]);
-    }
 
     #[test]
     fn manifest_parses() {

@@ -35,10 +35,112 @@ pub fn words_for(bits: usize) -> usize {
 
 /// `popcount(a AND b)` over two equally-long word slices — the packed
 /// row dot product of two binary vectors.
+///
+/// Dispatches to a vectorized AND+popcount when the row is wide enough
+/// to fill a SIMD register and the ISA supports it (AVX2 via runtime
+/// feature detection on x86-64, NEON — baseline — on aarch64); the
+/// scalar u64 loop remains the portable fallback and the only path for
+/// short rows, where it is already optimal. All paths are exact and
+/// produce identical counts (asserted by `simd_matches_scalar`).
 #[inline]
 pub fn and_popcount(a: &[u64], b: &[u64]) -> u32 {
+    // Hard assert (not debug-only): the SIMD paths below do raw loads
+    // over `a.len()` words of both slices, so a length mismatch would be
+    // out-of-bounds UB in release builds, not just a truncated count.
+    assert_eq!(a.len(), b.len(), "and_popcount length mismatch");
+    #[cfg(target_arch = "x86_64")]
+    {
+        // One AVX2 lane is 4 words; shorter rows stay scalar. The std
+        // feature-detection macro caches its cpuid result internally.
+        if a.len() >= 4 && is_x86_feature_detected!("avx2") {
+            // SAFETY: AVX2 support was just verified at runtime.
+            return unsafe { and_popcount_avx2(a, b) };
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        // NEON is part of the baseline aarch64 target features.
+        if a.len() >= 2 {
+            return and_popcount_neon(a, b);
+        }
+    }
+    and_popcount_scalar(a, b)
+}
+
+/// Portable scalar AND+popcount (exposed so benches can compare paths).
+#[inline]
+pub fn and_popcount_scalar(a: &[u64], b: &[u64]) -> u32 {
     debug_assert_eq!(a.len(), b.len());
     a.iter().zip(b).map(|(x, y)| (x & y).count_ones()).sum()
+}
+
+/// AVX2 AND+popcount: the nibble-LUT (PSHUFB) popcount with per-256-bit
+/// SAD reduction — AVX2 has no vector popcount instruction, so each byte
+/// is split into two nibbles whose set-bit counts come from a 16-entry
+/// shuffle table, and `_mm256_sad_epu8` horizontally sums the byte
+/// counts into four u64 accumulator lanes.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn and_popcount_avx2(a: &[u64], b: &[u64]) -> u32 {
+    use std::arch::x86_64::*;
+    let n = a.len();
+    let chunks = n / 4;
+    #[rustfmt::skip]
+    let lut = _mm256_setr_epi8(
+        0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+        0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+    );
+    let low_mask = _mm256_set1_epi8(0x0f);
+    let zero = _mm256_setzero_si256();
+    let mut acc = zero;
+    for i in 0..chunks {
+        let va = _mm256_loadu_si256(a.as_ptr().add(4 * i) as *const __m256i);
+        let vb = _mm256_loadu_si256(b.as_ptr().add(4 * i) as *const __m256i);
+        let v = _mm256_and_si256(va, vb);
+        let lo = _mm256_and_si256(v, low_mask);
+        let hi = _mm256_and_si256(_mm256_srli_epi16::<4>(v), low_mask);
+        let cnt = _mm256_add_epi8(
+            _mm256_shuffle_epi8(lut, lo),
+            _mm256_shuffle_epi8(lut, hi),
+        );
+        // Byte counts are <= 8, so the SAD sums (<= 64 per 8-byte group)
+        // never overflow; the u64 lanes absorb any row length.
+        acc = _mm256_add_epi64(acc, _mm256_sad_epu8(cnt, zero));
+    }
+    let mut lanes = [0u64; 4];
+    _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+    let mut total: u64 = lanes.iter().sum();
+    for i in 4 * chunks..n {
+        total += (a[i] & b[i]).count_ones() as u64;
+    }
+    total as u32
+}
+
+/// NEON AND+popcount: `vcntq_u8` gives per-byte counts directly; the
+/// pairwise-widening adds fold them to u64 lanes.
+#[cfg(target_arch = "aarch64")]
+#[inline]
+fn and_popcount_neon(a: &[u64], b: &[u64]) -> u32 {
+    use std::arch::aarch64::*;
+    let n = a.len();
+    let chunks = n / 2;
+    // SAFETY: loads stay within the slices (2 words per chunk); NEON is
+    // a baseline aarch64 target feature.
+    unsafe {
+        let mut acc = vdupq_n_u64(0);
+        for i in 0..chunks {
+            let va = vld1q_u64(a.as_ptr().add(2 * i));
+            let vb = vld1q_u64(b.as_ptr().add(2 * i));
+            let v = vandq_u64(va, vb);
+            let cnt = vcntq_u8(vreinterpretq_u8_u64(v));
+            acc = vaddq_u64(acc, vpaddlq_u32(vpaddlq_u16(vpaddlq_u8(cnt))));
+        }
+        let mut total = vaddvq_u64(acc);
+        for i in 2 * chunks..n {
+            total += (a[i] & b[i]).count_ones() as u64;
+        }
+        total as u32
+    }
 }
 
 /// Word mask keeping bits `0..=i` of an `n`-bit row: the causal
@@ -159,6 +261,41 @@ impl SpikeVector {
                 f(wi * 64 + bits.trailing_zeros() as usize);
                 bits &= bits - 1;
             }
+        }
+    }
+
+    /// Number of set bits in `lo..hi` — `extract(lo, hi).count_ones()`
+    /// without materializing the slice (pure word masking), for hot-path
+    /// counters like the AIMC WL-pulse accounting.
+    pub fn count_ones_range(&self, lo: usize, hi: usize) -> u32 {
+        assert!(lo <= hi && hi <= self.len,
+                "count_ones_range {lo}..{hi} out of range for len {}",
+                self.len);
+        if lo == hi {
+            return 0;
+        }
+        let wlo = lo / 64;
+        let whi = (hi - 1) / 64;
+        let lo_mask = u64::MAX << (lo % 64);
+        let hi_mask = tail_mask(hi - whi * 64);
+        if wlo == whi {
+            return (self.words[wlo] & lo_mask & hi_mask).count_ones();
+        }
+        let mut total = (self.words[wlo] & lo_mask).count_ones()
+            + (self.words[whi] & hi_mask).count_ones();
+        for w in &self.words[wlo + 1..whi] {
+            total += w.count_ones();
+        }
+        total
+    }
+
+    /// Word-wise OR-join with an equally-long vector — the spike-driven
+    /// residual connection (a spike on either path propagates). Pad-bit
+    /// invariant holds: both operands keep their pads zero.
+    pub fn or_assign(&mut self, other: &SpikeVector) {
+        assert_eq!(self.len, other.len, "or_assign length mismatch");
+        for (w, o) in self.words.iter_mut().zip(&other.words) {
+            *w |= o;
         }
     }
 
@@ -532,6 +669,37 @@ mod tests {
     }
 
     #[test]
+    fn count_ones_range_matches_extract() {
+        let len = 200;
+        let b: Vec<bool> = (0..len).map(|i| pat(i, 2, 6, 0.5)).collect();
+        let v = SpikeVector::from_bools(&b);
+        for lo in [0usize, 1, 63, 64, 65, 100, 127, 128, 199, 200] {
+            for hi in [0usize, 1, 63, 64, 65, 100, 128, 150, 200] {
+                if lo > hi {
+                    continue;
+                }
+                assert_eq!(v.count_ones_range(lo, hi),
+                           v.extract(lo, hi).count_ones(),
+                           "{lo}..{hi}");
+            }
+        }
+    }
+
+    #[test]
+    fn or_assign_is_elementwise_union() {
+        for &len in WIDTHS {
+            let a: Vec<bool> = (0..len).map(|i| pat(i, 0, 31, 0.4)).collect();
+            let b: Vec<bool> = (0..len).map(|i| pat(i, 0, 32, 0.4)).collect();
+            let mut va = SpikeVector::from_bools(&a);
+            let vb = SpikeVector::from_bools(&b);
+            va.or_assign(&vb);
+            let want: Vec<bool> =
+                a.iter().zip(&b).map(|(&x, &y)| x || y).collect();
+            assert_eq!(va.to_bools(), want, "len={len}");
+        }
+    }
+
+    #[test]
     fn and_popcount_is_dot_product() {
         for &len in WIDTHS {
             let a: Vec<bool> = (0..len).map(|i| pat(i, 0, 8, 0.6)).collect();
@@ -541,6 +709,47 @@ mod tests {
             let want = a.iter().zip(&b).filter(|(&x, &y)| x && y).count();
             assert_eq!(and_popcount(pa.words(), pb.words()), want as u32);
         }
+    }
+
+    #[test]
+    fn simd_matches_scalar() {
+        // Exercises whichever vector path the host supports (the AVX2 /
+        // NEON dispatch in `and_popcount`) against the scalar loop, at
+        // every remainder length around the 4-word SIMD chunk size and at
+        // wide rows, across densities.
+        for len in 0..=40 {
+            for &p in &[0.0, 0.1, 0.5, 0.9, 1.0] {
+                let a: Vec<u64> = (0..len)
+                    .map(|i| {
+                        let mut w = 0u64;
+                        for bit in 0..64 {
+                            if pat(i, bit, 21, p) {
+                                w |= 1 << bit;
+                            }
+                        }
+                        w
+                    })
+                    .collect();
+                let b: Vec<u64> = (0..len)
+                    .map(|i| {
+                        let mut w = 0u64;
+                        for bit in 0..64 {
+                            if pat(i, bit, 22, p) {
+                                w |= 1 << bit;
+                            }
+                        }
+                        w
+                    })
+                    .collect();
+                assert_eq!(and_popcount(&a, &b),
+                           and_popcount_scalar(&a, &b),
+                           "len={len} p={p}");
+            }
+        }
+        // Saturation check: all-ones rows count every bit exactly.
+        let ones = vec![u64::MAX; 33];
+        assert_eq!(and_popcount(&ones, &ones), 33 * 64);
+        assert_eq!(and_popcount(&[], &[]), 0);
     }
 
     #[test]

@@ -59,6 +59,27 @@ impl EvalSet {
     }
 }
 
+/// Synthetic image-classification eval set: per-class feature prototypes
+/// in [0, 1] plus clamped Gaussian noise — the artifact-free stand-in
+/// for the exported `image_eval.bin` that lets the native-model examples
+/// and harness run on a fresh checkout. Deterministic per seed.
+pub fn synthetic_image_set(rng: &mut Rng, n: usize, sample_len: usize,
+                           classes: usize) -> EvalSet {
+    let protos: Vec<Vec<f32>> = (0..classes)
+        .map(|_| (0..sample_len).map(|_| rng.uniform_f32()).collect())
+        .collect();
+    let mut x = Vec::with_capacity(n * sample_len);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let cls = i % classes;
+        labels.push(cls as i32);
+        x.extend(protos[cls].iter().map(|&p| {
+            (p + rng.normal_ms(0.0, 0.15) as f32).clamp(0.0, 1.0)
+        }));
+    }
+    EvalSet { x, labels, n, sample_len }
+}
+
 /// QPSK symbol for index 0..3: bit0 -> real sign, bit1 -> imag sign
 /// (matches `data.qpsk_symbols`).
 pub fn qpsk(idx: u32) -> (f64, f64) {
@@ -223,6 +244,22 @@ mod tests {
         assert!(set.batch(2, 5).is_err());
         assert!(set.batch(1, 6).is_err());
         assert!(set.batch(0, 0).is_err());
+    }
+
+    #[test]
+    fn synthetic_image_set_is_deterministic_and_bounded() {
+        let mut a = Rng::seed_from_u64(4);
+        let mut b = Rng::seed_from_u64(4);
+        let s1 = synthetic_image_set(&mut a, 20, 48, 10);
+        let s2 = synthetic_image_set(&mut b, 20, 48, 10);
+        assert_eq!(s1.x, s2.x);
+        assert_eq!(s1.labels, s2.labels);
+        assert_eq!(s1.n_batches(4).unwrap(), 5);
+        assert!(s1.x.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        // Labels cycle over all classes.
+        assert_eq!(s1.labels[0], 0);
+        assert_eq!(s1.labels[9], 9);
+        assert_eq!(s1.labels[10], 0);
     }
 
     #[test]

@@ -1,0 +1,202 @@
+//! Coordinator tests against a deterministic mock `InferenceBackend` —
+//! no artifacts, no PJRT, no simulator: pure batching semantics.
+//!
+//! Covers the batcher contract end to end: padding lanes replicate the
+//! last real sample, per-request responses slice the right lane, the
+//! execution seed derives from the head request, execution failures are
+//! surfaced per request in the metrics while the server keeps serving,
+//! and the bounded queue exerts backpressure.
+
+use std::sync::{Arc, Mutex};
+
+use xpikeformer::backend::InferenceBackend;
+use xpikeformer::config::RunConfig;
+use xpikeformer::coordinator::Server;
+
+/// Deterministic mock: logits encode (lane input, seed, t, class) so a
+/// response proves exactly which lane and seed produced it. An input
+/// sample whose first feature is negative makes the whole execution
+/// fail — the error-path probe.
+#[derive(Clone)]
+struct MockBackend {
+    batch: usize,
+    t_max: usize,
+    classes: usize,
+    sample_len: usize,
+    /// Simulated execution time, so queue-depth tests are deterministic.
+    delay: std::time::Duration,
+    /// Every (x, seed) execution observed, for padding assertions.
+    executions: Arc<Mutex<Vec<(Vec<f32>, u32)>>>,
+}
+
+impl MockBackend {
+    fn new(batch: usize) -> MockBackend {
+        MockBackend {
+            batch,
+            t_max: 2,
+            classes: 3,
+            sample_len: 2,
+            delay: std::time::Duration::ZERO,
+            executions: Arc::new(Mutex::new(Vec::new())),
+        }
+    }
+
+    /// The closed-form logit the mock emits.
+    fn logit(x0: f32, seed: u32, t: usize, c: usize) -> f32 {
+        1000.0 * x0 + seed as f32 + 10.0 * t as f32 + c as f32
+    }
+}
+
+impl InferenceBackend for MockBackend {
+    fn run(&self, x: &[f32], seed: u32) -> anyhow::Result<Vec<f32>> {
+        assert_eq!(x.len(), self.batch * self.sample_len,
+                   "batcher must always pass a full batch");
+        anyhow::ensure!(x[0] >= 0.0, "mock failure requested");
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
+        self.executions.lock().unwrap().push((x.to_vec(), seed));
+        let mut out =
+            Vec::with_capacity(self.t_max * self.batch * self.classes);
+        for t in 0..self.t_max {
+            for b in 0..self.batch {
+                let x0 = x[b * self.sample_len];
+                for c in 0..self.classes {
+                    out.push(Self::logit(x0, seed, t, c));
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn t_max(&self) -> usize {
+        self.t_max
+    }
+
+    fn classes(&self) -> usize {
+        self.classes
+    }
+
+    fn x_len_per_sample(&self) -> usize {
+        self.sample_len
+    }
+}
+
+fn cfg(max_batch: usize, window_us: u64, queue_depth: usize) -> RunConfig {
+    RunConfig {
+        max_batch,
+        batch_window_us: window_us,
+        queue_depth,
+        seed: 0, // execution seed == head request seed (no extra xor)
+        ..RunConfig::default()
+    }
+}
+
+#[test]
+fn responses_slice_the_right_lane_and_seed() {
+    let backend = MockBackend::new(4);
+    // A generous window so all three submissions merge into one batch
+    // even on a loaded CI machine.
+    let server = Server::start(backend.clone(), cfg(4, 50_000, 16));
+    let client = server.client();
+    // Three requests with distinct first features; batched together they
+    // occupy lanes 0..3 and run under the head request's seed.
+    let pendings: Vec<_> = (0..3)
+        .map(|i| client.infer(vec![i as f32 + 1.0, 0.0], 40 + i).unwrap())
+        .collect();
+    let responses: Vec<_> =
+        pendings.into_iter().map(|p| p.wait().unwrap()).collect();
+    // All requests landed in one execution under the head seed 40.
+    let execs = backend.executions.lock().unwrap().clone();
+    assert_eq!(execs.len(), 1, "window must merge into one batch");
+    let (x, seed) = &execs[0];
+    assert_eq!(*seed, 40, "execution seed derives from the head request");
+    for (i, r) in responses.iter().enumerate() {
+        assert_eq!(r.t_max, 2);
+        assert_eq!(r.classes, 3);
+        for t in 0..2 {
+            for c in 0..3 {
+                assert_eq!(r.logits_t[t * 3 + c],
+                           MockBackend::logit(i as f32 + 1.0, 40, t, c),
+                           "req {i} t={t} c={c}");
+            }
+        }
+    }
+    // Padding lane 3 replicated the last real sample (first feature 3.0).
+    assert_eq!(x[3 * 2], 3.0, "padding must repeat the last sample");
+    drop(client);
+    server.shutdown();
+}
+
+#[test]
+fn per_request_seeds_stay_independent_across_batches() {
+    let backend = MockBackend::new(2);
+    // Zero window: every request runs in its own execution (lane 0).
+    let server = Server::start(backend.clone(), cfg(1, 0, 16));
+    let client = server.client();
+    let a = client.infer_blocking(vec![0.5, 0.0], 7).unwrap();
+    let b = client.infer_blocking(vec![0.5, 0.0], 8).unwrap();
+    assert_eq!(a.logits_t[0], MockBackend::logit(0.5, 7, 0, 0));
+    assert_eq!(b.logits_t[0], MockBackend::logit(0.5, 8, 0, 0));
+    assert_ne!(a.logits_t, b.logits_t, "seed must reach the backend");
+    let execs = backend.executions.lock().unwrap().clone();
+    assert_eq!(execs.len(), 2);
+    assert_eq!((execs[0].1, execs[1].1), (7, 8));
+    drop(client);
+    server.shutdown();
+}
+
+#[test]
+fn execution_failure_counts_requests_and_server_survives() {
+    let backend = MockBackend::new(2);
+    let server = Server::start(backend.clone(), cfg(2, 2000, 16));
+    let client = server.client();
+    // Two poisoned requests batched together: the execution fails, both
+    // submitters observe the dropped response channel.
+    let p1 = client.infer(vec![-1.0, 0.0], 1).unwrap();
+    let p2 = client.infer(vec![-2.0, 0.0], 2).unwrap();
+    assert!(p1.wait().is_err(), "failed execution must surface");
+    assert!(p2.wait().is_err());
+    // The server keeps serving afterwards.
+    let ok = client.infer_blocking(vec![0.25, 0.0], 3).unwrap();
+    assert_eq!(ok.logits_t[0], MockBackend::logit(0.25, 3, 0, 0));
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.failed, 2, "both dropped requests counted");
+    assert_eq!(snap.completed, 1);
+    assert!(snap.to_string().contains("failed=2"));
+    drop(client);
+    server.shutdown();
+}
+
+#[test]
+fn backpressure_rejects_when_queue_full() {
+    // A slow backend + tiny queue: the producer must outpace the batcher
+    // and observe Full deterministically.
+    let mut backend = MockBackend::new(1);
+    backend.delay = std::time::Duration::from_millis(5);
+    let server = Server::start(backend, cfg(1, 0, 2));
+    let client = server.client();
+    let mut pend = Vec::new();
+    let mut saw_full = false;
+    for i in 0..256 {
+        match client.try_infer(vec![0.5, 0.0], i).unwrap() {
+            Some(p) => pend.push(p),
+            None => {
+                saw_full = true;
+                break;
+            }
+        }
+    }
+    assert!(saw_full, "bounded queue must exert backpressure");
+    assert!(server.metrics.snapshot().rejected >= 1,
+            "shed submissions must be counted");
+    for p in pend {
+        let _ = p.wait();
+    }
+    drop(client);
+    server.shutdown();
+}

@@ -1,0 +1,158 @@
+//! Offline stand-in for the `xla` crate (xla-rs style PJRT bindings).
+//!
+//! The build environment has no network access and no PJRT plugin, so the
+//! real bindings cannot be declared as a registry dependency. This crate
+//! mirrors exactly the API surface `xpikeformer::runtime` uses, letting
+//! `cargo check --features pjrt` type-check the runtime module on a stock
+//! toolchain. Every runtime entry point ([`PjRtClient::cpu`]) returns an
+//! error, so misuse fails loudly at load time rather than silently
+//! producing wrong numbers. To execute AOT artifacts for real, point the
+//! `xla` path dependency in `rust/Cargo.toml` at the actual xla-rs crate —
+//! no `xpikeformer` source change is required.
+
+use std::fmt;
+
+/// Error type matching the real bindings' `anyhow`-compatible surface.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla stub: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>() -> Result<T> {
+    Err(Error(
+        "PJRT is unavailable in this offline build; replace the \
+         vendor/xla-stub path dependency with the real xla crate"
+            .to_string(),
+    ))
+}
+
+/// Element types a [`Literal`] can be read back as.
+pub trait NativeType: Copy + Default {}
+impl NativeType for f32 {}
+impl NativeType for u32 {}
+impl NativeType for i32 {}
+
+/// A host-side tensor literal (values + dims), API-compatible subset.
+#[derive(Debug, Clone, Default)]
+pub struct Literal {
+    values: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// 1-D f32 literal.
+    pub fn vec1(values: &[f32]) -> Literal {
+        Literal { values: values.to_vec(), dims: vec![values.len() as i64] }
+    }
+
+    /// Scalar u32 literal (seeds).
+    pub fn scalar(value: u32) -> Literal {
+        Literal { values: vec![value as f32], dims: vec![] }
+    }
+
+    /// Reshape to `dims` (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.values.len() {
+            return Err(Error(format!(
+                "reshape {:?} on {} elements",
+                dims,
+                self.values.len()
+            )));
+        }
+        Ok(Literal { values: self.values.clone(), dims: dims.to_vec() })
+    }
+
+    /// Unwrap a 1-tuple result.
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        unavailable()
+    }
+
+    /// Read the buffer back as a typed vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        unavailable()
+    }
+}
+
+/// Parsed HLO module text.
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable()
+    }
+}
+
+/// A computation handle built from an HLO module.
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// PJRT client handle.
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    /// The stub cannot host a PJRT plugin: always errors.
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation)
+                   -> Result<PjRtLoadedExecutable> {
+        unavailable()
+    }
+}
+
+/// Device-side buffer returned by an execution.
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable()
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    /// Execute with borrowed literals; shape mirrors the real bindings
+    /// (`[replica][output]` buffers).
+    pub fn execute<T: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_shapes_roundtrip() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[2, 2]).is_ok());
+        assert!(l.reshape(&[3, 2]).is_err());
+    }
+
+    #[test]
+    fn runtime_paths_error_loudly() {
+        assert!(PjRtClient::cpu().is_err());
+        let msg = PjRtClient::cpu().unwrap_err().to_string();
+        assert!(msg.contains("offline"), "{msg}");
+    }
+}
