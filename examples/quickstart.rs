@@ -1,7 +1,8 @@
 //! Quickstart: run the native Xpikeformer pipeline end to end — no
 //! python, no AOT artifacts, no PJRT. Builds a tiny spiking ViT on the
 //! simulated hardware (PCM crossbars + SSA tiles + LIF banks), runs a
-//! forward pass, verifies bit-level reproducibility, and prints the
+//! forward pass, verifies bit-level reproducibility (including the
+//! lane-batched forward against its serial reference), and prints the
 //! measured per-layer energy breakdown.
 //!
 //! ```sh
@@ -54,7 +55,26 @@ fn main() -> Result<()> {
         println!("prediction @ T={t}: class {}", preds[t - 1][0]);
     }
 
-    // 5. The measured energy the inference cost, per pipeline stage.
+    // 5. Lane batching: the crossbars advance several samples in
+    //    lock-step (one weight traversal per token, all lanes) and every
+    //    lane stays bit-identical to its serial run.
+    let lanes = 4usize;
+    let xs: Vec<f32> = std::iter::repeat_with(|| rng.uniform_f32())
+        .take(lanes * model.sample_len())
+        .collect();
+    let seeds: Vec<u64> = (0..lanes as u64).map(|l| 70 + l).collect();
+    let t0 = std::time::Instant::now();
+    let (batched, benergy) = model.forward_batch(&xs, lanes, &seeds)?;
+    println!("\nforward_batch: {lanes} lanes in {:?} \
+              ({} logits, {} inferences metered)",
+             t0.elapsed(), batched.len(), benergy.inferences);
+    let per = dims.t_steps * dims.classes;
+    let (solo, _) = model.forward(&xs[..model.sample_len()], seeds[0])?;
+    anyhow::ensure!(batched[..per] == solo[..],
+                    "lane 0 must be bit-identical to its serial run");
+    println!("lane equivalence: batched lane 0 == serial forward");
+
+    // 6. The measured energy the inference cost, per pipeline stage.
     println!("\nmeasured energy per layer:\n{}", energy.report());
     println!("\nquickstart OK");
     Ok(())

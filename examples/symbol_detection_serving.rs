@@ -12,8 +12,13 @@
 //!
 //! ```sh
 //! cargo run --release --example symbol_detection_serving \
-//!     [n_requests] [concurrency]
+//!     [n_requests] [concurrency] [shards]
 //! ```
+//!
+//! With `shards > 1` the coordinator fans gathered batches out across
+//! that many native backend replicas (same programmed model, shared
+//! energy accumulator) and the final snapshot reports the per-shard
+//! split.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -32,6 +37,8 @@ fn main() -> Result<()> {
         .unwrap_or(256);
     let concurrency: usize = args.get(2).map(|s| s.parse().unwrap())
         .unwrap_or(16);
+    let shards: usize = args.get(3).map(|s| s.parse().unwrap())
+        .unwrap_or(1).max(1);
 
     let (nt, nr) = (2usize, 2usize);
     let dims = gpt_native(2, 64, 2, nt, nr, 4);
@@ -43,11 +50,14 @@ fn main() -> Result<()> {
     let exe_batch = 8usize;
     let backend = NativeBackend::new(model, exe_batch);
     let energy_handle = backend.clone();
-    println!("antennas {nt}x{nr}, executable batch {exe_batch}, T={}",
+    println!("antennas {nt}x{nr}, executable batch {exe_batch}, T={}, \
+              {shards} shard(s)",
              backend.t_max());
 
     let cfg = RunConfig { max_batch: exe_batch, ..RunConfig::default() };
-    let server = Server::start(backend, cfg);
+    let replicas: Vec<NativeBackend> =
+        (0..shards).map(|_| backend.clone()).collect();
+    let server = Server::start_sharded(replicas, cfg);
 
     // Closed-loop load generators: `concurrency` client threads.
     let done = Arc::new(AtomicUsize::new(0));

@@ -16,7 +16,7 @@ use xpikeformer::util::Rng;
 use xpikeformer::workloads::MimoGenerator;
 
 fn run_once(max_batch: usize, window_us: u64, n_requests: usize,
-            concurrency: usize) {
+            concurrency: usize, shards: usize) {
     let (nt, nr) = (2usize, 2usize);
     let dims = gpt_native(2, 64, 2, nt, nr, 4);
     let model = XpikeModel::new(&dims, &HardwareConfig::default(), 42);
@@ -26,7 +26,9 @@ fn run_once(max_batch: usize, window_us: u64, n_requests: usize,
         batch_window_us: window_us,
         ..RunConfig::default()
     };
-    let server = Server::start(backend, cfg);
+    let replicas: Vec<NativeBackend> =
+        (0..shards.max(1)).map(|_| backend.clone()).collect();
+    let server = Server::start_sharded(replicas, cfg);
     let done = Arc::new(AtomicUsize::new(0));
     let t0 = Instant::now();
     let mut handles = Vec::new();
@@ -51,9 +53,13 @@ fn run_once(max_batch: usize, window_us: u64, n_requests: usize,
     }
     let wall = t0.elapsed();
     let snap = server.metrics.snapshot();
+    let split: Vec<u64> =
+        snap.per_shard.iter().map(|s| s.completed).collect();
     println!(
-        "max_batch={max_batch:<2} window={window_us:>4}us conc={concurrency:<2} \
-         -> {:.1} req/s  p50={}us p95={}us mean_batch={:.2}",
+        "max_batch={max_batch:<2} window={window_us:>4}us \
+         conc={concurrency:<2} shards={shards} \
+         -> {:.1} req/s  p50={}us p95={}us mean_batch={:.2} \
+         shard_split={split:?}",
         n_requests as f64 / wall.as_secs_f64(),
         snap.p50_us, snap.p95_us, snap.mean_batch
     );
@@ -64,8 +70,12 @@ fn main() {
     println!("== coordinator serving benchmarks (native backend) ==");
     let n = 128;
     // Batching ablation: no batching vs windows vs full batch.
-    run_once(1, 0, n, 8);
-    run_once(4, 500, n, 8);
-    run_once(8, 500, n, 16);
-    run_once(8, 2000, n, 16);
+    run_once(1, 0, n, 8, 1);
+    run_once(4, 500, n, 8, 1);
+    run_once(8, 500, n, 16, 1);
+    run_once(8, 2000, n, 16, 1);
+    // Shard-router ablation: the same load fanned across backend
+    // replicas (one programmed model, several execution engines).
+    run_once(8, 500, n, 16, 2);
+    run_once(4, 500, n, 16, 4);
 }

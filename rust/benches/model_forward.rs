@@ -1,9 +1,11 @@
 //! Native model forward benchmarks: whole spiking-transformer inferences
 //! on the composed hardware simulators (AIMC crossbars + SSA tiles +
-//! LIF banks), at the native presets and a scaled-up stress point.
-//! Overwrites the repo-root `BENCH_model.json` (override the path with
-//! `BENCH_MODEL_JSON=...`) so the native-pipeline perf trajectory is
-//! tracked across PRs.
+//! LIF banks), at the native presets and a scaled-up stress point, plus
+//! the batch-datapath ablation: one OS thread per lane (the pre-refactor
+//! backend) vs one lane-batched `forward_batch` call vs the chunked
+//! `NativeBackend::run` datapath. Overwrites the repo-root
+//! `BENCH_model.json` (override the path with `BENCH_MODEL_JSON=...`) so
+//! the native-pipeline perf trajectory is tracked across PRs.
 //!
 //! Run: `cargo bench --bench model_forward`
 
@@ -64,25 +66,80 @@ fn main() {
     let big = vit_native(4, 128, 4, 6);
     let big_s = bench_model(&big, budget, &mut records);
 
-    // Batched backend throughput (parallel lanes on scoped threads).
-    let batch = 8usize;
+    // -- Batch-datapath ablation at 8 lanes ------------------------------
+    let lanes = 8usize;
     let model = XpikeModel::new(&vit, &HardwareConfig::default(), 42);
-    let backend = NativeBackend::new(model, batch);
     let mut rng = Rng::seed_from_u64(2);
-    let xb: Vec<f32> = (0..batch * backend.x_len_per_sample())
-        .map(|_| rng.uniform_f32())
-        .collect();
-    let r_batch = bench(
-        &format!("backend batch={batch} {}", vit.name),
+    let sl = model.sample_len();
+    let xb: Vec<f32> =
+        (0..lanes * sl).map(|_| rng.uniform_f32()).collect();
+    let seeds: Vec<u64> = (0..lanes as u64).collect();
+
+    // Baseline: the pre-refactor backend — one scoped OS thread per
+    // lane, each re-walking every crossbar stage alone.
+    let r_threads = bench(
+        &format!("per-lane-threads lanes={lanes} {}", vit.name),
+        1,
+        budget,
+        || {
+            let mut outs: Vec<Option<Vec<f32>>> =
+                (0..lanes).map(|_| None).collect();
+            std::thread::scope(|scope| {
+                for (lane, slot) in outs.iter_mut().enumerate() {
+                    let model = &model;
+                    let xs = &xb[lane * sl..(lane + 1) * sl];
+                    let seed = seeds[lane];
+                    scope.spawn(move || {
+                        *slot =
+                            Some(model.forward(xs, seed).unwrap().0);
+                    });
+                }
+            });
+            black_box(outs);
+        },
+    );
+    records.push(result_json(&r_threads));
+
+    // One lane-batched call: every crossbar stage traversed once per
+    // (t, token) across all lanes, SSA tiling (lane, head).
+    let r_batch_call = bench(
+        &format!("forward_batch lanes={lanes} {}", vit.name),
+        1,
+        budget,
+        || {
+            black_box(
+                model.forward_batch(&xb, lanes, &seeds).unwrap());
+        },
+    );
+    records.push(result_json(&r_batch_call));
+    let speedup_vs_threads = r_threads.mean.as_secs_f64()
+        / r_batch_call.mean.as_secs_f64();
+    println!("    -> forward_batch vs per-lane threads: \
+              {speedup_vs_threads:.2}x");
+
+    // The serving datapath: lane_chunk-sized forward_batch calls on
+    // parallel threads (locality within a chunk, cores across chunks).
+    let backend =
+        NativeBackend::new(XpikeModel::new(&vit,
+                                           &HardwareConfig::default(),
+                                           42),
+                           lanes);
+    let lane_chunk = HardwareConfig::default().lane_chunk;
+    let r_backend = bench(
+        &format!("backend chunked batch={lanes} chunk={lane_chunk} {}",
+                 vit.name),
         1,
         budget,
         || {
             black_box(backend.run(&xb, 7).unwrap());
         },
     );
-    let lane_par = vit_s * batch as f64 / r_batch.mean.as_secs_f64();
-    println!("    -> lane parallelism: {lane_par:.2}x of serial");
-    records.push(result_json(&r_batch));
+    records.push(result_json(&r_backend));
+    let lane_par = vit_s * lanes as f64 / r_backend.mean.as_secs_f64();
+    let backend_vs_threads =
+        r_threads.mean.as_secs_f64() / r_backend.mean.as_secs_f64();
+    println!("    -> chunked backend: {lane_par:.2}x of serial, \
+              {backend_vs_threads:.2}x of per-lane threads");
 
     let path = std::env::var("BENCH_MODEL_JSON").unwrap_or_else(|_| {
         concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_model.json").into()
@@ -91,9 +148,11 @@ fn main() {
         "{{\n  \"bench\": \"model_forward\",\n  \"measured\": true,\n  \
          \"threads\": {},\n  \"forward_ms\": {{\"vit_native_2-64\": \
          {:.3}, \"gpt_native_2-64_2x2\": {:.3}, \"vit_native_4-128\": \
-         {:.3}}},\n  \"batch\": {{\"lanes\": {batch}, \
-         \"lane_parallelism\": {lane_par:.3}}},\n  \"results\": [\n    \
-         {}\n  ]\n}}\n",
+         {:.3}}},\n  \"batch\": {{\"lanes\": {lanes}, \"lane_chunk\": \
+         {lane_chunk}, \"lane_parallelism\": {lane_par:.3}, \
+         \"forward_batch_vs_lane_threads\": {speedup_vs_threads:.3}, \
+         \"chunked_backend_vs_lane_threads\": \
+         {backend_vs_threads:.3}}},\n  \"results\": [\n    {}\n  ]\n}}\n",
         std::thread::available_parallelism()
             .map(|p| p.get()).unwrap_or(1),
         vit_s * 1e3,

@@ -22,9 +22,25 @@ use anyhow::Result;
 ///   dynamic batcher may pad unused lanes with copies of real samples and
 ///   discard their outputs.
 /// * Identical `(x, seed)` pairs must produce bit-identical logits.
+/// * `run_seeded` strengthens the contract to one seed per lane: a
+///   sample's logits depend only on `(sample, its seed)` — independent of
+///   lane position and batch co-tenants.
 pub trait InferenceBackend: Send + 'static {
     /// Execute one fixed-shape forward pass.
     fn run(&self, x: &[f32], seed: u32) -> Result<Vec<f32>>;
+
+    /// Execute one fixed-shape forward pass with one stochastic seed per
+    /// batch lane (`seeds.len() == batch()`), so every request's
+    /// randomness follows its *own* seed regardless of which batch it
+    /// lands in — the coordinator's per-request reproducibility path.
+    ///
+    /// The default falls back to [`Self::run`] under `seeds[0]`: the
+    /// single-seed contract of backends that take one seed input (the
+    /// AOT/HLO artifacts, simple mocks). Backends that can honor
+    /// per-lane seeds (the native simulator) override this.
+    fn run_seeded(&self, x: &[f32], seeds: &[u32]) -> Result<Vec<f32>> {
+        self.run(x, seeds.first().copied().unwrap_or(0))
+    }
 
     /// Executable batch size (the hardware's physical parallelism).
     fn batch(&self) -> usize;
@@ -45,13 +61,26 @@ pub trait InferenceBackend: Send + 'static {
     }
 }
 
+/// NaN-tolerant argmax keeping the *last* maximal entry — the shared
+/// logit-decoding fold of [`prefix_predictions`] and
+/// [`crate::coordinator::Response::predict_at`].
+///
+/// A NaN value (possible under extreme analog drift) never wins and
+/// never panics; an all-NaN row falls back to index 0. Ties keep the
+/// last maximal index, matching the pre-fix `max_by` semantics so
+/// reproduced accuracy numbers are unchanged.
+pub fn nan_safe_argmax_last(row: &[f64]) -> usize {
+    row.iter()
+        .enumerate()
+        .fold((0usize, f64::NEG_INFINITY), |(bi, bv), (i, &v)| {
+            if v >= bv { (i, v) } else { (bi, bv) }
+        })
+        .0
+}
+
 /// Argmax over the last axis of `[t, batch, classes]` prefix-mean logits:
 /// returns `pred[t][b]` where entry `t` uses encoding length `t+1`.
-///
-/// NaN-tolerant like [`crate::coordinator::Response::predict_at`]: a NaN
-/// logit (possible under extreme analog drift) never wins and never
-/// panics; all-NaN rows fall back to class 0. Ties keep the *last*
-/// maximal class, matching the old `max_by` semantics.
+/// NaN handling per [`nan_safe_argmax_last`].
 pub fn prefix_predictions(logits: &[f32], t_max: usize, batch: usize,
                           classes: usize) -> Vec<Vec<usize>> {
     let mut cum = vec![0.0f64; batch * classes];
@@ -64,14 +93,8 @@ pub fn prefix_predictions(logits: &[f32], t_max: usize, batch: usize,
         preds.push(
             (0..batch)
                 .map(|b| {
-                    let row = &cum[b * classes..(b + 1) * classes];
-                    row.iter()
-                        .enumerate()
-                        .fold((0usize, f64::NEG_INFINITY),
-                              |(bi, bv), (i, &v)| {
-                                  if v >= bv { (i, v) } else { (bi, bv) }
-                              })
-                        .0
+                    nan_safe_argmax_last(
+                        &cum[b * classes..(b + 1) * classes])
                 })
                 .collect(),
         );
@@ -103,5 +126,13 @@ mod tests {
                           f32::NAN, f32::NAN, f32::NAN /* b1 t0 */];
         let p = prefix_predictions(&logits, 1, 2, 3);
         assert_eq!(p[0], vec![2, 0]);
+    }
+
+    #[test]
+    fn argmax_keeps_last_max_and_survives_nan() {
+        assert_eq!(nan_safe_argmax_last(&[1.0, 3.0, 3.0]), 2);
+        assert_eq!(nan_safe_argmax_last(&[f64::NAN, 2.0, 1.0]), 1);
+        assert_eq!(nan_safe_argmax_last(&[f64::NAN, f64::NAN]), 0);
+        assert_eq!(nan_safe_argmax_last(&[]), 0);
     }
 }

@@ -190,6 +190,14 @@ pub struct HardwareConfig {
     pub t0_seconds: f64,
     /// ADC full-scale = kappa * sqrt(rows) * rms(w).
     pub adc_clip_kappa: f64,
+    /// Batch lanes the native simulator advances in lock-step per
+    /// [`crate::model::XpikeModel::forward_batch`] call: within a chunk
+    /// every crossbar stage is traversed once per (t, token) and applied
+    /// across all lanes (the paper's batch-level array reuse, Fig 6);
+    /// chunks of an executable batch run on parallel OS threads.
+    /// Simulator scheduling, not a Table-II device parameter; 1 recovers
+    /// one-thread-per-lane.
+    pub lane_chunk: usize,
 }
 
 impl Default for HardwareConfig {
@@ -209,6 +217,7 @@ impl Default for HardwareConfig {
             nu_std: 0.01,
             t0_seconds: 25.0,
             adc_clip_kappa: 4.0,
+            lane_chunk: 2,
         }
     }
 }
@@ -343,6 +352,7 @@ mod tests {
         assert_eq!(hw.adc_levels(), 15);
         assert_eq!(hw.readout_units(), 16);
         assert_eq!(hw.crossbar_dim, 128);
+        assert!(hw.lane_chunk >= 1, "lane_chunk must stay positive");
     }
 
     #[test]

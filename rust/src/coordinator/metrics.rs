@@ -1,9 +1,18 @@
-//! Serving metrics: throughput, latency distribution, batch occupancy.
+//! Serving metrics: throughput, latency distribution, batch occupancy —
+//! aggregated across the server plus per-shard execution counters.
+//!
+//! The latency reservoir is global (exact percentiles over every
+//! completed request); `completed`/`failed`/batch occupancy are also
+//! tracked per shard so the sharded router's balance and per-shard
+//! failures stay observable. [`Metrics::snapshot`] returns the merged
+//! view with the per-shard breakdown attached; per-shard counts always
+//! sum to the totals.
 
 use std::sync::Mutex;
 use std::time::Instant;
 
-/// Lock-protected metrics sink shared by the batcher and reporters.
+/// Lock-protected metrics sink shared by the router, shard executors and
+/// reporters.
 #[derive(Debug)]
 pub struct Metrics {
     inner: Mutex<Inner>,
@@ -21,40 +30,69 @@ struct Inner {
     rejected: u64,
     /// Requests lost to backend execution failures.
     failed: u64,
+    /// Per-shard execution counters (index == shard).
+    shards: Vec<ShardCounters>,
+}
+
+#[derive(Debug, Default, Clone)]
+struct ShardCounters {
+    completed: u64,
+    failed: u64,
+    batches: u64,
+    batched_samples: u64,
 }
 
 const RESERVOIR: usize = 65536;
 
 impl Default for Metrics {
     fn default() -> Self {
-        Metrics { inner: Mutex::new(Inner::default()), started: Instant::now() }
+        Metrics::new(1)
     }
 }
 
 impl Metrics {
-    pub fn record_batch(&self, batch_size: usize) {
+    /// Metrics for a server with `n_shards` backend shards (>= 1).
+    pub fn new(n_shards: usize) -> Metrics {
+        let inner = Inner {
+            shards: vec![ShardCounters::default(); n_shards.max(1)],
+            ..Inner::default()
+        };
+        Metrics { inner: Mutex::new(inner), started: Instant::now() }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.inner.lock().unwrap().shards.len()
+    }
+
+    pub fn record_batch(&self, shard: usize, batch_size: usize) {
         let mut m = self.inner.lock().unwrap();
         m.batches += 1;
         m.batched_samples += batch_size as u64;
+        m.shards[shard].batches += 1;
+        m.shards[shard].batched_samples += batch_size as u64;
     }
 
-    pub fn record_done(&self, e2e_us: u64, queue_us: u64) {
+    pub fn record_done(&self, shard: usize, e2e_us: u64, queue_us: u64) {
         let mut m = self.inner.lock().unwrap();
         m.completed += 1;
+        m.shards[shard].completed += 1;
         if m.latencies_us.len() < RESERVOIR {
             m.latencies_us.push(e2e_us);
             m.queue_waits_us.push(queue_us);
         }
     }
 
-    /// Count one submission shed by queue-full backpressure.
+    /// Count one submission shed by queue-full backpressure (front
+    /// queue — not attributable to a shard).
     pub fn record_rejected(&self) {
         self.inner.lock().unwrap().rejected += 1;
     }
 
-    /// Count `n` requests dropped by one failed backend execution.
-    pub fn record_failed(&self, n: u64) {
-        self.inner.lock().unwrap().failed += n;
+    /// Count `n` requests dropped by one failed execution on `shard`.
+    pub fn record_failed(&self, shard: usize, n: u64) {
+        let mut m = self.inner.lock().unwrap();
+        m.failed += n;
+        m.shards[shard].failed += n;
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
@@ -84,11 +122,32 @@ impl Metrics {
                 m.queue_waits_us.iter().sum::<u64>() as f64
                     / m.queue_waits_us.len() as f64
             },
+            per_shard: m
+                .shards
+                .iter()
+                .map(|s| ShardSnapshot {
+                    completed: s.completed,
+                    failed: s.failed,
+                    batches: s.batches,
+                    mean_batch: if s.batches == 0 { 0.0 } else {
+                        s.batched_samples as f64 / s.batches as f64
+                    },
+                })
+                .collect(),
         }
     }
 }
 
-/// Point-in-time metrics view.
+/// One shard's execution counters inside a [`MetricsSnapshot`].
+#[derive(Debug, Clone, Default)]
+pub struct ShardSnapshot {
+    pub completed: u64,
+    pub failed: u64,
+    pub batches: u64,
+    pub mean_batch: f64,
+}
+
+/// Point-in-time metrics view (merged totals + per-shard breakdown).
 #[derive(Debug, Clone)]
 pub struct MetricsSnapshot {
     pub completed: u64,
@@ -102,6 +161,8 @@ pub struct MetricsSnapshot {
     pub p95_us: u64,
     pub p99_us: u64,
     pub mean_queue_us: f64,
+    /// Per-shard counters; entries sum to the merged totals.
+    pub per_shard: Vec<ShardSnapshot>,
 }
 
 impl std::fmt::Display for MetricsSnapshot {
@@ -114,7 +175,16 @@ impl std::fmt::Display for MetricsSnapshot {
             self.completed, self.rejected, self.failed, self.batches,
             self.mean_batch, self.throughput_rps, self.p50_us, self.p95_us,
             self.p99_us, self.mean_queue_us
-        )
+        )?;
+        if self.per_shard.len() > 1 {
+            for (i, s) in self.per_shard.iter().enumerate() {
+                write!(f,
+                       "\n  shard{i}: done={} failed={} batches={} \
+                        mean_batch={:.2}",
+                       s.completed, s.failed, s.batches, s.mean_batch)?;
+            }
+        }
+        Ok(())
     }
 }
 
@@ -126,7 +196,7 @@ mod tests {
     fn percentiles_ordered() {
         let m = Metrics::default();
         for i in 0..1000u64 {
-            m.record_done(i, i / 2);
+            m.record_done(0, i, i / 2);
         }
         let s = m.snapshot();
         assert!(s.p50_us <= s.p95_us && s.p95_us <= s.p99_us);
@@ -137,18 +207,49 @@ mod tests {
     #[test]
     fn batch_occupancy() {
         let m = Metrics::default();
-        m.record_batch(4);
-        m.record_batch(8);
+        m.record_batch(0, 4);
+        m.record_batch(0, 8);
         assert!((m.snapshot().mean_batch - 6.0).abs() < 1e-9);
     }
 
     #[test]
     fn failed_counts_per_request() {
         let m = Metrics::default();
-        m.record_failed(3);
-        m.record_failed(1);
+        m.record_failed(0, 3);
+        m.record_failed(0, 1);
         let s = m.snapshot();
         assert_eq!(s.failed, 4);
         assert!(s.to_string().contains("failed=4"));
+    }
+
+    #[test]
+    fn per_shard_counters_sum_to_totals() {
+        let m = Metrics::new(3);
+        assert_eq!(m.n_shards(), 3);
+        m.record_batch(0, 4);
+        m.record_batch(2, 2);
+        m.record_batch(2, 6);
+        for _ in 0..4 {
+            m.record_done(0, 100, 10);
+        }
+        m.record_done(2, 200, 20);
+        m.record_failed(1, 7);
+        m.record_rejected();
+        let s = m.snapshot();
+        assert_eq!(s.per_shard.len(), 3);
+        assert_eq!(s.per_shard.iter().map(|p| p.completed).sum::<u64>(),
+                   s.completed);
+        assert_eq!(s.per_shard.iter().map(|p| p.failed).sum::<u64>(),
+                   s.failed);
+        assert_eq!(s.per_shard.iter().map(|p| p.batches).sum::<u64>(),
+                   s.batches);
+        assert_eq!(s.per_shard[0].completed, 4);
+        assert_eq!(s.per_shard[1].failed, 7);
+        assert!((s.per_shard[2].mean_batch - 4.0).abs() < 1e-9);
+        // Merged occupancy: (4 + 2 + 6) / 3 batches.
+        assert!((s.mean_batch - 4.0).abs() < 1e-9);
+        // The sharded display carries the per-shard lines.
+        let text = s.to_string();
+        assert!(text.contains("shard1: done=0 failed=7"), "{text}");
     }
 }

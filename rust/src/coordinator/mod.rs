@@ -1,23 +1,34 @@
-//! L3 inference coordinator: request queue -> dynamic batcher -> backend
-//! executor, with backpressure and serving metrics.
+//! L3 inference coordinator: request queue -> dynamic batcher/router ->
+//! sharded backend executors, with backpressure and serving metrics.
 //!
-//! The executor is anything implementing
+//! Executors are anything implementing
 //! [`InferenceBackend`](crate::backend::InferenceBackend) — the native
 //! simulator ([`crate::model::NativeBackend`], the default), the PJRT
 //! runtime behind the `pjrt` feature, or a test mock. Backends run a
 //! fixed batch size B (the engines' physical parallelism, like the
-//! paper's N^2 SAC array); the batcher merges up to B queued requests
-//! per execution and pads the remainder — classic dynamic batching
-//! (vLLM-style) adapted to a fixed-shape executable. Seeds are
-//! per-request so stochastic spiking inference stays reproducible
-//! request-by-request regardless of batching.
+//! paper's N^2 SAC array); the router merges up to B queued requests per
+//! execution — classic dynamic batching (vLLM-style) adapted to a
+//! fixed-shape executable — and fans gathered batches out across one or
+//! more backend *shards* ([`Server::start_sharded`]): per-shard bounded
+//! queues and executor threads, least-loaded routing with round-robin
+//! tie-break, per-shard metrics merged into one
+//! [`MetricsSnapshot`]. Seeds are per-request end to end
+//! ([`InferenceBackend::run_seeded`] receives one seed per lane): on
+//! backends that honor per-lane seeds (the native simulator), stochastic
+//! spiking inference stays bit-reproducible request-by-request
+//! regardless of batching, lane placement or shard assignment.
+//! Single-seed backends (the AOT/HLO artifacts) fall back to the head
+//! request's seed, where only a head-of-batch request is reproducible —
+//! the pre-refactor contract.
 //!
-//! The build is offline (no tokio): the coordinator is a dedicated
-//! batcher thread over a bounded `std::sync::mpsc` channel (the
-//! backpressure boundary) with per-request response channels.
+//! The build is offline (no tokio): the coordinator is a router thread
+//! over a bounded `std::sync::mpsc` channel (the backpressure boundary)
+//! feeding shallow per-shard batch channels, with per-request response
+//! channels.
 
 pub mod metrics;
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender,
                       TrySendError};
 use std::sync::Arc;
@@ -25,9 +36,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::backend::InferenceBackend;
+use crate::backend::{nan_safe_argmax_last, InferenceBackend};
 use crate::config::RunConfig;
-pub use metrics::{Metrics, MetricsSnapshot};
+pub use metrics::{Metrics, MetricsSnapshot, ShardSnapshot};
 
 /// One inference request: flattened input sample + stochastic seed.
 pub struct Request {
@@ -55,12 +66,12 @@ impl Response {
 
     /// Prediction using only the first `t` encoding steps.
     ///
-    /// Argmax uses a NaN-tolerant fold (`f64::max`-style total order): a
-    /// NaN logit — which stochastic analog inference can produce under
-    /// extreme drift — never wins and never panics; if *every* cumulative
-    /// logit is NaN the prediction falls back to class 0. Ties keep the
-    /// *last* maximal class, matching the pre-fix `max_by` behaviour so
-    /// reproduced accuracy numbers are unchanged.
+    /// The argmax is the shared NaN-tolerant last-max fold
+    /// ([`nan_safe_argmax_last`]): a NaN logit — which stochastic analog
+    /// inference can produce under extreme drift — never wins and never
+    /// panics; an all-NaN row falls back to class 0; ties keep the
+    /// *last* maximal class (pre-fix `max_by` behaviour, so reproduced
+    /// accuracy numbers are unchanged).
     pub fn predict_at(&self, t: usize) -> usize {
         let t = t.clamp(1, self.t_max);
         let mut cum = vec![0.0f64; self.classes];
@@ -69,12 +80,7 @@ impl Response {
                 *cv += self.logits_t[step * self.classes + c] as f64;
             }
         }
-        cum.iter()
-            .enumerate()
-            .fold((0usize, f64::NEG_INFINITY), |(bi, bv), (i, &v)| {
-                if v >= bv { (i, v) } else { (bi, bv) }
-            })
-            .0
+        nan_safe_argmax_last(&cum)
     }
 }
 
@@ -135,30 +141,81 @@ impl Client {
     }
 }
 
-/// The running coordinator.
+/// The running coordinator: router thread + one executor per shard.
 pub struct Server {
     pub metrics: Arc<Metrics>,
     client: Option<Client>,
-    handle: Option<std::thread::JoinHandle<()>>,
+    router: Option<std::thread::JoinHandle<()>>,
+    shards: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl Server {
-    /// Spawn the batcher thread around any inference backend (the native
-    /// simulator, the PJRT engine, a mock, ...).
+    /// Spawn the coordinator around one inference backend (the native
+    /// simulator, the PJRT engine, a mock, ...) — a one-shard
+    /// [`Self::start_sharded`].
     pub fn start<B: InferenceBackend>(backend: B, cfg: RunConfig) -> Server {
-        let metrics = Arc::new(Metrics::default());
+        Self::start_sharded(vec![backend], cfg)
+    }
+
+    /// Spawn the coordinator over several backend shards (e.g. multiple
+    /// [`crate::model::NativeBackend`] replicas today, PJRT devices
+    /// later): gathered batches fan out least-loaded (round-robin on
+    /// ties) across per-shard queues + executor threads. All shards must
+    /// share the executable shape (batch, T, classes, sample length).
+    pub fn start_sharded<B: InferenceBackend>(backends: Vec<B>,
+                                              cfg: RunConfig) -> Server {
+        assert!(!backends.is_empty(), "need at least one shard backend");
+        let exe_batch = backends[0].batch();
+        let sample_len = backends[0].x_len_per_sample();
+        let (t_max, classes) = (backends[0].t_max(), backends[0].classes());
+        for (i, b) in backends.iter().enumerate() {
+            assert!(b.batch() == exe_batch && b.t_max() == t_max
+                        && b.classes() == classes
+                        && b.x_len_per_sample() == sample_len,
+                    "shard {i} does not match shard 0's executable shape");
+        }
+        let n_shards = backends.len();
+        let metrics = Arc::new(Metrics::new(n_shards));
         let (tx, rx) = mpsc::sync_channel::<Request>(cfg.queue_depth);
-        let sample_len = backend.x_len_per_sample();
-        let m = Arc::clone(&metrics);
-        let handle = std::thread::Builder::new()
-            .name("xpike-batcher".into())
-            .spawn(move || batcher_loop(backend, cfg, rx, m))
-            .expect("spawn batcher");
-        let client = Client { tx, sample_len, metrics: Arc::clone(&metrics) };
+        // Batches a shard holds beyond the one it is executing: shallow,
+        // so a busy shard pushes backpressure into the front queue
+        // instead of hoarding requests another shard could serve.
+        let inflight: Arc<Vec<AtomicUsize>> =
+            Arc::new((0..n_shards).map(|_| AtomicUsize::new(0)).collect());
+        let mut shard_txs = Vec::with_capacity(n_shards);
+        let mut shards = Vec::with_capacity(n_shards);
+        for (si, backend) in backends.into_iter().enumerate() {
+            let (stx, srx) = mpsc::sync_channel::<Vec<Request>>(1);
+            let m = Arc::clone(&metrics);
+            let cfg_s = cfg.clone();
+            let inflight_s = Arc::clone(&inflight);
+            shards.push(
+                std::thread::Builder::new()
+                    .name(format!("xpike-shard-{si}"))
+                    .spawn(move || {
+                        shard_loop(si, backend, cfg_s, srx, m, inflight_s)
+                    })
+                    .expect("spawn shard executor"),
+            );
+            shard_txs.push(stx);
+        }
+        let cfg_r = cfg.clone();
+        let m_r = Arc::clone(&metrics);
+        let inflight_r = Arc::clone(&inflight);
+        let router = std::thread::Builder::new()
+            .name("xpike-router".into())
+            .spawn(move || {
+                router_loop(cfg_r, rx, shard_txs, m_r, inflight_r,
+                            exe_batch)
+            })
+            .expect("spawn router");
+        let client =
+            Client { tx, sample_len, metrics: Arc::clone(&metrics) };
         Server {
             metrics,
             client: Some(client),
-            handle: Some(handle),
+            router: Some(router),
+            shards,
         }
     }
 
@@ -166,11 +223,19 @@ impl Server {
         self.client.as_ref().expect("server running").clone()
     }
 
-    /// Graceful shutdown: close the submit side and join the batcher.
-    /// The batcher exits once every cloned [`Client`] is dropped too.
+    /// Graceful shutdown: close the submit side, join the router (which
+    /// closes the shard queues) and every shard executor. The router
+    /// exits once every cloned [`Client`] is dropped too.
     pub fn shutdown(mut self) {
-        self.client = None;
-        if let Some(h) = self.handle.take() {
+        self.join();
+    }
+
+    fn join(&mut self) {
+        self.client = None; // close our sender before joining
+        if let Some(h) = self.router.take() {
+            let _ = h.join();
+        }
+        for h in self.shards.drain(..) {
             let _ = h.join();
         }
     }
@@ -178,10 +243,7 @@ impl Server {
 
 impl Drop for Server {
     fn drop(&mut self) {
-        self.client = None; // close our sender before joining
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
-        }
+        self.join();
     }
 }
 
@@ -206,35 +268,104 @@ fn gather(rx: &Receiver<Request>, max_batch: usize, window: Duration)
     Some(batch)
 }
 
-fn batcher_loop<B: InferenceBackend>(backend: B, cfg: RunConfig,
-                                     rx: Receiver<Request>,
-                                     metrics: Arc<Metrics>) {
+/// Pick the least-loaded shard; ties resolve round-robin starting at
+/// `rr` (so idle shards alternate deterministically).
+fn pick_shard(inflight: &[AtomicUsize], rr: &mut usize) -> usize {
+    let n = inflight.len();
+    let mut best = *rr % n;
+    let mut best_load = inflight[best].load(Ordering::SeqCst);
+    for i in 1..n {
+        let s = (*rr + i) % n;
+        let load = inflight[s].load(Ordering::SeqCst);
+        if load < best_load {
+            best = s;
+            best_load = load;
+        }
+    }
+    *rr = (best + 1) % n;
+    best
+}
+
+/// Load sentinel a dead shard (executor thread gone) is parked at, so
+/// [`pick_shard`] only returns it once every shard is dead.
+const DEAD_SHARD_LOAD: usize = usize::MAX / 2;
+
+/// Front half of the datapath: gather dynamic batches off the bounded
+/// request queue and fan them out across the shard queues. A batch
+/// bounced off a dead shard (executor panicked) is re-routed to the
+/// survivors; requests are lost — and counted as failed — only when no
+/// shard is left.
+fn router_loop(cfg: RunConfig, rx: Receiver<Request>,
+               shard_txs: Vec<SyncSender<Vec<Request>>>,
+               metrics: Arc<Metrics>, inflight: Arc<Vec<AtomicUsize>>,
+               exe_batch: usize) {
+    let max_batch = cfg.max_batch.min(exe_batch).max(1);
+    let window = Duration::from_micros(cfg.batch_window_us);
+    let mut rr = 0usize;
+    while let Some(mut batch) = gather(&rx, max_batch, window) {
+        loop {
+            let shard = pick_shard(&inflight, &mut rr);
+            if inflight[shard].load(Ordering::SeqCst) >= DEAD_SHARD_LOAD {
+                // Even the best pick is parked: every shard is dead.
+                // Drop the responders (submitters observe channel
+                // closure) and account the loss.
+                eprintln!("coordinator: all shards gone; dropping {} \
+                           request(s)", batch.len());
+                metrics.record_failed(shard, batch.len() as u64);
+                break;
+            }
+            inflight[shard].fetch_add(1, Ordering::SeqCst);
+            match shard_txs[shard].send(batch) {
+                Ok(()) => break,
+                Err(mpsc::SendError(bounced)) => {
+                    // Shard executor gone (panicked mid-run): park it at
+                    // an unreachable load and re-route the returned
+                    // batch to a surviving shard.
+                    eprintln!("coordinator: shard {shard} executor \
+                               gone; re-routing {} request(s)",
+                              bounced.len());
+                    inflight[shard].store(DEAD_SHARD_LOAD,
+                                          Ordering::SeqCst);
+                    batch = bounced;
+                }
+            }
+        }
+    }
+    // Dropping shard_txs closes every shard queue; executors drain & exit.
+}
+
+/// One shard's executor: pad each routed batch to the executable shape,
+/// run it under per-request seeds, slice per-request responses back out.
+fn shard_loop<B: InferenceBackend>(shard: usize, backend: B, cfg: RunConfig,
+                                   rx: Receiver<Vec<Request>>,
+                                   metrics: Arc<Metrics>,
+                                   inflight: Arc<Vec<AtomicUsize>>) {
     let exe_batch = backend.batch();
     let sample_len = backend.x_len_per_sample();
     let t_max = backend.t_max();
     let classes = backend.classes();
-    let max_batch = cfg.max_batch.min(exe_batch).max(1);
-    let window = Duration::from_micros(cfg.batch_window_us);
-    // Reused input buffer: no per-batch allocation on the hot path.
+    // Reused input/seed buffers: no per-batch allocation on the hot path.
     let mut x = vec![0.0f32; exe_batch * sample_len];
-    while let Some(batch) = gather(&rx, max_batch, window) {
-        metrics.record_batch(batch.len());
+    let mut seeds = vec![0u32; exe_batch];
+    while let Ok(batch) = rx.recv() {
+        metrics.record_batch(shard, batch.len());
         // Assemble the fixed-shape executable input: pad by repeating the
-        // last sample (its outputs are discarded).
+        // last sample + seed (padding lane outputs are discarded).
         for (b, req) in batch.iter().enumerate() {
             x[b * sample_len..(b + 1) * sample_len]
                 .copy_from_slice(&req.x);
+            seeds[b] = req.seed ^ (cfg.seed as u32);
         }
         let last = batch.len() - 1;
         for b in batch.len()..exe_batch {
             x.copy_within(last * sample_len..(last + 1) * sample_len,
                           b * sample_len);
+            seeds[b] = seeds[last];
         }
-        // One seed per execution, derived from the first request's seed:
-        // a request's logits depend only on its own lane given the seed.
-        let seed = batch[0].seed ^ (cfg.seed as u32);
         let started = Instant::now();
-        match backend.run(&x, seed) {
+        let result = backend.run_seeded(&x, &seeds);
+        inflight[shard].fetch_sub(1, Ordering::SeqCst);
+        match result {
             Ok(logits) => {
                 for (b, req) in batch.into_iter().enumerate() {
                     // Slice this sample's [t, classes] lanes out of
@@ -247,7 +378,7 @@ fn batcher_loop<B: InferenceBackend>(backend: B, cfg: RunConfig,
                     let queue_us =
                         (started - req.enqueued).as_micros() as u64;
                     let e2e_us = req.enqueued.elapsed().as_micros() as u64;
-                    metrics.record_done(e2e_us, queue_us);
+                    metrics.record_done(shard, e2e_us, queue_us);
                     let _ = req.respond.send(Response {
                         logits_t: mine, t_max, classes, queue_us, e2e_us,
                     });
@@ -255,10 +386,11 @@ fn batcher_loop<B: InferenceBackend>(backend: B, cfg: RunConfig,
             }
             Err(e) => {
                 // Execution failure: drop responders (submitters see
-                // channel closure), count every affected request, keep
-                // serving subsequent batches.
-                eprintln!("coordinator: execution failed: {e:#}");
-                metrics.record_failed(batch.len() as u64);
+                // channel closure), count every affected request on this
+                // shard, keep serving subsequent batches.
+                eprintln!("coordinator: shard {shard} execution failed: \
+                           {e:#}");
+                metrics.record_failed(shard, batch.len() as u64);
             }
         }
     }
@@ -304,6 +436,24 @@ mod tests {
         let (tx, rx) = mpsc::sync_channel::<Request>(4);
         drop(tx);
         assert!(gather(&rx, 4, Duration::from_millis(1)).is_none());
+    }
+
+    #[test]
+    fn pick_shard_alternates_idle_shards_and_prefers_light_load() {
+        let inflight: Vec<AtomicUsize> =
+            (0..3).map(|_| AtomicUsize::new(0)).collect();
+        let mut rr = 0;
+        // All idle: deterministic round-robin.
+        assert_eq!(pick_shard(&inflight, &mut rr), 0);
+        assert_eq!(pick_shard(&inflight, &mut rr), 1);
+        assert_eq!(pick_shard(&inflight, &mut rr), 2);
+        assert_eq!(pick_shard(&inflight, &mut rr), 0);
+        // Loaded shards lose to an idle one regardless of rotation.
+        inflight[1].store(2, Ordering::SeqCst);
+        inflight[2].store(1, Ordering::SeqCst);
+        assert_eq!(pick_shard(&inflight, &mut rr), 0);
+        inflight[0].store(3, Ordering::SeqCst);
+        assert_eq!(pick_shard(&inflight, &mut rr), 2);
     }
 
     #[test]

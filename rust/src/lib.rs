@@ -8,11 +8,14 @@
 //! * [`model`]        — the native Rust forward pass: spike encoding →
 //!   per-block AIMC crossbar projections + SSA attention + LIF neurons +
 //!   spike-driven residuals → classification head, end-to-end on packed
-//!   spike tensors with measured per-layer energy accounting. The default
-//!   serving backend.
+//!   spike tensors with measured per-layer energy accounting. Lane-batched
+//!   (`forward_batch` advances a whole batch in lock-step per weight
+//!   traversal, bit-identical per lane to the serial path) and chunked
+//!   across threads by the default serving backend.
 //! * [`backend`]      — the `InferenceBackend` seam between executors
 //!   (native simulator, PJRT runtime, test mocks) and the serving /
-//!   evaluation stack.
+//!   evaluation stack, including the per-lane-seed `run_seeded` contract
+//!   and the shared NaN-tolerant logit argmax.
 //! * [`runtime`]      — (feature `pjrt`) PJRT CPU client that loads the
 //!   AOT-compiled HLO artifacts produced by `python/compile/aot.py` and
 //!   executes the spiking transformer forward pass. Off by default; the
@@ -36,8 +39,11 @@
 //!   plus the measured per-layer breakdown the native model produces.
 //! * [`baselines`]    — ANN-Quant (SwiftTron-like), ANN-Quant+AIMC,
 //!   SNN-Digi-Opt, X-Former and GPU roofline models (paper §VII).
-//! * [`coordinator`]  — inference server: request queue, dynamic batcher,
-//!   generic over any `InferenceBackend` (Fig 6 dataflow scheduling).
+//! * [`coordinator`]  — inference server: request queue, dynamic
+//!   batcher/router, generic over any `InferenceBackend` and sharded
+//!   across backend replicas (`Server::start_sharded`: per-shard queues +
+//!   executors, least-loaded routing, merged per-shard metrics; Fig 6
+//!   dataflow scheduling).
 //! * [`workloads`]    — synthetic image + ICL MIMO workload generators.
 //! * [`config`]       — model-dimension presets (paper scale, native
 //!   simulator scale) and the Table-II hardware configuration.

@@ -3,6 +3,7 @@
 //!
 //! ```text
 //! xpikeformer serve  [--backend native|pjrt] [--requests N] [--max-batch B]
+//!                    [--shards S]
 //! xpikeformer repro  <table2..table6|fig7..fig10b|all-efficiency>
 //! xpikeformer list   [--artifacts DIR]            (requires --features pjrt)
 //! xpikeformer eval   --model vit_xpike_2-64 ...   (requires --features pjrt)
@@ -11,7 +12,9 @@
 //! `serve` defaults to the native simulator backend (no artifacts, no
 //! PJRT): it programs a random-initialized MIMO model onto the simulated
 //! crossbars and serves live generator traffic through the dynamic
-//! batcher. The artifact-based commands need the `pjrt` feature.
+//! batcher — `--shards S` fans batches out across S native backend
+//! replicas of the same programmed model (the shard-router datapath;
+//! PJRT devices later). The artifact-based commands need `pjrt`.
 //!
 //! (Offline build: argument parsing is hand-rolled, no clap.)
 
@@ -68,7 +71,8 @@ impl Args {
 
 const USAGE: &str = "usage: xpikeformer [--artifacts DIR] <command>\n\
   serve [--backend native|pjrt] [--requests N] [--max-batch B]\n\
-        [--model NAME]          serve live MIMO traffic (native default)\n\
+        [--shards S] [--model NAME]\n\
+                                serve live MIMO traffic (native default)\n\
   repro <experiment> [--seed N] regenerate a paper table/figure\n\
          (table2 table3 table4 table5 table6 fig7 fig8 fig9 fig10a\n\
           fig10b all-efficiency)\n\
@@ -198,8 +202,13 @@ fn cmd_serve(artifacts: &str, args: &Args) -> Result<()> {
 
 /// Serve the live MIMO task on the native simulator backend: no python,
 /// no artifacts — the whole request path is the Rust hardware model.
+/// With `--shards S > 1` the coordinator fans batches out across S
+/// backend replicas of the one programmed model (clones share crossbars
+/// and the energy accumulator — several execution engines on one chip).
 fn serve_native(args: &Args, requests: usize, max_batch: usize)
                 -> Result<()> {
+    let shards: usize = args.get("shards", "1").parse()?;
+    anyhow::ensure!(shards >= 1, "--shards must be >= 1");
     let (nt, nr) = (2usize, 2usize);
     // `--model` selects a native MIMO preset (the serve demo drives the
     // 2x2 generator, so only 2x2 presets apply); unknown names error
@@ -221,7 +230,10 @@ fn serve_native(args: &Args, requests: usize, max_batch: usize)
     let native = NativeBackend::new(model, max_batch.max(1));
     let energy_handle = native.clone();
     let cfg = RunConfig { max_batch, ..RunConfig::default() };
-    let server = Server::start(native, cfg);
+    let replicas: Vec<NativeBackend> =
+        (0..shards).map(|_| native.clone()).collect();
+    println!("serving across {shards} shard(s)");
+    let server = Server::start_sharded(replicas, cfg);
     let client = server.client();
     let gen = MimoGenerator::new(nt, nr, 10.0);
     let mut rng = Rng::seed_from_u64(1);

@@ -1,14 +1,22 @@
-//! The native serving backend: batch lanes of [`XpikeModel::forward`]
-//! behind the [`InferenceBackend`] seam, with a rolling per-layer energy
-//! accumulator.
+//! The native serving backend: the executable batch runs as chunked
+//! [`XpikeModel::forward_batch`] calls behind the [`InferenceBackend`]
+//! seam, with a rolling per-layer energy accumulator.
 //!
-//! Lanes are independent forward passes (per-lane RNG streams derived
-//! from the execution seed), so they run on scoped OS threads — the
-//! simulator's wall-clock mirrors the hardware's batch parallelism the
-//! same way [`crate::ssa::SsaEngine::run_mhsa`] mirrors parallel tiles.
-//! Lane 0 uses the execution seed itself, so a request at the head of a
-//! batch is bit-identical to the same request run solo (the coordinator
-//! contract).
+//! Lanes are split into chunks of [`HardwareConfig::lane_chunk`]
+//! (`crate::config`): within a chunk the crossbar stages advance all
+//! lanes in lock-step against one weight traversal (the hardware's
+//! batch-level array reuse) and the SSA engine tiles across
+//! (lane, head); chunks run on scoped OS threads, so the simulator's
+//! wall-clock still mirrors the hardware's batch parallelism. Chunking
+//! never changes results: every lane is bit-identical to a serial
+//! [`XpikeModel::forward`] with that lane's seed.
+//!
+//! Seeds: [`InferenceBackend::run`] derives lane seeds from the one
+//! execution seed (lane 0 keeps it, so a request at the head of a batch
+//! is bit-identical to the same request run solo). The coordinator's
+//! preferred path is [`InferenceBackend::run_seeded`], where each lane's
+//! randomness follows its *own* request seed — position-independent, so
+//! a request's logits never depend on its batch co-tenants.
 
 use std::sync::{Arc, Mutex};
 
@@ -18,7 +26,8 @@ use crate::backend::InferenceBackend;
 use crate::energy::ModelEnergy;
 use crate::model::XpikeModel;
 
-/// Per-lane seed derivation: lane 0 keeps the execution seed.
+/// Per-lane seed derivation for single-seed runs: lane 0 keeps the
+/// execution seed.
 fn lane_seed(seed: u32, lane: usize) -> u64 {
     seed as u64 ^ (lane as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
 }
@@ -52,47 +61,75 @@ impl NativeBackend {
     pub fn energy(&self) -> ModelEnergy {
         self.energy.lock().unwrap().clone()
     }
-}
 
-impl InferenceBackend for NativeBackend {
-    fn run(&self, x: &[f32], seed: u32) -> Result<Vec<f32>> {
+    /// Execute the full batch with explicit per-lane model seeds:
+    /// `lane_chunk`-sized [`XpikeModel::forward_batch`] calls on scoped
+    /// threads, reassembled into `[t_max, batch, classes]` logits.
+    fn run_with_lane_seeds(&self, x: &[f32], lane_seeds: &[u64])
+                           -> Result<Vec<f32>> {
         let sl = self.model.sample_len();
         let (t_max, classes) = (self.t_max(), self.classes());
         ensure!(x.len() == self.batch * sl,
                 "input length {} != batch {} x sample {}", x.len(),
                 self.batch, sl);
-        let mut lanes: Vec<Option<Result<(Vec<f32>, ModelEnergy)>>> =
-            (0..self.batch).map(|_| None).collect();
+        ensure!(lane_seeds.len() == self.batch,
+                "got {} lane seeds for batch {}", lane_seeds.len(),
+                self.batch);
+        let chunk = self.model.hw.lane_chunk.max(1);
+        let n_chunks = self.batch.div_ceil(chunk);
+        let mut slots: Vec<Option<Result<(Vec<f32>, ModelEnergy)>>> =
+            (0..n_chunks).map(|_| None).collect();
         std::thread::scope(|scope| {
-            for (lane, slot) in lanes.iter_mut().enumerate() {
+            for (ci, slot) in slots.iter_mut().enumerate() {
                 let model = &self.model;
-                let xs = &x[lane * sl..(lane + 1) * sl];
+                let lo = ci * chunk;
+                let hi = (lo + chunk).min(self.batch);
+                let xs = &x[lo * sl..hi * sl];
+                let seeds = &lane_seeds[lo..hi];
                 scope.spawn(move || {
-                    *slot = Some(model.forward(xs, lane_seed(seed, lane)));
+                    *slot = Some(model.forward_batch(xs, hi - lo, seeds));
                 });
             }
         });
-        // Assemble [t_max, batch, classes] from the per-lane [t, classes]
-        // results; fold every lane's measured energy into the accumulator.
-        let mut per_lane = Vec::with_capacity(self.batch);
-        {
-            let mut acc = self.energy.lock().unwrap();
-            for slot in lanes {
-                let (logits, energy) =
-                    slot.expect("lane thread completed")?;
-                acc.add(&energy);
-                per_lane.push(logits);
-            }
-        }
+        // Reassemble [t_max, batch, classes] from each chunk's lane-major
+        // [lanes, t_max, classes]; fold measured energy per chunk.
         let mut out = vec![0.0f32; t_max * self.batch * classes];
-        for (lane, logits) in per_lane.iter().enumerate() {
-            for t in 0..t_max {
-                let src = &logits[t * classes..(t + 1) * classes];
-                let off = (t * self.batch + lane) * classes;
-                out[off..off + classes].copy_from_slice(src);
+        let mut acc = self.energy.lock().unwrap();
+        for (ci, slot) in slots.into_iter().enumerate() {
+            let (logits, energy) = slot.expect("chunk thread completed")?;
+            acc.add(&energy);
+            let lo = ci * chunk;
+            let lanes = (lo + chunk).min(self.batch) - lo;
+            for l in 0..lanes {
+                for t in 0..t_max {
+                    let src = &logits[(l * t_max + t) * classes..]
+                        [..classes];
+                    let off = (t * self.batch + lo + l) * classes;
+                    out[off..off + classes].copy_from_slice(src);
+                }
             }
         }
+        drop(acc);
         Ok(out)
+    }
+}
+
+impl InferenceBackend for NativeBackend {
+    fn run(&self, x: &[f32], seed: u32) -> Result<Vec<f32>> {
+        let seeds: Vec<u64> =
+            (0..self.batch).map(|l| lane_seed(seed, l)).collect();
+        self.run_with_lane_seeds(x, &seeds)
+    }
+
+    /// Per-request seeds: lane `b` runs under `seeds[b]` alone — no lane
+    /// index mixed in — so a request's logits are bit-identical wherever
+    /// it lands in a batch (the coordinator's reproducibility contract).
+    fn run_seeded(&self, x: &[f32], seeds: &[u32]) -> Result<Vec<f32>> {
+        ensure!(seeds.len() == self.batch,
+                "got {} seeds for batch {}", seeds.len(), self.batch);
+        let lane_seeds: Vec<u64> =
+            seeds.iter().map(|&s| s as u64).collect();
+        self.run_with_lane_seeds(x, &lane_seeds)
     }
 
     fn batch(&self) -> usize {
@@ -122,22 +159,30 @@ mod tests {
     use crate::config::{vit_native, HardwareConfig};
     use crate::util::Rng;
 
-    fn backend(batch: usize) -> NativeBackend {
+    fn backend_with_chunk(batch: usize, lane_chunk: usize)
+                          -> NativeBackend {
         let dims = vit_native(1, 64, 2, 4);
-        NativeBackend::new(
-            XpikeModel::new(&dims, &HardwareConfig::default(), 5), batch)
+        let hw = HardwareConfig { lane_chunk, ..HardwareConfig::default() };
+        NativeBackend::new(XpikeModel::new(&dims, &hw, 5), batch)
+    }
+
+    fn backend(batch: usize) -> NativeBackend {
+        backend_with_chunk(batch, HardwareConfig::default().lane_chunk)
+    }
+
+    fn inputs(b: &NativeBackend, lanes: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::seed_from_u64(seed);
+        (0..lanes * b.x_len_per_sample())
+            .map(|_| rng.uniform_f32())
+            .collect()
     }
 
     #[test]
     fn lane0_matches_solo_run() {
         let b2 = backend(2);
-        let b1 = NativeBackend::new(
-            XpikeModel::new(&vit_native(1, 64, 2, 4),
-                            &HardwareConfig::default(), 5),
-            1);
-        let mut rng = Rng::seed_from_u64(1);
+        let b1 = backend(1);
+        let x = inputs(&b2, 2, 1);
         let sl = b2.x_len_per_sample();
-        let x: Vec<f32> = (0..2 * sl).map(|_| rng.uniform_f32()).collect();
         let batched = b2.run(&x, 77).unwrap();
         let solo = b1.run(&x[..sl], 77).unwrap();
         let (t_max, classes) = (b2.t_max(), b2.classes());
@@ -149,11 +194,43 @@ mod tests {
     }
 
     #[test]
+    fn chunk_size_never_changes_outputs() {
+        // 5 lanes across chunkings 1 (one thread per lane), 2 (uneven
+        // tail), and 5 (one forward_batch call): bit-identical logits.
+        let x = inputs(&backend(5), 5, 3);
+        let reference = backend_with_chunk(5, 1).run(&x, 9).unwrap();
+        for chunk in [2usize, 5] {
+            let got = backend_with_chunk(5, chunk).run(&x, 9).unwrap();
+            assert_eq!(got, reference, "lane_chunk={chunk}");
+        }
+    }
+
+    #[test]
+    fn run_seeded_is_lane_position_independent() {
+        // A sample keeps bit-identical logits whether it runs solo or
+        // shares the batch, and wherever it lands — its own seed drives
+        // its lane.
+        let b3 = backend(3);
+        let b1 = backend(1);
+        let sl = b3.x_len_per_sample();
+        let x = inputs(&b3, 3, 4);
+        let solo = b1.run_seeded(&x[sl..2 * sl], &[123]).unwrap();
+        let batched = b3.run_seeded(&x, &[7, 123, 55]).unwrap();
+        let (t_max, classes) = (b3.t_max(), b3.classes());
+        for t in 0..t_max {
+            let lane1 =
+                &batched[(t * 3 + 1) * classes..(t * 3 + 2) * classes];
+            let s = &solo[t * classes..(t + 1) * classes];
+            assert_eq!(lane1, s, "t={t}");
+        }
+        assert!(b3.run_seeded(&x, &[1, 2]).is_err(),
+                "seed count must match the batch");
+    }
+
+    #[test]
     fn run_is_deterministic_and_lane_independent() {
         let b = backend(3);
-        let sl = b.x_len_per_sample();
-        let mut rng = Rng::seed_from_u64(2);
-        let x: Vec<f32> = (0..3 * sl).map(|_| rng.uniform_f32()).collect();
+        let x = inputs(&b, 3, 2);
         let a = b.run(&x, 9).unwrap();
         let c = b.run(&x, 9).unwrap();
         assert_eq!(a, c, "scheduling must not change outputs");

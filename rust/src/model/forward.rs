@@ -12,6 +12,21 @@
 //! every stage deposits *measured* event counts (ADC conversions, WL
 //! pulses over the actual packed drive words, SSA gate stats, LIF
 //! updates) into a per-layer [`ModelEnergy`] breakdown.
+//!
+//! # Lane batching
+//!
+//! [`XpikeModel::forward_batch`] is the primary entry point: it advances
+//! `lanes` independent samples in lock-step, the way the hardware's
+//! crossbars and the N x N SAC array process a whole batch against one
+//! set of programmed weights. Stage lookup, GDC scale resolution and the
+//! crossbar traversal happen once per (stage, t, token) and apply across
+//! every lane while the mapped matrix is hot in cache; the SSA engine
+//! tiles across (lane, head). Each lane keeps a private [`Rng`] stream,
+//! LIF banks and SSA LFSRs seeded from its own seed, consumed in exactly
+//! the order the single-sample path consumes them — so every lane is
+//! **bit-identical** to a serial [`XpikeModel::forward`] call with the
+//! same seed (the equivalence test below enforces it).
+//! [`XpikeModel::forward`] is a thin `lanes = 1` wrapper.
 
 use anyhow::{ensure, Result};
 
@@ -22,10 +37,10 @@ use crate::energy::{AimcEnergy, LayerEnergy, ModelEnergy, SsaEnergy};
 use crate::model::params::ModelParams;
 use crate::snn::{rate_encode_row, LifArray};
 use crate::spike::{SpikeVector, SpikeVolume};
-use crate::ssa::{HeadQkv, SsaEngine};
+use crate::ssa::{run_mhsa_lanes, HeadQkv, SsaEngine};
 use crate::util::Rng;
 
-/// Rolling AIMC event counters for one pipeline stage.
+/// Rolling AIMC event counters for one pipeline stage (per lane).
 #[derive(Default)]
 struct AimcCounts {
     conversions: u64,
@@ -65,8 +80,8 @@ impl Stage<'_> {
 
 /// The native model: a checkpoint programmed onto simulated PCM crossbars
 /// plus the per-block SSA attention configuration. Immutable during
-/// inference ([`Self::forward`] takes `&self`), so batch lanes run on
-/// parallel threads.
+/// inference ([`Self::forward_batch`] takes `&self`), so lane chunks run
+/// on parallel threads.
 pub struct XpikeModel {
     pub dims: ModelDims,
     pub hw: HardwareConfig,
@@ -153,43 +168,78 @@ impl XpikeModel {
     /// crossbar read noise, SSA PRN streams). Returns flattened
     /// per-timestep logits `[t_max, classes]` plus the measured per-layer
     /// energy breakdown. Identical `(x, seed)` pairs produce bit-identical
-    /// results.
+    /// results. Thin wrapper over [`Self::forward_batch`] with one lane.
     pub fn forward(&self, x: &[f32], seed: u64)
                    -> Result<(Vec<f32>, ModelEnergy)> {
+        // lanes = 1: lane-major [1, t_max, classes] == [t_max, classes].
+        self.forward_batch(x, 1, &[seed])
+    }
+
+    /// Lane-batched forward: `lanes` independent samples advanced in
+    /// lock-step against the programmed crossbars.
+    ///
+    /// `xs` is the lane-major concatenation of `lanes` flattened
+    /// `[n_tokens, in_feat]` samples; `seeds[lane]` drives every
+    /// stochastic element of that lane. Returns lane-major flattened
+    /// logits `[lanes, t_max, classes]` plus the per-layer energy summed
+    /// over all lanes (`inferences == lanes`). Each lane's logits and
+    /// energy contribution are bit-identical to a serial
+    /// [`Self::forward`] call with `(xs[lane], seeds[lane])`.
+    pub fn forward_batch(&self, xs: &[f32], lanes: usize, seeds: &[u64])
+                         -> Result<(Vec<f32>, ModelEnergy)> {
         let d = &self.dims;
         let (n, dim, t_max) = (d.n_tokens, d.dim, d.t_steps);
         let (heads, dh, hidden) = (d.heads, d.d_head(), d.hidden());
-        ensure!(x.len() == self.sample_len(),
-                "input length {} != {} (n_tokens x in_feat)", x.len(),
-                self.sample_len());
+        let classes = d.classes;
+        let sl = self.sample_len();
+        ensure!(lanes > 0, "lanes must be positive");
+        ensure!(seeds.len() == lanes, "got {} seeds for {lanes} lanes",
+                seeds.len());
+        ensure!(xs.len() == lanes * sl,
+                "input length {} != {lanes} lanes x {sl} \
+                 (n_tokens x in_feat)", xs.len());
         ensure!(dim % heads == 0, "dim {dim} not divisible by {heads} heads");
-        let mut rng = Rng::seed_from_u64(seed);
+        let mut rngs: Vec<Rng> =
+            seeds.iter().map(|&s| Rng::seed_from_u64(s)).collect();
         let t_sec = self.drift.t_seconds;
         let hw = &self.hw;
-        let mut layers: Vec<LayerEnergy> = Vec::with_capacity(d.depth + 2);
+        let mut lane_layers: Vec<Vec<LayerEnergy>> =
+            (0..lanes).map(|_| Vec::with_capacity(d.depth + 2)).collect();
 
         // -- Spike encoding + AIMC patch embedding ------------------------
+        // The embedding matrix is traversed once per (t, token) and
+        // applied across all lanes; each lane's encoder + read-noise
+        // draws come from its own stream, in serial order.
         let embed = self.stage("embed");
-        let mut embed_lifs = vec![LifArray::new(dim); n];
-        let mut counts = AimcCounts::default();
-        let mut cur = SpikeVolume::zeros(t_max, n, dim);
+        let mut embed_lifs: Vec<Vec<LifArray>> =
+            (0..lanes).map(|_| vec![LifArray::new(dim); n]).collect();
+        let mut counts: Vec<AimcCounts> =
+            (0..lanes).map(|_| AimcCounts::default()).collect();
+        let mut cur: Vec<SpikeVolume> = (0..lanes)
+            .map(|_| SpikeVolume::zeros(t_max, n, dim))
+            .collect();
         for t in 0..t_max {
             for tok in 0..n {
-                let feats = &x[tok * d.in_feat..(tok + 1) * d.in_feat];
-                let enc = rate_encode_row(&mut rng, feats);
-                let sp = embed.step(&mut rng, &enc, &mut embed_lifs[tok],
-                                    t_sec, hw, &mut counts);
-                cur.step_mut(t).set_row(tok, &sp);
+                for lane in 0..lanes {
+                    let x = &xs[lane * sl..(lane + 1) * sl];
+                    let feats = &x[tok * d.in_feat..(tok + 1) * d.in_feat];
+                    let enc = rate_encode_row(&mut rngs[lane], feats);
+                    let sp = embed.step(&mut rngs[lane], &enc,
+                                        &mut embed_lifs[lane][tok], t_sec,
+                                        hw, &mut counts[lane]);
+                    cur[lane].step_mut(t).set_row(tok, &sp);
+                }
             }
         }
-        layers.push(LayerEnergy {
-            name: "embed".into(),
-            aimc: AimcEnergy::from_counts(counts.conversions,
-                                          counts.wl_pulses),
-            ssa: SsaEnergy::default(),
-            lif_pj: (t_max * n * dim) as f64 * E_LIF_UPDATE,
-            residual_pj: 0.0,
-        });
+        for (layers, c) in lane_layers.iter_mut().zip(&counts) {
+            layers.push(LayerEnergy {
+                name: "embed".into(),
+                aimc: AimcEnergy::from_counts(c.conversions, c.wl_pulses),
+                ssa: SsaEnergy::default(),
+                lif_pj: (t_max * n * dim) as f64 * E_LIF_UPDATE,
+                residual_pj: 0.0,
+            });
+        }
 
         // -- Encoder blocks ----------------------------------------------
         for b in 0..d.depth {
@@ -199,88 +249,143 @@ impl XpikeModel {
             let wo = self.stage(&format!("blk{b}.wo"));
             let w1 = self.stage(&format!("blk{b}.w1"));
             let w2 = self.stage(&format!("blk{b}.w2"));
-            let mut counts = AimcCounts::default();
-            let mut qkv: Vec<HeadQkv> = (0..heads)
-                .map(|_| (SpikeVolume::zeros(t_max, n, dh),
-                          SpikeVolume::zeros(t_max, n, dh),
-                          SpikeVolume::zeros(t_max, n, dh)))
+            let mut counts: Vec<AimcCounts> =
+                (0..lanes).map(|_| AimcCounts::default()).collect();
+            let mut qkv: Vec<Vec<HeadQkv>> = (0..lanes)
+                .map(|_| {
+                    (0..heads)
+                        .map(|_| (SpikeVolume::zeros(t_max, n, dh),
+                                  SpikeVolume::zeros(t_max, n, dh),
+                                  SpikeVolume::zeros(t_max, n, dh)))
+                        .collect()
+                })
                 .collect();
             // Q/K/V projections stream token-by-token per timestep (the
             // LIF banks integrate across t), splitting each packed
-            // dim-wide row into per-head d_k slices.
-            let mut qkv_lifs: Vec<Vec<LifArray>> =
-                (0..3).map(|_| vec![LifArray::new(dim); n]).collect();
+            // dim-wide row into per-head d_k slices. Each projection
+            // matrix is walked once per (t, token), lanes innermost.
+            let mut qkv_lifs: Vec<Vec<Vec<LifArray>>> = (0..lanes)
+                .map(|_| {
+                    (0..3).map(|_| vec![LifArray::new(dim); n]).collect()
+                })
+                .collect();
             for t in 0..t_max {
-                let xt = cur.step(t);
                 for tok in 0..n {
-                    let row = xt.row_vector(tok);
+                    let rows: Vec<SpikeVector> = cur
+                        .iter()
+                        .map(|vol| vol.step(t).row_vector(tok))
+                        .collect();
                     for (which, stage) in [&wq, &wk, &wv].into_iter()
                         .enumerate()
                     {
-                        let sp = stage.step(&mut rng, &row,
-                                            &mut qkv_lifs[which][tok],
-                                            t_sec, hw, &mut counts);
-                        for (h, hv) in qkv.iter_mut().enumerate() {
-                            let slice = sp.extract(h * dh, (h + 1) * dh);
-                            let vol = match which {
-                                0 => &mut hv.0,
-                                1 => &mut hv.1,
-                                _ => &mut hv.2,
-                            };
-                            vol.step_mut(t).set_row(tok, &slice);
+                        for lane in 0..lanes {
+                            let sp = stage.step(
+                                &mut rngs[lane], &rows[lane],
+                                &mut qkv_lifs[lane][which][tok], t_sec,
+                                hw, &mut counts[lane]);
+                            for (h, hv) in qkv[lane].iter_mut().enumerate()
+                            {
+                                let slice =
+                                    sp.extract(h * dh, (h + 1) * dh);
+                                let vol = match which {
+                                    0 => &mut hv.0,
+                                    1 => &mut hv.1,
+                                    _ => &mut hv.2,
+                                };
+                                vol.step_mut(t).set_row(tok, &slice);
+                            }
                         }
                     }
                 }
             }
-            // Multi-head SSA over the whole encoding window (tiles run in
-            // parallel; the PRN seed is derived per (run, block)).
-            let mut ssa = SsaEngine::new(
-                heads, n, dh, self.causal,
-                (seed as u32) ^ (0x51CA_D0 + b as u32));
-            let (head_outs, stats) = ssa.run_mhsa(&qkv);
-            // Concatenate head outputs back to dim-wide rows.
-            let mut attn = SpikeVolume::zeros(t_max, n, dim);
-            for (h, vol) in head_outs.iter().enumerate() {
-                for t in 0..t_max {
-                    let step = vol.step(t);
-                    let out = attn.step_mut(t);
-                    for tok in 0..n {
-                        step.row_vector(tok)
-                            .for_each_set(|i| out.set(tok, h * dh + i, true));
+            // Multi-head SSA over the whole encoding window: the SAC
+            // array tiles across (lane, head) in one parallel wave; each
+            // lane's PRN seed derives from (its seed, block).
+            let mut engines: Vec<SsaEngine> = seeds
+                .iter()
+                .map(|&s| {
+                    SsaEngine::new(heads, n, dh, self.causal,
+                                   (s as u32) ^ (0x51CA_D0 + b as u32))
+                })
+                .collect();
+            let ssa_results = run_mhsa_lanes(&mut engines, &qkv);
+            // Concatenate head outputs back to dim-wide rows, per lane.
+            let mut attns: Vec<SpikeVolume> = Vec::with_capacity(lanes);
+            let mut lane_stats = Vec::with_capacity(lanes);
+            for (head_outs, stats) in ssa_results {
+                let mut attn = SpikeVolume::zeros(t_max, n, dim);
+                for (h, vol) in head_outs.iter().enumerate() {
+                    for t in 0..t_max {
+                        let step = vol.step(t);
+                        let out = attn.step_mut(t);
+                        for tok in 0..n {
+                            step.row_vector(tok).for_each_set(
+                                |i| out.set(tok, h * dh + i, true));
+                        }
+                    }
+                }
+                attns.push(attn);
+                lane_stats.push(stats);
+            }
+            // Output projection + residual + FFN + residual: stage-major
+            // per (t, token) so each matrix is applied across all lanes
+            // back-to-back (per-lane rng order stays wo, w1, w2).
+            let mut wo_lifs: Vec<Vec<LifArray>> =
+                (0..lanes).map(|_| vec![LifArray::new(dim); n]).collect();
+            let mut w1_lifs: Vec<Vec<LifArray>> = (0..lanes)
+                .map(|_| vec![LifArray::new(hidden); n])
+                .collect();
+            let mut w2_lifs: Vec<Vec<LifArray>> =
+                (0..lanes).map(|_| vec![LifArray::new(dim); n]).collect();
+            let mut blk_outs: Vec<SpikeVolume> = (0..lanes)
+                .map(|_| SpikeVolume::zeros(t_max, n, dim))
+                .collect();
+            for t in 0..t_max {
+                for tok in 0..n {
+                    let mut r1s: Vec<SpikeVector> =
+                        Vec::with_capacity(lanes);
+                    for lane in 0..lanes {
+                        let a_row = attns[lane].step(t).row_vector(tok);
+                        let o = wo.step(&mut rngs[lane], &a_row,
+                                        &mut wo_lifs[lane][tok], t_sec,
+                                        hw, &mut counts[lane]);
+                        let mut r1 = o;
+                        r1.or_assign(&cur[lane].step(t).row_vector(tok));
+                        r1s.push(r1);
+                    }
+                    let mut h_sps: Vec<SpikeVector> =
+                        Vec::with_capacity(lanes);
+                    for (lane, r1) in r1s.iter().enumerate() {
+                        h_sps.push(w1.step(&mut rngs[lane], r1,
+                                           &mut w1_lifs[lane][tok], t_sec,
+                                           hw, &mut counts[lane]));
+                    }
+                    for (lane, h_sp) in h_sps.iter().enumerate() {
+                        let f_sp = w2.step(&mut rngs[lane], h_sp,
+                                           &mut w2_lifs[lane][tok], t_sec,
+                                           hw, &mut counts[lane]);
+                        let mut r2 = f_sp;
+                        r2.or_assign(&r1s[lane]);
+                        blk_outs[lane].step_mut(t).set_row(tok, &r2);
                     }
                 }
             }
-            // Output projection + residual + FFN + residual, per token.
-            let mut wo_lifs = vec![LifArray::new(dim); n];
-            let mut w1_lifs = vec![LifArray::new(hidden); n];
-            let mut w2_lifs = vec![LifArray::new(dim); n];
-            let mut blk_out = SpikeVolume::zeros(t_max, n, dim);
-            for t in 0..t_max {
-                for tok in 0..n {
-                    let a_row = attn.step(t).row_vector(tok);
-                    let o = wo.step(&mut rng, &a_row, &mut wo_lifs[tok],
-                                    t_sec, hw, &mut counts);
-                    let mut r1 = o;
-                    r1.or_assign(&cur.step(t).row_vector(tok));
-                    let h_sp = w1.step(&mut rng, &r1, &mut w1_lifs[tok],
-                                       t_sec, hw, &mut counts);
-                    let f_sp = w2.step(&mut rng, &h_sp, &mut w2_lifs[tok],
-                                       t_sec, hw, &mut counts);
-                    let mut r2 = f_sp;
-                    r2.or_assign(&r1);
-                    blk_out.step_mut(t).set_row(tok, &r2);
-                }
+            cur = blk_outs;
+            for ((layers, c), stats) in
+                lane_layers.iter_mut().zip(&counts).zip(&lane_stats)
+            {
+                layers.push(LayerEnergy {
+                    name: format!("blk{b}"),
+                    aimc: AimcEnergy::from_counts(c.conversions,
+                                                  c.wl_pulses),
+                    ssa: SsaEnergy::from_stats(stats,
+                                               (heads * n * n) as u64),
+                    lif_pj: (t_max * n * (5 * dim + hidden)) as f64
+                        * E_LIF_UPDATE,
+                    residual_pj: (2 * t_max * n * dim) as f64
+                        * E_RESIDUAL_EL,
+                });
             }
-            cur = blk_out;
-            layers.push(LayerEnergy {
-                name: format!("blk{b}"),
-                aimc: AimcEnergy::from_counts(counts.conversions,
-                                              counts.wl_pulses),
-                ssa: SsaEnergy::from_stats(&stats, (heads * n * n) as u64),
-                lif_pj: (t_max * n * (5 * dim + hidden)) as f64
-                    * E_LIF_UPDATE,
-                residual_pj: (2 * t_max * n * dim) as f64 * E_RESIDUAL_EL,
-            });
         }
 
         // -- Classification head (analog readout per step) ---------------
@@ -289,36 +394,57 @@ impl XpikeModel {
         // out — averaging the 18 context-pair tokens in would dilute the
         // prediction 19x (paper Task 2 semantics).
         let head = self.stage("head");
-        let mut counts = AimcCounts::default();
-        let mut logits = Vec::with_capacity(t_max * d.classes);
+        let mut counts: Vec<AimcCounts> =
+            (0..lanes).map(|_| AimcCounts::default()).collect();
+        let mut logits = vec![0.0f32; lanes * t_max * classes];
         for t in 0..t_max {
             if self.causal {
-                let row = cur.step(t).row_vector(n - 1);
-                let out = head.mvm(&mut rng, &row, t_sec, hw, &mut counts);
-                logits.extend(out);
+                for lane in 0..lanes {
+                    let row = cur[lane].step(t).row_vector(n - 1);
+                    let out = head.mvm(&mut rngs[lane], &row, t_sec, hw,
+                                       &mut counts[lane]);
+                    let off = (lane * t_max + t) * classes;
+                    logits[off..off + classes].copy_from_slice(&out);
+                }
             } else {
-                let mut acc = vec![0.0f64; d.classes];
+                let mut accs = vec![vec![0.0f64; classes]; lanes];
                 for tok in 0..n {
-                    let row = cur.step(t).row_vector(tok);
-                    let out =
-                        head.mvm(&mut rng, &row, t_sec, hw, &mut counts);
-                    for (a, v) in acc.iter_mut().zip(&out) {
-                        *a += *v as f64;
+                    for lane in 0..lanes {
+                        let row = cur[lane].step(t).row_vector(tok);
+                        let out = head.mvm(&mut rngs[lane], &row, t_sec,
+                                           hw, &mut counts[lane]);
+                        for (a, v) in accs[lane].iter_mut().zip(&out) {
+                            *a += *v as f64;
+                        }
                     }
                 }
-                logits.extend(acc.iter().map(|&a| (a / n as f64) as f32));
+                for (lane, acc) in accs.iter().enumerate() {
+                    let off = (lane * t_max + t) * classes;
+                    for (dst, &a) in
+                        logits[off..off + classes].iter_mut().zip(acc)
+                    {
+                        *dst = (a / n as f64) as f32;
+                    }
+                }
             }
         }
-        layers.push(LayerEnergy {
-            name: "head".into(),
-            aimc: AimcEnergy::from_counts(counts.conversions,
-                                          counts.wl_pulses),
-            ssa: SsaEnergy::default(),
-            lif_pj: 0.0,
-            residual_pj: 0.0,
-        });
+        for (layers, c) in lane_layers.iter_mut().zip(&counts) {
+            layers.push(LayerEnergy {
+                name: "head".into(),
+                aimc: AimcEnergy::from_counts(c.conversions, c.wl_pulses),
+                ssa: SsaEnergy::default(),
+                lif_pj: 0.0,
+                residual_pj: 0.0,
+            });
+        }
 
-        Ok((logits, ModelEnergy { layers, inferences: 1 }))
+        // Fold per-lane breakdowns exactly the way the serving backend
+        // accumulates serial forwards, so batched == serial energy.
+        let mut energy = ModelEnergy::default();
+        for layers in lane_layers {
+            energy.add(&ModelEnergy { layers, inferences: 1 });
+        }
+        Ok((logits, energy))
     }
 }
 
@@ -344,6 +470,55 @@ mod tests {
         assert_eq!(a, b, "same seed => identical logits");
         assert_ne!(a, c, "different seed => different stochastic run");
         assert!(a.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn forward_batch_lanes_bit_identical_to_serial_forward() {
+        // The lane-batching equivalence contract, on a 2-block model:
+        // every lane of one forward_batch call must reproduce the serial
+        // per-lane forward bit-for-bit (same per-lane seeds), and the
+        // summed energy must match the serial accumulation.
+        for dims in [vit_native(2, 64, 2, 3), gpt_native(2, 64, 2, 2, 2, 3)]
+        {
+            let model =
+                XpikeModel::new(&dims, &HardwareConfig::default(), 17);
+            let lanes = 3usize;
+            let seeds = [5u64, 900, 31];
+            let xs: Vec<f32> = (0..lanes)
+                .flat_map(|l| sample(&model, 50 + l as u64))
+                .collect();
+            let (batched, be) =
+                model.forward_batch(&xs, lanes, &seeds).unwrap();
+            assert_eq!(batched.len(),
+                       lanes * dims.t_steps * dims.classes);
+            assert_eq!(be.inferences, lanes as u64);
+            let mut serial_energy = ModelEnergy::default();
+            let per = dims.t_steps * dims.classes;
+            let sl = model.sample_len();
+            for (lane, &seed) in seeds.iter().enumerate() {
+                let (solo, e) = model
+                    .forward(&xs[lane * sl..(lane + 1) * sl], seed)
+                    .unwrap();
+                assert_eq!(&batched[lane * per..(lane + 1) * per],
+                           &solo[..], "{} lane {lane}", dims.name);
+                serial_energy.add(&e);
+            }
+            assert_eq!(be.total_pj(), serial_energy.total_pj(),
+                       "{} energy must fold identically", dims.name);
+        }
+    }
+
+    #[test]
+    fn forward_batch_rejects_bad_shapes() {
+        let dims = vit_native(1, 64, 2, 2);
+        let model = XpikeModel::new(&dims, &HardwareConfig::default(), 1);
+        let x = sample(&model, 2);
+        assert!(model.forward_batch(&x, 0, &[]).is_err(),
+                "zero lanes must be rejected");
+        assert!(model.forward_batch(&x, 1, &[1, 2]).is_err(),
+                "seed count must match lanes");
+        assert!(model.forward_batch(&x, 2, &[1, 2]).is_err(),
+                "input must cover every lane");
     }
 
     #[test]

@@ -8,10 +8,15 @@
 //!   QKV/FFN crossbar MVMs + LIF banks, SSA multi-head attention,
 //!   spike-driven OR residuals → analog classification head, end-to-end
 //!   on packed [`crate::spike`] tensors with measured per-layer energy
-//!   accounting ([`crate::energy::ModelEnergy`]);
-//! * [`backend`] — [`NativeBackend`]: batch lanes on scoped threads
-//!   behind the [`crate::backend::InferenceBackend`] seam, the default
-//!   executor for [`crate::coordinator::Server`].
+//!   accounting ([`crate::energy::ModelEnergy`]). The lane-batched
+//!   `forward_batch` advances several samples in lock-step per crossbar
+//!   traversal (SSA tiling across lane x head), each lane bit-identical
+//!   to the serial single-sample path;
+//! * [`backend`] — [`NativeBackend`]: `lane_chunk`-sized `forward_batch`
+//!   calls on scoped threads behind the
+//!   [`crate::backend::InferenceBackend`] seam (per-request seeds via
+//!   `run_seeded`), the default executor for
+//!   [`crate::coordinator::Server`].
 
 pub mod backend;
 pub mod forward;

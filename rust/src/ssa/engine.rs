@@ -150,6 +150,52 @@ impl SsaEngine {
     }
 }
 
+/// Multi-head attention for several independent batch lanes in one
+/// parallel wave: one scoped OS thread per (lane, head) tile, mirroring
+/// the SSA array processing a whole batch in lock-step (paper Fig 6) the
+/// way [`SsaEngine::run_mhsa`] mirrors parallel per-head tiles. Lanes
+/// own their engines (private LFSR streams), so each lane's result is
+/// bit-identical to calling `run_mhsa` on that lane's engine alone —
+/// scheduling cannot reorder draws. Per-lane stats merge in head order,
+/// exactly as `run_mhsa` merges them.
+pub fn run_mhsa_lanes(engines: &mut [SsaEngine], qkv: &[Vec<HeadQkv>])
+                      -> Vec<(Vec<SpikeVolume>, SsaStats)> {
+    assert_eq!(engines.len(), qkv.len(),
+               "one SSA engine per batch lane");
+    let mut results: Vec<Vec<Option<(SpikeVolume, SsaStats)>>> = qkv
+        .iter()
+        .map(|lane| (0..lane.len()).map(|_| None).collect())
+        .collect();
+    std::thread::scope(|scope| {
+        for ((engine, lane_qkv), slots) in
+            engines.iter_mut().zip(qkv).zip(results.iter_mut())
+        {
+            assert_eq!(lane_qkv.len(), engine.tiles.len());
+            for ((tile, (q, k, v)), slot) in
+                engine.tiles.iter_mut().zip(lane_qkv).zip(slots.iter_mut())
+            {
+                scope.spawn(move || {
+                    tile.reset();
+                    *slot = Some(tile.run(q, k, v));
+                });
+            }
+        }
+    });
+    results
+        .into_iter()
+        .map(|slots| {
+            let mut stats = SsaStats::default();
+            let mut outs = Vec::with_capacity(slots.len());
+            for r in slots {
+                let (o, s) = r.expect("tile thread completed");
+                stats.add(&s);
+                outs.push(o);
+            }
+            (outs, stats)
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -226,6 +272,35 @@ mod tests {
         assert_eq!(stats.encoder_samples,
                    heads as u64 * ((2 * n * n) + (2 + 1) * n * d_k) as u64
                        - heads as u64 * n as u64 * d_k as u64);
+    }
+
+    #[test]
+    fn lane_batched_mhsa_bit_identical_to_per_lane_runs() {
+        let (n, d_k, heads, lanes) = (6, 16, 2, 3);
+        let qkv: Vec<Vec<HeadQkv>> = (0..lanes)
+            .map(|lane| {
+                (0..heads)
+                    .map(|h| {
+                        let salt = lane * 100 + h * 10;
+                        (mats(3, n, d_k, salt + 1, 0.4),
+                         mats(3, n, d_k, salt + 2, 0.4),
+                         mats(3, n, d_k, salt + 3, 0.4))
+                    })
+                    .collect()
+            })
+            .collect();
+        // Distinct per-lane seeds, as forward_batch derives them.
+        let mut batched: Vec<SsaEngine> = (0..lanes)
+            .map(|lane| SsaEngine::new(heads, n, d_k, true, 31 + lane as u32))
+            .collect();
+        let got = run_mhsa_lanes(&mut batched, &qkv);
+        for (lane, (outs, stats)) in got.iter().enumerate() {
+            let mut solo =
+                SsaEngine::new(heads, n, d_k, true, 31 + lane as u32);
+            let (want_outs, want_stats) = solo.run_mhsa(&qkv[lane]);
+            assert_eq!(*outs, want_outs, "lane {lane}");
+            assert_eq!(*stats, want_stats, "lane {lane}");
+        }
     }
 
     #[test]

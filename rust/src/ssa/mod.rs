@@ -8,7 +8,9 @@
 //! * [`tile`]      — the N x N SAC array with streaming dataflow, column
 //!   adders and Bernoulli encoders; counts cycles and gate events;
 //! * [`engine`]    — multi-tile (one tile per head) engine running heads
-//!   on parallel OS threads + the algorithm-level reference (paper
+//!   on parallel OS threads, the lane-batched
+//!   [`engine::run_mhsa_lanes`] tiling across (lane, head) for the
+//!   batched native forward, and the algorithm-level reference (paper
 //!   Algorithm 1) used to prove the cycle-level model bit-exact;
 //! * [`legacy`]    — the frozen pre-refactor `Vec<Vec<bool>>`
 //!   implementations, kept as the bit-exactness oracle and the
@@ -43,7 +45,8 @@ pub mod sac;
 pub mod tile;
 
 pub use crate::spike::{SpikeMatrix, SpikeVector, SpikeVolume};
-pub use engine::{ssa_reference, ssa_reference_bools, HeadQkv, SsaEngine};
+pub use engine::{run_mhsa_lanes, ssa_reference, ssa_reference_bools,
+                 HeadQkv, SsaEngine};
 pub use lfsr::{Lfsr32, LfsrArray};
 pub use sac::{bernoulli_encode, Sac};
 pub use tile::{SsaStats, SsaTile};

@@ -1,11 +1,15 @@
-//! Coordinator tests against a deterministic mock `InferenceBackend` —
-//! no artifacts, no PJRT, no simulator: pure batching semantics.
+//! Coordinator tests against deterministic mock `InferenceBackend`s —
+//! no artifacts, no PJRT, no simulator: pure batching + routing
+//! semantics.
 //!
 //! Covers the batcher contract end to end: padding lanes replicate the
-//! last real sample, per-request responses slice the right lane, the
-//! execution seed derives from the head request, execution failures are
-//! surfaced per request in the metrics while the server keeps serving,
-//! and the bounded queue exerts backpressure.
+//! last real sample and seed, per-request responses slice the right lane
+//! under the request's *own* seed (bit-identical regardless of batch
+//! co-tenants), single-seed backends keep working through the
+//! `run_seeded` fallback, execution failures are surfaced per request in
+//! the per-shard metrics while the server keeps serving, the shard
+//! router balances batches and merges snapshots, and the bounded queue
+//! exerts backpressure.
 
 use std::sync::{Arc, Mutex};
 
@@ -13,10 +17,11 @@ use xpikeformer::backend::InferenceBackend;
 use xpikeformer::config::RunConfig;
 use xpikeformer::coordinator::Server;
 
-/// Deterministic mock: logits encode (lane input, seed, t, class) so a
-/// response proves exactly which lane and seed produced it. An input
-/// sample whose first feature is negative makes the whole execution
-/// fail — the error-path probe.
+/// Deterministic mock: logits encode (lane input, lane seed, t, class)
+/// so a response proves exactly which lane and seed produced it. An
+/// input sample whose first feature is negative makes the whole
+/// execution fail — the error-path probe; `poisoned` makes *every*
+/// execution fail — the dead-shard probe.
 #[derive(Clone)]
 struct MockBackend {
     batch: usize,
@@ -25,8 +30,9 @@ struct MockBackend {
     sample_len: usize,
     /// Simulated execution time, so queue-depth tests are deterministic.
     delay: std::time::Duration,
-    /// Every (x, seed) execution observed, for padding assertions.
-    executions: Arc<Mutex<Vec<(Vec<f32>, u32)>>>,
+    poisoned: bool,
+    /// Every (x, lane seeds) execution observed, for padding assertions.
+    executions: Arc<Mutex<Vec<(Vec<f32>, Vec<u32>)>>>,
 }
 
 impl MockBackend {
@@ -37,6 +43,7 @@ impl MockBackend {
             classes: 3,
             sample_len: 2,
             delay: std::time::Duration::ZERO,
+            poisoned: false,
             executions: Arc::new(Mutex::new(Vec::new())),
         }
     }
@@ -49,20 +56,30 @@ impl MockBackend {
 
 impl InferenceBackend for MockBackend {
     fn run(&self, x: &[f32], seed: u32) -> anyhow::Result<Vec<f32>> {
+        // Single-seed contract: every lane under the one seed.
+        self.run_seeded(x, &vec![seed; self.batch])
+    }
+
+    /// Per-lane seeds: lane `b`'s logits follow `seeds[b]` alone.
+    fn run_seeded(&self, x: &[f32], seeds: &[u32])
+                  -> anyhow::Result<Vec<f32>> {
         assert_eq!(x.len(), self.batch * self.sample_len,
                    "batcher must always pass a full batch");
+        assert_eq!(seeds.len(), self.batch,
+                   "batcher must pass one seed per lane");
+        anyhow::ensure!(!self.poisoned, "poisoned shard");
         anyhow::ensure!(x[0] >= 0.0, "mock failure requested");
         if !self.delay.is_zero() {
             std::thread::sleep(self.delay);
         }
-        self.executions.lock().unwrap().push((x.to_vec(), seed));
+        self.executions.lock().unwrap().push((x.to_vec(), seeds.to_vec()));
         let mut out =
             Vec::with_capacity(self.t_max * self.batch * self.classes);
         for t in 0..self.t_max {
             for b in 0..self.batch {
                 let x0 = x[b * self.sample_len];
                 for c in 0..self.classes {
-                    out.push(Self::logit(x0, seed, t, c));
+                    out.push(Self::logit(x0, seeds[b], t, c));
                 }
             }
         }
@@ -86,48 +103,129 @@ impl InferenceBackend for MockBackend {
     }
 }
 
+/// A backend that only understands one seed per execution (like the
+/// AOT/HLO artifacts): `run_seeded` is *not* overridden, so the
+/// coordinator's per-lane seeds must collapse to `seeds[0]` via the
+/// trait's default fallback.
+#[derive(Clone)]
+struct SingleSeedMock {
+    inner: MockBackend,
+}
+
+impl InferenceBackend for SingleSeedMock {
+    fn run(&self, x: &[f32], seed: u32) -> anyhow::Result<Vec<f32>> {
+        self.inner.run(x, seed)
+    }
+
+    fn batch(&self) -> usize {
+        self.inner.batch
+    }
+
+    fn t_max(&self) -> usize {
+        self.inner.t_max
+    }
+
+    fn classes(&self) -> usize {
+        self.inner.classes
+    }
+
+    fn x_len_per_sample(&self) -> usize {
+        self.inner.sample_len
+    }
+}
+
 fn cfg(max_batch: usize, window_us: u64, queue_depth: usize) -> RunConfig {
     RunConfig {
         max_batch,
         batch_window_us: window_us,
         queue_depth,
-        seed: 0, // execution seed == head request seed (no extra xor)
+        seed: 0, // lane seed == request seed (no extra xor)
         ..RunConfig::default()
     }
 }
 
 #[test]
-fn responses_slice_the_right_lane_and_seed() {
+fn responses_slice_the_right_lane_and_own_seed() {
     let backend = MockBackend::new(4);
     // A generous window so all three submissions merge into one batch
     // even on a loaded CI machine.
     let server = Server::start(backend.clone(), cfg(4, 50_000, 16));
     let client = server.client();
     // Three requests with distinct first features; batched together they
-    // occupy lanes 0..3 and run under the head request's seed.
+    // occupy lanes 0..3, each running under its own seed.
     let pendings: Vec<_> = (0..3)
         .map(|i| client.infer(vec![i as f32 + 1.0, 0.0], 40 + i).unwrap())
         .collect();
     let responses: Vec<_> =
         pendings.into_iter().map(|p| p.wait().unwrap()).collect();
-    // All requests landed in one execution under the head seed 40.
     let execs = backend.executions.lock().unwrap().clone();
     assert_eq!(execs.len(), 1, "window must merge into one batch");
-    let (x, seed) = &execs[0];
-    assert_eq!(*seed, 40, "execution seed derives from the head request");
+    let (x, seeds) = &execs[0];
+    assert_eq!(seeds[..3], [40, 41, 42],
+               "every lane runs under its request's seed");
     for (i, r) in responses.iter().enumerate() {
         assert_eq!(r.t_max, 2);
         assert_eq!(r.classes, 3);
         for t in 0..2 {
             for c in 0..3 {
                 assert_eq!(r.logits_t[t * 3 + c],
-                           MockBackend::logit(i as f32 + 1.0, 40, t, c),
+                           MockBackend::logit(i as f32 + 1.0, 40 + i as u32,
+                                              t, c),
                            "req {i} t={t} c={c}");
             }
         }
     }
-    // Padding lane 3 replicated the last real sample (first feature 3.0).
+    // Padding lane 3 replicated the last real sample and its seed.
     assert_eq!(x[3 * 2], 3.0, "padding must repeat the last sample");
+    assert_eq!(seeds[3], 42, "padding must repeat the last seed");
+    drop(client);
+    server.shutdown();
+}
+
+#[test]
+fn request_logits_identical_regardless_of_co_tenants() {
+    // The per-request seed fidelity contract: the same (sample, seed)
+    // produces bit-identical logits whether it runs alone or shares a
+    // batch, and wherever it lands in the batch.
+    let solo_server = Server::start(MockBackend::new(4), cfg(1, 0, 16));
+    let solo = solo_server
+        .client()
+        .infer_blocking(vec![2.5, 0.0], 9)
+        .unwrap();
+    solo_server.shutdown();
+
+    let server = Server::start(MockBackend::new(4), cfg(4, 50_000, 16));
+    let client = server.client();
+    let co1 = client.infer(vec![7.0, 0.0], 600).unwrap();
+    let subject = client.infer(vec![2.5, 0.0], 9).unwrap();
+    let co2 = client.infer(vec![8.0, 0.0], 601).unwrap();
+    let got = subject.wait().unwrap();
+    assert_eq!(got.logits_t, solo.logits_t,
+               "co-tenants and lane position must not change logits");
+    assert_ne!(co1.wait().unwrap().logits_t, got.logits_t);
+    assert_ne!(co2.wait().unwrap().logits_t, got.logits_t);
+    drop(client);
+    server.shutdown();
+}
+
+#[test]
+fn single_seed_backends_fall_back_to_head_seed() {
+    // A backend without run_seeded support still serves: the default
+    // impl collapses the per-lane seeds to the head request's.
+    let backend = SingleSeedMock { inner: MockBackend::new(2) };
+    let execs = Arc::clone(&backend.inner.executions);
+    let server = Server::start(backend, cfg(2, 50_000, 16));
+    let client = server.client();
+    let p1 = client.infer(vec![1.0, 0.0], 30).unwrap();
+    let p2 = client.infer(vec![2.0, 0.0], 31).unwrap();
+    let (r1, r2) = (p1.wait().unwrap(), p2.wait().unwrap());
+    // Both lanes ran under the head seed 30 (MockBackend::run fans the
+    // one seed across lanes).
+    assert_eq!(r1.logits_t[0], MockBackend::logit(1.0, 30, 0, 0));
+    assert_eq!(r2.logits_t[0], MockBackend::logit(2.0, 30, 0, 0));
+    let execs = execs.lock().unwrap();
+    assert_eq!(execs.len(), 1);
+    assert_eq!(execs[0].1, vec![30, 30]);
     drop(client);
     server.shutdown();
 }
@@ -145,7 +243,7 @@ fn per_request_seeds_stay_independent_across_batches() {
     assert_ne!(a.logits_t, b.logits_t, "seed must reach the backend");
     let execs = backend.executions.lock().unwrap().clone();
     assert_eq!(execs.len(), 2);
-    assert_eq!((execs[0].1, execs[1].1), (7, 8));
+    assert_eq!((execs[0].1[0], execs[1].1[0]), (7, 8));
     drop(client);
     server.shutdown();
 }
@@ -167,7 +265,74 @@ fn execution_failure_counts_requests_and_server_survives() {
     let snap = server.metrics.snapshot();
     assert_eq!(snap.failed, 2, "both dropped requests counted");
     assert_eq!(snap.completed, 1);
+    assert_eq!(snap.per_shard.len(), 1);
+    assert_eq!(snap.per_shard[0].failed, 2);
     assert!(snap.to_string().contains("failed=2"));
+    drop(client);
+    server.shutdown();
+}
+
+#[test]
+fn shard_router_balances_uneven_request_counts() {
+    // 3 shards, 7 sequential single-request batches: idle shards
+    // alternate round-robin, so the split is 3/2/2 and the merged
+    // snapshot's per-shard counts sum to the totals.
+    let shards: Vec<MockBackend> =
+        (0..3).map(|_| MockBackend::new(1)).collect();
+    let execs: Vec<_> = shards
+        .iter()
+        .map(|s| Arc::clone(&s.executions))
+        .collect();
+    let server = Server::start_sharded(shards, cfg(1, 0, 16));
+    let client = server.client();
+    for i in 0..7u32 {
+        let r = client.infer_blocking(vec![i as f32, 0.0], i).unwrap();
+        assert_eq!(r.logits_t[0], MockBackend::logit(i as f32, i, 0, 0),
+                   "request {i} must keep its own sample + seed");
+    }
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.completed, 7);
+    assert_eq!(snap.per_shard.len(), 3);
+    let done: Vec<u64> =
+        snap.per_shard.iter().map(|s| s.completed).collect();
+    assert_eq!(done.iter().sum::<u64>(), snap.completed,
+               "per-shard done counts must sum to the total");
+    assert_eq!(done, vec![3, 2, 2], "idle shards alternate round-robin");
+    let batches: Vec<usize> =
+        execs.iter().map(|e| e.lock().unwrap().len()).collect();
+    assert_eq!(batches, vec![3, 2, 2]);
+    assert_eq!(snap.per_shard.iter().map(|s| s.batches).sum::<u64>(),
+               snap.batches);
+    drop(client);
+    server.shutdown();
+}
+
+#[test]
+fn one_failing_shard_while_others_keep_serving() {
+    // Shard 1's backend fails every execution; shard 0 keeps serving.
+    // Sequential submissions alternate deterministically, so exactly the
+    // even-numbered requests succeed on shard 0 and the odd ones fail on
+    // shard 1 — visible in the per-shard metrics.
+    let good = MockBackend::new(1);
+    let bad = MockBackend { poisoned: true, ..MockBackend::new(1) };
+    let server = Server::start_sharded(vec![good, bad], cfg(1, 0, 16));
+    let client = server.client();
+    let mut outcomes = Vec::new();
+    for i in 0..6u32 {
+        outcomes.push(
+            client.infer(vec![0.5, 0.0], i).unwrap().wait().is_ok());
+    }
+    assert_eq!(outcomes, [true, false, true, false, true, false]);
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.completed, 3);
+    assert_eq!(snap.failed, 3);
+    assert_eq!(snap.per_shard[0].completed, 3);
+    assert_eq!(snap.per_shard[0].failed, 0);
+    assert_eq!(snap.per_shard[1].completed, 0);
+    assert_eq!(snap.per_shard[1].failed, 3,
+               "failures must land on the failing shard's counters");
+    let text = snap.to_string();
+    assert!(text.contains("shard1: done=0 failed=3"), "{text}");
     drop(client);
     server.shutdown();
 }

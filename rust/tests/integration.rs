@@ -233,6 +233,57 @@ fn native_model_serves_deterministically_through_coordinator() {
 }
 
 #[test]
+fn sharded_server_interleaves_requests_reproducibly() {
+    // The ISSUE-5 acceptance path: a sharded Server over two
+    // NativeBackend replicas answers interleaved requests with
+    // per-request-seed-reproducible logits (bit-identical on
+    // resubmission, whatever batch/lane/shard each round lands on) and
+    // a merged metrics snapshot whose per-shard done counts sum to the
+    // total.
+    let dims = vit_native(1, 64, 2, 2);
+    let model = XpikeModel::new(&dims, &HardwareConfig::default(), 42);
+    let backend = NativeBackend::new(model, 2);
+    let sample_len = backend.x_len_per_sample();
+    let replicas = vec![backend.clone(), backend.clone()];
+    let cfg = RunConfig { max_batch: 2, batch_window_us: 2000,
+                          ..RunConfig::default() };
+    let server = Server::start_sharded(replicas, cfg);
+    let client = server.client();
+    let mut rng = Rng::seed_from_u64(11);
+    let xs: Vec<Vec<f32>> = (0..8)
+        .map(|_| (0..sample_len).map(|_| rng.uniform_f32()).collect())
+        .collect();
+    let round = |label: &str| -> Vec<Vec<f32>> {
+        let pendings: Vec<_> = xs
+            .iter()
+            .enumerate()
+            .map(|(i, x)| client.infer(x.clone(), 100 + i as u32).unwrap())
+            .collect();
+        pendings
+            .into_iter()
+            .map(|p| p.wait().expect(label).logits_t)
+            .collect()
+    };
+    let first = round("first round");
+    let second = round("second round");
+    assert_eq!(first, second,
+               "per-request seeds must make logits reproducible across \
+                batch compositions and shard assignments");
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.completed, 16);
+    assert_eq!(snap.failed, 0);
+    assert_eq!(snap.per_shard.len(), 2);
+    assert_eq!(snap.per_shard.iter().map(|s| s.completed).sum::<u64>(),
+               snap.completed,
+               "per-shard done counts must sum to the total");
+    assert!(snap.per_shard.iter().all(|s| s.completed > 0),
+            "both shards must have served requests: {:?}",
+            snap.per_shard);
+    drop(client);
+    server.shutdown();
+}
+
+#[test]
 fn native_backend_drives_generic_accuracy_harness() {
     // `evaluate` is backend-generic: score the native GPT model over a
     // synthetic eval set (untrained => chance-ish, but the plumbing —
