@@ -2,8 +2,9 @@
 //! python, no AOT artifacts, no PJRT. Builds a tiny spiking ViT on the
 //! simulated hardware (PCM crossbars + SSA tiles + LIF banks), runs a
 //! forward pass, verifies bit-level reproducibility (including the
-//! lane-batched forward against its serial reference), and prints the
-//! measured per-layer energy breakdown.
+//! lane-batched forward against its serial reference), streams a causal
+//! GPT window token-by-token through the spike-state decode cache, and
+//! prints the measured per-layer energy breakdown.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
@@ -14,7 +15,7 @@
 
 use anyhow::Result;
 use xpikeformer::backend::prefix_predictions;
-use xpikeformer::config::{vit_native, HardwareConfig};
+use xpikeformer::config::{gpt_native, vit_native, HardwareConfig};
 use xpikeformer::model::XpikeModel;
 use xpikeformer::util::Rng;
 
@@ -76,6 +77,32 @@ fn main() -> Result<()> {
 
     // 6. The measured energy the inference cost, per pipeline stage.
     println!("\nmeasured energy per layer:\n{}", energy.report());
+
+    // 7. Streaming decode (causal models): begin_decode snapshots the
+    //    RNG/LFSR cursors, then decode_step appends one token at a time
+    //    to the cached packed K/V spike volumes — the whole window,
+    //    token by token, for the cost of one forward, bit-identical to
+    //    the one-shot pass (and with identical metered energy).
+    let gdims = gpt_native(2, 64, 2, 2, 2, 4);
+    let gpt = XpikeModel::new(&gdims, &hw, 42);
+    let gx: Vec<f32> = (0..gpt.sample_len())
+        .map(|_| rng.uniform_f32())
+        .collect();
+    let (full, genergy) = gpt.forward(&gx, 7)?;
+    let mut state = gpt.begin_decode(1, &[7])?;
+    let t0 = std::time::Instant::now();
+    let mut streamed = Vec::new();
+    for tok in gx.chunks(gdims.in_feat) {
+        streamed = gpt.decode_step(&mut state, tok)?;
+    }
+    println!("\nstreamed {} tokens in {:?} ({:.1} tok/s)",
+             gdims.n_tokens, t0.elapsed(),
+             gdims.n_tokens as f64 / t0.elapsed().as_secs_f64());
+    anyhow::ensure!(streamed == full,
+                    "streamed window must be bit-identical to forward");
+    anyhow::ensure!(state.energy().total_pj() == genergy.total_pj(),
+                    "streamed energy must match the one-shot meter");
+    println!("decode equivalence: streamed logits == one-shot forward");
     println!("\nquickstart OK");
     Ok(())
 }

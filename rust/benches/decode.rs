@@ -1,0 +1,156 @@
+//! Streaming-decode benchmarks: incremental `decode_step` against the
+//! one-shot `forward` recompute on the causal GPT preset.
+//!
+//! Measures (a) a full decoded window vs one full forward (the state
+//! caching must not cost asymptotically more than the one-shot pass it
+//! replaces), (b) the per-token step cost at increasing prefix lengths —
+//! the cached K/V volumes and RNG cursors keep the crossbar work per
+//! token constant, so step cost must stay near-flat instead of growing
+//! with the recomputed prefix — and (c) tokens/s of incremental decode
+//! vs full-recompute autoregression (one whole forward per emitted
+//! token). Overwrites the repo-root `BENCH_decode.json` (override the
+//! path with `BENCH_DECODE_JSON=...`).
+//!
+//! Run: `cargo bench --bench decode`
+
+use std::time::{Duration, Instant};
+
+use xpikeformer::config::{gpt_native, HardwareConfig};
+use xpikeformer::model::XpikeModel;
+use xpikeformer::util::bench::{bench, black_box, BenchResult};
+use xpikeformer::util::json::escape;
+use xpikeformer::util::Rng;
+
+fn result_json(r: &BenchResult) -> String {
+    format!(
+        "{{\"name\": \"{}\", \"mean_us\": {:.3}, \"p50_us\": {:.3}, \
+         \"p95_us\": {:.3}, \"iters\": {}}}",
+        escape(&r.name),
+        r.mean.as_secs_f64() * 1e6,
+        r.p50.as_secs_f64() * 1e6,
+        r.p95.as_secs_f64() * 1e6,
+        r.iters
+    )
+}
+
+fn main() {
+    println!("== streaming decode benchmarks ==");
+    let budget = Duration::from_millis(800);
+    let mut records: Vec<String> = Vec::new();
+
+    let dims = gpt_native(2, 64, 2, 2, 2, 4);
+    let model = XpikeModel::new(&dims, &HardwareConfig::default(), 42);
+    let n = dims.n_tokens;
+    let in_feat = dims.in_feat;
+    let mut rng = Rng::seed_from_u64(1);
+    let x: Vec<f32> = (0..model.sample_len())
+        .map(|_| rng.uniform_f32())
+        .collect();
+
+    // Baseline: the one-shot forward over the whole window.
+    let r_forward = bench(
+        &format!("forward full window {} (n={n})", dims.name),
+        1,
+        budget,
+        || {
+            black_box(model.forward(&x, 7).unwrap());
+        },
+    );
+    records.push(result_json(&r_forward));
+    let forward_s = r_forward.mean.as_secs_f64();
+    println!("    -> forward: {:.2} ms/window", forward_s * 1e3);
+
+    // The same window streamed token by token through the decode cache.
+    let r_decode = bench(
+        &format!("decode full window {} (n={n} steps)", dims.name),
+        1,
+        budget,
+        || {
+            let mut state = model.begin_decode(1, &[7]).unwrap();
+            for m in 0..n {
+                black_box(
+                    model
+                        .decode_step(&mut state,
+                                     &x[m * in_feat..(m + 1) * in_feat])
+                        .unwrap(),
+                );
+            }
+        },
+    );
+    records.push(result_json(&r_decode));
+    let decode_s = r_decode.mean.as_secs_f64();
+    let decode_vs_forward = decode_s / forward_s;
+    println!("    -> decode stream: {:.2} ms/window ({:.2}x of one \
+              forward)", decode_s * 1e3, decode_vs_forward);
+
+    // Per-token step cost at increasing prefix lengths. With cached K/V
+    // spike volumes the crossbar work per token is constant; only the
+    // O(prefix) attention row grows, and it is dwarfed by the MVMs — so
+    // the last token must cost about the same as the first, where a full
+    // recompute would pay the whole prefix again.
+    let probes = [0usize, n / 2, n - 1];
+    let mut sums = vec![Duration::ZERO; n];
+    let mut streams = 0u32;
+    let t0 = Instant::now();
+    while streams < 3 || t0.elapsed() < budget {
+        let mut state = model.begin_decode(1, &[7]).unwrap();
+        for (m, sum) in sums.iter_mut().enumerate() {
+            let ts = Instant::now();
+            black_box(
+                model
+                    .decode_step(&mut state,
+                                 &x[m * in_feat..(m + 1) * in_feat])
+                    .unwrap(),
+            );
+            *sum += ts.elapsed();
+        }
+        streams += 1;
+    }
+    let step_us: Vec<f64> = sums
+        .iter()
+        .map(|d| d.as_secs_f64() * 1e6 / streams as f64)
+        .collect();
+    for &p in &probes {
+        println!("    -> step after prefix {p:2}: {:.1} us", step_us[p]);
+    }
+    let prefix_ratio = step_us[n - 1] / step_us[0];
+    println!("    -> last/first token cost ratio: {prefix_ratio:.2}x \
+              (full recompute would be ~{n}x the work)");
+
+    // Autoregressive throughput: streaming vs one forward per token.
+    let tok_s_inc = n as f64 / decode_s;
+    let tok_s_full = 1.0 / forward_s;
+    let speedup = tok_s_inc / tok_s_full;
+    println!("    -> {tok_s_inc:.1} tok/s incremental vs \
+              {tok_s_full:.1} tok/s full recompute ({speedup:.2}x)");
+
+    let path = std::env::var("BENCH_DECODE_JSON").unwrap_or_else(|_| {
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_decode.json").into()
+    });
+    let json = format!(
+        "{{\n  \"bench\": \"decode\",\n  \"measured\": true,\n  \
+         \"model\": \"{}\",\n  \"window_tokens\": {n},\n  \
+         \"full_forward_ms\": {:.3},\n  \"full_window_decode_ms\": \
+         {:.3},\n  \"decode_vs_forward_total_ratio\": \
+         {decode_vs_forward:.3},\n  \"per_token_us_by_prefix\": \
+         {{\"0\": {:.1}, \"{}\": {:.1}, \"{}\": {:.1}}},\n  \
+         \"per_token_cost_vs_prefix_ratio\": {prefix_ratio:.3},\n  \
+         \"tokens_per_s_incremental\": {tok_s_inc:.1},\n  \
+         \"tokens_per_s_full_recompute\": {tok_s_full:.1},\n  \
+         \"incremental_vs_full_recompute_speedup\": {speedup:.3},\n  \
+         \"results\": [\n    {}\n  ]\n}}\n",
+        escape(&dims.name),
+        forward_s * 1e3,
+        decode_s * 1e3,
+        step_us[probes[0]],
+        probes[1],
+        step_us[probes[1]],
+        probes[2],
+        step_us[probes[2]],
+        records.join(",\n    ")
+    );
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

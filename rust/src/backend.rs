@@ -59,6 +59,34 @@ pub trait InferenceBackend: Send + 'static {
     fn nt(&self) -> usize {
         0
     }
+
+    /// Flattened feature length of one *token* for the incremental
+    /// generate path, or `None` if this backend cannot decode
+    /// incrementally (the default; only causal models with spike-state
+    /// caching support it). The coordinator uses this both as the
+    /// capability probe and to validate `generate` submissions.
+    fn generate_token_len(&self) -> Option<usize> {
+        None
+    }
+
+    /// Advance session `session` by one token: feed the `[token_len]`
+    /// feature row and return flattened `[t_max, classes]` logits for the
+    /// newest position. The first call of a session creates its decode
+    /// state (seeded by that call's `seed`); subsequent calls append to
+    /// it. Backends without incremental decode keep the default, which
+    /// fails.
+    fn generate_step(&self, session: u64, token: &[f32], seed: u32)
+                     -> Result<Vec<f32>> {
+        let _ = (session, token, seed);
+        anyhow::bail!("backend does not support incremental generation")
+    }
+
+    /// Drop session `session`'s decode state, if any. Ending a session
+    /// mid-window discards its partial work; completed windows are
+    /// accounted automatically. Default: no-op.
+    fn end_generate(&self, session: u64) {
+        let _ = session;
+    }
 }
 
 /// NaN-tolerant argmax keeping the *last* maximal entry — the shared

@@ -1,8 +1,10 @@
 //! Serving metrics: throughput, latency distribution, batch occupancy —
 //! aggregated across the server plus per-shard execution counters.
 //!
-//! The latency reservoir is global (exact percentiles over every
-//! completed request); `completed`/`failed`/batch occupancy are also
+//! The latency reservoir is global and bounded: percentiles are exact
+//! over the most recent `RESERVOIR` (65 536) completions, kept in a
+//! sliding ring buffer so memory stays constant under long uptimes;
+//! `completed`/`failed`/batch occupancy are also
 //! tracked per shard so the sharded router's balance and per-shard
 //! failures stay observable. [`Metrics::snapshot`] returns the merged
 //! view with the per-shard breakdown attached; per-shard counts always
@@ -24,9 +26,13 @@ struct Inner {
     completed: u64,
     batches: u64,
     batched_samples: u64,
-    /// End-to-end latencies in microseconds (bounded reservoir).
+    /// End-to-end latencies in microseconds (sliding ring buffer of the
+    /// most recent [`RESERVOIR`] completions; see `sample_cursor`).
     latencies_us: Vec<u64>,
     queue_waits_us: Vec<u64>,
+    /// Next ring-buffer slot once the reservoir is full. Both sample vecs
+    /// advance in lockstep, so one cursor serves both.
+    sample_cursor: usize,
     rejected: u64,
     /// Requests lost to backend execution failures.
     failed: u64,
@@ -79,6 +85,15 @@ impl Metrics {
         if m.latencies_us.len() < RESERVOIR {
             m.latencies_us.push(e2e_us);
             m.queue_waits_us.push(queue_us);
+        } else {
+            // Overwrite the oldest sample so a long-running server keeps
+            // a bounded, *sliding* window instead of freezing on the
+            // first RESERVOIR completions (and instead of growing
+            // without bound, as the pre-fix plain Vec did).
+            let c = m.sample_cursor;
+            m.latencies_us[c] = e2e_us;
+            m.queue_waits_us[c] = queue_us;
+            m.sample_cursor = (c + 1) % RESERVOIR;
         }
     }
 
@@ -148,6 +163,12 @@ pub struct ShardSnapshot {
 }
 
 /// Point-in-time metrics view (merged totals + per-shard breakdown).
+///
+/// Latency percentiles (`p50_us`/`p95_us`/`p99_us`) and `mean_queue_us`
+/// are computed over a bounded sliding window of the most recent
+/// 65 536 completions (the reservoir size), so the metrics sink uses
+/// constant memory regardless of server uptime. Counters (`completed`,
+/// `failed`, `batches`, ...) remain exact lifetime totals.
 #[derive(Debug, Clone)]
 pub struct MetricsSnapshot {
     pub completed: u64,
@@ -202,6 +223,29 @@ mod tests {
         assert!(s.p50_us <= s.p95_us && s.p95_us <= s.p99_us);
         assert_eq!(s.completed, 1000);
         assert!((s.mean_queue_us - 249.75).abs() < 1.0);
+    }
+
+    #[test]
+    fn reservoir_bounds_memory_and_slides() {
+        let m = Metrics::default();
+        // Fill the reservoir with one value, then push a full second
+        // generation: length must stay capped and the percentiles must
+        // reflect the *recent* window, not the frozen first fill.
+        for _ in 0..RESERVOIR {
+            m.record_done(0, 1_000, 10);
+        }
+        for _ in 0..RESERVOIR {
+            m.record_done(0, 5_000, 50);
+        }
+        let inner = m.inner.lock().unwrap();
+        assert_eq!(inner.latencies_us.len(), RESERVOIR);
+        assert_eq!(inner.queue_waits_us.len(), RESERVOIR);
+        drop(inner);
+        let s = m.snapshot();
+        assert_eq!(s.completed, 2 * RESERVOIR as u64);
+        assert_eq!(s.p50_us, 5_000, "window should have slid");
+        assert_eq!(s.p99_us, 5_000);
+        assert!((s.mean_queue_us - 50.0).abs() < 1e-9);
     }
 
     #[test]

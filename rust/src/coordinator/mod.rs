@@ -21,6 +21,19 @@
 //! request's seed, where only a head-of-batch request is reproducible —
 //! the pre-refactor contract.
 //!
+//! # Streaming generation
+//!
+//! Backends exposing the incremental-decode capability
+//! ([`InferenceBackend::generate_token_len`]) also serve token streams:
+//! [`Client::generate`] submits one token of a session per call, and the
+//! router pins each session to one shard (**sticky sessions**) because
+//! the per-session spike-state cache lives inside that shard's backend.
+//! The binding is made by the usual least-loaded pick on a session's
+//! first token and held until [`Client::close_session`] or shard death —
+//! a dead shard's sessions are evicted (their cached state died with the
+//! executor), and in-flight tokens of evicted sessions fail rather than
+//! silently restarting the stream elsewhere.
+//!
 //! The build is offline (no tokio): the coordinator is a router thread
 //! over a bounded `std::sync::mpsc` channel (the backpressure boundary)
 //! feeding shallow per-shard batch channels, with per-request response
@@ -28,9 +41,9 @@
 
 pub mod metrics;
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender,
-                      TrySendError};
+use std::sync::mpsc::{self, Receiver, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -48,7 +61,35 @@ pub struct Request {
     pub respond: mpsc::Sender<Response>,
 }
 
-/// Per-request result: the sample's `[t_max, classes]` logits.
+/// One token of a streaming-generation session.
+pub struct GenRequest {
+    /// Caller-chosen session id; all tokens of one stream share it.
+    pub session: u64,
+    /// Flattened `[token_len]` feature row for the next position.
+    pub token: Vec<f32>,
+    /// Stochastic seed; only the session's *first* token's seed primes
+    /// the stream (the decode analogue of one seed per request).
+    pub seed: u32,
+    pub enqueued: Instant,
+    pub respond: mpsc::Sender<Response>,
+}
+
+/// Everything a client can submit over the front queue.
+enum Work {
+    Infer(Request),
+    Generate(GenRequest),
+    Close { session: u64 },
+}
+
+/// Messages a shard executor consumes.
+enum ShardMsg {
+    Batch(Vec<Request>),
+    Generate(GenRequest),
+    Close(u64),
+}
+
+/// Per-request result: the sample's `[t_max, classes]` logits (for
+/// `generate`, the newest token position's logits).
 #[derive(Debug, Clone)]
 pub struct Response {
     pub logits_t: Vec<f32>,
@@ -97,8 +138,11 @@ impl Pending {
 /// Handle for submitting requests to a running server.
 #[derive(Clone)]
 pub struct Client {
-    tx: SyncSender<Request>,
+    tx: SyncSender<Work>,
     sample_len: usize,
+    /// Per-token feature length of the generate path; `None` when the
+    /// shards cannot decode incrementally.
+    token_len: Option<usize>,
     metrics: Arc<Metrics>,
 }
 
@@ -110,7 +154,9 @@ impl Client {
                         self.sample_len);
         let (tx, rx) = mpsc::channel();
         self.tx
-            .send(Request { x, seed, enqueued: Instant::now(), respond: tx })
+            .send(Work::Infer(Request {
+                x, seed, enqueued: Instant::now(), respond: tx,
+            }))
             .map_err(|_| anyhow::anyhow!("server stopped"))?;
         Ok(Pending(rx))
     }
@@ -121,9 +167,9 @@ impl Client {
                      -> Result<Option<Pending>> {
         anyhow::ensure!(x.len() == self.sample_len, "bad input length");
         let (tx, rx) = mpsc::channel();
-        match self.tx.try_send(Request {
+        match self.tx.try_send(Work::Infer(Request {
             x, seed, enqueued: Instant::now(), respond: tx,
-        }) {
+        })) {
             Ok(()) => Ok(Some(Pending(rx))),
             Err(TrySendError::Full(_)) => {
                 self.metrics.record_rejected();
@@ -138,6 +184,43 @@ impl Client {
     /// Convenience: submit and wait.
     pub fn infer_blocking(&self, x: Vec<f32>, seed: u32) -> Result<Response> {
         self.infer(x, seed)?.wait()
+    }
+
+    /// Per-token feature length of the generate path, if the shards
+    /// support incremental decode.
+    pub fn token_len(&self) -> Option<usize> {
+        self.token_len
+    }
+
+    /// Submit the next token of generation session `session` (blocks on
+    /// a full queue). The session is pinned to one shard on its first
+    /// token; its response carries the `[t_max, classes]` logits for the
+    /// newest position. Fails immediately when the shards cannot decode
+    /// incrementally.
+    pub fn generate(&self, session: u64, token: Vec<f32>, seed: u32)
+                    -> Result<Pending> {
+        let want = self.token_len.ok_or_else(|| {
+            anyhow::anyhow!("backend does not support incremental \
+                             generation")
+        })?;
+        anyhow::ensure!(token.len() == want,
+                        "bad token length {} != {want}", token.len());
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Work::Generate(GenRequest {
+                session, token, seed, enqueued: Instant::now(),
+                respond: tx,
+            }))
+            .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        Ok(Pending(rx))
+    }
+
+    /// End generation session `session`: unpin it from its shard and
+    /// drop the cached decode state there. A no-op for unknown sessions.
+    pub fn close_session(&self, session: u64) -> Result<()> {
+        self.tx
+            .send(Work::Close { session })
+            .map_err(|_| anyhow::anyhow!("server stopped"))
     }
 }
 
@@ -160,24 +243,30 @@ impl Server {
     /// Spawn the coordinator over several backend shards (e.g. multiple
     /// [`crate::model::NativeBackend`] replicas today, PJRT devices
     /// later): gathered batches fan out least-loaded (round-robin on
-    /// ties) across per-shard queues + executor threads. All shards must
-    /// share the executable shape (batch, T, classes, sample length).
+    /// ties) across per-shard queues + executor threads; generation
+    /// sessions pin to one shard (their spike-state cache lives there).
+    /// All shards must share the executable shape (batch, T, classes,
+    /// sample length, token length).
     pub fn start_sharded<B: InferenceBackend>(backends: Vec<B>,
                                               cfg: RunConfig) -> Server {
         assert!(!backends.is_empty(), "need at least one shard backend");
         let exe_batch = backends[0].batch();
         let sample_len = backends[0].x_len_per_sample();
         let (t_max, classes) = (backends[0].t_max(), backends[0].classes());
+        let token_len = backends[0].generate_token_len();
         for (i, b) in backends.iter().enumerate() {
             assert!(b.batch() == exe_batch && b.t_max() == t_max
                         && b.classes() == classes
                         && b.x_len_per_sample() == sample_len,
                     "shard {i} does not match shard 0's executable shape");
+            assert!(b.generate_token_len() == token_len,
+                    "shard {i} does not match shard 0's generate \
+                     capability");
         }
         let n_shards = backends.len();
         let metrics = Arc::new(Metrics::new(n_shards));
-        let (tx, rx) = mpsc::sync_channel::<Request>(cfg.queue_depth);
-        // Batches a shard holds beyond the one it is executing: shallow,
+        let (tx, rx) = mpsc::sync_channel::<Work>(cfg.queue_depth);
+        // Messages a shard holds beyond the one it is executing: shallow,
         // so a busy shard pushes backpressure into the front queue
         // instead of hoarding requests another shard could serve.
         let inflight: Arc<Vec<AtomicUsize>> =
@@ -185,7 +274,7 @@ impl Server {
         let mut shard_txs = Vec::with_capacity(n_shards);
         let mut shards = Vec::with_capacity(n_shards);
         for (si, backend) in backends.into_iter().enumerate() {
-            let (stx, srx) = mpsc::sync_channel::<Vec<Request>>(1);
+            let (stx, srx) = mpsc::sync_channel::<ShardMsg>(1);
             let m = Arc::clone(&metrics);
             let cfg_s = cfg.clone();
             let inflight_s = Arc::clone(&inflight);
@@ -209,8 +298,12 @@ impl Server {
                             exe_batch)
             })
             .expect("spawn router");
-        let client =
-            Client { tx, sample_len, metrics: Arc::clone(&metrics) };
+        let client = Client {
+            tx,
+            sample_len,
+            token_len,
+            metrics: Arc::clone(&metrics),
+        };
         Server {
             metrics,
             client: Some(client),
@@ -247,25 +340,40 @@ impl Drop for Server {
     }
 }
 
-/// Collect up to `max_batch` requests: block for the first, then poll
-/// until the window closes or the batch fills.
-fn gather(rx: &Receiver<Request>, max_batch: usize, window: Duration)
-          -> Option<Vec<Request>> {
-    let first = rx.recv().ok()?;
+/// Collect up to `max_batch` inference requests behind `first`.
+///
+/// The batching window opens at *admission* (`first.enqueued`), not at
+/// the moment the router got around to calling `gather`: a request that
+/// already sat out its window in the queue closes the batch immediately
+/// instead of paying the window a second time, and a late call never
+/// stretches a freshly-admitted request's gather budget (the
+/// batch-window latency-floor fix). Non-batch work (generate/close)
+/// interrupts the window and is handed back for the router to process
+/// next.
+fn gather(first: Request, rx: &Receiver<Work>, max_batch: usize,
+          window: Duration) -> (Vec<Request>, Option<Work>) {
+    let deadline = first.enqueued + window;
     let mut batch = vec![first];
-    let deadline = Instant::now() + window;
+    // Zero-latency drain of whatever already queued behind the first.
+    while batch.len() < max_batch {
+        match rx.try_recv() {
+            Ok(Work::Infer(req)) => batch.push(req),
+            Ok(other) => return (batch, Some(other)),
+            Err(_) => break,
+        }
+    }
     while batch.len() < max_batch {
         let now = Instant::now();
         if now >= deadline {
             break;
         }
         match rx.recv_timeout(deadline - now) {
-            Ok(req) => batch.push(req),
-            Err(RecvTimeoutError::Timeout) => break,
-            Err(RecvTimeoutError::Disconnected) => break,
+            Ok(Work::Infer(req)) => batch.push(req),
+            Ok(other) => return (batch, Some(other)),
+            Err(_) => break, // window closed or senders gone
         }
     }
-    Some(batch)
+    (batch, None)
 }
 
 /// Pick the least-loaded shard; ties resolve round-robin starting at
@@ -290,43 +398,132 @@ fn pick_shard(inflight: &[AtomicUsize], rr: &mut usize) -> usize {
 /// [`pick_shard`] only returns it once every shard is dead.
 const DEAD_SHARD_LOAD: usize = usize::MAX / 2;
 
+/// Park a dead shard and evict every generation session pinned to it:
+/// the sessions' cached decode state died with the executor, so their
+/// future tokens must fail loudly instead of silently restarting the
+/// stream on another shard.
+fn mark_shard_dead(shard: usize, inflight: &[AtomicUsize],
+                   sessions: &mut HashMap<u64, usize>) {
+    inflight[shard].store(DEAD_SHARD_LOAD, Ordering::SeqCst);
+    let before = sessions.len();
+    sessions.retain(|_, s| *s != shard);
+    let evicted = before - sessions.len();
+    if evicted > 0 {
+        eprintln!("coordinator: evicted {evicted} generation session(s) \
+                   pinned to dead shard {shard}");
+    }
+}
+
 /// Front half of the datapath: gather dynamic batches off the bounded
-/// request queue and fan them out across the shard queues. A batch
-/// bounced off a dead shard (executor panicked) is re-routed to the
-/// survivors; requests are lost — and counted as failed — only when no
-/// shard is left.
-fn router_loop(cfg: RunConfig, rx: Receiver<Request>,
-               shard_txs: Vec<SyncSender<Vec<Request>>>,
+/// request queue and fan them out across the shard queues, routing
+/// generation tokens to their session's pinned shard. A batch bounced
+/// off a dead shard (executor panicked) is re-routed to the survivors;
+/// requests are lost — and counted as failed — only when no shard is
+/// left. Generation tokens are never re-routed: the session's state is
+/// gone with its shard.
+fn router_loop(cfg: RunConfig, rx: Receiver<Work>,
+               shard_txs: Vec<SyncSender<ShardMsg>>,
                metrics: Arc<Metrics>, inflight: Arc<Vec<AtomicUsize>>,
                exe_batch: usize) {
     let max_batch = cfg.max_batch.min(exe_batch).max(1);
     let window = Duration::from_micros(cfg.batch_window_us);
     let mut rr = 0usize;
-    while let Some(mut batch) = gather(&rx, max_batch, window) {
-        loop {
-            let shard = pick_shard(&inflight, &mut rr);
-            if inflight[shard].load(Ordering::SeqCst) >= DEAD_SHARD_LOAD {
-                // Even the best pick is parked: every shard is dead.
-                // Drop the responders (submitters observe channel
-                // closure) and account the loss.
-                eprintln!("coordinator: all shards gone; dropping {} \
-                           request(s)", batch.len());
-                metrics.record_failed(shard, batch.len() as u64);
-                break;
+    // Sticky session -> shard bindings for the generate path.
+    let mut sessions: HashMap<u64, usize> = HashMap::new();
+    // Work that interrupted a batching window, processed next iteration.
+    let mut stash: Option<Work> = None;
+    loop {
+        let work = match stash.take() {
+            Some(w) => w,
+            None => match rx.recv() {
+                Ok(w) => w,
+                Err(_) => break,
+            },
+        };
+        match work {
+            Work::Infer(first) => {
+                let (gathered, interrupt) =
+                    gather(first, &rx, max_batch, window);
+                stash = interrupt;
+                let mut batch = gathered;
+                loop {
+                    let shard = pick_shard(&inflight, &mut rr);
+                    if inflight[shard].load(Ordering::SeqCst)
+                        >= DEAD_SHARD_LOAD
+                    {
+                        // Even the best pick is parked: every shard is
+                        // dead. Drop the responders (submitters observe
+                        // channel closure) and account the loss.
+                        eprintln!("coordinator: all shards gone; \
+                                   dropping {} request(s)", batch.len());
+                        metrics.record_failed(shard, batch.len() as u64);
+                        break;
+                    }
+                    inflight[shard].fetch_add(1, Ordering::SeqCst);
+                    match shard_txs[shard].send(ShardMsg::Batch(batch)) {
+                        Ok(()) => break,
+                        Err(mpsc::SendError(bounced)) => {
+                            // Shard executor gone (panicked mid-run):
+                            // park it and re-route the returned batch to
+                            // a surviving shard.
+                            eprintln!("coordinator: shard {shard} \
+                                       executor gone; re-routing");
+                            mark_shard_dead(shard, &inflight,
+                                            &mut sessions);
+                            batch = match bounced {
+                                ShardMsg::Batch(b) => b,
+                                _ => unreachable!("sent a batch"),
+                            };
+                        }
+                    }
+                }
             }
-            inflight[shard].fetch_add(1, Ordering::SeqCst);
-            match shard_txs[shard].send(batch) {
-                Ok(()) => break,
-                Err(mpsc::SendError(bounced)) => {
-                    // Shard executor gone (panicked mid-run): park it at
-                    // an unreachable load and re-route the returned
-                    // batch to a surviving shard.
-                    eprintln!("coordinator: shard {shard} executor \
-                               gone; re-routing {} request(s)",
-                              bounced.len());
-                    inflight[shard].store(DEAD_SHARD_LOAD,
-                                          Ordering::SeqCst);
-                    batch = bounced;
+            Work::Generate(g) => {
+                let shard = match sessions.get(&g.session) {
+                    Some(&s) => s,
+                    None => {
+                        let s = pick_shard(&inflight, &mut rr);
+                        if inflight[s].load(Ordering::SeqCst)
+                            >= DEAD_SHARD_LOAD
+                        {
+                            eprintln!("coordinator: all shards gone; \
+                                       dropping generate token");
+                            metrics.record_failed(s, 1);
+                            continue;
+                        }
+                        sessions.insert(g.session, s);
+                        s
+                    }
+                };
+                if inflight[shard].load(Ordering::SeqCst)
+                    >= DEAD_SHARD_LOAD
+                {
+                    // Bound shard died since binding: the session's
+                    // cached state is gone; fail the token and unpin.
+                    sessions.remove(&g.session);
+                    metrics.record_failed(shard, 1);
+                    continue;
+                }
+                inflight[shard].fetch_add(1, Ordering::SeqCst);
+                if shard_txs[shard].send(ShardMsg::Generate(g)).is_err() {
+                    mark_shard_dead(shard, &inflight, &mut sessions);
+                    metrics.record_failed(shard, 1);
+                }
+            }
+            Work::Close { session } => {
+                if let Some(shard) = sessions.remove(&session) {
+                    if inflight[shard].load(Ordering::SeqCst)
+                        < DEAD_SHARD_LOAD
+                    {
+                        inflight[shard].fetch_add(1, Ordering::SeqCst);
+                        if shard_txs[shard]
+                            .send(ShardMsg::Close(session))
+                            .is_err()
+                        {
+                            mark_shard_dead(shard, &inflight,
+                                            &mut sessions);
+                        }
+                    }
                 }
             }
         }
@@ -335,9 +532,10 @@ fn router_loop(cfg: RunConfig, rx: Receiver<Request>,
 }
 
 /// One shard's executor: pad each routed batch to the executable shape,
-/// run it under per-request seeds, slice per-request responses back out.
+/// run it under per-request seeds, slice per-request responses back out;
+/// advance pinned generation sessions one token at a time.
 fn shard_loop<B: InferenceBackend>(shard: usize, backend: B, cfg: RunConfig,
-                                   rx: Receiver<Vec<Request>>,
+                                   rx: Receiver<ShardMsg>,
                                    metrics: Arc<Metrics>,
                                    inflight: Arc<Vec<AtomicUsize>>) {
     let exe_batch = backend.batch();
@@ -347,7 +545,40 @@ fn shard_loop<B: InferenceBackend>(shard: usize, backend: B, cfg: RunConfig,
     // Reused input/seed buffers: no per-batch allocation on the hot path.
     let mut x = vec![0.0f32; exe_batch * sample_len];
     let mut seeds = vec![0u32; exe_batch];
-    while let Ok(batch) = rx.recv() {
+    while let Ok(msg) = rx.recv() {
+        let batch = match msg {
+            ShardMsg::Batch(batch) => batch,
+            ShardMsg::Generate(g) => {
+                let started = Instant::now();
+                let result = backend.generate_step(
+                    g.session, &g.token, g.seed ^ (cfg.seed as u32));
+                inflight[shard].fetch_sub(1, Ordering::SeqCst);
+                match result {
+                    Ok(logits) => {
+                        let queue_us =
+                            (started - g.enqueued).as_micros() as u64;
+                        let e2e_us =
+                            g.enqueued.elapsed().as_micros() as u64;
+                        metrics.record_done(shard, e2e_us, queue_us);
+                        let _ = g.respond.send(Response {
+                            logits_t: logits, t_max, classes, queue_us,
+                            e2e_us,
+                        });
+                    }
+                    Err(e) => {
+                        eprintln!("coordinator: shard {shard} generate \
+                                   failed: {e:#}");
+                        metrics.record_failed(shard, 1);
+                    }
+                }
+                continue;
+            }
+            ShardMsg::Close(session) => {
+                backend.end_generate(session);
+                inflight[shard].fetch_sub(1, Ordering::SeqCst);
+                continue;
+            }
+        };
         metrics.record_batch(shard, batch.len());
         // Assemble the fixed-shape executable input: pad by repeating the
         // last sample + seed (padding lane outputs are discarded).
@@ -407,35 +638,143 @@ mod tests {
                   respond: tx }
     }
 
+    /// Pull the next Work off the queue, expecting an inference request.
+    fn recv_infer(rx: &Receiver<Work>) -> Request {
+        match rx.recv().expect("work queued") {
+            Work::Infer(r) => r,
+            _ => panic!("expected Work::Infer"),
+        }
+    }
+
     #[test]
     fn gather_respects_max_batch() {
-        let (tx, rx) = mpsc::sync_channel::<Request>(16);
+        let (tx, rx) = mpsc::sync_channel::<Work>(16);
         let mut keep = Vec::new();
         for i in 0..5 {
-            tx.send(req(i as f32, &mut keep)).unwrap();
+            tx.send(Work::Infer(req(i as f32, &mut keep))).unwrap();
         }
-        let b1 = gather(&rx, 3, Duration::from_millis(5)).unwrap();
+        let first = recv_infer(&rx);
+        let (b1, stash) =
+            gather(first, &rx, 3, Duration::from_millis(5));
         assert_eq!(b1.len(), 3);
-        let b2 = gather(&rx, 3, Duration::from_millis(5)).unwrap();
+        assert!(stash.is_none());
+        let first = recv_infer(&rx);
+        let (b2, _) = gather(first, &rx, 3, Duration::from_millis(5));
         assert_eq!(b2.len(), 2);
     }
 
     #[test]
     fn gather_window_closes_partial_batch() {
-        let (tx, rx) = mpsc::sync_channel::<Request>(16);
+        let (tx, rx) = mpsc::sync_channel::<Work>(16);
         let mut keep = Vec::new();
-        tx.send(req(1.0, &mut keep)).unwrap();
+        tx.send(Work::Infer(req(1.0, &mut keep))).unwrap();
+        let first = recv_infer(&rx);
         let t0 = Instant::now();
-        let batch = gather(&rx, 8, Duration::from_millis(10)).unwrap();
+        let (batch, _) = gather(first, &rx, 8, Duration::from_millis(10));
         assert_eq!(batch.len(), 1);
         assert!(t0.elapsed() >= Duration::from_millis(9));
     }
 
     #[test]
-    fn gather_none_when_all_senders_gone() {
-        let (tx, rx) = mpsc::sync_channel::<Request>(4);
+    fn gather_window_starts_at_admission_not_at_call() {
+        // Regression (batch-window latency floor): a request that
+        // already waited out its window in the queue must dispatch
+        // immediately — the old code re-armed the window at gather time,
+        // adding a full extra window of latency under a busy router.
+        let (tx, rx) = mpsc::sync_channel::<Work>(16);
+        let mut keep = Vec::new();
+        tx.send(Work::Infer(req(1.0, &mut keep))).unwrap();
+        let first = recv_infer(&rx);
+        std::thread::sleep(Duration::from_millis(20));
+        let t0 = Instant::now();
+        let (batch, _) = gather(first, &rx, 8, Duration::from_millis(15));
+        assert_eq!(batch.len(), 1);
+        assert!(t0.elapsed() < Duration::from_millis(10),
+                "expired window must close instantly, took {:?}",
+                t0.elapsed());
+    }
+
+    #[test]
+    fn gather_does_not_wait_for_slow_producer_past_admission_window() {
+        // A slow producer whose second request lands after the *first
+        // request's* window expired must not be absorbed into the batch:
+        // under the call-anchored deadline the late gather call would
+        // have stretched the window and caught it.
+        let (tx, rx) = mpsc::sync_channel::<Work>(16);
+        let mut keep = Vec::new();
+        tx.send(Work::Infer(req(1.0, &mut keep))).unwrap();
+        let first = recv_infer(&rx);
+        // Router is "busy" past the whole 20ms window...
+        std::thread::sleep(Duration::from_millis(25));
+        let producer = std::thread::spawn(move || {
+            // ...and the slow producer's next request is still 15ms out.
+            std::thread::sleep(Duration::from_millis(15));
+            let (rtx, rrx) = mpsc::channel();
+            let _ = tx.send(Work::Infer(Request {
+                x: vec![2.0], seed: 0, enqueued: Instant::now(),
+                respond: rtx,
+            }));
+            rrx
+        });
+        let (batch, _) = gather(first, &rx, 8, Duration::from_millis(20));
+        assert_eq!(batch.len(), 1,
+                   "expired admission window must not re-open");
+        drop(producer.join().unwrap());
+    }
+
+    #[test]
+    fn gather_drains_queued_requests_within_window() {
+        // Requests already sitting in the queue join the batch with the
+        // admission window still open.
+        let (tx, rx) = mpsc::sync_channel::<Work>(16);
+        let mut keep = Vec::new();
+        tx.send(Work::Infer(req(1.0, &mut keep))).unwrap();
+        tx.send(Work::Infer(req(2.0, &mut keep))).unwrap();
+        tx.send(Work::Infer(req(3.0, &mut keep))).unwrap();
+        let first = recv_infer(&rx);
+        let (batch, stash) =
+            gather(first, &rx, 8, Duration::from_millis(30));
+        assert_eq!(batch.len(), 3);
+        assert!(stash.is_none());
+    }
+
+    #[test]
+    fn gather_hands_back_non_batch_work() {
+        // A generate token in the stream interrupts batching and comes
+        // back as the stash for the router's next iteration.
+        let (tx, rx) = mpsc::sync_channel::<Work>(16);
+        let mut keep = Vec::new();
+        tx.send(Work::Infer(req(1.0, &mut keep))).unwrap();
+        let (gtx, _grx) = mpsc::channel();
+        tx.send(Work::Generate(GenRequest {
+            session: 7, token: vec![0.5], seed: 0,
+            enqueued: Instant::now(), respond: gtx,
+        })).unwrap();
+        tx.send(Work::Infer(req(2.0, &mut keep))).unwrap();
+        let first = recv_infer(&rx);
+        let (batch, stash) =
+            gather(first, &rx, 8, Duration::from_millis(30));
+        assert_eq!(batch.len(), 1);
+        match stash {
+            Some(Work::Generate(g)) => assert_eq!(g.session, 7),
+            _ => panic!("generate token must be handed back"),
+        }
+    }
+
+    #[test]
+    fn gather_returns_partial_batch_when_senders_gone() {
+        let (tx, rx) = mpsc::sync_channel::<Work>(4);
+        let mut keep = Vec::new();
+        tx.send(Work::Infer(req(1.0, &mut keep))).unwrap();
+        let first = recv_infer(&rx);
         drop(tx);
-        assert!(gather(&rx, 4, Duration::from_millis(1)).is_none());
+        let t0 = Instant::now();
+        let (batch, stash) =
+            gather(first, &rx, 4, Duration::from_millis(250));
+        assert_eq!(batch.len(), 1);
+        assert!(stash.is_none());
+        assert!(t0.elapsed() < Duration::from_millis(200),
+                "disconnect must close the window early");
     }
 
     #[test]
@@ -454,6 +793,20 @@ mod tests {
         assert_eq!(pick_shard(&inflight, &mut rr), 0);
         inflight[0].store(3, Ordering::SeqCst);
         assert_eq!(pick_shard(&inflight, &mut rr), 2);
+    }
+
+    #[test]
+    fn mark_shard_dead_evicts_only_its_sessions() {
+        let inflight: Vec<AtomicUsize> =
+            (0..2).map(|_| AtomicUsize::new(0)).collect();
+        let mut sessions = HashMap::new();
+        sessions.insert(1u64, 0usize);
+        sessions.insert(2u64, 1usize);
+        sessions.insert(3u64, 0usize);
+        mark_shard_dead(0, &inflight, &mut sessions);
+        assert_eq!(inflight[0].load(Ordering::SeqCst), DEAD_SHARD_LOAD);
+        assert_eq!(sessions.len(), 1);
+        assert_eq!(sessions.get(&2), Some(&1));
     }
 
     #[test]

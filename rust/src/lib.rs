@@ -11,11 +11,17 @@
 //!   spike tensors with measured per-layer energy accounting. Lane-batched
 //!   (`forward_batch` advances a whole batch in lock-step per weight
 //!   traversal, bit-identical per lane to the serial path) and chunked
-//!   across threads by the default serving backend.
+//!   across threads by the default serving backend. `model::decode`
+//!   adds streaming autoregressive decode for causal models: per-session
+//!   `DecodeState` caching LIF banks, packed K/V spike volumes and
+//!   RNG/LFSR cursors, with `decode_step` bit-identical to the one-shot
+//!   forward after the full window.
 //! * [`backend`]      — the `InferenceBackend` seam between executors
 //!   (native simulator, PJRT runtime, test mocks) and the serving /
-//!   evaluation stack, including the per-lane-seed `run_seeded` contract
-//!   and the shared NaN-tolerant logit argmax.
+//!   evaluation stack, including the per-lane-seed `run_seeded` contract,
+//!   the incremental-generation capability (`generate_token_len` /
+//!   `generate_step` / `end_generate`) and the shared NaN-tolerant logit
+//!   argmax.
 //! * [`runtime`]      — (feature `pjrt`) PJRT CPU client that loads the
 //!   AOT-compiled HLO artifacts produced by `python/compile/aot.py` and
 //!   executes the spiking transformer forward pass. Off by default; the
@@ -43,7 +49,10 @@
 //!   batcher/router, generic over any `InferenceBackend` and sharded
 //!   across backend replicas (`Server::start_sharded`: per-shard queues +
 //!   executors, least-loaded routing, merged per-shard metrics; Fig 6
-//!   dataflow scheduling).
+//!   dataflow scheduling). Streaming generation rides the same queue:
+//!   `Client::generate` pins each session to one shard (sticky routing —
+//!   the spike-state cache lives there) with eviction on close or shard
+//!   death.
 //! * [`workloads`]    — synthetic image + ICL MIMO workload generators.
 //! * [`config`]       — model-dimension presets (paper scale, native
 //!   simulator scale) and the Table-II hardware configuration.

@@ -205,6 +205,9 @@ fn cmd_serve(artifacts: &str, args: &Args) -> Result<()> {
 /// With `--shards S > 1` the coordinator fans batches out across S
 /// backend replicas of the one programmed model (clones share crossbars
 /// and the energy accumulator — several execution engines on one chip).
+/// Ends with a streaming-decode demo: one sample served token-by-token
+/// through a pinned generation session, converging on the one-shot
+/// batch result.
 fn serve_native(args: &Args, requests: usize, max_batch: usize)
                 -> Result<()> {
     let shards: usize = args.get("shards", "1").parse()?;
@@ -257,6 +260,32 @@ fn serve_native(args: &Args, requests: usize, max_batch: usize)
     println!("accuracy: {correct}/{requests} (untrained weights: \
               chance-level is expected)");
     println!("BER: {:.4}", ber(&preds, &truths, nt));
+    // Streaming decode: the same kind of sample, served token-by-token
+    // through a generation session. The session pins to one shard (its
+    // spike-state cache lives there) and the final token's logits are
+    // bit-identical to the one-shot batch path under the same seed.
+    if let Some(token_len) = client.token_len() {
+        let (x, _) = gen.sample(&mut rng);
+        let session = 1u64;
+        let seed = requests as u32;
+        let t0 = std::time::Instant::now();
+        let mut last = None;
+        for tok in x.chunks(token_len) {
+            last = Some(client.generate(session, tok.to_vec(), seed)?
+                            .wait()?);
+        }
+        let dt = t0.elapsed();
+        client.close_session(session)?;
+        let streamed = last.expect("window streamed").predict();
+        let oneshot = client.infer(x, seed)?.wait()?.predict();
+        println!(
+            "streamed {} tokens in {:.1} ms ({:.1} tok/s); final \
+             prediction {streamed} == one-shot {oneshot}",
+            dims.n_tokens,
+            dt.as_secs_f64() * 1e3,
+            dims.n_tokens as f64 / dt.as_secs_f64()
+        );
+    }
     println!("{}", server.metrics.snapshot());
     println!("\nmeasured energy per layer:\n{}",
              energy_handle.energy().report());

@@ -18,13 +18,14 @@
 //! randomness follows its *own* request seed — position-independent, so
 //! a request's logits never depend on its batch co-tenants.
 
+use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
 use anyhow::{ensure, Result};
 
 use crate::backend::InferenceBackend;
 use crate::energy::ModelEnergy;
-use crate::model::XpikeModel;
+use crate::model::{DecodeState, XpikeModel};
 
 /// Per-lane seed derivation for single-seed runs: lane 0 keeps the
 /// execution seed.
@@ -38,6 +39,9 @@ pub struct NativeBackend {
     model: Arc<XpikeModel>,
     batch: usize,
     energy: Arc<Mutex<ModelEnergy>>,
+    /// Live incremental-decode sessions (generate path); clones share
+    /// the map, so any replica of a shard can continue a session.
+    sessions: Arc<Mutex<HashMap<u64, DecodeState>>>,
 }
 
 impl NativeBackend {
@@ -48,7 +52,13 @@ impl NativeBackend {
             model: Arc::new(model),
             batch,
             energy: Arc::new(Mutex::new(ModelEnergy::default())),
+            sessions: Arc::new(Mutex::new(HashMap::new())),
         }
+    }
+
+    /// Live decode sessions held by this backend.
+    pub fn open_sessions(&self) -> usize {
+        self.sessions.lock().unwrap().len()
     }
 
     pub fn model(&self) -> &XpikeModel {
@@ -151,6 +161,43 @@ impl InferenceBackend for NativeBackend {
     fn nt(&self) -> usize {
         self.model.dims.mimo_nt()
     }
+
+    fn generate_token_len(&self) -> Option<usize> {
+        self.model.causal.then_some(self.model.dims.in_feat)
+    }
+
+    /// One incremental decode step for `session`. The first token of a
+    /// session primes its [`DecodeState`] seeded by *that* call's `seed`
+    /// (later seeds are ignored — one stochastic stream per session, the
+    /// decode analogue of one seed per request). When the causal window
+    /// completes, the session's measured energy folds into the rolling
+    /// accumulator (one inference) and the state auto-evicts.
+    fn generate_step(&self, session: u64, token: &[f32], seed: u32)
+                     -> Result<Vec<f32>> {
+        ensure!(self.model.causal,
+                "incremental generation needs a causal model");
+        let mut sessions = self.sessions.lock().unwrap();
+        let state = match sessions.entry(session) {
+            std::collections::hash_map::Entry::Occupied(e) => e.into_mut(),
+            std::collections::hash_map::Entry::Vacant(e) => {
+                e.insert(self.model.begin_decode(1, &[seed as u64])?)
+            }
+        };
+        let logits = self.model.decode_step(state, token)?;
+        if state.is_complete() {
+            let energy = state.energy();
+            sessions.remove(&session);
+            self.energy.lock().unwrap().add(&energy);
+        }
+        Ok(logits)
+    }
+
+    /// Evict `session`'s decode state. A window abandoned mid-stream is
+    /// discarded without folding energy: an incomplete generation is not
+    /// an inference.
+    fn end_generate(&self, session: u64) {
+        self.sessions.lock().unwrap().remove(&session);
+    }
 }
 
 #[cfg(test)]
@@ -244,5 +291,53 @@ mod tests {
     fn rejects_bad_batch_length() {
         let b = backend(2);
         assert!(b.run(&[0.5; 7], 0).is_err());
+    }
+
+    #[test]
+    fn generate_path_matches_forward_and_folds_energy() {
+        let dims = crate::config::gpt_native(1, 64, 2, 2, 2, 2);
+        let hw = HardwareConfig::default();
+        let b = NativeBackend::new(XpikeModel::new(&dims, &hw, 5), 1);
+        assert_eq!(b.generate_token_len(), Some(dims.in_feat));
+        let x = inputs(&b, 1, 8);
+        let (want, want_e) = b.model().forward(&x, 31).unwrap();
+        let mut last = Vec::new();
+        for m in 0..dims.n_tokens {
+            last = b
+                .generate_step(
+                    9, &x[m * dims.in_feat..(m + 1) * dims.in_feat], 31)
+                .unwrap();
+            if m + 1 < dims.n_tokens {
+                assert_eq!(b.open_sessions(), 1);
+            }
+        }
+        assert_eq!(last, want, "streamed logits match one-shot forward");
+        assert_eq!(b.open_sessions(), 0, "completed session auto-evicts");
+        let e = b.energy();
+        assert_eq!(e.inferences, 1);
+        assert_eq!(e.total_pj(), want_e.total_pj(),
+                   "completed generation folds forward-identical energy");
+    }
+
+    #[test]
+    fn abandoned_sessions_evict_without_energy() {
+        let dims = crate::config::gpt_native(1, 64, 2, 2, 2, 2);
+        let hw = HardwareConfig::default();
+        let b = NativeBackend::new(XpikeModel::new(&dims, &hw, 5), 1);
+        b.generate_step(3, &vec![0.4; dims.in_feat], 7).unwrap();
+        assert_eq!(b.open_sessions(), 1);
+        b.end_generate(3);
+        assert_eq!(b.open_sessions(), 0);
+        assert_eq!(b.energy().inferences, 0,
+                   "partial windows are not inferences");
+        // Ending an unknown session is a harmless no-op.
+        b.end_generate(99);
+    }
+
+    #[test]
+    fn non_causal_backends_have_no_generate_capability() {
+        let b = backend(1); // ViT
+        assert_eq!(b.generate_token_len(), None);
+        assert!(b.generate_step(1, &[0.5; 48], 0).is_err());
     }
 }

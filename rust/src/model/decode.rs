@@ -1,0 +1,663 @@
+//! Incremental autoregressive decode with spike-state caching.
+//!
+//! [`XpikeModel::forward`] recomputes every token of the causal window on
+//! every call, so serving n tokens of a generation costs O(n) full
+//! forwards. This module adds the streaming path: [`DecodeState`] caches,
+//! per session lane, everything a new token needs from the past —
+//!
+//! * **RNG cursors**: every stochastic draw in the forward pass (rate
+//!   encoders, crossbar read noise) consumes a *shape-dependent,
+//!   content-independent* number of SplitMix64 draws, so the per-(stage,
+//!   timestep, token) [`Rng`] states are replayed once at
+//!   [`XpikeModel::begin_decode`] and snapshotted. A decode step clones
+//!   the snapshot for its token position and draws exactly the values the
+//!   full forward would have drawn there.
+//! * **Packed K/V (and Q) spike volumes** per (block, head): one packed
+//!   row appended per new token under the existing causal word masks —
+//!   score row `m` only reads keys `j <= m`, and attention output row `m`
+//!   only reads values `j <= m`, so rows emitted for earlier tokens are
+//!   final and never recomputed.
+//! * **LFSR draw planes** per (block, head): the SSA tile's PRN stream is
+//!   positionally fixed (every (timestep, i, j) score draw and (timestep,
+//!   i, c) output draw happens whether or not the mask keeps the bit), so
+//!   the whole stream is replayed once into per-position planes and
+//!   indexed by token thereafter.
+//! * **LIF membrane banks** per stage: forward integrates each token's
+//!   membrane privately across timesteps, so the banks are reset at the
+//!   start of each step and reused allocation-free.
+//!
+//! The payoff: [`XpikeModel::decode_step`] emits token `m + 1` for the
+//! cost of one token-step (a handful of MVMs plus an O(m) attention row)
+//! instead of a whole-sequence forward, and after all `n_tokens` steps
+//! its logits and folded [`ModelEnergy`] are **bit-identical** to the
+//! one-shot [`XpikeModel::forward`] — the equivalence-oracle tests below
+//! enforce it, the same pattern that proved lane batching (PR 5) and bit
+//! packing (PR 2) safe.
+
+use anyhow::{ensure, Result};
+
+use crate::config::ModelDims;
+use crate::energy::constants::{E_LIF_UPDATE, E_RESIDUAL_EL};
+use crate::energy::{AimcEnergy, LayerEnergy, ModelEnergy, SsaEnergy};
+use crate::model::forward::{AimcCounts, XpikeModel};
+use crate::snn::{rate_encode_row, LifArray};
+use crate::spike::{and_popcount, SpikeVector, SpikeVolume};
+use crate::ssa::{draw_uniform, LfsrArray, SsaStats};
+use crate::util::Rng;
+
+/// PRN bytes one `draw_uniform` with this range consumes (the tile's
+/// fast path uses one byte for power-of-two ranges up to 256).
+fn draw_bytes(i_max: usize) -> u64 {
+    if (i_max as u32).is_power_of_two() && i_max <= 256 { 1 } else { 2 }
+}
+
+/// Cached attention state for one (lane, block, head): the packed Q/K/V
+/// spike volumes (rows `0..tokens` filled) plus the head's replayed LFSR
+/// draw planes.
+struct HeadCache {
+    /// Q rows are only re-read for the triangular `counter_incs`
+    /// attribution (the tile counts every (i, j) pair pre-mask).
+    q: SpikeVolume,
+    k: SpikeVolume,
+    v: SpikeVolume,
+    /// `score_draws[t][i * n + j]`: the draw the tile spends on score
+    /// (i, j) of timestep window `t`.
+    score_draws: Vec<Vec<u32>>,
+    /// `out_draws[t][i * d_k + c]`: the draw spent on output (i, c) of
+    /// timestep window `t`.
+    out_draws: Vec<Vec<u32>>,
+}
+
+/// One encoder block's per-lane decode state.
+struct BlockState {
+    heads: Vec<HeadCache>,
+    /// RNG snapshot at the start of each (t, token) Q/K/V segment
+    /// (Wq, then Wk, then Wv draw serially within it).
+    snap_qkv: Vec<Vec<Rng>>,
+    /// RNG snapshot at the start of each (t, token) Wo/W1/W2 segment.
+    snap_ffn: Vec<Vec<Rng>>,
+    /// LIF banks for Wq/Wk/Wv, reset per step (membranes are per-token).
+    qkv_lifs: Vec<LifArray>,
+    wo_lif: LifArray,
+    w1_lif: LifArray,
+    w2_lif: LifArray,
+    counts: AimcCounts,
+    stats: SsaStats,
+}
+
+/// One session lane: RNG snapshot tables, per-block caches, cumulative
+/// event counters.
+struct LaneState {
+    snap_embed: Vec<Vec<Rng>>,
+    snap_head: Vec<Rng>,
+    embed_lif: LifArray,
+    embed_counts: AimcCounts,
+    /// Head readout counters for the *latest* step only: forward reads
+    /// the head exactly once (at the final token row), so intermediate
+    /// readouts replace rather than accumulate.
+    head_counts: AimcCounts,
+    blocks: Vec<BlockState>,
+}
+
+/// Per-session spike-state cache for incremental autoregressive decode.
+///
+/// Created by [`XpikeModel::begin_decode`], advanced one token at a time
+/// by [`XpikeModel::decode_step`], complete after `n_tokens` steps. The
+/// state is self-contained (owns a copy of the model dims) but only
+/// valid against the model that primed it.
+pub struct DecodeState {
+    dims: ModelDims,
+    lanes: Vec<LaneState>,
+    tokens: usize,
+}
+
+impl DecodeState {
+    /// Tokens decoded so far.
+    pub fn tokens(&self) -> usize {
+        self.tokens
+    }
+
+    /// Session lanes advanced in lock-step.
+    pub fn lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Whether the full causal window has been decoded.
+    pub fn is_complete(&self) -> bool {
+        self.tokens == self.dims.n_tokens
+    }
+
+    /// Measured per-layer energy of the work done so far, folded exactly
+    /// the way [`XpikeModel::forward_batch`] folds lanes. After the final
+    /// token this is bit-identical to the one-shot forward's breakdown
+    /// (the head readout counts only the latest step, matching forward's
+    /// single final-row readout).
+    pub fn energy(&self) -> ModelEnergy {
+        let d = &self.dims;
+        let (t_max, n, dim) = (d.t_steps, d.n_tokens, d.dim);
+        let (heads, hidden) = (d.heads, d.hidden());
+        let mut energy = ModelEnergy::default();
+        for lane in &self.lanes {
+            let mut layers = Vec::with_capacity(d.depth + 2);
+            layers.push(LayerEnergy {
+                name: "embed".into(),
+                aimc: AimcEnergy::from_counts(lane.embed_counts.conversions,
+                                              lane.embed_counts.wl_pulses),
+                ssa: SsaEnergy::default(),
+                lif_pj: (t_max * self.tokens * dim) as f64 * E_LIF_UPDATE,
+                residual_pj: 0.0,
+            });
+            for (b, blk) in lane.blocks.iter().enumerate() {
+                layers.push(LayerEnergy {
+                    name: format!("blk{b}"),
+                    aimc: AimcEnergy::from_counts(blk.counts.conversions,
+                                                  blk.counts.wl_pulses),
+                    ssa: SsaEnergy::from_stats(&blk.stats,
+                                               (heads * n * n) as u64),
+                    lif_pj: (t_max * self.tokens * (5 * dim + hidden))
+                        as f64 * E_LIF_UPDATE,
+                    residual_pj: (2 * t_max * self.tokens * dim) as f64
+                        * E_RESIDUAL_EL,
+                });
+            }
+            layers.push(LayerEnergy {
+                name: "head".into(),
+                aimc: AimcEnergy::from_counts(lane.head_counts.conversions,
+                                              lane.head_counts.wl_pulses),
+                ssa: SsaEnergy::default(),
+                lif_pj: 0.0,
+                residual_pj: 0.0,
+            });
+            energy.add(&ModelEnergy { layers, inferences: 1 });
+        }
+        energy
+    }
+}
+
+impl XpikeModel {
+    /// Prime a decode session: replay every RNG/LFSR schedule once and
+    /// allocate the per-lane spike caches. `seeds[lane]` drives the
+    /// lane's stochastic stream exactly as in
+    /// [`Self::forward_batch`]. Causal (decoder-only) models only.
+    pub fn begin_decode(&self, lanes: usize, seeds: &[u64])
+                        -> Result<DecodeState> {
+        ensure!(self.causal,
+                "incremental decode needs a causal (GPT) model");
+        ensure!(lanes > 0, "lanes must be positive");
+        ensure!(seeds.len() == lanes, "got {} seeds for {lanes} lanes",
+                seeds.len());
+        let d = &self.dims;
+        let (n, dim, t_max) = (d.n_tokens, d.dim, d.t_steps);
+        let (heads, dh, hidden) = (d.heads, d.d_head(), d.hidden());
+        ensure!(dim % heads == 0, "dim {dim} not divisible by {heads} heads");
+        let embed_conv =
+            self.stage("embed").matrix.conversions_per_mvm();
+        let head_conv = self.stage("head").matrix.conversions_per_mvm();
+        let lane_states = seeds
+            .iter()
+            .map(|&seed| {
+                let mut rng = Rng::seed_from_u64(seed);
+                // Embed segment: in_feat rate-encoder uniforms + one read
+                // noise normal per ADC conversion, per (t, token).
+                let mut snap_embed = Vec::with_capacity(t_max);
+                for _t in 0..t_max {
+                    let mut row = Vec::with_capacity(n);
+                    for _tok in 0..n {
+                        row.push(rng.clone());
+                        for _ in 0..d.in_feat {
+                            rng.uniform_f32();
+                        }
+                        for _ in 0..embed_conv {
+                            rng.normal();
+                        }
+                    }
+                    snap_embed.push(row);
+                }
+                let blocks = (0..d.depth)
+                    .map(|b| {
+                        self.prime_block(&mut rng, b, seed, n, dh, t_max,
+                                         heads, hidden)
+                    })
+                    .collect();
+                // Head segment: one readout MVM per timestep (causal
+                // models read only the final token row).
+                let mut snap_head = Vec::with_capacity(t_max);
+                for _t in 0..t_max {
+                    snap_head.push(rng.clone());
+                    for _ in 0..head_conv {
+                        rng.normal();
+                    }
+                }
+                LaneState {
+                    snap_embed,
+                    snap_head,
+                    embed_lif: LifArray::new(dim),
+                    embed_counts: AimcCounts::default(),
+                    head_counts: AimcCounts::default(),
+                    blocks,
+                }
+            })
+            .collect();
+        Ok(DecodeState { dims: d.clone(), lanes: lane_states, tokens: 0 })
+    }
+
+    /// Replay one block's RNG segments and LFSR draw planes for a lane.
+    #[allow(clippy::too_many_arguments)]
+    fn prime_block(&self, rng: &mut Rng, b: usize, seed: u64, n: usize,
+                   dh: usize, t_max: usize, heads: usize, hidden: usize)
+                   -> BlockState {
+        let d = &self.dims;
+        let qkv_conv: u64 = ["wq", "wk", "wv"]
+            .iter()
+            .map(|w| {
+                self.stage(&format!("blk{b}.{w}"))
+                    .matrix.conversions_per_mvm()
+            })
+            .sum();
+        let mut snap_qkv = Vec::with_capacity(t_max);
+        for _t in 0..t_max {
+            let mut row = Vec::with_capacity(n);
+            for _tok in 0..n {
+                row.push(rng.clone());
+                for _ in 0..qkv_conv {
+                    rng.normal();
+                }
+            }
+            snap_qkv.push(row);
+        }
+        let ffn_conv: u64 = ["wo", "w1", "w2"]
+            .iter()
+            .map(|w| {
+                self.stage(&format!("blk{b}.{w}"))
+                    .matrix.conversions_per_mvm()
+            })
+            .sum();
+        let mut snap_ffn = Vec::with_capacity(t_max);
+        for _t in 0..t_max {
+            let mut row = Vec::with_capacity(n);
+            for _tok in 0..n {
+                row.push(rng.clone());
+                for _ in 0..ffn_conv {
+                    rng.normal();
+                }
+            }
+            snap_ffn.push(row);
+        }
+        // Replay each head tile's LFSR stream into positional draw
+        // planes, in the exact interleave of `SsaTile::run`: iteration t
+        // spends the output draws of window t-1 (column-major) before the
+        // score draws of window t (row-major).
+        let engine_seed = (seed as u32) ^ (0x51CA_D0 + b as u32);
+        let head_caches = (0..heads)
+            .map(|h| {
+                let mut lfsr = LfsrArray::new(engine_seed ^ (h as u32 + 1));
+                let mut sink = SsaStats::default();
+                let mut score_draws = vec![vec![0u32; n * n]; t_max];
+                let mut out_draws = vec![vec![0u32; n * dh]; t_max];
+                for t in 0..=t_max {
+                    if t >= 1 {
+                        for c in 0..dh {
+                            for i in 0..n {
+                                out_draws[t - 1][i * dh + c] = draw_uniform(
+                                    &mut lfsr, n as u32, &mut sink);
+                            }
+                        }
+                    }
+                    if t < t_max {
+                        for i in 0..n {
+                            for j in 0..n {
+                                score_draws[t][i * n + j] = draw_uniform(
+                                    &mut lfsr, dh as u32, &mut sink);
+                            }
+                        }
+                    }
+                }
+                HeadCache {
+                    q: SpikeVolume::zeros(t_max, n, dh),
+                    k: SpikeVolume::zeros(t_max, n, dh),
+                    v: SpikeVolume::zeros(t_max, n, dh),
+                    score_draws,
+                    out_draws,
+                }
+            })
+            .collect();
+        BlockState {
+            heads: head_caches,
+            snap_qkv,
+            snap_ffn,
+            qkv_lifs: (0..3).map(|_| LifArray::new(d.dim)).collect(),
+            wo_lif: LifArray::new(d.dim),
+            w1_lif: LifArray::new(hidden),
+            w2_lif: LifArray::new(d.dim),
+            counts: AimcCounts::default(),
+            stats: SsaStats::default(),
+        }
+    }
+
+    /// Decode the next token for every lane.
+    ///
+    /// `xs` is the lane-major concatenation of one `[in_feat]` feature
+    /// row per lane (token position `state.tokens()`). Returns lane-major
+    /// `[lanes, t_max, classes]` logits for the *newest* token row — on
+    /// the final step these are bit-identical to the one-shot
+    /// [`Self::forward_batch`] logits for the full sample, and
+    /// [`DecodeState::energy`] folds to the identical breakdown.
+    pub fn decode_step(&self, state: &mut DecodeState, xs: &[f32])
+                       -> Result<Vec<f32>> {
+        let d = &self.dims;
+        let (n, dim, t_max) = (d.n_tokens, d.dim, d.t_steps);
+        let (heads, dh, classes) = (d.heads, d.d_head(), d.classes);
+        ensure!(state.dims.name == d.name && state.dims.t_steps == t_max,
+                "decode state primed for {}, model is {}",
+                state.dims.name, d.name);
+        ensure!(state.tokens < n,
+                "decode window exhausted: {n} of {n} tokens emitted");
+        let lanes = state.lanes.len();
+        ensure!(xs.len() == lanes * d.in_feat,
+                "token input length {} != {lanes} lanes x {} features",
+                xs.len(), d.in_feat);
+        let m = state.tokens;
+        let t_sec = self.drift.t_seconds;
+        let hw = &self.hw;
+        let embed = self.stage("embed");
+        let head = self.stage("head");
+        let mut logits = vec![0.0f32; lanes * t_max * classes];
+        for (lane_idx, lane) in state.lanes.iter_mut().enumerate() {
+            let feats =
+                &xs[lane_idx * d.in_feat..(lane_idx + 1) * d.in_feat];
+            // -- Embed token m across all timesteps -----------------------
+            lane.embed_lif.reset();
+            let mut cur_rows: Vec<SpikeVector> = Vec::with_capacity(t_max);
+            for t in 0..t_max {
+                let mut rng = lane.snap_embed[t][m].clone();
+                let enc = rate_encode_row(&mut rng, feats);
+                cur_rows.push(embed.step(&mut rng, &enc,
+                                         &mut lane.embed_lif, t_sec, hw,
+                                         &mut lane.embed_counts));
+            }
+            // -- Encoder blocks ------------------------------------------
+            for (b, blk) in lane.blocks.iter_mut().enumerate() {
+                let wq = self.stage(&format!("blk{b}.wq"));
+                let wk = self.stage(&format!("blk{b}.wk"));
+                let wv = self.stage(&format!("blk{b}.wv"));
+                let wo = self.stage(&format!("blk{b}.wo"));
+                let w1 = self.stage(&format!("blk{b}.w1"));
+                let w2 = self.stage(&format!("blk{b}.w2"));
+                for lif in &mut blk.qkv_lifs {
+                    lif.reset();
+                }
+                blk.wo_lif.reset();
+                blk.w1_lif.reset();
+                blk.w2_lif.reset();
+                // Q/K/V row m per timestep, appended to the head caches.
+                for t in 0..t_max {
+                    let mut rng = blk.snap_qkv[t][m].clone();
+                    let q = wq.step(&mut rng, &cur_rows[t],
+                                    &mut blk.qkv_lifs[0], t_sec, hw,
+                                    &mut blk.counts);
+                    let k = wk.step(&mut rng, &cur_rows[t],
+                                    &mut blk.qkv_lifs[1], t_sec, hw,
+                                    &mut blk.counts);
+                    let v = wv.step(&mut rng, &cur_rows[t],
+                                    &mut blk.qkv_lifs[2], t_sec, hw,
+                                    &mut blk.counts);
+                    for (h, hc) in blk.heads.iter_mut().enumerate() {
+                        let (lo, hi) = (h * dh, (h + 1) * dh);
+                        hc.q.step_mut(t).set_row(m, &q.extract(lo, hi));
+                        hc.k.step_mut(t).set_row(m, &k.extract(lo, hi));
+                        hc.v.step_mut(t).set_row(m, &v.extract(lo, hi));
+                    }
+                }
+                // SSA rows for token m: the causal mask makes score/out
+                // rows < m final, so only row m is computed per head.
+                let stats = &mut blk.stats;
+                stats.cycles = ((t_max + 1) * dh) as u64;
+                let mut attn_rows: Vec<SpikeVector> =
+                    (0..t_max).map(|_| SpikeVector::zeros(dim)).collect();
+                for (h, hc) in blk.heads.iter().enumerate() {
+                    // Content-independent event counts, attributed evenly
+                    // across the n steps (they sum to the tile totals).
+                    stats.and_ops += (2 * n * (t_max + 1) * dh) as u64;
+                    stats.adder_ops += (t_max * dh) as u64;
+                    stats.encoder_samples += (t_max * (n + dh)) as u64;
+                    stats.prn_bytes += t_max as u64
+                        * (n as u64 * draw_bytes(dh)
+                            + dh as u64 * draw_bytes(n));
+                    for t in 0..t_max {
+                        let qv = hc.q.step(t);
+                        let kv = hc.k.step(t);
+                        // Q.K counter increments for every new (i, j)
+                        // pair with max(i, j) == m (the tile counts all
+                        // pairs pre-mask; summed over steps this is the
+                        // full n x n total).
+                        for j in 0..=m {
+                            stats.counter_incs +=
+                                and_popcount(qv.row(m), kv.row(j)) as u64;
+                        }
+                        for i in 0..m {
+                            stats.counter_incs +=
+                                and_popcount(qv.row(i), kv.row(m)) as u64;
+                        }
+                        // Masked score row m of window t (keys j <= m).
+                        let mut score = SpikeVector::zeros(n);
+                        for j in 0..=m {
+                            let count =
+                                and_popcount(qv.row(m), kv.row(j));
+                            if count >= hc.score_draws[t][m * n + j] {
+                                score.set(j, true);
+                            }
+                        }
+                        // Output row m of window t: column adders over
+                        // the attended values.
+                        let vv = hc.v.step(t);
+                        for c in 0..dh {
+                            let mut sum = 0u32;
+                            for j in 0..=m {
+                                if score.get(j) && vv.get(j, c) {
+                                    sum += 1;
+                                }
+                            }
+                            if sum >= hc.out_draws[t][m * dh + c] {
+                                attn_rows[t].set(h * dh + c, true);
+                            }
+                        }
+                    }
+                }
+                // Wo + OR residual + FFN + OR residual for token m.
+                for t in 0..t_max {
+                    let mut rng = blk.snap_ffn[t][m].clone();
+                    let o = wo.step(&mut rng, &attn_rows[t],
+                                    &mut blk.wo_lif, t_sec, hw,
+                                    &mut blk.counts);
+                    let mut r1 = o;
+                    r1.or_assign(&cur_rows[t]);
+                    let h_sp = w1.step(&mut rng, &r1, &mut blk.w1_lif,
+                                       t_sec, hw, &mut blk.counts);
+                    let f_sp = w2.step(&mut rng, &h_sp, &mut blk.w2_lif,
+                                       t_sec, hw, &mut blk.counts);
+                    let mut r2 = f_sp;
+                    r2.or_assign(&r1);
+                    cur_rows[t] = r2;
+                }
+            }
+            // -- Head readout of the newest row --------------------------
+            // Snapshot clones keep the stored head RNG states pristine,
+            // and replacing the counters keeps energy equal to forward's
+            // single final-row readout.
+            let mut head_counts = AimcCounts::default();
+            for (t, row) in cur_rows.iter().enumerate() {
+                let mut rng = lane.snap_head[t].clone();
+                let out = head.mvm(&mut rng, row, t_sec, hw,
+                                   &mut head_counts);
+                let off = (lane_idx * t_max + t) * classes;
+                logits[off..off + classes].copy_from_slice(&out);
+            }
+            lane.head_counts = head_counts;
+        }
+        state.tokens += 1;
+        Ok(logits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{gpt_native, vit_native, HardwareConfig, ModelKind};
+
+    fn sample(model: &XpikeModel, salt: u64) -> Vec<f32> {
+        let mut rng = Rng::seed_from_u64(salt);
+        (0..model.sample_len()).map(|_| rng.uniform_f32()).collect()
+    }
+
+    /// A 2-block causal config with odd widths: n = 7 (two-byte PRN
+    /// draws), d_head = 20 (non-power-of-two), dim 40.
+    fn odd_gpt(t_steps: usize) -> ModelDims {
+        ModelDims {
+            name: format!("gpt_odd_t{t_steps}"),
+            kind: ModelKind::Gpt,
+            depth: 2,
+            dim: 40,
+            heads: 2,
+            n_tokens: 7,
+            in_feat: 10,
+            classes: 5,
+            mlp_ratio: 2,
+            t_steps,
+            nt: 0,
+        }
+    }
+
+    fn assert_energy_identical(a: &ModelEnergy, b: &ModelEnergy) {
+        assert_eq!(a.layers.len(), b.layers.len());
+        for (la, lb) in a.layers.iter().zip(&b.layers) {
+            assert_eq!(la.name, lb.name);
+            assert_eq!(la.total_pj(), lb.total_pj(),
+                       "layer {} energy mismatch", la.name);
+        }
+        assert_eq!(a.total_pj(), b.total_pj());
+        assert_eq!(a.inferences, b.inferences);
+    }
+
+    #[test]
+    fn decode_steps_bit_identical_to_forward() {
+        // The tentpole equivalence oracle: prime + n decode steps must
+        // reproduce the one-shot forward bit-for-bit (logits and folded
+        // energy), on T=1 and T=4 and on odd widths.
+        for dims in [odd_gpt(1), odd_gpt(4), gpt_native(2, 64, 2, 2, 2, 3)]
+        {
+            let model =
+                XpikeModel::new(&dims, &HardwareConfig::default(), 17);
+            let x = sample(&model, 50);
+            let seed = 905u64;
+            let (want, want_e) = model.forward(&x, seed).unwrap();
+            let mut st = model.begin_decode(1, &[seed]).unwrap();
+            let mut last = Vec::new();
+            for m in 0..dims.n_tokens {
+                assert!(!st.is_complete());
+                last = model
+                    .decode_step(&mut st,
+                                 &x[m * dims.in_feat
+                                     ..(m + 1) * dims.in_feat])
+                    .unwrap();
+                assert_eq!(st.tokens(), m + 1);
+            }
+            assert!(st.is_complete());
+            assert_eq!(last, want, "{}: final-step logits", dims.name);
+            assert_energy_identical(&st.energy(), &want_e);
+            // The window is exhausted: further steps must be rejected.
+            assert!(model
+                .decode_step(&mut st, &x[..dims.in_feat])
+                .is_err());
+        }
+    }
+
+    #[test]
+    fn multi_lane_decode_matches_forward_batch() {
+        let dims = gpt_native(2, 64, 2, 2, 2, 3);
+        let model = XpikeModel::new(&dims, &HardwareConfig::default(), 17);
+        let lanes = 3usize;
+        let seeds = [5u64, 900, 31];
+        let sl = model.sample_len();
+        let xs: Vec<f32> = (0..lanes)
+            .flat_map(|l| sample(&model, 60 + l as u64))
+            .collect();
+        let (want, want_e) =
+            model.forward_batch(&xs, lanes, &seeds).unwrap();
+        let mut st = model.begin_decode(lanes, &seeds).unwrap();
+        assert_eq!(st.lanes(), lanes);
+        let mut last = Vec::new();
+        for m in 0..dims.n_tokens {
+            let step_xs: Vec<f32> = (0..lanes)
+                .flat_map(|l| {
+                    xs[l * sl + m * dims.in_feat
+                        ..l * sl + (m + 1) * dims.in_feat]
+                        .to_vec()
+                })
+                .collect();
+            last = model.decode_step(&mut st, &step_xs).unwrap();
+        }
+        assert_eq!(last, want, "lane-major final logits");
+        assert_energy_identical(&st.energy(), &want_e);
+    }
+
+    #[test]
+    fn evicted_state_reprimes_deterministically() {
+        // Drop a session halfway through, re-prime with the same seed:
+        // the fresh state must converge to the same bit-exact result —
+        // eviction loses progress, never correctness.
+        let dims = odd_gpt(2);
+        let model = XpikeModel::new(&dims, &HardwareConfig::default(), 9);
+        let x = sample(&model, 7);
+        let seed = 123u64;
+        let (want, _) = model.forward(&x, seed).unwrap();
+        let mut st = model.begin_decode(1, &[seed]).unwrap();
+        for m in 0..dims.n_tokens / 2 {
+            model
+                .decode_step(&mut st,
+                             &x[m * dims.in_feat..(m + 1) * dims.in_feat])
+                .unwrap();
+        }
+        drop(st); // eviction
+        let mut st = model.begin_decode(1, &[seed]).unwrap();
+        let mut last = Vec::new();
+        for m in 0..dims.n_tokens {
+            last = model
+                .decode_step(&mut st,
+                             &x[m * dims.in_feat..(m + 1) * dims.in_feat])
+                .unwrap();
+        }
+        assert_eq!(last, want);
+    }
+
+    #[test]
+    fn intermediate_steps_are_deterministic_and_finite() {
+        let dims = odd_gpt(2);
+        let model = XpikeModel::new(&dims, &HardwareConfig::default(), 3);
+        let x = sample(&model, 11);
+        let mut a = model.begin_decode(1, &[42]).unwrap();
+        let mut b = model.begin_decode(1, &[42]).unwrap();
+        for m in 0..dims.n_tokens {
+            let tok = &x[m * dims.in_feat..(m + 1) * dims.in_feat];
+            let la = model.decode_step(&mut a, tok).unwrap();
+            let lb = model.decode_step(&mut b, tok).unwrap();
+            assert_eq!(la, lb, "step {m} reproducible");
+            assert_eq!(la.len(), dims.t_steps * dims.classes);
+            assert!(la.iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn begin_decode_rejects_bad_configs() {
+        let vit = XpikeModel::new(&vit_native(1, 64, 2, 2),
+                                  &HardwareConfig::default(), 1);
+        assert!(vit.begin_decode(1, &[1]).is_err(),
+                "non-causal models have no decode path");
+        let gpt = XpikeModel::new(&gpt_native(1, 64, 2, 2, 2, 2),
+                                  &HardwareConfig::default(), 1);
+        assert!(gpt.begin_decode(0, &[]).is_err(), "zero lanes");
+        assert!(gpt.begin_decode(2, &[1]).is_err(), "seed count");
+        let mut st = gpt.begin_decode(1, &[1]).unwrap();
+        assert!(gpt.decode_step(&mut st, &[0.5; 3]).is_err(),
+                "wrong token width");
+    }
+}

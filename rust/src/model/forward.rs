@@ -41,23 +41,26 @@ use crate::ssa::{run_mhsa_lanes, HeadQkv, SsaEngine};
 use crate::util::Rng;
 
 /// Rolling AIMC event counters for one pipeline stage (per lane).
-#[derive(Default)]
-struct AimcCounts {
-    conversions: u64,
-    wl_pulses: u64,
+/// Shared with [`crate::model::decode`], which accumulates the same
+/// counters token-by-token.
+#[derive(Default, Clone)]
+pub(crate) struct AimcCounts {
+    pub(crate) conversions: u64,
+    pub(crate) wl_pulses: u64,
 }
 
 /// One spiking linear layer bound to its crossbar mapping + GDC scale.
-struct Stage<'m> {
-    matrix: &'m MappedMatrix,
+pub(crate) struct Stage<'m> {
+    pub(crate) matrix: &'m MappedMatrix,
     /// GDC output scale for the active drift setting (outputs / alpha).
-    alpha: f32,
+    pub(crate) alpha: f32,
 }
 
 impl Stage<'_> {
     /// Crossbar MVM (+GDC) for one packed token row, with event counting.
-    fn mvm(&self, rng: &mut Rng, spikes: &SpikeVector, t_seconds: f64,
-           hw: &HardwareConfig, counts: &mut AimcCounts) -> Vec<f32> {
+    pub(crate) fn mvm(&self, rng: &mut Rng, spikes: &SpikeVector,
+                      t_seconds: f64, hw: &HardwareConfig,
+                      counts: &mut AimcCounts) -> Vec<f32> {
         counts.conversions += self.matrix.conversions_per_mvm();
         counts.wl_pulses += self.matrix.wl_pulses(spikes, hw);
         let mut pre = self.matrix.mvm(rng, spikes, t_seconds, hw);
@@ -70,9 +73,10 @@ impl Stage<'_> {
     }
 
     /// MVM followed by the stage's shared LIF bank for one token.
-    fn step(&self, rng: &mut Rng, spikes: &SpikeVector, lif: &mut LifArray,
-            t_seconds: f64, hw: &HardwareConfig, counts: &mut AimcCounts)
-            -> SpikeVector {
+    pub(crate) fn step(&self, rng: &mut Rng, spikes: &SpikeVector,
+                       lif: &mut LifArray, t_seconds: f64,
+                       hw: &HardwareConfig, counts: &mut AimcCounts)
+                       -> SpikeVector {
         let pre = self.mvm(rng, spikes, t_seconds, hw, counts);
         lif.step(&pre)
     }
@@ -150,7 +154,7 @@ impl XpikeModel {
             .collect();
     }
 
-    fn stage(&self, name: &str) -> Stage<'_> {
+    pub(crate) fn stage(&self, name: &str) -> Stage<'_> {
         let matrix = self.aimc.layer(name).expect("programmed stage");
         let alpha = self
             .gdc

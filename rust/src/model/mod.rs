@@ -16,12 +16,20 @@
 //!   calls on scoped threads behind the
 //!   [`crate::backend::InferenceBackend`] seam (per-request seeds via
 //!   `run_seeded`), the default executor for
-//!   [`crate::coordinator::Server`].
+//!   [`crate::coordinator::Server`];
+//! * [`decode`] — [`DecodeState`]: streaming autoregressive decode for
+//!   causal models — per-session caches of LIF membrane banks, packed
+//!   K/V spike volumes and RNG/LFSR cursors, so
+//!   [`XpikeModel::decode_step`] emits the next token for one
+//!   token-step's cost, bit-identical to the one-shot forward after the
+//!   full window.
 
 pub mod backend;
+pub mod decode;
 pub mod forward;
 pub mod params;
 
 pub use backend::NativeBackend;
+pub use decode::DecodeState;
 pub use forward::XpikeModel;
 pub use params::{stage_shapes, ModelParams};

@@ -6,19 +6,36 @@
 //! energy. Bernoulli encoders consume bytes in stream order.
 
 /// 32-bit maximal-length LFSR. Never holds state 0.
+///
+/// Seed 0 is illegal for an LFSR (the all-zero state is a fixed point), so
+/// it is mapped onto a fallback state *plus* an output-whitening mask.
+/// The mask guarantees seed 0 cannot alias any other u32 seed: the 32-shift
+/// advance permutes the 2^32 - 1 nonzero states in a single cycle
+/// (gcd(32, 2^32 - 1) = 1), so it has no nonzero fixed point, and a masked
+/// stream `A^t x ^ M` can only equal an unmasked stream `A^t s` for all `t`
+/// if `M = 0`. A plain state remap could not achieve this (pigeonhole:
+/// 2^32 seeds, 2^32 - 1 nonzero states).
 #[derive(Debug, Clone)]
 pub struct Lfsr32 {
     state: u32,
+    /// XORed onto every output word; nonzero only for the remapped seed 0.
+    mask: u32,
     /// Steps taken (for energy accounting).
     pub steps: u64,
 }
 
 impl Lfsr32 {
     pub fn new(seed: u32) -> Self {
-        Lfsr32 { state: if seed == 0 { 0xACE1_u32 } else { seed }, steps: 0 }
+        let (state, mask) = if seed == 0 {
+            (0xACE1_u32, 0x9E37_79B9)
+        } else {
+            (seed, 0)
+        };
+        Lfsr32 { state, mask, steps: 0 }
     }
 
-    /// Advance 32 shifts (one full refresh) and return the new state.
+    /// Advance 32 shifts (one full refresh) and return the new state
+    /// (XOR the whitening mask — identity for all nonzero seeds).
     /// Taps: x^32 + x^22 + x^2 + x^1 + 1.
     pub fn next_u32(&mut self) -> u32 {
         for _ in 0..32 {
@@ -28,7 +45,7 @@ impl Lfsr32 {
             self.state = (self.state << 1) | bit;
         }
         self.steps += 1;
-        self.state
+        self.state ^ self.mask
     }
 }
 
@@ -92,6 +109,34 @@ mod tests {
             arr.next_byte();
         }
         assert_eq!(arr.refreshes(), 4); // 16 bytes / 4 per refresh
+    }
+
+    #[test]
+    fn seed_zero_does_not_collide_with_any_alias() {
+        // Seed 0 used to be remapped to state 0xACE1, silently sharing a
+        // stream with the genuine seed 0xACE1. The whitening mask breaks
+        // that alias; and because the 32-shift advance has no nonzero
+        // fixed point, the masked stream differs from *every* unmasked
+        // seed's stream — spot-check the old alias and neighbours.
+        let mut z = Lfsr32::new(0);
+        let zs: Vec<u32> = (0..64).map(|_| z.next_u32()).collect();
+        for seed in [0xACE1_u32, 1, 0x9E37_79B9, u32::MAX] {
+            let mut s = Lfsr32::new(seed);
+            let ss: Vec<u32> = (0..64).map(|_| s.next_u32()).collect();
+            assert_ne!(zs, ss, "seed 0 aliases seed {seed:#x}");
+        }
+        // The byte-level stream (what the Bernoulli encoders consume)
+        // diverges too.
+        let mut a = LfsrArray::new(0);
+        let mut b = LfsrArray::new(0xACE1);
+        let any_diff =
+            (0..256).any(|_| a.next_byte() != b.next_byte());
+        assert!(any_diff, "byte streams of seeds 0 and 0xACE1 collide");
+        // Still deterministic: two seed-0 instances agree.
+        let (mut c, mut d) = (Lfsr32::new(0), Lfsr32::new(0));
+        for _ in 0..100 {
+            assert_eq!(c.next_u32(), d.next_u32());
+        }
     }
 
     #[test]

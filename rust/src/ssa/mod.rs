@@ -49,7 +49,7 @@ pub use engine::{run_mhsa_lanes, ssa_reference, ssa_reference_bools,
                  HeadQkv, SsaEngine};
 pub use lfsr::{Lfsr32, LfsrArray};
 pub use sac::{bernoulli_encode, Sac};
-pub use tile::{SsaStats, SsaTile};
+pub use tile::{draw_uniform, SsaStats, SsaTile};
 
 /// A binary matrix `[rows][cols]` (token-major spike matrix) — the legacy
 /// unpacked interchange format. The datapath itself runs on

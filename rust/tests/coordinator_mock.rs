@@ -9,8 +9,12 @@
 //! `run_seeded` fallback, execution failures are surfaced per request in
 //! the per-shard metrics while the server keeps serving, the shard
 //! router balances batches and merges snapshots, and the bounded queue
-//! exerts backpressure.
+//! exerts backpressure. The generate path is covered against a
+//! session-recording mock: sticky session→shard routing, first-token
+//! seeding, close-time eviction, capability probing, and shard-death
+//! eviction surfacing failures to the waiters.
 
+use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
 use xpikeformer::backend::InferenceBackend;
@@ -131,6 +135,123 @@ impl InferenceBackend for SingleSeedMock {
 
     fn x_len_per_sample(&self) -> usize {
         self.inner.sample_len
+    }
+}
+
+/// A generate-capable mock: each backend instance has an `id` baked into
+/// every logit, so a response proves exactly *which shard* served the
+/// token — the probe for sticky-session routing. Sessions record their
+/// priming seed and a token counter (so re-priming after close/eviction
+/// is observable), and `panic_token` kills the executor thread
+/// mid-request — the shard-death probe.
+#[derive(Clone)]
+struct GenMock {
+    id: usize,
+    panic_token: Option<f32>,
+    /// session -> (priming seed, tokens served).
+    sessions: Arc<Mutex<HashMap<u64, (u32, usize)>>>,
+    /// Every (session, backend id) token served, in order.
+    served: Arc<Mutex<Vec<(u64, usize)>>>,
+    /// Sessions dropped via `end_generate`, in order.
+    closed: Arc<Mutex<Vec<u64>>>,
+    /// Number of `run_seeded` executions (the batch-path probe).
+    infer_execs: Arc<Mutex<usize>>,
+}
+
+impl GenMock {
+    const BATCH: usize = 2;
+    const T_MAX: usize = 2;
+    const CLASSES: usize = 3;
+    const LEN: usize = 2;
+
+    fn new(id: usize) -> GenMock {
+        GenMock {
+            id,
+            panic_token: None,
+            sessions: Arc::new(Mutex::new(HashMap::new())),
+            served: Arc::new(Mutex::new(Vec::new())),
+            closed: Arc::new(Mutex::new(Vec::new())),
+            infer_execs: Arc::new(Mutex::new(0)),
+        }
+    }
+
+    /// The closed-form logit of one generate step: decodes to (shard id,
+    /// session, priming seed, token ordinal, token feature, t, c).
+    fn glogit(id: usize, session: u64, seed: u32, tokens: usize, x0: f32,
+              t: usize, c: usize) -> f32 {
+        1_000_000.0 * id as f32 + 100_000.0 * session as f32
+            + 1_000.0 * seed as f32 + 100.0 * tokens as f32 + 10.0 * x0
+            + 3.0 * t as f32 + c as f32
+    }
+}
+
+impl InferenceBackend for GenMock {
+    fn run(&self, x: &[f32], seed: u32) -> anyhow::Result<Vec<f32>> {
+        self.run_seeded(x, &vec![seed; Self::BATCH])
+    }
+
+    fn run_seeded(&self, x: &[f32], seeds: &[u32])
+                  -> anyhow::Result<Vec<f32>> {
+        *self.infer_execs.lock().unwrap() += 1;
+        let mut out = Vec::new();
+        for t in 0..Self::T_MAX {
+            for b in 0..Self::BATCH {
+                for c in 0..Self::CLASSES {
+                    out.push(MockBackend::logit(x[b * Self::LEN], seeds[b],
+                                                t, c));
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    fn batch(&self) -> usize {
+        Self::BATCH
+    }
+
+    fn t_max(&self) -> usize {
+        Self::T_MAX
+    }
+
+    fn classes(&self) -> usize {
+        Self::CLASSES
+    }
+
+    fn x_len_per_sample(&self) -> usize {
+        Self::LEN
+    }
+
+    fn generate_token_len(&self) -> Option<usize> {
+        Some(Self::LEN)
+    }
+
+    fn generate_step(&self, session: u64, token: &[f32], seed: u32)
+                     -> anyhow::Result<Vec<f32>> {
+        assert_eq!(token.len(), Self::LEN,
+                   "coordinator must validate token length");
+        if self.panic_token.is_some_and(|p| token[0] == p) {
+            panic!("gen mock: simulated executor death");
+        }
+        let (prime_seed, tokens) = {
+            let mut sessions = self.sessions.lock().unwrap();
+            let entry = sessions.entry(session).or_insert((seed, 0));
+            entry.1 += 1;
+            *entry
+        };
+        self.served.lock().unwrap().push((session, self.id));
+        let mut out = Vec::new();
+        for t in 0..Self::T_MAX {
+            for c in 0..Self::CLASSES {
+                out.push(Self::glogit(self.id, session, prime_seed, tokens,
+                                      token[0], t, c));
+            }
+        }
+        Ok(out)
+    }
+
+    fn end_generate(&self, session: u64) {
+        self.sessions.lock().unwrap().remove(&session);
+        self.closed.lock().unwrap().push(session);
     }
 }
 
@@ -362,6 +483,150 @@ fn backpressure_rejects_when_queue_full() {
     for p in pend {
         let _ = p.wait();
     }
+    drop(client);
+    server.shutdown();
+}
+
+#[test]
+fn generate_sessions_stick_to_their_shard() {
+    // Two shards, two interleaved sessions: every token of a session must
+    // land on the shard that primed it (the spike-state cache lives
+    // there), only the first token's seed primes the stream, and closing
+    // a session evicts its state and lets a later reuse re-prime fresh.
+    let shards = vec![GenMock::new(0), GenMock::new(1)];
+    let (s0, s1) = (shards[0].clone(), shards[1].clone());
+    let server = Server::start_sharded(shards, cfg(2, 0, 32));
+    let client = server.client();
+    assert_eq!(client.token_len(), Some(2));
+    // First tokens bind round-robin: session 100 -> shard 0, 200 -> 1.
+    // Seeds beyond each session's first token must be ignored.
+    for (k, seed) in [(1usize, 7u32), (2, 8), (3, 9)] {
+        for (session, shard) in [(100u64, 0usize), (200, 1)] {
+            // Session 200's tokens carry seeds 17/18/19; only each
+            // session's first seed (7 resp. 17) may reach the backend.
+            let seed = if session == 200 { seed + 10 } else { seed };
+            let prime_seed = if session == 200 { 17 } else { 7 };
+            let x0 = 0.5 * k as f32;
+            let r = client
+                .generate(session, vec![x0, 0.0], seed)
+                .unwrap()
+                .wait()
+                .unwrap();
+            for t in 0..2 {
+                for c in 0..3 {
+                    assert_eq!(r.logits_t[t * 3 + c],
+                               GenMock::glogit(shard, session, prime_seed,
+                                               k, x0, t, c),
+                               "session {session} token {k} t={t} c={c}");
+                }
+            }
+        }
+    }
+    assert!(s0.served.lock().unwrap().iter().all(|&(s, id)| {
+        s == 100 && id == 0
+    }), "shard 0 must serve only its pinned session");
+    assert!(s1.served.lock().unwrap().iter().all(|&(s, id)| {
+        s == 200 && id == 1
+    }), "shard 1 must serve only its pinned session");
+    assert_eq!(s0.served.lock().unwrap().len(), 3);
+    // Closing evicts on the owning shard; reusing the id re-primes with
+    // the new seed (token counter restarts at 1).
+    client.close_session(100).unwrap();
+    let r = client.generate(100, vec![9.0, 0.0], 55).unwrap().wait()
+        .unwrap();
+    assert_eq!(s0.closed.lock().unwrap().as_slice(), &[100]);
+    assert_eq!(r.logits_t[0], GenMock::glogit(0, 100, 55, 1, 9.0, 0, 0),
+               "reused session id must re-prime fresh");
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.completed, 7);
+    assert_eq!(snap.failed, 0);
+    drop(client);
+    server.shutdown();
+}
+
+#[test]
+fn generate_requires_capability_and_valid_token() {
+    // A batch-only backend advertises no generate capability; the client
+    // fails generate submissions locally.
+    let server = Server::start(MockBackend::new(2), cfg(2, 0, 16));
+    let client = server.client();
+    assert_eq!(client.token_len(), None);
+    assert!(client.generate(1, vec![0.0, 0.0], 0).is_err());
+    client.close_session(1).unwrap(); // unknown session: clean no-op
+    drop(client);
+    server.shutdown();
+
+    // A capable backend still rejects mis-sized tokens client-side.
+    let server = Server::start(GenMock::new(0), cfg(2, 0, 16));
+    let client = server.client();
+    assert!(client.generate(1, vec![0.0], 0).is_err(),
+            "token length must be validated");
+    drop(client);
+    server.shutdown();
+}
+
+#[test]
+fn generate_tokens_interrupt_the_batching_window() {
+    // An infer request gathering under a long window must dispatch as
+    // soon as a generate token arrives behind it (the token is not batch
+    // work), and the token itself is served next — no head-of-line
+    // blocking in either direction.
+    let backend = GenMock::new(0);
+    let execs = Arc::clone(&backend.infer_execs);
+    let server = Server::start(backend, cfg(2, 200_000, 32));
+    let client = server.client();
+    let a = client.infer(vec![1.0, 0.0], 4).unwrap();
+    let g = client.generate(9, vec![0.25, 0.0], 5).unwrap();
+    let b = client.infer(vec![2.0, 0.0], 6).unwrap();
+    let ra = a.wait().unwrap();
+    assert_eq!(ra.logits_t[0], MockBackend::logit(1.0, 4, 0, 0));
+    let rg = g.wait().unwrap();
+    assert_eq!(rg.logits_t[0], GenMock::glogit(0, 9, 5, 1, 0.25, 0, 0));
+    let rb = b.wait().unwrap();
+    assert_eq!(rb.logits_t[0], MockBackend::logit(2.0, 6, 0, 0));
+    // The generate token split the infers into two executions — under an
+    // uninterrupted 200ms window they would have merged into one batch.
+    assert_eq!(*execs.lock().unwrap(), 2,
+               "generate must interrupt the gather window");
+    drop(client);
+    server.shutdown();
+}
+
+#[test]
+fn shard_death_evicts_sessions_and_surfaces_failures() {
+    // A generate token that kills its executor thread: the waiter sees
+    // the failure (dropped responder), the session's later tokens fail
+    // too (state died with the shard), and only a *new* binding — which
+    // re-primes from scratch on a surviving shard — succeeds again.
+    let shards = vec![
+        GenMock { panic_token: Some(-66.0), ..GenMock::new(0) },
+        GenMock { panic_token: Some(-66.0), ..GenMock::new(1) },
+    ];
+    let server = Server::start_sharded(shards, cfg(2, 0, 32));
+    let client = server.client();
+    // Session 1 binds to shard 0 and serves normally...
+    let r = client.generate(1, vec![1.0, 0.0], 3).unwrap().wait().unwrap();
+    assert_eq!(r.logits_t[0], GenMock::glogit(0, 1, 3, 1, 1.0, 0, 0));
+    // ...until a poison token kills the executor mid-request.
+    assert!(client.generate(1, vec![-66.0, 0.0], 3).unwrap().wait()
+                .is_err(),
+            "the killing token's waiter must observe the failure");
+    // Give the executor thread time to finish unwinding, so the next
+    // send observes the closed shard queue deterministically.
+    std::thread::sleep(std::time::Duration::from_millis(100));
+    // The session was pinned to the dead shard: its next token fails and
+    // the router evicts every binding to that shard.
+    assert!(client.generate(1, vec![2.0, 0.0], 3).unwrap().wait().is_err(),
+            "tokens of a dead shard's session must fail, not re-route");
+    // The id is now unbound: the next token re-binds to the surviving
+    // shard and re-primes (token counter restarts, new seed takes).
+    let r = client.generate(1, vec![4.0, 0.0], 90).unwrap().wait()
+        .unwrap();
+    assert_eq!(r.logits_t[0], GenMock::glogit(1, 1, 90, 1, 4.0, 0, 0),
+               "rebind must land on the survivor and re-prime fresh");
+    let snap = server.metrics.snapshot();
+    assert!(snap.failed >= 1, "evicted token must be counted as failed");
+    assert_eq!(snap.completed, 2);
     drop(client);
     server.shutdown();
 }
