@@ -17,21 +17,9 @@ use std::time::{Duration, Instant};
 
 use xpikeformer::config::{gpt_native, HardwareConfig};
 use xpikeformer::model::XpikeModel;
-use xpikeformer::util::bench::{bench, black_box, BenchResult};
+use xpikeformer::util::bench::{bench, black_box, metadata_json};
 use xpikeformer::util::json::escape;
 use xpikeformer::util::Rng;
-
-fn result_json(r: &BenchResult) -> String {
-    format!(
-        "{{\"name\": \"{}\", \"mean_us\": {:.3}, \"p50_us\": {:.3}, \
-         \"p95_us\": {:.3}, \"iters\": {}}}",
-        escape(&r.name),
-        r.mean.as_secs_f64() * 1e6,
-        r.p50.as_secs_f64() * 1e6,
-        r.p95.as_secs_f64() * 1e6,
-        r.iters
-    )
-}
 
 fn main() {
     println!("== streaming decode benchmarks ==");
@@ -56,7 +44,7 @@ fn main() {
             black_box(model.forward(&x, 7).unwrap());
         },
     );
-    records.push(result_json(&r_forward));
+    records.push(r_forward.to_json());
     let forward_s = r_forward.mean.as_secs_f64();
     println!("    -> forward: {:.2} ms/window", forward_s * 1e3);
 
@@ -77,7 +65,7 @@ fn main() {
             }
         },
     );
-    records.push(result_json(&r_decode));
+    records.push(r_decode.to_json());
     let decode_s = r_decode.mean.as_secs_f64();
     let decode_vs_forward = decode_s / forward_s;
     println!("    -> decode stream: {:.2} ms/window ({:.2}x of one \
@@ -128,7 +116,7 @@ fn main() {
         concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_decode.json").into()
     });
     let json = format!(
-        "{{\n  \"bench\": \"decode\",\n  \"measured\": true,\n  \
+        "{{\n  \"bench\": \"decode\",\n  {},\n  \
          \"model\": \"{}\",\n  \"window_tokens\": {n},\n  \
          \"full_forward_ms\": {:.3},\n  \"full_window_decode_ms\": \
          {:.3},\n  \"decode_vs_forward_total_ratio\": \
@@ -139,6 +127,7 @@ fn main() {
          \"tokens_per_s_full_recompute\": {tok_s_full:.1},\n  \
          \"incremental_vs_full_recompute_speedup\": {speedup:.3},\n  \
          \"results\": [\n    {}\n  ]\n}}\n",
+        metadata_json(),
         escape(&dims.name),
         forward_s * 1e3,
         decode_s * 1e3,

@@ -1,8 +1,10 @@
 //! Native model forward benchmarks: whole spiking-transformer inferences
 //! on the composed hardware simulators (AIMC crossbars + SSA tiles +
 //! LIF banks), at the native presets and a scaled-up stress point, plus
-//! the batch-datapath ablation: one OS thread per lane (the pre-refactor
-//! backend) vs one lane-batched `forward_batch` call vs the chunked
+//! the 64-lane batch-datapath ablation: one OS thread per lane (the
+//! pre-refactor backend) vs the lane-loop `forward_batch` kernel vs the
+//! lane-sliced kernel (one drive word per feature serving all 64 lanes,
+//! with realized zero-word skip rates) vs the chunked
 //! `NativeBackend::run` datapath. Overwrites the repo-root
 //! `BENCH_model.json` (override the path with `BENCH_MODEL_JSON=...`) so
 //! the native-pipeline perf trajectory is tracked across PRs.
@@ -12,24 +14,11 @@
 use std::time::Duration;
 
 use xpikeformer::backend::InferenceBackend;
-use xpikeformer::config::{gpt_native, vit_native, HardwareConfig,
-                          ModelDims};
+use xpikeformer::config::{gpt_native, vit_native, BatchKernel,
+                          HardwareConfig, ModelDims};
 use xpikeformer::model::{NativeBackend, XpikeModel};
-use xpikeformer::util::bench::{bench, black_box, BenchResult};
-use xpikeformer::util::json::escape;
+use xpikeformer::util::bench::{bench, black_box, metadata_json};
 use xpikeformer::util::Rng;
-
-fn result_json(r: &BenchResult) -> String {
-    format!(
-        "{{\"name\": \"{}\", \"mean_us\": {:.3}, \"p50_us\": {:.3}, \
-         \"p95_us\": {:.3}, \"iters\": {}}}",
-        escape(&r.name),
-        r.mean.as_secs_f64() * 1e6,
-        r.p50.as_secs_f64() * 1e6,
-        r.p95.as_secs_f64() * 1e6,
-        r.iters
-    )
-}
 
 fn bench_model(dims: &ModelDims, budget: Duration, records: &mut Vec<String>)
                -> f64 {
@@ -49,7 +38,7 @@ fn bench_model(dims: &ModelDims, budget: Duration, records: &mut Vec<String>)
     let per_inf = r.mean.as_secs_f64();
     println!("    -> {:.2} ms/inference, {:.1} inf/s", per_inf * 1e3,
              1.0 / per_inf);
-    records.push(result_json(&r));
+    records.push(r.to_json());
     per_inf
 }
 
@@ -66,9 +55,17 @@ fn main() {
     let big = vit_native(4, 128, 4, 6);
     let big_s = bench_model(&big, budget, &mut records);
 
-    // -- Batch-datapath ablation at 8 lanes ------------------------------
-    let lanes = 8usize;
+    // -- Batch-datapath ablation at 64 lanes (one lane-sliced word) ------
+    let lanes = 64usize;
     let model = XpikeModel::new(&vit, &HardwareConfig::default(), 42);
+    let model_loop = XpikeModel::new(
+        &vit,
+        &HardwareConfig {
+            batch_kernel: BatchKernel::LaneLoop,
+            ..HardwareConfig::default()
+        },
+        42,
+    );
     let mut rng = Rng::seed_from_u64(2);
     let sl = model.sample_len();
     let xb: Vec<f32> =
@@ -98,12 +95,25 @@ fn main() {
             black_box(outs);
         },
     );
-    records.push(result_json(&r_threads));
+    records.push(r_threads.to_json());
 
-    // One lane-batched call: every crossbar stage traversed once per
-    // (t, token) across all lanes, SSA tiling (lane, head).
-    let r_batch_call = bench(
-        &format!("forward_batch lanes={lanes} {}", vit.name),
+    // The PR 5 lane-loop kernel: one lane-batched call, every stage
+    // traversed once per (t, token), lanes applied one at a time.
+    let r_lane_loop = bench(
+        &format!("forward_batch lane_loop lanes={lanes} {}", vit.name),
+        1,
+        budget,
+        || {
+            black_box(
+                model_loop.forward_batch(&xb, lanes, &seeds).unwrap());
+        },
+    );
+    records.push(r_lane_loop.to_json());
+
+    // The lane-sliced kernel: one u64 of drive per feature serves all
+    // 64 lanes per weight-row visit; zero drive words are skipped.
+    let r_sliced = bench(
+        &format!("forward_batch lane_sliced lanes={lanes} {}", vit.name),
         1,
         budget,
         || {
@@ -111,11 +121,36 @@ fn main() {
                 model.forward_batch(&xb, lanes, &seeds).unwrap());
         },
     );
-    records.push(result_json(&r_batch_call));
-    let speedup_vs_threads = r_threads.mean.as_secs_f64()
-        / r_batch_call.mean.as_secs_f64();
-    println!("    -> forward_batch vs per-lane threads: \
-              {speedup_vs_threads:.2}x");
+    records.push(r_sliced.to_json());
+
+    let loop_vs_threads = r_threads.mean.as_secs_f64()
+        / r_lane_loop.mean.as_secs_f64();
+    let sliced_vs_threads =
+        r_threads.mean.as_secs_f64() / r_sliced.mean.as_secs_f64();
+    let sliced_vs_loop =
+        r_lane_loop.mean.as_secs_f64() / r_sliced.mean.as_secs_f64();
+    println!("    -> lane_loop vs per-lane threads : \
+              {loop_vs_threads:.2}x");
+    println!("    -> lane_sliced vs per-lane threads: \
+              {sliced_vs_threads:.2}x");
+    println!("    -> lane_sliced vs lane_loop       : \
+              {sliced_vs_loop:.2}x");
+
+    // Realized zero-word skip rates, read back from the event counters
+    // the sliced kernel folds into the returned `ModelEnergy`.
+    let (_, energy) = model.forward_batch(&xb, lanes, &seeds).unwrap();
+    let (mut dw, mut dzw, mut sw, mut szw) = (0u64, 0u64, 0u64, 0u64);
+    for l in &energy.layers {
+        dw += l.aimc.drive_words;
+        dzw += l.aimc.zero_drive_words;
+        sw += l.ssa.sliced_words;
+        szw += l.ssa.sliced_zero_words;
+    }
+    let drive_skip = if dw == 0 { 0.0 } else { dzw as f64 / dw as f64 };
+    let ssa_skip = if sw == 0 { 0.0 } else { szw as f64 / sw as f64 };
+    println!("    -> zero-word skip rates: crossbar drive {:.1}%, \
+              ssa score/Q rows {:.1}%",
+             drive_skip * 1e2, ssa_skip * 1e2);
 
     // The serving datapath: lane_chunk-sized forward_batch calls on
     // parallel threads (locality within a chunk, cores across chunks).
@@ -134,30 +169,47 @@ fn main() {
             black_box(backend.run(&xb, 7).unwrap());
         },
     );
-    records.push(result_json(&r_backend));
+    records.push(r_backend.to_json());
     let lane_par = vit_s * lanes as f64 / r_backend.mean.as_secs_f64();
     let backend_vs_threads =
         r_threads.mean.as_secs_f64() / r_backend.mean.as_secs_f64();
     println!("    -> chunked backend: {lane_par:.2}x of serial, \
               {backend_vs_threads:.2}x of per-lane threads");
 
+    let per_lane_us =
+        |r: &xpikeformer::util::bench::BenchResult| {
+            r.mean.as_secs_f64() * 1e6 / lanes as f64
+        };
+
     let path = std::env::var("BENCH_MODEL_JSON").unwrap_or_else(|_| {
         concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_model.json").into()
     });
     let json = format!(
-        "{{\n  \"bench\": \"model_forward\",\n  \"measured\": true,\n  \
-         \"threads\": {},\n  \"forward_ms\": {{\"vit_native_2-64\": \
-         {:.3}, \"gpt_native_2-64_2x2\": {:.3}, \"vit_native_4-128\": \
+        "{{\n  \"bench\": \"model_forward\",\n  {},\n  \
+         \"forward_ms\": {{\"vit_native_2-64\": {:.3}, \
+         \"gpt_native_2-64_2x2\": {:.3}, \"vit_native_4-128\": \
          {:.3}}},\n  \"batch\": {{\"lanes\": {lanes}, \"lane_chunk\": \
-         {lane_chunk}, \"lane_parallelism\": {lane_par:.3}, \
-         \"forward_batch_vs_lane_threads\": {speedup_vs_threads:.3}, \
-         \"chunked_backend_vs_lane_threads\": \
-         {backend_vs_threads:.3}}},\n  \"results\": [\n    {}\n  ]\n}}\n",
-        std::thread::available_parallelism()
-            .map(|p| p.get()).unwrap_or(1),
+         {lane_chunk}, \"lane_parallelism\": {lane_par:.3},\n    \
+         \"per_lane_us\": {{\"lane_threads\": {:.3}, \"lane_loop\": \
+         {:.3}, \"lane_sliced\": {:.3}, \"chunked_backend\": \
+         {:.3}}},\n    \"lane_loop_vs_lane_threads\": \
+         {loop_vs_threads:.3}, \"lane_sliced_vs_lane_threads\": \
+         {sliced_vs_threads:.3},\n    \"lane_sliced_vs_lane_loop\": \
+         {sliced_vs_loop:.3}, \"chunked_backend_vs_lane_threads\": \
+         {backend_vs_threads:.3},\n    \"skip\": {{\"aimc_drive_words\": \
+         {dw}, \"aimc_zero_drive_words\": {dzw}, \
+         \"aimc_drive_skip_rate\": {drive_skip:.4},\n      \
+         \"ssa_sliced_words\": {sw}, \"ssa_sliced_zero_words\": {szw}, \
+         \"ssa_sliced_skip_rate\": {ssa_skip:.4}}}}},\n  \
+         \"results\": [\n    {}\n  ]\n}}\n",
+        metadata_json(),
         vit_s * 1e3,
         gpt_s * 1e3,
         big_s * 1e3,
+        per_lane_us(&r_threads),
+        per_lane_us(&r_lane_loop),
+        per_lane_us(&r_sliced),
+        per_lane_us(&r_backend),
         records.join(",\n    ")
     );
     match std::fs::write(&path, &json) {

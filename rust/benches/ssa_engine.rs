@@ -13,8 +13,7 @@ use std::time::Duration;
 use xpikeformer::spike::{and_popcount, and_popcount_scalar, SpikeVolume};
 use xpikeformer::ssa::legacy::LegacyTile;
 use xpikeformer::ssa::{BitMatrix, SsaEngine, SsaTile};
-use xpikeformer::util::bench::{bench, black_box, BenchResult};
-use xpikeformer::util::json::escape;
+use xpikeformer::util::bench::{bench, black_box, metadata_json};
 use xpikeformer::util::Rng;
 
 fn mats(rng: &mut Rng, t: usize, n: usize, dk: usize, p: f64)
@@ -26,18 +25,6 @@ fn mats(rng: &mut Rng, t: usize, n: usize, dk: usize, p: f64)
                 .collect()
         })
         .collect()
-}
-
-fn result_json(r: &BenchResult) -> String {
-    format!(
-        "{{\"name\": \"{}\", \"mean_us\": {:.3}, \"p50_us\": {:.3}, \
-         \"p95_us\": {:.3}, \"iters\": {}}}",
-        escape(&r.name),
-        r.mean.as_secs_f64() * 1e6,
-        r.p50.as_secs_f64() * 1e6,
-        r.p95.as_secs_f64() * 1e6,
-        r.iters
-    )
 }
 
 fn main() {
@@ -84,8 +71,8 @@ fn main() {
             r_scalar.mean.as_secs_f64() / r_simd.mean.as_secs_f64();
         popcount_speedup_widest = speedup; // last (widest) wins
         println!("    -> simd speedup at {words} words: {speedup:.2}x");
-        records.push(result_json(&r_simd));
-        records.push(result_json(&r_scalar));
+        records.push(r_simd.to_json());
+        records.push(r_scalar.to_json());
     }
 
     // ---- Single-tile: packed vs the frozen pre-refactor bool tile ----
@@ -131,8 +118,8 @@ fn main() {
             "    -> packed speedup vs legacy bool: {:.2}x",
             r_legacy.mean.as_secs_f64() / r_packed.mean.as_secs_f64()
         );
-        records.push(result_json(&r_packed));
-        records.push(result_json(&r_legacy));
+        records.push(r_packed.to_json());
+        records.push(r_legacy.to_json());
     }
 
     // ---- MHSA layer: seed bool/serial vs packed serial vs packed
@@ -189,9 +176,9 @@ fn main() {
     println!("    -> threading speedup: {speedup_par:.2}x");
     println!("    -> total speedup    : {speedup_total:.2}x \
               (acceptance floor: 3x)");
-    records.push(result_json(&r_bool_serial));
-    records.push(result_json(&r_packed_serial));
-    records.push(result_json(&r_packed_parallel));
+    records.push(r_bool_serial.to_json());
+    records.push(r_packed_serial.to_json());
+    records.push(r_packed_parallel.to_json());
 
     // ---- BENCH_ssa.json ----
     // Default to the repo root (one level above the crate) regardless of
@@ -201,15 +188,13 @@ fn main() {
         concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_ssa.json").into()
     });
     let json = format!(
-        "{{\n  \"bench\": \"ssa_engine\",\n  \"measured\": true,\n  \
-         \"threads\": {},\n  \"popcount\": {{\"speedup_simd_256w\": \
-         {popcount_speedup_widest:.3}}},\n  \"mhsa\": {{\"heads\": \
-         {heads}, \"n\": {n}, \"d_k\": {dk}, \"t_steps\": {t},\n    \
-         \"speedup_packed\": {speedup_pack:.3}, \"speedup_parallel\": \
-         {speedup_par:.3}, \"speedup_total\": {speedup_total:.3}}},\n  \
-         \"results\": [\n    {}\n  ]\n}}\n",
-        std::thread::available_parallelism()
-            .map(|p| p.get()).unwrap_or(1),
+        "{{\n  \"bench\": \"ssa_engine\",\n  {},\n  \"popcount\": \
+         {{\"speedup_simd_256w\": {popcount_speedup_widest:.3}}},\n  \
+         \"mhsa\": {{\"heads\": {heads}, \"n\": {n}, \"d_k\": {dk}, \
+         \"t_steps\": {t},\n    \"speedup_packed\": {speedup_pack:.3}, \
+         \"speedup_parallel\": {speedup_par:.3}, \"speedup_total\": \
+         {speedup_total:.3}}},\n  \"results\": [\n    {}\n  ]\n}}\n",
+        metadata_json(),
         records.join(",\n    ")
     );
     match std::fs::write(&path, &json) {

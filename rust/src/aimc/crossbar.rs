@@ -16,6 +16,33 @@ use crate::config::HardwareConfig;
 use crate::spike::SpikeVector;
 use crate::util::Rng;
 
+/// Realized zero-word skip counters for lane-sliced drive traversal
+/// (ROADMAP sparsity item (a)): every bit-line drive word inspected and
+/// how many were all-silent and skipped without touching the weight row.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct DriveSkips {
+    /// Drive words inspected across all SA visits.
+    pub words: u64,
+    /// Of those, words that were zero for every lane (row skipped).
+    pub zero_words: u64,
+}
+
+impl DriveSkips {
+    pub fn add(&mut self, o: &DriveSkips) {
+        self.words += o.words;
+        self.zero_words += o.zero_words;
+    }
+
+    /// Fraction of drive words skipped by the `word == 0` guard.
+    pub fn skip_rate(&self) -> f64 {
+        if self.words == 0 {
+            0.0
+        } else {
+            self.zero_words as f64 / self.words as f64
+        }
+    }
+}
+
 /// A programmed crossbar block of up to `crossbar_dim` rows x cols.
 #[derive(Debug, Clone)]
 pub struct SynapticArray {
@@ -82,6 +109,60 @@ impl SynapticArray {
                 (i / step).round().clamp(-levels, levels) * step
             })
             .collect()
+    }
+
+    /// Lane-sliced analog MVM: `drive[r]` holds row `r`'s spike bit for
+    /// up to 64 batch lanes (lane-major packing,
+    /// [`crate::spike::LaneSlicedMatrix`]). Each weight row is read
+    /// *once* and its drifted conductances broadcast into every driving
+    /// lane's Kirchhoff accumulator — the tentpole's
+    /// visit-each-row-once dataflow — then each lane runs its own read
+    /// noise + ADC pass in its own [`Rng`], in the exact per-column
+    /// order of [`Self::mvm`]. Lane `l`'s result is bit-identical to
+    /// `self.mvm(&mut rngs[l], lane_l_spikes, ..)` because f32
+    /// accumulation visits rows in the same ascending order. All-zero
+    /// drive words are skipped before the row read (counted in
+    /// `skips`).
+    pub fn mvm_lanes(&self, rngs: &mut [Rng], drive: &[u64],
+                     t_seconds: f64, hw: &HardwareConfig,
+                     skips: &mut DriveSkips) -> Vec<Vec<f32>> {
+        assert_eq!(drive.len(), self.rows,
+                   "drive length {} != {} crossbar rows", drive.len(),
+                   self.rows);
+        let lanes = rngs.len();
+        assert!((1..=64).contains(&lanes),
+                "lane-sliced drive words hold 1..=64 lanes, got {lanes}");
+        let mut currents = vec![vec![0.0f32; self.cols]; lanes];
+        let mut row_w = vec![0.0f32; self.cols];
+        for (r, &word) in drive.iter().enumerate() {
+            skips.words += 1;
+            if word == 0 {
+                skips.zero_words += 1; // no lane spikes: row untouched
+                continue;
+            }
+            let row = &self.cells[r * self.cols..(r + 1) * self.cols];
+            for (w, cell) in row_w.iter_mut().zip(row) {
+                *w = cell.weight_at(t_seconds, hw);
+            }
+            let mut bits = word;
+            while bits != 0 {
+                let l = bits.trailing_zeros() as usize;
+                bits &= bits - 1;
+                for (acc, &w) in currents[l].iter_mut().zip(&row_w) {
+                    *acc += w;
+                }
+            }
+        }
+        let noise_std = hw.sigma_read * self.w_max as f64;
+        let levels = hw.adc_levels() as f32;
+        let step = self.adc_clip / levels;
+        for (lane, rng) in currents.iter_mut().zip(rngs.iter_mut()) {
+            for i in lane.iter_mut() {
+                *i += rng.normal_ms(0.0, noise_std) as f32;
+                *i = (*i / step).round().clamp(-levels, levels) * step;
+            }
+        }
+        currents
     }
 
     /// Ideal (noise-free, drift-free, but quantized) MVM — used by tests
@@ -179,6 +260,51 @@ mod tests {
         let differs = (0..64)
             .any(|_| sa.mvm(&mut rng, &spikes, 0.0, &hw) != first);
         assert!(differs);
+    }
+
+    #[test]
+    fn lane_sliced_mvm_bit_identical_per_lane_with_noise_and_drift() {
+        // Read noise ON and t > 0: proves both the per-lane RNG draw
+        // order and the f32 accumulation order match the solo path.
+        let hw = HardwareConfig::default();
+        let mut rng = Rng::seed_from_u64(40);
+        let (rows, cols) = (100, 36);
+        let weights: Vec<f32> = (0..rows * cols)
+            .map(|i| ((i * 37) % 200) as f32 / 1000.0 - 0.1)
+            .collect();
+        let clip = adc_clip_of(&weights, &hw);
+        let sa = SynapticArray::program_block(&mut rng, &weights, rows,
+                                              cols, 0.1, clip, &hw);
+        for &lanes in &[1usize, 2, 33, 64] {
+            let lane_bools: Vec<Vec<bool>> = (0..lanes)
+                .map(|l| (0..rows).map(|r| (r * 7 + l * 13) % 5 == 0)
+                    .collect())
+                .collect();
+            let mut want = Vec::with_capacity(lanes);
+            for (l, b) in lane_bools.iter().enumerate() {
+                let mut r = Rng::seed_from_u64(500 + l as u64);
+                want.push(sa.mvm(&mut r, &SpikeVector::from_bools(b),
+                                 2.5, &hw));
+            }
+            let mut drive = vec![0u64; rows];
+            for (l, b) in lane_bools.iter().enumerate() {
+                for (r, &on) in b.iter().enumerate() {
+                    if on {
+                        drive[r] |= 1u64 << l;
+                    }
+                }
+            }
+            let mut rngs: Vec<Rng> = (0..lanes)
+                .map(|l| Rng::seed_from_u64(500 + l as u64))
+                .collect();
+            let mut skips = DriveSkips::default();
+            let got = sa.mvm_lanes(&mut rngs, &drive, 2.5, &hw,
+                                   &mut skips);
+            assert_eq!(got, want, "lanes={lanes}");
+            assert_eq!(skips.words, rows as u64);
+            assert_eq!(skips.zero_words,
+                       drive.iter().filter(|&&w| w == 0).count() as u64);
+        }
     }
 
     #[test]

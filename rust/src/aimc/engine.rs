@@ -10,6 +10,7 @@
 
 use std::collections::HashMap;
 
+use crate::aimc::crossbar::DriveSkips;
 use crate::aimc::drift::gdc_alpha;
 use crate::aimc::mapping::MappedMatrix;
 use crate::config::{DriftConfig, HardwareConfig};
@@ -59,6 +60,28 @@ impl AimcEngine {
                            t_seconds: f64) -> Option<SpikeVector> {
         self.layer(name)
             .map(|m| m.mvm_lif(rng, spikes, lif, t_seconds, &self.hw))
+    }
+
+    /// Lane-sliced spiking forward step: one lane-major drive word per
+    /// input feature ([`crate::spike::LaneSlicedMatrix`] row) drives the
+    /// crossbars once for up to 64 lanes
+    /// ([`MappedMatrix::mvm_lanes`]), then each lane's own LIF bank
+    /// integrates its digitized sums. Lane `l`'s output spikes are
+    /// bit-identical to [`Self::forward_spiking`] with `rngs[l]` /
+    /// `lifs[l]` on that lane's unpacked spikes; zero drive words are
+    /// skipped and counted in `skips`.
+    pub fn forward_spiking_lanes(&self, name: &str, rngs: &mut [Rng],
+                                 drive: &[u64], lifs: &mut [LifArray],
+                                 t_seconds: f64, skips: &mut DriveSkips)
+                                 -> Option<Vec<SpikeVector>> {
+        assert_eq!(rngs.len(), lifs.len(), "one LIF bank per lane RNG");
+        self.layer(name).map(|m| {
+            let pre = m.mvm_lanes(rngs, drive, t_seconds, &self.hw, skips);
+            pre.iter()
+                .zip(lifs.iter_mut())
+                .map(|(p, lif)| lif.step(p))
+                .collect()
+        })
     }
 
     /// GDC output scale of one layer at the given drift setting: outputs
@@ -165,6 +188,46 @@ mod tests {
             .expect("known layer");
         assert_eq!(out.len(), 32);
         assert!(e.forward_spiking("nope", &mut rng, &spikes, &mut lif, 0.0)
+            .is_none());
+    }
+
+    #[test]
+    fn forward_spiking_lanes_matches_per_lane_forward() {
+        let hw = HardwareConfig::default();
+        let e = AimcEngine::program(&weights(), &hw, 3);
+        let lanes = 5usize;
+        let lane_bools: Vec<Vec<bool>> = (0..lanes)
+            .map(|l| (0..64).map(|i| (i + l) % 3 == 0).collect())
+            .collect();
+        let mut want = Vec::new();
+        for (l, b) in lane_bools.iter().enumerate() {
+            let mut rng = Rng::seed_from_u64(70 + l as u64);
+            let mut lif = LifArray::new(32);
+            want.push(e.forward_spiking("b.w", &mut rng,
+                                        &SpikeVector::from_bools(b),
+                                        &mut lif, 10.0).unwrap());
+        }
+        let mut drive = vec![0u64; 64];
+        for (l, b) in lane_bools.iter().enumerate() {
+            for (i, &on) in b.iter().enumerate() {
+                if on {
+                    drive[i] |= 1u64 << l;
+                }
+            }
+        }
+        let mut rngs: Vec<Rng> = (0..lanes)
+            .map(|l| Rng::seed_from_u64(70 + l as u64))
+            .collect();
+        let mut lifs: Vec<LifArray> =
+            (0..lanes).map(|_| LifArray::new(32)).collect();
+        let mut skips = DriveSkips::default();
+        let got = e.forward_spiking_lanes("b.w", &mut rngs, &drive,
+                                          &mut lifs, 10.0, &mut skips)
+            .unwrap();
+        assert_eq!(got, want);
+        assert_eq!(skips.words, 64);
+        assert!(e.forward_spiking_lanes("nope", &mut rngs, &drive,
+                                        &mut lifs, 10.0, &mut skips)
             .is_none());
     }
 

@@ -8,11 +8,11 @@
 //! non-binary local sums are accumulated immediately and never buffered —
 //! the paper's key memory-traffic optimization.
 
-use crate::aimc::crossbar::{adc_clip_of, SynapticArray};
+use crate::aimc::crossbar::{adc_clip_of, DriveSkips, SynapticArray};
 use crate::aimc::device::w_max_of;
 use crate::config::HardwareConfig;
 use crate::snn::LifArray;
-use crate::spike::SpikeVector;
+use crate::spike::{SpikeVector, VerticalCounter};
 use crate::util::Rng;
 
 /// A full weight matrix mapped onto a grid of synaptic arrays.
@@ -96,6 +96,40 @@ impl MappedMatrix {
         out
     }
 
+    /// Lane-sliced analog MVM: `drive[i]` is input feature `i`'s spike
+    /// word across up to 64 batch lanes
+    /// ([`crate::spike::LaneSlicedMatrix`] row). Row-block slicing is a
+    /// plain sub-slice of the drive (no bit extraction), each SA visits
+    /// every weight row once for the whole batch
+    /// ([`SynapticArray::mvm_lanes`]), and lane `l`'s output is
+    /// bit-identical to `self.mvm(&mut rngs[l], ..)` on that lane's
+    /// spikes: SAs are visited in the same (row block, col block) order,
+    /// so both the per-lane noise/ADC draw schedule and the f32
+    /// carry-save accumulation order are unchanged.
+    pub fn mvm_lanes(&self, rngs: &mut [Rng], drive: &[u64],
+                     t_seconds: f64, hw: &HardwareConfig,
+                     skips: &mut DriveSkips) -> Vec<Vec<f32>> {
+        assert_eq!(drive.len(), self.d_in,
+                   "drive length {} != d_in {}", drive.len(), self.d_in);
+        let lanes = rngs.len();
+        let xb = hw.crossbar_dim;
+        let mut out = vec![vec![0.0f32; self.d_out]; lanes];
+        for (rb, row) in self.blocks.iter().enumerate() {
+            let lo = rb * xb;
+            let hi = (lo + xb).min(self.d_in);
+            let sub = &drive[lo..hi];
+            for (cb, sa) in row.iter().enumerate() {
+                let local = sa.mvm_lanes(rngs, sub, t_seconds, hw, skips);
+                for (lane_out, lane_local) in out.iter_mut().zip(&local) {
+                    for (c, v) in lane_local.iter().enumerate() {
+                        lane_out[cb * xb + c] += v;
+                    }
+                }
+            }
+        }
+        out
+    }
+
     /// MVM followed by the shared LIF units — one "spiking neuron tile"
     /// step for a token (used by the standalone engine demo and tests).
     /// Packed spikes in, packed spikes out: the whole spiking linear
@@ -132,6 +166,22 @@ impl MappedMatrix {
                 spikes.count_ones_range(lo, hi) as u64 * cb
             })
             .sum()
+    }
+
+    /// Per-lane word-line pulse counts for a lane-sliced drive: the
+    /// row-block ranges partition `0..d_in`, so each lane's pulse count
+    /// is its total drive popcount x column blocks — recovered for all
+    /// lanes in one [`VerticalCounter`] sweep over the drive words
+    /// instead of 64 per-lane range popcounts. `wl_pulses_lanes(..)[l]`
+    /// equals [`Self::wl_pulses`] on lane `l`'s unpacked spikes.
+    pub fn wl_pulses_lanes(&self, drive: &[u64], lanes: usize) -> Vec<u64> {
+        assert_eq!(drive.len(), self.d_in);
+        let cb = self.col_blocks() as u64;
+        let mut vc = VerticalCounter::new();
+        for &w in drive {
+            vc.add_word(w);
+        }
+        (0..lanes).map(|l| vc.count(l) as u64 * cb).collect()
     }
 
     /// Effective (drifted) weights, flattened back to `d_in x d_out`
@@ -243,6 +293,58 @@ mod tests {
         // 100 active rows, each spanning 3 column blocks.
         assert_eq!(m.wl_pulses(&spikes, &hw), 100 * 3);
         assert_eq!(m.wl_pulses(&SpikeVector::zeros(300), &hw), 0);
+    }
+
+    #[test]
+    fn lane_sliced_mapped_mvm_bit_identical_across_blocks() {
+        // Multi-block (3 row blocks x 2 col blocks), odd dims, noise ON:
+        // the sliced path must reproduce each lane's solo mvm, wl-pulse
+        // count and drive-skip accounting exactly.
+        let hw = HardwareConfig::default();
+        let mut rng = Rng::seed_from_u64(14);
+        let (din, dout) = (300, 130);
+        let w = rand_weights(din * dout, 0.05);
+        let m = MappedMatrix::program(&mut rng, &w, din, dout, &hw);
+        for &lanes in &[1usize, 2, 63, 64] {
+            let lane_bools: Vec<Vec<bool>> = (0..lanes)
+                .map(|l| (0..din).map(|i| (i * 11 + l * 3) % 7 == 0)
+                    .collect())
+                .collect();
+            let spikes: Vec<SpikeVector> = lane_bools
+                .iter()
+                .map(|b| SpikeVector::from_bools(b))
+                .collect();
+            let mut want = Vec::with_capacity(lanes);
+            let mut want_pulses = Vec::with_capacity(lanes);
+            for (l, sv) in spikes.iter().enumerate() {
+                let mut r = Rng::seed_from_u64(900 + l as u64);
+                want.push(m.mvm(&mut r, sv, 1.0, &hw));
+                want_pulses.push(m.wl_pulses(sv, &hw));
+            }
+            let mut drive = vec![0u64; din];
+            for (l, b) in lane_bools.iter().enumerate() {
+                for (i, &on) in b.iter().enumerate() {
+                    if on {
+                        drive[i] |= 1u64 << l;
+                    }
+                }
+            }
+            let mut rngs: Vec<Rng> = (0..lanes)
+                .map(|l| Rng::seed_from_u64(900 + l as u64))
+                .collect();
+            let mut skips = DriveSkips::default();
+            let got = m.mvm_lanes(&mut rngs, &drive, 1.0, &hw, &mut skips);
+            assert_eq!(got, want, "lanes={lanes}");
+            assert_eq!(m.wl_pulses_lanes(&drive, lanes), want_pulses);
+            // Every drive word inspected once per col block it spans.
+            assert_eq!(skips.words,
+                       (din * m.col_blocks()) as u64, "lanes={lanes}");
+            let zero_rows =
+                drive.iter().filter(|&&w| w == 0).count() as u64;
+            assert_eq!(skips.zero_words,
+                       zero_rows * m.col_blocks() as u64);
+            assert!(skips.skip_rate() >= 0.0);
+        }
     }
 
     #[test]

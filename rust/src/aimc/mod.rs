@@ -16,6 +16,12 @@
 //!   across synaptic arrays and spiking-neuron tiles (Fig 4);
 //! * [`engine`]  — whole-model weight programming + drift application,
 //!   the bridge into the PJRT runtime.
+//!
+//! The batched hot path is lane-sliced: `mvm_lanes` /
+//! `forward_spiking_lanes` take one lane-major drive word per input
+//! feature so every weight row is read once per MVM and broadcast to up
+//! to 64 batch lanes, with zero drive words skipped (counted in
+//! [`DriveSkips`]).
 
 pub mod crossbar;
 pub mod device;
@@ -23,7 +29,7 @@ pub mod drift;
 pub mod engine;
 pub mod mapping;
 
-pub use crossbar::SynapticArray;
+pub use crossbar::{DriveSkips, SynapticArray};
 pub use device::{DifferentialPair, PcmDevice};
 pub use engine::AimcEngine;
 pub use mapping::MappedMatrix;

@@ -161,6 +161,23 @@ pub fn gpt_native(depth: usize, dim: usize, heads: usize, nt: usize,
     }
 }
 
+/// Which batched-forward kernel [`crate::model::XpikeModel::forward_batch`]
+/// runs. Both are bit-identical per lane (logits, stats attribution,
+/// folded energy) — the equivalence tests in `model/forward.rs` enforce
+/// it — so this is purely a simulator speed/verification switch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BatchKernel {
+    /// The PR 5 oracle: advance lanes one at a time through the packed
+    /// feature-major kernels (one popcount per synapse per lane).
+    LaneLoop,
+    /// Lane-major bit-slicing: pack up to 64 lanes' spikes into one
+    /// word per (t, token, feature) so each weight row read, Q.K AND
+    /// and causal word mask serves the whole chunk, with per-lane
+    /// counts recovered by vertical counters.
+    #[default]
+    LaneSliced,
+}
+
 /// Hardware configuration — paper Table II plus clocking (§VII: 200 MHz).
 #[derive(Debug, Clone)]
 pub struct HardwareConfig {
@@ -196,8 +213,11 @@ pub struct HardwareConfig {
     /// across all lanes (the paper's batch-level array reuse, Fig 6);
     /// chunks of an executable batch run on parallel OS threads.
     /// Simulator scheduling, not a Table-II device parameter; 1 recovers
-    /// one-thread-per-lane.
+    /// one-thread-per-lane. Default 64 — a full lane-sliced word per
+    /// chunk under [`BatchKernel::LaneSliced`].
     pub lane_chunk: usize,
+    /// Which batched-forward kernel to run (bit-identical results).
+    pub batch_kernel: BatchKernel,
 }
 
 impl Default for HardwareConfig {
@@ -217,7 +237,8 @@ impl Default for HardwareConfig {
             nu_std: 0.01,
             t0_seconds: 25.0,
             adc_clip_kappa: 4.0,
-            lane_chunk: 2,
+            lane_chunk: 64,
+            batch_kernel: BatchKernel::default(),
         }
     }
 }
@@ -352,7 +373,9 @@ mod tests {
         assert_eq!(hw.adc_levels(), 15);
         assert_eq!(hw.readout_units(), 16);
         assert_eq!(hw.crossbar_dim, 128);
-        assert!(hw.lane_chunk >= 1, "lane_chunk must stay positive");
+        assert_eq!(hw.lane_chunk, 64,
+                   "default chunk fills one lane-sliced word");
+        assert_eq!(hw.batch_kernel, BatchKernel::LaneSliced);
     }
 
     #[test]

@@ -18,6 +18,11 @@ pub struct AimcEnergy {
     pub accumulation_pj: f64,
     /// DAC/WL-driver input path, from packed bit-line drive activity.
     pub dac_wl_pj: f64,
+    /// Lane-sliced drive words inspected (event counter, not energy);
+    /// zero on the analytical and lane-loop paths.
+    pub drive_words: u64,
+    /// Of those, all-zero words skipped by the event-driven guard.
+    pub zero_drive_words: u64,
 }
 
 impl AimcEnergy {
@@ -37,6 +42,17 @@ impl AimcEnergy {
             periphery_pj: conv * E_PERIPH_CONV,
             accumulation_pj: conv * E_ACCUM_CONV,
             dac_wl_pj: wl_pulses as f64 * E_WL_PULSE,
+            ..AimcEnergy::default()
+        }
+    }
+
+    /// Realized zero-word skip rate of the lane-sliced drive traversal
+    /// (0.0 when the record has no sliced traversal).
+    pub fn drive_skip_rate(&self) -> f64 {
+        if self.drive_words == 0 {
+            0.0
+        } else {
+            self.zero_drive_words as f64 / self.drive_words as f64
         }
     }
 
@@ -47,6 +63,8 @@ impl AimcEnergy {
         self.periphery_pj += o.periphery_pj;
         self.accumulation_pj += o.accumulation_pj;
         self.dac_wl_pj += o.dac_wl_pj;
+        self.drive_words += o.drive_words;
+        self.zero_drive_words += o.zero_drive_words;
     }
 }
 
@@ -59,6 +77,11 @@ pub struct SsaEnergy {
     pub adder_pj: f64,
     pub encoder_pj: f64,
     pub prn_pj: f64,
+    /// Lane-sliced Q.K / score.V words inspected (event counter, not
+    /// energy); zero on the analytical and lane-loop paths.
+    pub sliced_words: u64,
+    /// Of those, all-zero words skipped by the event-driven guard.
+    pub sliced_zero_words: u64,
 }
 
 impl SsaEnergy {
@@ -78,6 +101,18 @@ impl SsaEnergy {
             adder_pj: stats.adder_ops as f64 * E_ADDER_EVAL,
             encoder_pj: stats.encoder_samples as f64 * E_ENCODER,
             prn_pj: stats.prn_bytes as f64 * E_LFSR_BYTE,
+            sliced_words: stats.sliced_words,
+            sliced_zero_words: stats.sliced_zero_words,
+        }
+    }
+
+    /// Realized zero-word skip rate of the lane-sliced Q.K / score.V
+    /// traversal (0.0 when the record has no sliced traversal).
+    pub fn sliced_skip_rate(&self) -> f64 {
+        if self.sliced_words == 0 {
+            0.0
+        } else {
+            self.sliced_zero_words as f64 / self.sliced_words as f64
         }
     }
 
@@ -88,6 +123,8 @@ impl SsaEnergy {
         self.adder_pj += o.adder_pj;
         self.encoder_pj += o.encoder_pj;
         self.prn_pj += o.prn_pj;
+        self.sliced_words += o.sliced_words;
+        self.sliced_zero_words += o.sliced_zero_words;
     }
 }
 
@@ -208,6 +245,7 @@ pub fn xpikeformer_energy(m: &ModelDims, hw: &HardwareConfig)
         dac_wl_pj: t
             * ops::aimc_wl_pulses_per_step(m, hw.crossbar_dim, P_SPIKE)
             * E_WL_PULSE,
+        ..AimcEnergy::default()
     };
     let s = ops::ssa_ops(m, P_SPIKE);
     let ssa = SsaEnergy {
@@ -217,6 +255,7 @@ pub fn xpikeformer_energy(m: &ModelDims, hw: &HardwareConfig)
         adder_pj: s.adder_evals * E_ADDER_EVAL,
         encoder_pj: s.encoder_samples * E_ENCODER,
         prn_pj: s.prn_bytes * E_LFSR_BYTE,
+        ..SsaEnergy::default()
     };
     let other_pj = t
         * (ops::lif_updates_per_step(m) * E_LIF_UPDATE
@@ -385,6 +424,7 @@ mod tests {
             adder_ops: 30,
             encoder_samples: 50,
             prn_bytes: 60,
+            ..SsaStats::default()
         };
         let s = SsaEnergy::from_stats(&stats, 16);
         assert!((s.sac_background_pj - 160.0 * E_SAC_CYCLE).abs() < 1e-12);

@@ -10,8 +10,11 @@
 //!   spike-driven residuals → classification head, end-to-end on packed
 //!   spike tensors with measured per-layer energy accounting. Lane-batched
 //!   (`forward_batch` advances a whole batch in lock-step per weight
-//!   traversal, bit-identical per lane to the serial path) and chunked
-//!   across threads by the default serving backend. `model::decode`
+//!   traversal — by default on the lane-sliced kernel, one drive word
+//!   per feature serving up to 64 lanes — bit-identical per lane to the
+//!   serial path, with the lane-loop kernel kept as the selectable
+//!   equivalence oracle) and chunked across threads by the default
+//!   serving backend. `model::decode`
 //!   adds streaming autoregressive decode for causal models: per-session
 //!   `DecodeState` caching LIF banks, packed K/V spike volumes and
 //!   RNG/LFSR cursors, with `decode_step` bit-identical to the one-shot
@@ -34,10 +37,14 @@
 //! * [`ssa`]          — cycle-level digital simulator of the stochastic
 //!   spiking attention engine: LFSR array, stochastic attention cells,
 //!   N x N tiles with streaming dataflow (paper §IV-B, Algorithm 1).
-//! * [`spike`]        — word-packed spike tensors (`SpikeVector`,
-//!   `SpikeMatrix`, `SpikeVolume`): the 1-bit AND/popcount dataflow
-//!   representation shared by the SSA, SNN and AIMC layers, with
-//!   SIMD-accelerated AND-popcount (AVX2/NEON, scalar fallback).
+//! * [`spike`]        — word-packed spike tensors in two packings:
+//!   feature-major (`SpikeVector`, `SpikeMatrix`, `SpikeVolume` — 64
+//!   features per word, the 1-bit AND/popcount dataflow shared by the
+//!   SSA, SNN and AIMC layers, SIMD AND-popcount with AVX2/NEON and a
+//!   scalar fallback) and lane-major (`LaneSlicedMatrix`,
+//!   `LaneSlicedVolume` — one word holds a (t, token, feature) bit for
+//!   up to 64 batch lanes, with `VerticalCounter` bit-sliced addition),
+//!   plus bit-exact transposes between them for the batched kernels.
 //! * [`snn`]          — spike coding + LIF reference models shared by the
 //!   simulators and tests.
 //! * [`energy`]       — analytical 45 nm energy/latency/area models (the

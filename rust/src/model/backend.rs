@@ -3,12 +3,15 @@
 //! seam, with a rolling per-layer energy accumulator.
 //!
 //! Lanes are split into chunks of [`HardwareConfig::lane_chunk`]
-//! (`crate::config`): within a chunk the crossbar stages advance all
-//! lanes in lock-step against one weight traversal (the hardware's
-//! batch-level array reuse) and the SSA engine tiles across
-//! (lane, head); chunks run on scoped OS threads, so the simulator's
-//! wall-clock still mirrors the hardware's batch parallelism. Chunking
-//! never changes results: every lane is bit-identical to a serial
+//! (`crate::config`; default 64 — one full lane-sliced word per chunk):
+//! within a chunk the crossbar stages advance all lanes in lock-step
+//! against one weight traversal (the hardware's batch-level array
+//! reuse) and the SSA engine tiles across (lane, head) — under the
+//! default [`crate::config::BatchKernel::LaneSliced`] kernel one word
+//! op serves the whole chunk; chunks run on scoped OS threads, so the
+//! simulator's wall-clock still mirrors the hardware's batch
+//! parallelism. Neither chunking nor the kernel choice ever changes
+//! results: every lane is bit-identical to a serial
 //! [`XpikeModel::forward`] with that lane's seed.
 //!
 //! Seeds: [`InferenceBackend::run`] derives lane seeds from the one
@@ -250,6 +253,26 @@ mod tests {
             let got = backend_with_chunk(5, chunk).run(&x, 9).unwrap();
             assert_eq!(got, reference, "lane_chunk={chunk}");
         }
+    }
+
+    #[test]
+    fn batch_kernel_never_changes_backend_outputs() {
+        // Default (lane-sliced) backend vs an explicit lane-loop
+        // backend: same logits and same accumulated energy totals.
+        let dims = vit_native(1, 32, 2, 2);
+        let hw_loop = HardwareConfig {
+            batch_kernel: crate::config::BatchKernel::LaneLoop,
+            ..HardwareConfig::default()
+        };
+        let sliced =
+            NativeBackend::new(XpikeModel::new(&dims, &HardwareConfig::default(), 5), 3);
+        let looped =
+            NativeBackend::new(XpikeModel::new(&dims, &hw_loop, 5), 3);
+        let x = inputs(&sliced, 3, 6);
+        let a = sliced.run_seeded(&x, &[11, 22, 33]).unwrap();
+        let b = looped.run_seeded(&x, &[11, 22, 33]).unwrap();
+        assert_eq!(a, b, "kernel choice must not change logits");
+        assert_eq!(sliced.energy().total_pj(), looped.energy().total_pj());
     }
 
     #[test]

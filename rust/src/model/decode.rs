@@ -647,6 +647,41 @@ mod tests {
     }
 
     #[test]
+    fn decode_path_unchanged_by_batch_kernel() {
+        // The decode path is serial and never touches the lane-sliced
+        // kernel: `begin_decode`/`decode_step` must produce bit-identical
+        // streams whether the model's `batch_kernel` selects the sliced
+        // default or the lane-loop oracle, and both streams must still
+        // match the one-shot forward.
+        use crate::config::BatchKernel;
+        let dims = odd_gpt(2);
+        let hw_sliced = HardwareConfig::default();
+        assert_eq!(hw_sliced.batch_kernel, BatchKernel::LaneSliced);
+        let hw_loop = HardwareConfig {
+            batch_kernel: BatchKernel::LaneLoop,
+            ..HardwareConfig::default()
+        };
+        let a = XpikeModel::new(&dims, &hw_sliced, 29);
+        let b = XpikeModel::new(&dims, &hw_loop, 29);
+        let x = sample(&a, 13);
+        let seed = 4242u64;
+        let (want, want_e) = a.forward(&x, seed).unwrap();
+        let mut sa = a.begin_decode(1, &[seed]).unwrap();
+        let mut sb = b.begin_decode(1, &[seed]).unwrap();
+        let mut last = Vec::new();
+        for m in 0..dims.n_tokens {
+            let tok = &x[m * dims.in_feat..(m + 1) * dims.in_feat];
+            let la = a.decode_step(&mut sa, tok).unwrap();
+            let lb = b.decode_step(&mut sb, tok).unwrap();
+            assert_eq!(la, lb, "step {m}: kernel choice leaked into decode");
+            last = la;
+        }
+        assert_eq!(last, want, "decode drifted from one-shot forward");
+        assert_energy_identical(&sa.energy(), &want_e);
+        assert_energy_identical(&sb.energy(), &want_e);
+    }
+
+    #[test]
     fn begin_decode_rejects_bad_configs() {
         let vit = XpikeModel::new(&vit_native(1, 64, 2, 2),
                                   &HardwareConfig::default(), 1);

@@ -27,26 +27,50 @@
 //! **bit-identical** to a serial [`XpikeModel::forward`] call with the
 //! same seed (the equivalence test below enforces it).
 //! [`XpikeModel::forward`] is a thin `lanes = 1` wrapper.
+//!
+//! Two batched kernels implement that contract
+//! ([`crate::config::BatchKernel`]): the default **lane-sliced** kernel
+//! packs up to 64 lanes' spike bits into one word per (t, token,
+//! feature) so each crossbar row read, SSA AND and causal mask serves
+//! the whole slab (per-lane counts via vertical counters, zero drive
+//! words skipped), while the PR 5 **lane-loop** kernel advances lanes
+//! one at a time and stays in the tree as the equivalence oracle.
 
 use anyhow::{ensure, Result};
 
-use crate::aimc::{AimcEngine, MappedMatrix};
-use crate::config::{DriftConfig, HardwareConfig, ModelDims, ModelKind};
+use crate::aimc::{AimcEngine, DriveSkips, MappedMatrix};
+use crate::config::{BatchKernel, DriftConfig, HardwareConfig, ModelDims,
+                    ModelKind};
 use crate::energy::constants::{E_LIF_UPDATE, E_RESIDUAL_EL};
 use crate::energy::{AimcEnergy, LayerEnergy, ModelEnergy, SsaEnergy};
 use crate::model::params::ModelParams;
 use crate::snn::{rate_encode_row, LifArray};
-use crate::spike::{SpikeVector, SpikeVolume};
-use crate::ssa::{run_mhsa_lanes, HeadQkv, SsaEngine};
+use crate::spike::{LaneSlicedVolume, SpikeVector, SpikeVolume};
+use crate::ssa::{run_mhsa_lanes, run_mhsa_sliced, HeadQkv, SlicedHeadQkv,
+                 SsaEngine};
 use crate::util::Rng;
 
 /// Rolling AIMC event counters for one pipeline stage (per lane).
 /// Shared with [`crate::model::decode`], which accumulates the same
-/// counters token-by-token.
+/// counters token-by-token. The drive-word counters record the
+/// lane-sliced kernel's shared zero-word skip accounting (copied
+/// identically into every lane of a slab; zero on the lane-loop and
+/// decode paths) and are excluded from the kernel-equivalence contract.
 #[derive(Default, Clone)]
 pub(crate) struct AimcCounts {
     pub(crate) conversions: u64,
     pub(crate) wl_pulses: u64,
+    pub(crate) drive_words: u64,
+    pub(crate) zero_drive_words: u64,
+}
+
+/// Measured AIMC layer energy from one lane's counters, with the skip
+/// diagnostics carried along (they are event counts, not energy).
+fn aimc_energy(c: &AimcCounts) -> AimcEnergy {
+    let mut e = AimcEnergy::from_counts(c.conversions, c.wl_pulses);
+    e.drive_words = c.drive_words;
+    e.zero_drive_words = c.zero_drive_words;
+    e
 }
 
 /// One spiking linear layer bound to its crossbar mapping + GDC scale.
@@ -79,6 +103,47 @@ impl Stage<'_> {
                        -> SpikeVector {
         let pre = self.mvm(rng, spikes, t_seconds, hw, counts);
         lif.step(&pre)
+    }
+
+    /// Lane-sliced crossbar MVM (+GDC) for one token across a whole
+    /// slab: `drive[i]` holds feature `i`'s spike bit for every lane.
+    /// Per-lane event attribution matches [`Self::mvm`] exactly
+    /// (conversions by formula, WL pulses via the vertical counter);
+    /// the shared drive/zero-word counts are copied into each lane.
+    pub(crate) fn mvm_lanes(&self, rngs: &mut [Rng], drive: &[u64],
+                            t_seconds: f64, hw: &HardwareConfig,
+                            counts: &mut [AimcCounts]) -> Vec<Vec<f32>> {
+        let pulses = self.matrix.wl_pulses_lanes(drive, rngs.len());
+        let mut skips = DriveSkips::default();
+        let mut pre =
+            self.matrix.mvm_lanes(rngs, drive, t_seconds, hw, &mut skips);
+        for ((c, p), lane_pre) in
+            counts.iter_mut().zip(pulses).zip(pre.iter_mut())
+        {
+            c.conversions += self.matrix.conversions_per_mvm();
+            c.wl_pulses += p;
+            c.drive_words += skips.words;
+            c.zero_drive_words += skips.zero_words;
+            if self.alpha != 1.0 {
+                for v in lane_pre.iter_mut() {
+                    *v /= self.alpha;
+                }
+            }
+        }
+        pre
+    }
+
+    /// Lane-sliced MVM followed by each lane's own LIF bank.
+    pub(crate) fn step_lanes(&self, rngs: &mut [Rng], drive: &[u64],
+                             lifs: &mut [LifArray], t_seconds: f64,
+                             hw: &HardwareConfig,
+                             counts: &mut [AimcCounts])
+                             -> Vec<SpikeVector> {
+        let pre = self.mvm_lanes(rngs, drive, t_seconds, hw, counts);
+        pre.iter()
+            .zip(lifs.iter_mut())
+            .map(|(p, lif)| lif.step(p))
+            .collect()
     }
 }
 
@@ -188,13 +253,12 @@ impl XpikeModel {
     /// logits `[lanes, t_max, classes]` plus the per-layer energy summed
     /// over all lanes (`inferences == lanes`). Each lane's logits and
     /// energy contribution are bit-identical to a serial
-    /// [`Self::forward`] call with `(xs[lane], seeds[lane])`.
+    /// [`Self::forward`] call with `(xs[lane], seeds[lane])`, under
+    /// either [`BatchKernel`] — the kernel choice in
+    /// `self.hw.batch_kernel` changes simulator speed only.
     pub fn forward_batch(&self, xs: &[f32], lanes: usize, seeds: &[u64])
                          -> Result<(Vec<f32>, ModelEnergy)> {
         let d = &self.dims;
-        let (n, dim, t_max) = (d.n_tokens, d.dim, d.t_steps);
-        let (heads, dh, hidden) = (d.heads, d.d_head(), d.hidden());
-        let classes = d.classes;
         let sl = self.sample_len();
         ensure!(lanes > 0, "lanes must be positive");
         ensure!(seeds.len() == lanes, "got {} seeds for {lanes} lanes",
@@ -202,7 +266,54 @@ impl XpikeModel {
         ensure!(xs.len() == lanes * sl,
                 "input length {} != {lanes} lanes x {sl} \
                  (n_tokens x in_feat)", xs.len());
-        ensure!(dim % heads == 0, "dim {dim} not divisible by {heads} heads");
+        ensure!(d.dim % d.heads == 0, "dim {} not divisible by {} heads",
+                d.dim, d.heads);
+        let (logits, lane_layers) = match self.hw.batch_kernel {
+            BatchKernel::LaneLoop => {
+                self.forward_lane_loop(xs, lanes, seeds)
+            }
+            BatchKernel::LaneSliced => {
+                // A lane-sliced word holds <=64 lanes; bigger batches run
+                // as consecutive slabs. Per-lane RNG/LFSR streams are
+                // private, so slab boundaries cannot change any lane's
+                // draws — only the energy fold order matters, and that
+                // stays per-lane in global order below.
+                let mut logits =
+                    Vec::with_capacity(lanes * d.t_steps * d.classes);
+                let mut layers = Vec::with_capacity(lanes);
+                for start in (0..lanes).step_by(64) {
+                    let end = (start + 64).min(lanes);
+                    let (lg, ll) = self.forward_slab_sliced(
+                        &xs[start * sl..end * sl], end - start,
+                        &seeds[start..end]);
+                    logits.extend_from_slice(&lg);
+                    layers.extend(ll);
+                }
+                (logits, layers)
+            }
+        };
+        // Fold per-lane breakdowns exactly the way the serving backend
+        // accumulates serial forwards — per lane in global lane order,
+        // never per slab — so batched energy == serial energy to the
+        // last f64 bit under either kernel.
+        let mut energy = ModelEnergy::default();
+        for layers in lane_layers {
+            energy.add(&ModelEnergy { layers, inferences: 1 });
+        }
+        Ok((logits, energy))
+    }
+
+    /// The PR 5 lane-loop kernel ([`BatchKernel::LaneLoop`]): lanes
+    /// advanced one at a time through the feature-major spike kernels
+    /// (one popcount per synapse per lane). Kept as the equivalence
+    /// oracle for [`Self::forward_slab_sliced`].
+    fn forward_lane_loop(&self, xs: &[f32], lanes: usize, seeds: &[u64])
+                         -> (Vec<f32>, Vec<Vec<LayerEnergy>>) {
+        let d = &self.dims;
+        let (n, dim, t_max) = (d.n_tokens, d.dim, d.t_steps);
+        let (heads, dh, hidden) = (d.heads, d.d_head(), d.hidden());
+        let classes = d.classes;
+        let sl = self.sample_len();
         let mut rngs: Vec<Rng> =
             seeds.iter().map(|&s| Rng::seed_from_u64(s)).collect();
         let t_sec = self.drift.t_seconds;
@@ -238,7 +349,7 @@ impl XpikeModel {
         for (layers, c) in lane_layers.iter_mut().zip(&counts) {
             layers.push(LayerEnergy {
                 name: "embed".into(),
-                aimc: AimcEnergy::from_counts(c.conversions, c.wl_pulses),
+                aimc: aimc_energy(c),
                 ssa: SsaEnergy::default(),
                 lif_pj: (t_max * n * dim) as f64 * E_LIF_UPDATE,
                 residual_pj: 0.0,
@@ -380,8 +491,7 @@ impl XpikeModel {
             {
                 layers.push(LayerEnergy {
                     name: format!("blk{b}"),
-                    aimc: AimcEnergy::from_counts(c.conversions,
-                                                  c.wl_pulses),
+                    aimc: aimc_energy(c),
                     ssa: SsaEnergy::from_stats(stats,
                                                (heads * n * n) as u64),
                     lif_pj: (t_max * n * (5 * dim + hidden)) as f64
@@ -435,20 +545,264 @@ impl XpikeModel {
         for (layers, c) in lane_layers.iter_mut().zip(&counts) {
             layers.push(LayerEnergy {
                 name: "head".into(),
-                aimc: AimcEnergy::from_counts(c.conversions, c.wl_pulses),
+                aimc: aimc_energy(c),
                 ssa: SsaEnergy::default(),
                 lif_pj: 0.0,
                 residual_pj: 0.0,
             });
         }
+        (logits, lane_layers)
+    }
 
-        // Fold per-lane breakdowns exactly the way the serving backend
-        // accumulates serial forwards, so batched == serial energy.
-        let mut energy = ModelEnergy::default();
-        for layers in lane_layers {
-            energy.add(&ModelEnergy { layers, inferences: 1 });
+    /// The lane-sliced kernel ([`BatchKernel::LaneSliced`]) for one slab
+    /// of `lanes <= 64`: every spike tensor between the rate encoders
+    /// and the head readout is lane-major ([`LaneSlicedVolume`]), so
+    /// each crossbar weight row is read once per (t, token) and
+    /// broadcast to every driving lane, each SSA Q.K / score.V AND and
+    /// causal word mask serves the whole slab, and per-lane counts are
+    /// recovered by vertical counters. Per-lane RNG/LFSR streams are
+    /// consumed in the serial order, so each lane stays bit-identical to
+    /// the lane-loop oracle in logits, stats attribution and folded
+    /// energy; the zero-word skip counters are the only sliced-path
+    /// extra and are excluded from that contract.
+    fn forward_slab_sliced(&self, xs: &[f32], lanes: usize, seeds: &[u64])
+                           -> (Vec<f32>, Vec<Vec<LayerEnergy>>) {
+        debug_assert!((1..=64).contains(&lanes));
+        let d = &self.dims;
+        let (n, dim, t_max) = (d.n_tokens, d.dim, d.t_steps);
+        let (heads, dh, hidden) = (d.heads, d.d_head(), d.hidden());
+        let classes = d.classes;
+        let sl = self.sample_len();
+        let mut rngs: Vec<Rng> =
+            seeds.iter().map(|&s| Rng::seed_from_u64(s)).collect();
+        let t_sec = self.drift.t_seconds;
+        let hw = &self.hw;
+        let mut lane_layers: Vec<Vec<LayerEnergy>> =
+            (0..lanes).map(|_| Vec::with_capacity(d.depth + 2)).collect();
+
+        // -- Spike encoding + AIMC patch embedding ------------------------
+        // One drive word per input feature: each lane rate-encodes from
+        // its own stream (serial draw order), the packed word drives the
+        // embedding crossbars once for the whole slab.
+        let embed = self.stage("embed");
+        let mut embed_lifs: Vec<Vec<LifArray>> =
+            (0..n).map(|_| vec![LifArray::new(dim); lanes]).collect();
+        let mut counts: Vec<AimcCounts> =
+            (0..lanes).map(|_| AimcCounts::default()).collect();
+        let mut cur = LaneSlicedVolume::zeros(t_max, n, dim, lanes);
+        let mut drive = vec![0u64; d.in_feat];
+        for t in 0..t_max {
+            for tok in 0..n {
+                drive.fill(0);
+                for (lane, rng) in rngs.iter_mut().enumerate() {
+                    let x = &xs[lane * sl..(lane + 1) * sl];
+                    let feats = &x[tok * d.in_feat..(tok + 1) * d.in_feat];
+                    let enc = rate_encode_row(rng, feats);
+                    enc.for_each_set(|i| drive[i] |= 1u64 << lane);
+                }
+                let sps = embed.step_lanes(&mut rngs, &drive,
+                                           &mut embed_lifs[tok], t_sec,
+                                           hw, &mut counts);
+                let step = cur.step_mut(t);
+                for (lane, sp) in sps.iter().enumerate() {
+                    step.or_row(tok, lane, sp);
+                }
+            }
         }
-        Ok((logits, energy))
+        for (layers, c) in lane_layers.iter_mut().zip(&counts) {
+            layers.push(LayerEnergy {
+                name: "embed".into(),
+                aimc: aimc_energy(c),
+                ssa: SsaEnergy::default(),
+                lif_pj: (t_max * n * dim) as f64 * E_LIF_UPDATE,
+                residual_pj: 0.0,
+            });
+        }
+
+        // -- Encoder blocks ----------------------------------------------
+        for b in 0..d.depth {
+            let wq = self.stage(&format!("blk{b}.wq"));
+            let wk = self.stage(&format!("blk{b}.wk"));
+            let wv = self.stage(&format!("blk{b}.wv"));
+            let wo = self.stage(&format!("blk{b}.wo"));
+            let w1 = self.stage(&format!("blk{b}.w1"));
+            let w2 = self.stage(&format!("blk{b}.w2"));
+            let mut counts: Vec<AimcCounts> =
+                (0..lanes).map(|_| AimcCounts::default()).collect();
+            // Q/K/V stay lane-sliced straight through to the SSA tiles:
+            // the block-input row *is* the drive word slice, and the
+            // per-head split ORs lane bits into `[heads][t, n, d_k]`
+            // lane-sliced volumes.
+            let mut qkv: Vec<SlicedHeadQkv> = (0..heads)
+                .map(|_| {
+                    (LaneSlicedVolume::zeros(t_max, n, dh, lanes),
+                     LaneSlicedVolume::zeros(t_max, n, dh, lanes),
+                     LaneSlicedVolume::zeros(t_max, n, dh, lanes))
+                })
+                .collect();
+            let mut qkv_lifs: Vec<Vec<Vec<LifArray>>> = (0..3)
+                .map(|_| {
+                    (0..n).map(|_| vec![LifArray::new(dim); lanes])
+                        .collect()
+                })
+                .collect();
+            for t in 0..t_max {
+                for tok in 0..n {
+                    for (which, stage) in
+                        [&wq, &wk, &wv].into_iter().enumerate()
+                    {
+                        let sps = stage.step_lanes(
+                            &mut rngs, cur.step(t).row(tok),
+                            &mut qkv_lifs[which][tok], t_sec, hw,
+                            &mut counts);
+                        for (lane, sp) in sps.iter().enumerate() {
+                            let bit = 1u64 << lane;
+                            sp.for_each_set(|i| {
+                                let (h, c) = (i / dh, i % dh);
+                                let vol = match which {
+                                    0 => &mut qkv[h].0,
+                                    1 => &mut qkv[h].1,
+                                    _ => &mut qkv[h].2,
+                                };
+                                vol.step_mut(t).row_mut(tok)[c] |= bit;
+                            });
+                        }
+                    }
+                }
+            }
+            // Multi-head SSA, lane-sliced: tiles thread per head, each
+            // advancing the whole slab per op; per-lane LFSR seeds match
+            // the lane-loop engines exactly.
+            let engine_seeds: Vec<u32> = seeds
+                .iter()
+                .map(|&s| (s as u32) ^ (0x51CA_D0 + b as u32))
+                .collect();
+            let (head_outs, lane_stats) = run_mhsa_sliced(
+                heads, n, dh, self.causal, &engine_seeds, &qkv);
+            // Concatenate heads back to dim-wide rows: whole lane words
+            // copy at once (one OR serves the slab).
+            let mut attn = LaneSlicedVolume::zeros(t_max, n, dim, lanes);
+            for (h, vol) in head_outs.iter().enumerate() {
+                for t in 0..t_max {
+                    let src = vol.step(t);
+                    let dst = attn.step_mut(t);
+                    for tok in 0..n {
+                        let row = dst.row_mut(tok);
+                        for c in 0..dh {
+                            row[h * dh + c] |= src.word(tok, c);
+                        }
+                    }
+                }
+            }
+            // Output projection + residual + FFN + residual. Residual
+            // ORs act on lane words; per-lane rng order stays wo, w1,
+            // w2, as in the oracle.
+            let mut wo_lifs: Vec<Vec<LifArray>> =
+                (0..n).map(|_| vec![LifArray::new(dim); lanes]).collect();
+            let mut w1_lifs: Vec<Vec<LifArray>> = (0..n)
+                .map(|_| vec![LifArray::new(hidden); lanes])
+                .collect();
+            let mut w2_lifs: Vec<Vec<LifArray>> =
+                (0..n).map(|_| vec![LifArray::new(dim); lanes]).collect();
+            let mut blk_out = LaneSlicedVolume::zeros(t_max, n, dim, lanes);
+            let mut h_drive = vec![0u64; hidden];
+            for t in 0..t_max {
+                for tok in 0..n {
+                    let o_sps = wo.step_lanes(&mut rngs,
+                                              attn.step(t).row(tok),
+                                              &mut wo_lifs[tok], t_sec,
+                                              hw, &mut counts);
+                    // r1 = wo out OR block input (spike-driven residual).
+                    let mut r1 = cur.step(t).row(tok).to_vec();
+                    for (lane, sp) in o_sps.iter().enumerate() {
+                        let bit = 1u64 << lane;
+                        sp.for_each_set(|i| r1[i] |= bit);
+                    }
+                    let h_sps = w1.step_lanes(&mut rngs, &r1,
+                                              &mut w1_lifs[tok], t_sec,
+                                              hw, &mut counts);
+                    h_drive.fill(0);
+                    for (lane, sp) in h_sps.iter().enumerate() {
+                        let bit = 1u64 << lane;
+                        sp.for_each_set(|i| h_drive[i] |= bit);
+                    }
+                    let f_sps = w2.step_lanes(&mut rngs, &h_drive,
+                                              &mut w2_lifs[tok], t_sec,
+                                              hw, &mut counts);
+                    // r2 = FFN out OR r1, stored as the block output.
+                    let row = blk_out.step_mut(t).row_mut(tok);
+                    row.copy_from_slice(&r1);
+                    for (lane, sp) in f_sps.iter().enumerate() {
+                        let bit = 1u64 << lane;
+                        sp.for_each_set(|i| row[i] |= bit);
+                    }
+                }
+            }
+            cur = blk_out;
+            for ((layers, c), stats) in
+                lane_layers.iter_mut().zip(&counts).zip(&lane_stats)
+            {
+                layers.push(LayerEnergy {
+                    name: format!("blk{b}"),
+                    aimc: aimc_energy(c),
+                    ssa: SsaEnergy::from_stats(stats,
+                                               (heads * n * n) as u64),
+                    lif_pj: (t_max * n * (5 * dim + hidden)) as f64
+                        * E_LIF_UPDATE,
+                    residual_pj: (2 * t_max * n * dim) as f64
+                        * E_RESIDUAL_EL,
+                });
+            }
+        }
+
+        // -- Classification head (analog readout per step) ---------------
+        // Same readout semantics as the oracle: causal models read the
+        // query token only, ViT averages tokens in f64 per lane.
+        let head = self.stage("head");
+        let mut counts: Vec<AimcCounts> =
+            (0..lanes).map(|_| AimcCounts::default()).collect();
+        let mut logits = vec![0.0f32; lanes * t_max * classes];
+        for t in 0..t_max {
+            if self.causal {
+                let outs = head.mvm_lanes(&mut rngs,
+                                          cur.step(t).row(n - 1), t_sec,
+                                          hw, &mut counts);
+                for (lane, out) in outs.iter().enumerate() {
+                    let off = (lane * t_max + t) * classes;
+                    logits[off..off + classes].copy_from_slice(out);
+                }
+            } else {
+                let mut accs = vec![vec![0.0f64; classes]; lanes];
+                for tok in 0..n {
+                    let outs = head.mvm_lanes(&mut rngs,
+                                              cur.step(t).row(tok), t_sec,
+                                              hw, &mut counts);
+                    for (acc, out) in accs.iter_mut().zip(&outs) {
+                        for (a, v) in acc.iter_mut().zip(out) {
+                            *a += *v as f64;
+                        }
+                    }
+                }
+                for (lane, acc) in accs.iter().enumerate() {
+                    let off = (lane * t_max + t) * classes;
+                    for (dst, &a) in
+                        logits[off..off + classes].iter_mut().zip(acc)
+                    {
+                        *dst = (a / n as f64) as f32;
+                    }
+                }
+            }
+        }
+        for (layers, c) in lane_layers.iter_mut().zip(&counts) {
+            layers.push(LayerEnergy {
+                name: "head".into(),
+                aimc: aimc_energy(c),
+                ssa: SsaEnergy::default(),
+                lif_pj: 0.0,
+                residual_pj: 0.0,
+            });
+        }
+        (logits, lane_layers)
     }
 }
 
@@ -509,6 +863,59 @@ mod tests {
             }
             assert_eq!(be.total_pj(), serial_energy.total_pj(),
                        "{} energy must fold identically", dims.name);
+        }
+    }
+
+    #[test]
+    fn lane_sliced_kernel_bit_identical_to_lane_loop_oracle() {
+        // The tentpole acceptance sweep: the default lane-sliced kernel
+        // against the lane-loop oracle at 1 / 63 / 64 / 65 lanes (65
+        // crosses a slab boundary), plus a causal model and an
+        // odd-feature-width model at the small counts. Logits, folded
+        // energy, per-layer attribution and inferences must all match;
+        // the skip counters are the only sliced-path extra.
+        let hw_sliced = HardwareConfig::default();
+        assert_eq!(hw_sliced.batch_kernel, BatchKernel::LaneSliced);
+        let hw_loop = HardwareConfig { batch_kernel: BatchKernel::LaneLoop,
+                                       ..HardwareConfig::default() };
+        for (dims, lane_counts) in [
+            (vit_native(1, 32, 2, 2), vec![1usize, 63, 64, 65]),
+            (gpt_native(1, 32, 2, 2, 2, 2), vec![2usize, 65]),
+            // Odd feature widths: dim 20, d_head 20, hidden 40.
+            (vit_native(1, 20, 1, 2), vec![1usize, 2]),
+        ] {
+            let sliced = XpikeModel::new(&dims, &hw_sliced, 23);
+            let looped = XpikeModel::new(&dims, &hw_loop, 23);
+            for lanes in lane_counts {
+                let seeds: Vec<u64> =
+                    (0..lanes as u64).map(|l| 1000 + 7 * l).collect();
+                let xs: Vec<f32> = (0..lanes)
+                    .flat_map(|l| sample(&sliced, 200 + l as u64))
+                    .collect();
+                let (gl, ge) =
+                    sliced.forward_batch(&xs, lanes, &seeds).unwrap();
+                let (wl, we) =
+                    looped.forward_batch(&xs, lanes, &seeds).unwrap();
+                assert_eq!(gl, wl, "{} lanes={lanes} logits", dims.name);
+                assert_eq!(ge.total_pj(), we.total_pj(),
+                           "{} lanes={lanes} folded energy", dims.name);
+                assert_eq!(ge.inferences, we.inferences);
+                for (g, w) in ge.layers.iter().zip(&we.layers) {
+                    assert_eq!(g.name, w.name);
+                    assert_eq!(g.aimc.total_pj(), w.aimc.total_pj(),
+                               "{} aimc attribution", g.name);
+                    assert_eq!(g.ssa.total_pj(), w.ssa.total_pj(),
+                               "{} ssa attribution", g.name);
+                }
+                // Skip-rate accounting exists only on the sliced path.
+                let drive_words: u64 = ge.layers.iter()
+                    .map(|l| l.aimc.drive_words).sum();
+                assert!(drive_words > 0, "sliced path counts drive words");
+                assert_eq!(we.layers.iter()
+                    .map(|l| l.aimc.drive_words).sum::<u64>(), 0);
+                assert!(ge.layers.iter()
+                    .any(|l| l.ssa.sliced_words > 0));
+            }
         }
     }
 

@@ -1,0 +1,576 @@
+//! Lane-major bit-sliced spike tensors: the *batch* dimension packed
+//! into the bit dimension.
+//!
+//! The sibling types in [`super`] pack the **feature** axis 64-per-word:
+//! one `u64` holds 64 features of one lane (request). That is the right
+//! layout for a single inference, where `and_popcount` is the 1-bit dot
+//! product. But a batched forward re-walks every weight row once per
+//! lane, so the packed inner loops still do batch-size-many popcounts
+//! per synapse.
+//!
+//! This module transposes the packing: one `u64` holds the *same*
+//! (t, token, feature) spike bit for up to 64 **lanes**. A single
+//! bitwise op on such a word then serves 64 co-batched requests —
+//! one AND evaluates a synapse for the whole batch, one weight-row
+//! visit broadcasts its contribution to every lane, and one causal
+//! word-mask clears an attention score for all lanes at once. Per-lane
+//! integer counts (Q.K popcounts, WL-pulse totals) are recovered
+//! without any per-lane popcount via [`VerticalCounter`] — bit-sliced
+//! ripple-carry addition over the lane words.
+//!
+//! When each packing wins:
+//!
+//! * feature-major ([`SpikeVector`]/[`SpikeMatrix`]/[`SpikeVolume`]) —
+//!   single-lane forward / decode, and any op that reduces over the
+//!   feature axis for one request (`and_popcount`, `extract`);
+//! * lane-major ([`LaneSlicedMatrix`]/[`LaneSlicedVolume`]) — batched
+//!   forward with many co-resident lanes, where weight traversal and
+//!   comparator work would otherwise scale with the batch size.
+//!
+//! Invariant (mirrors the pad-bit rule of the feature-major types):
+//! lane bits at index `>= lanes` in every word are always zero, so
+//! whole-word OR/AND and the vertical counters never see garbage.
+
+use super::{SpikeMatrix, SpikeVector, SpikeVolume};
+
+/// A `rows x cols` spike matrix for up to 64 lanes at once: word
+/// `(r, c)` holds bit `l` = lane `l`'s spike at `(r, c)`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LaneSlicedMatrix {
+    rows: usize,
+    cols: usize,
+    lanes: usize,
+    /// `rows * cols` lane words, row-major (`r * cols + c`).
+    words: Vec<u64>,
+}
+
+impl LaneSlicedMatrix {
+    /// All-zero `rows x cols` slice for `lanes` lanes (`1..=64`).
+    pub fn zeros(rows: usize, cols: usize, lanes: usize) -> Self {
+        assert!((1..=64).contains(&lanes),
+                "lane-sliced words hold 1..=64 lanes, got {lanes}");
+        LaneSlicedMatrix { rows, cols, lanes, words: vec![0; rows * cols] }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Number of lanes packed per word (`1..=64`).
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Mask of the valid lane bits (`lanes` low bits set).
+    #[inline]
+    pub fn lane_mask(&self) -> u64 {
+        lane_mask(self.lanes)
+    }
+
+    /// The lane word at `(r, c)`: bit `l` is lane `l`'s spike.
+    #[inline]
+    pub fn word(&self, r: usize, c: usize) -> u64 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.words[r * self.cols + c]
+    }
+
+    /// Row `r` as a slice of `cols` lane words.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[u64] {
+        &self.words[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [u64] {
+        &mut self.words[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Overwrite the lane word at `(r, c)` (caller keeps the pad-lane
+    /// invariant: bits `>= lanes` must be zero).
+    #[inline]
+    pub fn set_word(&mut self, r: usize, c: usize, w: u64) {
+        debug_assert!(r < self.rows && c < self.cols);
+        debug_assert_eq!(w & !self.lane_mask(), 0,
+                         "pad lanes must stay zero");
+        self.words[r * self.cols + c] = w;
+    }
+
+    /// Lane `l`'s spike at `(r, c)`.
+    #[inline]
+    pub fn get(&self, r: usize, c: usize, lane: usize) -> bool {
+        debug_assert!(lane < self.lanes);
+        (self.word(r, c) >> lane) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, lane: usize, b: bool) {
+        debug_assert!(r < self.rows && c < self.cols && lane < self.lanes);
+        let w = &mut self.words[r * self.cols + c];
+        if b {
+            *w |= 1u64 << lane;
+        } else {
+            *w &= !(1u64 << lane);
+        }
+    }
+
+    /// Build from one equally-shaped feature-major matrix per lane
+    /// (event-driven: only set bits are visited).
+    pub fn from_lanes(mats: &[&SpikeMatrix]) -> Self {
+        let lanes = mats.len();
+        let rows = mats.first().map_or(0, |m| m.rows());
+        let cols = mats.first().map_or(0, |m| m.cols());
+        let mut out = LaneSlicedMatrix::zeros(rows, cols, lanes);
+        for (l, m) in mats.iter().enumerate() {
+            assert!(m.rows() == rows && m.cols() == cols,
+                    "lane {l} shape {}x{} != {rows}x{cols}",
+                    m.rows(), m.cols());
+            out.or_lane(l, m);
+        }
+        out
+    }
+
+    /// OR lane `l`'s bits in from a feature-major matrix of matching
+    /// shape (the transpose inner loop, exposed for incremental fills).
+    pub fn or_lane(&mut self, lane: usize, m: &SpikeMatrix) {
+        assert!(lane < self.lanes, "lane {lane} >= {}", self.lanes);
+        assert!(m.rows() == self.rows && m.cols() == self.cols,
+                "shape mismatch");
+        let bit = 1u64 << lane;
+        for r in 0..self.rows {
+            let dst = &mut self.words[r * self.cols..(r + 1) * self.cols];
+            for (wi, &word) in m.row(r).iter().enumerate() {
+                let mut bits = word;
+                while bits != 0 {
+                    let c = wi * 64 + bits.trailing_zeros() as usize;
+                    bits &= bits - 1;
+                    dst[c] |= bit;
+                }
+            }
+        }
+    }
+
+    /// OR one lane's feature-major packed row into row `r` — the
+    /// incremental fill the batched forward uses when a stage emits one
+    /// [`SpikeVector`] per lane (event-driven over set bits).
+    pub fn or_row(&mut self, r: usize, lane: usize, v: &SpikeVector) {
+        assert!(lane < self.lanes, "lane {lane} >= {}", self.lanes);
+        assert_eq!(v.len(), self.cols, "row width mismatch");
+        let bit = 1u64 << lane;
+        let dst = &mut self.words[r * self.cols..(r + 1) * self.cols];
+        v.for_each_set(|c| dst[c] |= bit);
+    }
+
+    /// Split back into one feature-major matrix per lane (lossless
+    /// inverse of [`Self::from_lanes`]).
+    pub fn to_lanes(&self) -> Vec<SpikeMatrix> {
+        let mut out: Vec<SpikeMatrix> = (0..self.lanes)
+            .map(|_| SpikeMatrix::zeros(self.rows, self.cols))
+            .collect();
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                let mut bits = self.words[r * self.cols + c];
+                while bits != 0 {
+                    let l = bits.trailing_zeros() as usize;
+                    bits &= bits - 1;
+                    out[l].set(r, c, true);
+                }
+            }
+        }
+        out
+    }
+
+    /// Total set bits across all lanes.
+    pub fn count_ones(&self) -> u64 {
+        self.words.iter().map(|w| w.count_ones() as u64).sum()
+    }
+
+    /// Fraction of lane words that are all-zero — the realized
+    /// zero-word skip opportunity of the event-driven guards.
+    pub fn zero_word_fraction(&self) -> f64 {
+        if self.words.is_empty() {
+            return 0.0;
+        }
+        let zeros = self.words.iter().filter(|&&w| w == 0).count();
+        zeros as f64 / self.words.len() as f64
+    }
+}
+
+/// A T-step stack of equally-shaped [`LaneSlicedMatrix`] slices — the
+/// lane-major counterpart of [`SpikeVolume`]. One `u64` per
+/// (t, token, feature) coordinate holds that spike bit for up to 64
+/// lanes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LaneSlicedVolume {
+    rows: usize,
+    cols: usize,
+    lanes: usize,
+    steps: Vec<LaneSlicedMatrix>,
+}
+
+impl LaneSlicedVolume {
+    /// All-zero volume of `t_steps` timesteps of `rows x cols` for
+    /// `lanes` lanes.
+    pub fn zeros(t_steps: usize, rows: usize, cols: usize, lanes: usize)
+                 -> Self {
+        LaneSlicedVolume {
+            rows,
+            cols,
+            lanes,
+            steps: (0..t_steps)
+                .map(|_| LaneSlicedMatrix::zeros(rows, cols, lanes))
+                .collect(),
+        }
+    }
+
+    pub fn t_steps(&self) -> usize {
+        self.steps.len()
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    #[inline]
+    pub fn step(&self, t: usize) -> &LaneSlicedMatrix {
+        &self.steps[t]
+    }
+
+    #[inline]
+    pub fn step_mut(&mut self, t: usize) -> &mut LaneSlicedMatrix {
+        &mut self.steps[t]
+    }
+
+    /// Lane `l`'s spike at `(t, r, c)` — the bit-exact accessor the
+    /// equivalence tests drive.
+    #[inline]
+    pub fn get(&self, t: usize, r: usize, c: usize, lane: usize) -> bool {
+        self.steps[t].get(r, c, lane)
+    }
+
+    #[inline]
+    pub fn set(&mut self, t: usize, r: usize, c: usize, lane: usize,
+               b: bool) {
+        self.steps[t].set(r, c, lane, b);
+    }
+
+    /// Transpose one equally-shaped feature-major [`SpikeVolume`] per
+    /// lane into the lane-major packing (up to 64 lanes per word).
+    pub fn transpose_from_lanes(vols: &[SpikeVolume]) -> Self {
+        let refs: Vec<&SpikeVolume> = vols.iter().collect();
+        Self::transpose_from_lane_refs(&refs)
+    }
+
+    /// [`Self::transpose_from_lanes`] over borrowed volumes — lets
+    /// callers gather per-lane volumes out of nested containers (e.g.
+    /// per-(lane, head) Q/K/V) without cloning them.
+    pub fn transpose_from_lane_refs(vols: &[&SpikeVolume]) -> Self {
+        let lanes = vols.len();
+        assert!((1..=64).contains(&lanes),
+                "lane-sliced words hold 1..=64 lanes, got {lanes}");
+        let t_steps = vols[0].t_steps();
+        let rows = vols[0].rows();
+        let cols = vols[0].cols();
+        let mut out = LaneSlicedVolume::zeros(t_steps, rows, cols, lanes);
+        for (l, v) in vols.iter().enumerate() {
+            assert!(v.t_steps() == t_steps && v.rows() == rows
+                        && v.cols() == cols,
+                    "lane {l} volume shape mismatch");
+            for t in 0..t_steps {
+                out.steps[t].or_lane(l, v.step(t));
+            }
+        }
+        out
+    }
+
+    /// Transpose back into one feature-major [`SpikeVolume`] per lane
+    /// (lossless inverse of [`Self::transpose_from_lanes`]).
+    pub fn transpose_to_lanes(&self) -> Vec<SpikeVolume> {
+        let mut out: Vec<SpikeVolume> = (0..self.lanes)
+            .map(|_| SpikeVolume::zeros(self.t_steps(), self.rows,
+                                        self.cols))
+            .collect();
+        for (t, slice) in self.steps.iter().enumerate() {
+            for (l, m) in slice.to_lanes().into_iter().enumerate() {
+                *out[l].step_mut(t) = m;
+            }
+        }
+        out
+    }
+
+    /// Total set bits across all lanes and timesteps.
+    pub fn count_ones(&self) -> u64 {
+        self.steps.iter().map(|m| m.count_ones()).sum()
+    }
+}
+
+/// Mask of the `lanes` low bits of a lane word.
+#[inline]
+pub fn lane_mask(lanes: usize) -> u64 {
+    debug_assert!((1..=64).contains(&lanes));
+    if lanes == 64 {
+        u64::MAX
+    } else {
+        (1u64 << lanes) - 1
+    }
+}
+
+/// Bit-sliced per-lane counter: accumulates "+1 to every lane set in
+/// this word" without any per-lane popcount.
+///
+/// `planes[k]` holds bit `k` of every lane's running count, so adding a
+/// word is one ripple-carry sweep over the planes (`O(log count)` word
+/// ops serving 64 lanes) — the vertical-counter trick that recovers
+/// per-lane Q.K popcounts and WL-pulse totals from lane-sliced ANDs.
+#[derive(Debug, Default, Clone)]
+pub struct VerticalCounter {
+    planes: Vec<u64>,
+}
+
+impl VerticalCounter {
+    pub fn new() -> Self {
+        VerticalCounter { planes: Vec::new() }
+    }
+
+    /// Reset every lane's count to zero (keeps the plane allocation).
+    pub fn clear(&mut self) {
+        self.planes.clear();
+    }
+
+    /// Add 1 to the count of every lane whose bit is set in `w`.
+    #[inline]
+    pub fn add_word(&mut self, w: u64) {
+        let mut carry = w;
+        for p in self.planes.iter_mut() {
+            let sum = *p ^ carry;
+            carry &= *p;
+            *p = sum;
+            if carry == 0 {
+                return;
+            }
+        }
+        if carry != 0 {
+            self.planes.push(carry);
+        }
+    }
+
+    /// Lane `l`'s accumulated count.
+    #[inline]
+    pub fn count(&self, lane: usize) -> u32 {
+        debug_assert!(lane < 64);
+        let mut n = 0u32;
+        for (k, p) in self.planes.iter().enumerate() {
+            n |= (((p >> lane) & 1) as u32) << k;
+        }
+        n
+    }
+
+    /// All per-lane counts for the first `lanes` lanes.
+    pub fn counts(&self, lanes: usize) -> Vec<u32> {
+        (0..lanes).map(|l| self.count(l)).collect()
+    }
+
+    /// Sum of every lane's count (one popcount per plane).
+    pub fn total(&self) -> u64 {
+        self.planes
+            .iter()
+            .enumerate()
+            .map(|(k, p)| (p.count_ones() as u64) << k)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Same deterministic pattern the feature-major tests use.
+    fn pat(r: usize, c: usize, salt: usize, p: f64) -> bool {
+        let h = ((r * 2654435761 + c * 97 + salt * 1315423911) as u64)
+            .wrapping_mul(0x9E3779B97F4A7C15);
+        (h >> 11) as f64 / (1u64 << 53) as f64 < p
+    }
+
+    fn lane_volume(t: usize, rows: usize, cols: usize, salt: usize,
+                   p: f64) -> SpikeVolume {
+        let bools: Vec<Vec<Vec<bool>>> = (0..t)
+            .map(|ti| {
+                (0..rows)
+                    .map(|r| {
+                        (0..cols)
+                            .map(|c| pat(r * t + ti, c, salt, p))
+                            .collect()
+                    })
+                    .collect()
+            })
+            .collect();
+        SpikeVolume::from_bools(&bools)
+    }
+
+    // The ISSUE's lane counts (65 is handled one slab up, in
+    // forward_batch) and odd feature widths.
+    const LANES: &[usize] = &[1, 2, 33, 63, 64];
+    const WIDTHS: &[usize] = &[1, 63, 64, 65, 127];
+
+    #[test]
+    fn transpose_round_trips_all_lane_counts_and_widths() {
+        for &lanes in LANES {
+            for &cols in WIDTHS {
+                let vols: Vec<SpikeVolume> = (0..lanes)
+                    .map(|l| lane_volume(2, 5, cols, l * 7 + 1, 0.4))
+                    .collect();
+                let sliced = LaneSlicedVolume::transpose_from_lanes(&vols);
+                assert_eq!(sliced.lanes(), lanes);
+                assert_eq!(sliced.rows(), 5);
+                assert_eq!(sliced.cols(), cols);
+                assert_eq!(sliced.transpose_to_lanes(), vols,
+                           "lanes={lanes} cols={cols}");
+                // Spike counts survive the transpose.
+                let ones: u64 =
+                    vols.iter().map(|v| v.count_ones()).sum();
+                assert_eq!(sliced.count_ones(), ones);
+            }
+        }
+    }
+
+    #[test]
+    fn accessors_are_bit_exact_against_the_lane_volumes() {
+        let lanes = 63;
+        let vols: Vec<SpikeVolume> = (0..lanes)
+            .map(|l| lane_volume(3, 4, 65, l + 100, 0.5))
+            .collect();
+        let sliced = LaneSlicedVolume::transpose_from_lanes(&vols);
+        for (l, v) in vols.iter().enumerate() {
+            for t in 0..3 {
+                for r in 0..4 {
+                    for c in 0..65 {
+                        assert_eq!(sliced.get(t, r, c, l),
+                                   v.step(t).get(r, c),
+                                   "t={t} r={r} c={c} lane={l}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pad_lanes_stay_zero() {
+        for &lanes in LANES {
+            let vols: Vec<SpikeVolume> =
+                (0..lanes).map(|l| lane_volume(1, 3, 70, l, 1.0)).collect();
+            let sliced = LaneSlicedVolume::transpose_from_lanes(&vols);
+            let mask = lane_mask(lanes);
+            for t in 0..1 {
+                let m = sliced.step(t);
+                for r in 0..3 {
+                    for &w in m.row(r) {
+                        assert_eq!(w & !mask, 0, "lanes={lanes}");
+                        // Full density: every valid lane bit set.
+                        assert_eq!(w, mask, "lanes={lanes}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn set_and_word_accessors_agree() {
+        let mut m = LaneSlicedMatrix::zeros(2, 3, 64);
+        m.set(1, 2, 63, true);
+        m.set(1, 2, 0, true);
+        m.set(0, 0, 17, true);
+        assert_eq!(m.word(1, 2), (1u64 << 63) | 1);
+        assert_eq!(m.word(0, 0), 1u64 << 17);
+        assert!(m.get(1, 2, 63));
+        m.set(1, 2, 63, false);
+        assert_eq!(m.word(1, 2), 1);
+        assert_eq!(m.count_ones(), 2);
+        m.set_word(1, 0, 0b1010);
+        assert!(m.get(1, 0, 1) && m.get(1, 0, 3) && !m.get(1, 0, 0));
+    }
+
+    #[test]
+    #[should_panic(expected = "1..=64 lanes")]
+    fn more_than_64_lanes_is_rejected() {
+        let vols: Vec<SpikeVolume> =
+            (0..65).map(|_| SpikeVolume::zeros(1, 1, 1)).collect();
+        LaneSlicedVolume::transpose_from_lanes(&vols);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn ragged_lane_shapes_are_rejected() {
+        let vols =
+            vec![SpikeVolume::zeros(1, 2, 3), SpikeVolume::zeros(1, 2, 4)];
+        LaneSlicedVolume::transpose_from_lanes(&vols);
+    }
+
+    #[test]
+    fn vertical_counter_matches_per_lane_popcounts() {
+        for &lanes in LANES {
+            let words: Vec<u64> = (0..130)
+                .map(|i| {
+                    let mut w = 0u64;
+                    for l in 0..lanes {
+                        if pat(i, l, 999, 0.5) {
+                            w |= 1 << l;
+                        }
+                    }
+                    w
+                })
+                .collect();
+            let mut vc = VerticalCounter::new();
+            for &w in &words {
+                vc.add_word(w);
+            }
+            for l in 0..lanes {
+                let want = words.iter()
+                    .filter(|w| (*w >> l) & 1 == 1)
+                    .count() as u32;
+                assert_eq!(vc.count(l), want, "lanes={lanes} lane={l}");
+            }
+            assert_eq!(vc.counts(lanes).len(), lanes);
+            let total: u64 =
+                words.iter().map(|w| w.count_ones() as u64).sum();
+            assert_eq!(vc.total(), total);
+            vc.clear();
+            assert_eq!(vc.count(0), 0);
+        }
+    }
+
+    #[test]
+    fn vertical_counter_saturation_and_overflow_planes() {
+        // 64 lanes all incremented 1000 times: counts need 10 planes and
+        // the ripple carries must not lose bits (debug-assert territory
+        // the CI debug-assertions job exercises).
+        let mut vc = VerticalCounter::new();
+        for _ in 0..1000 {
+            vc.add_word(u64::MAX);
+        }
+        for l in 0..64 {
+            assert_eq!(vc.count(l), 1000);
+        }
+        assert_eq!(vc.total(), 64 * 1000);
+    }
+
+    #[test]
+    fn zero_word_fraction_reports_skip_opportunity() {
+        let mut m = LaneSlicedMatrix::zeros(2, 2, 8);
+        assert_eq!(m.zero_word_fraction(), 1.0);
+        m.set(0, 0, 3, true);
+        assert!((m.zero_word_fraction() - 0.75).abs() < 1e-12);
+        assert_eq!(LaneSlicedMatrix::zeros(0, 0, 4).zero_word_fraction(),
+                   0.0);
+    }
+}

@@ -26,6 +26,21 @@
 //! All conversions to/from the legacy `Vec<Vec<bool>>` ([`crate::ssa::
 //! BitMatrix`]) are lossless and covered by round-trip tests at odd
 //! widths.
+//!
+//! Two packings coexist. The types above are **feature-major** (64
+//! features of one lane per word) — optimal for a single request, where
+//! reductions run along the feature axis. [`lane_sliced`] provides the
+//! **lane-major** transpose ([`LaneSlicedVolume`]/[`LaneSlicedMatrix`]):
+//! one word holds the same (t, token, feature) bit for up to 64 batch
+//! lanes, so one bitwise op serves the whole batch and per-lane counts
+//! come back via bit-sliced [`lane_sliced::VerticalCounter`]s. Use
+//! feature-major for serial forward/decode, lane-major for the batched
+//! hot paths (`forward_batch`); `transpose_from_lanes` /
+//! `transpose_to_lanes` convert losslessly between them.
+
+pub mod lane_sliced;
+
+pub use lane_sliced::{LaneSlicedMatrix, LaneSlicedVolume, VerticalCounter};
 
 /// Number of `u64` words needed for `bits` bits.
 #[inline]

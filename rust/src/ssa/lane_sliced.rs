@@ -1,0 +1,367 @@
+//! Lane-sliced SSA: the N x N tile advanced for up to 64 batch lanes per
+//! bitwise op.
+//!
+//! [`super::tile::SsaTile`] simulates one lane; batching lanes through it
+//! (the [`super::run_mhsa_lanes`] oracle) re-runs every Q.K popcount and
+//! score.V adder once per lane. Here Q/K/V arrive lane-major
+//! ([`LaneSlicedVolume`]): one `u64` per (t, token, feature) holds all
+//! lanes' bits, so a single AND evaluates a synapse for the whole batch
+//! and per-lane counts come back through a bit-sliced
+//! [`VerticalCounter`]. The Bernoulli comparators still consume each
+//! lane's *own* LFSR stream in exactly the serial tile's draw order
+//! ((i, j) row-major at latch, (c, i) column-major in the output phase),
+//! and causal masking clears whole lane words (one store masks a score
+//! for all 64 lanes) — so every lane's output, stats attribution and PRN
+//! consumption are bit-identical to its solo [`super::tile::SsaTile`]
+//! run. The equivalence tests below enforce it.
+//!
+//! Event-driven zero-word guards (`word == 0` early-outs) skip silent
+//! coordinates in both phases; realized skip rates land in
+//! [`SsaStats::sliced_words`] / [`SsaStats::sliced_zero_words`].
+
+use crate::spike::{LaneSlicedMatrix, LaneSlicedVolume, SpikeVolume,
+                   VerticalCounter};
+use crate::ssa::engine::HeadQkv;
+use crate::ssa::lfsr::LfsrArray;
+use crate::ssa::tile::{draw_uniform, SsaStats};
+
+/// One attention head's tile, advancing all lanes of a slab per op.
+/// Mirrors [`super::tile::SsaTile`] exactly, with per-lane LFSRs.
+pub struct LaneSlicedTile {
+    pub n: usize,
+    pub d_k: usize,
+    pub causal: bool,
+    lfsrs: Vec<LfsrArray>,
+}
+
+impl LaneSlicedTile {
+    /// `lane_seeds[l]` must be the seed lane `l`'s solo tile would use.
+    pub fn new(n: usize, d_k: usize, causal: bool, lane_seeds: &[u32])
+               -> Self {
+        assert!(d_k <= 256, "UINT8 counter bounds d_K at 256 (paper IV-B2)");
+        assert!(!lane_seeds.is_empty() && lane_seeds.len() <= 64,
+                "lane-sliced tile serves 1..=64 lanes");
+        LaneSlicedTile {
+            n,
+            d_k,
+            causal,
+            lfsrs: lane_seeds.iter().map(|&s| LfsrArray::new(s)).collect(),
+        }
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.lfsrs.len()
+    }
+
+    /// Run T timesteps of attention for every lane at once. Returns the
+    /// lane-sliced `[T, N, d_K]` outputs plus one [`SsaStats`] per lane,
+    /// each bit-identical to that lane's solo tile run (the shared
+    /// zero-word guard counters are copied into every lane's stats).
+    pub fn run(&mut self, q: &LaneSlicedVolume, k: &LaneSlicedVolume,
+               v: &LaneSlicedVolume)
+               -> (LaneSlicedVolume, Vec<SsaStats>) {
+        let t_steps = q.t_steps();
+        let (n, d_k, lanes) = (self.n, self.d_k, self.lanes());
+        for (name, vol) in [("q", q), ("k", k), ("v", v)] {
+            assert_eq!(vol.t_steps(), t_steps, "{name}: timestep mismatch");
+            assert_eq!(vol.lanes(), lanes, "{name}: lane count mismatch");
+            assert!(t_steps == 0 || (vol.rows() == n && vol.cols() == d_k),
+                    "{name}: {}x{} spikes for a {n}x{d_k} tile",
+                    vol.rows(), vol.cols());
+        }
+        let mut stats = vec![SsaStats::default(); lanes];
+        let mut out = LaneSlicedVolume::zeros(t_steps, n, d_k, lanes);
+        // Latched score words: S[i][j] holds all lanes' score bits.
+        let mut scores = LaneSlicedMatrix::zeros(n, n, lanes);
+        let mut vc = VerticalCounter::new();
+        // Shared guard counters (one word serves every lane); copied
+        // into each lane's stats at the end.
+        let (mut words, mut zero_words) = (0u64, 0u64);
+        for t in 0..=t_steps {
+            for c in 0..d_k {
+                for s in stats.iter_mut() {
+                    s.cycles += 1;
+                    s.and_ops += 2 * (n * n) as u64; // hardware events
+                }
+                if t >= 1 {
+                    // Phase 2: column adders. sum_l = per-lane popcount
+                    // over j of S[i][j] AND V[t-1][j][c] — one AND per
+                    // (i, j) for the whole batch, counts recovered
+                    // vertically.
+                    let vm = v.step(t - 1);
+                    let out_m = out.step_mut(t - 1);
+                    for i in 0..n {
+                        vc.clear();
+                        let s_row = scores.row(i);
+                        for (j, &sw) in s_row.iter().enumerate() {
+                            words += 1;
+                            if sw == 0 {
+                                zero_words += 1; // silent score: skip
+                                continue;
+                            }
+                            vc.add_word(sw & vm.word(j, c));
+                        }
+                        for (l, st) in stats.iter_mut().enumerate() {
+                            let sum = vc.count(l);
+                            st.adder_ops += 1;
+                            st.encoder_samples += 1;
+                            let r = draw_uniform(&mut self.lfsrs[l],
+                                                 n as u32, st);
+                            if sum >= r {
+                                out_m.set(i, c, l, true);
+                            }
+                        }
+                    }
+                }
+            }
+            if t < t_steps {
+                // End of window: latch all N^2 scores (row-major draws,
+                // each lane's own LFSR in lane order per (i, j)).
+                let qm = q.step(t);
+                let km = k.step(t);
+                for i in 0..n {
+                    scores.row_mut(i).fill(0);
+                    let q_row = qm.row(i);
+                    for j in 0..n {
+                        vc.clear();
+                        let k_row = km.row(j);
+                        for (cc, &qw) in q_row.iter().enumerate() {
+                            words += 1;
+                            if qw == 0 {
+                                zero_words += 1; // silent query feature
+                                continue;
+                            }
+                            vc.add_word(qw & k_row[cc]);
+                        }
+                        for (l, st) in stats.iter_mut().enumerate() {
+                            let count = vc.count(l);
+                            st.counter_incs += count as u64;
+                            st.encoder_samples += 1;
+                            let r = draw_uniform(&mut self.lfsrs[l],
+                                                 d_k as u32, st);
+                            if count >= r {
+                                scores.set(i, j, l, true);
+                            }
+                        }
+                    }
+                    if self.causal {
+                        // One word store masks key j for all 64 lanes.
+                        scores.row_mut(i)[i + 1..].fill(0);
+                    }
+                }
+            }
+        }
+        for st in stats.iter_mut() {
+            st.sliced_words = words;
+            st.sliced_zero_words = zero_words;
+        }
+        (out, stats)
+    }
+}
+
+/// Lane-sliced Q/K/V for one head (counterpart of [`HeadQkv`]).
+pub type SlicedHeadQkv =
+    (LaneSlicedVolume, LaneSlicedVolume, LaneSlicedVolume);
+
+/// Lane-sliced multi-head attention: one [`LaneSlicedTile`] per head on
+/// a scoped OS thread (the parallel-tile wave of
+/// [`super::SsaEngine::run_mhsa`]), each advancing every lane per op.
+///
+/// `lane_engine_seeds[l]` is lane `l`'s engine seed; head `h`'s tile for
+/// lane `l` draws from `lane_engine_seeds[l] ^ (h + 1)`, exactly as
+/// [`super::SsaEngine::new`] derives per-head tile seeds. Returns
+/// per-head lane-sliced outputs plus per-lane stats merged across heads
+/// in head order (cycles max, events sum) — the same merge
+/// [`super::run_mhsa_lanes`] performs per lane.
+pub fn run_mhsa_sliced(heads: usize, n: usize, d_k: usize, causal: bool,
+                       lane_engine_seeds: &[u32], qkv: &[SlicedHeadQkv])
+                       -> (Vec<LaneSlicedVolume>, Vec<SsaStats>) {
+    assert_eq!(qkv.len(), heads, "one lane-sliced Q/K/V per head");
+    let lanes = lane_engine_seeds.len();
+    let mut results: Vec<Option<(LaneSlicedVolume, Vec<SsaStats>)>> =
+        (0..heads).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        for (h, ((q, k, v), slot)) in
+            qkv.iter().zip(results.iter_mut()).enumerate()
+        {
+            let seeds: Vec<u32> = lane_engine_seeds
+                .iter()
+                .map(|&s| s ^ (h as u32 + 1))
+                .collect();
+            scope.spawn(move || {
+                let mut tile = LaneSlicedTile::new(n, d_k, causal, &seeds);
+                *slot = Some(tile.run(q, k, v));
+            });
+        }
+    });
+    let mut merged = vec![SsaStats::default(); lanes];
+    let mut outs = Vec::with_capacity(heads);
+    for r in results {
+        let (o, head_stats) = r.expect("tile thread completed");
+        for (m, s) in merged.iter_mut().zip(&head_stats) {
+            m.add(s);
+        }
+        outs.push(o);
+    }
+    (outs, merged)
+}
+
+/// Drop-in lane-sliced replacement for [`super::run_mhsa_lanes`]:
+/// feature-major per-(lane, head) Q/K/V in, per-lane feature-major
+/// outputs + stats out, computed through the lane-sliced tiles. Used by
+/// the equivalence tests and benches; the batched forward keeps its
+/// tensors lane-sliced end-to-end and calls [`run_mhsa_sliced`]
+/// directly.
+pub fn run_mhsa_lanes_sliced(n: usize, d_k: usize, causal: bool,
+                             lane_engine_seeds: &[u32],
+                             qkv: &[Vec<HeadQkv>])
+                             -> Vec<(Vec<SpikeVolume>, SsaStats)> {
+    assert_eq!(lane_engine_seeds.len(), qkv.len(),
+               "one engine seed per batch lane");
+    let lanes = qkv.len();
+    let heads = qkv.first().map_or(0, |l| l.len());
+    let sliced: Vec<SlicedHeadQkv> = (0..heads)
+        .map(|h| {
+            let gather = |pick: fn(&HeadQkv) -> &SpikeVolume| {
+                let refs: Vec<&SpikeVolume> =
+                    qkv.iter().map(|lane| pick(&lane[h])).collect();
+                LaneSlicedVolume::transpose_from_lane_refs(&refs)
+            };
+            (gather(|t| &t.0), gather(|t| &t.1), gather(|t| &t.2))
+        })
+        .collect();
+    let (head_outs, stats) =
+        run_mhsa_sliced(heads, n, d_k, causal, lane_engine_seeds, &sliced);
+    let mut per_lane_outs: Vec<Vec<SpikeVolume>> =
+        (0..lanes).map(|_| Vec::with_capacity(heads)).collect();
+    for head_out in &head_outs {
+        for (l, vol) in head_out.transpose_to_lanes().into_iter()
+            .enumerate()
+        {
+            per_lane_outs[l].push(vol);
+        }
+    }
+    per_lane_outs.into_iter().zip(stats).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ssa::engine::run_mhsa_lanes;
+    use crate::ssa::SsaEngine;
+
+    fn pseudo(t: usize, i: usize, c: usize, salt: usize, p: f64) -> bool {
+        let h = ((t * 131 + i * 31 + c * 7 + salt * 1009) as u64)
+            .wrapping_mul(0x9E3779B97F4A7C15);
+        (h >> 11) as f64 / (1u64 << 53) as f64 < p
+    }
+
+    fn mats(t_steps: usize, n: usize, d_k: usize, salt: usize, p: f64)
+            -> SpikeVolume {
+        let bools: Vec<Vec<Vec<bool>>> = (0..t_steps)
+            .map(|t| {
+                (0..n)
+                    .map(|i| (0..d_k).map(|c| pseudo(t, i, c, salt, p))
+                        .collect())
+                    .collect()
+            })
+            .collect();
+        SpikeVolume::from_bools(&bools)
+    }
+
+    fn lane_qkv(lanes: usize, heads: usize, t: usize, n: usize,
+                d_k: usize, p: f64) -> Vec<Vec<HeadQkv>> {
+        (0..lanes)
+            .map(|lane| {
+                (0..heads)
+                    .map(|h| {
+                        let salt = lane * 100 + h * 10;
+                        (mats(t, n, d_k, salt + 1, p),
+                         mats(t, n, d_k, salt + 2, p),
+                         mats(t, n, d_k, salt + 3, p))
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn sliced_mhsa_bit_identical_to_lane_loop_oracle() {
+        // The ISSUE's lane counts (65 chunks one slab up) against the
+        // PR 5 lane-loop path, causal and not, odd d_k.
+        for &lanes in &[1usize, 2, 63, 64] {
+            for &(n, d_k, causal) in &[(5usize, 16usize, false), (4, 20,
+                                        true)] {
+                let p = if lanes > 8 { 0.3 } else { 0.5 };
+                let qkv = lane_qkv(lanes, 2, 2, n, d_k, p);
+                let seeds: Vec<u32> =
+                    (0..lanes).map(|l| 77 + l as u32).collect();
+                let mut engines: Vec<SsaEngine> = seeds
+                    .iter()
+                    .map(|&s| SsaEngine::new(2, n, d_k, causal, s))
+                    .collect();
+                let want = run_mhsa_lanes(&mut engines, &qkv);
+                let got =
+                    run_mhsa_lanes_sliced(n, d_k, causal, &seeds, &qkv);
+                assert_eq!(got.len(), want.len());
+                for (lane, ((go, gs), (wo, ws))) in
+                    got.iter().zip(&want).enumerate()
+                {
+                    assert_eq!(go, wo,
+                               "outputs lanes={lanes} n={n} lane={lane}");
+                    assert_eq!(gs, ws,
+                               "stats lanes={lanes} n={n} lane={lane}");
+                    // The sliced path actually exercised the guards.
+                    assert!(gs.sliced_words > 0);
+                    assert_eq!(ws.sliced_words, 0, "oracle sees no words");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_inputs_skip_every_word_and_stay_silent() {
+        let lanes = 7;
+        let vols: Vec<SpikeVolume> =
+            (0..lanes).map(|_| SpikeVolume::zeros(2, 4, 8)).collect();
+        let z = LaneSlicedVolume::transpose_from_lanes(&vols);
+        let seeds: Vec<u32> = (0..lanes as u32).collect();
+        let mut tile = LaneSlicedTile::new(4, 8, false, &seeds);
+        let (out, stats) = tile.run(&z, &z, &z);
+        assert_eq!(out.count_ones(), 0);
+        for s in &stats {
+            assert_eq!(s.sliced_zero_words, s.sliced_words);
+            assert_eq!(s.sliced_skip_rate(), 1.0);
+            assert_eq!(s.cycles, (2 + 1) * 8);
+        }
+    }
+
+    #[test]
+    fn causal_sliced_tile_first_token_sees_only_itself() {
+        let (n, d_k, lanes) = (4, 8, 5);
+        let ones: Vec<SpikeVolume> = (0..lanes)
+            .map(|_| {
+                let b = vec![vec![vec![true; d_k]; n]; 3];
+                SpikeVolume::from_bools(&b)
+            })
+            .collect();
+        let v_bools: Vec<SpikeVolume> = (0..lanes)
+            .map(|_| {
+                let b: Vec<Vec<Vec<bool>>> =
+                    (0..3).map(|_| (0..n).map(|i| vec![i != 0; d_k])
+                        .collect()).collect();
+                SpikeVolume::from_bools(&b)
+            })
+            .collect();
+        let q = LaneSlicedVolume::transpose_from_lanes(&ones);
+        let v = LaneSlicedVolume::transpose_from_lanes(&v_bools);
+        let seeds: Vec<u32> = (0..lanes as u32).map(|l| l + 9).collect();
+        let mut tile = LaneSlicedTile::new(n, d_k, true, &seeds);
+        let (out, _) = tile.run(&q, &q, &v);
+        for t in 0..3 {
+            for c in 0..d_k {
+                assert_eq!(out.step(t).word(0, c), 0, "t={t} c={c}");
+            }
+        }
+    }
+}

@@ -12,6 +12,11 @@
 //!   [`engine::run_mhsa_lanes`] tiling across (lane, head) for the
 //!   batched native forward, and the algorithm-level reference (paper
 //!   Algorithm 1) used to prove the cycle-level model bit-exact;
+//! * [`lane_sliced`] — the lane-major batched tile: Q/K/V packed as
+//!   [`crate::spike::LaneSlicedVolume`] so one AND and one causal word
+//!   store serve up to 64 batch lanes, with per-lane counts recovered by
+//!   vertical counters; bit-identical per lane to the
+//!   [`engine::run_mhsa_lanes`] lane-loop oracle;
 //! * [`legacy`]    — the frozen pre-refactor `Vec<Vec<bool>>`
 //!   implementations, kept as the bit-exactness oracle and the
 //!   benchmark baseline.
@@ -39,6 +44,7 @@
 //! `tile_matches_algorithm_reference_bit_exactly` test enforces.
 
 pub mod engine;
+pub mod lane_sliced;
 pub mod legacy;
 pub mod lfsr;
 pub mod sac;
@@ -47,6 +53,8 @@ pub mod tile;
 pub use crate::spike::{SpikeMatrix, SpikeVector, SpikeVolume};
 pub use engine::{run_mhsa_lanes, ssa_reference, ssa_reference_bools,
                  HeadQkv, SsaEngine};
+pub use lane_sliced::{run_mhsa_lanes_sliced, run_mhsa_sliced,
+                      LaneSlicedTile, SlicedHeadQkv};
 pub use lfsr::{Lfsr32, LfsrArray};
 pub use sac::{bernoulli_encode, Sac};
 pub use tile::{draw_uniform, SsaStats, SsaTile};

@@ -13,7 +13,7 @@ use crate::ssa::lfsr::LfsrArray;
 use crate::ssa::BitMatrix;
 
 /// Gate-event counters for the energy model.
-#[derive(Debug, Default, Clone, Copy, PartialEq)]
+#[derive(Debug, Default, Clone, Copy)]
 pub struct SsaStats {
     /// Clock cycles consumed (pipelined).
     pub cycles: u64,
@@ -27,6 +27,29 @@ pub struct SsaStats {
     pub encoder_samples: u64,
     /// PRN bytes consumed.
     pub prn_bytes: u64,
+    /// Lane-sliced Q.K / score.V words the event-driven zero-word guards
+    /// examined (0 on the lane-loop oracle path, which never sees lane
+    /// words). Simulator-path metric, not a hardware event: each lane's
+    /// stats carry the counts of the slab it shared, so the realized
+    /// skip *rate* stays exact under any per-lane fold.
+    pub sliced_words: u64,
+    /// Of [`Self::sliced_words`], all-zero words skipped outright.
+    pub sliced_zero_words: u64,
+}
+
+/// Equality covers the *hardware-event attribution* only: the
+/// `sliced_*` skip counters describe which simulator kernel ran (the
+/// lane-loop oracle never examines lane words), so two bit-identical
+/// runs on different kernels must still compare equal.
+impl PartialEq for SsaStats {
+    fn eq(&self, o: &Self) -> bool {
+        self.cycles == o.cycles
+            && self.and_ops == o.and_ops
+            && self.counter_incs == o.counter_incs
+            && self.adder_ops == o.adder_ops
+            && self.encoder_samples == o.encoder_samples
+            && self.prn_bytes == o.prn_bytes
+    }
 }
 
 impl SsaStats {
@@ -37,6 +60,18 @@ impl SsaStats {
         self.adder_ops += o.adder_ops;
         self.encoder_samples += o.encoder_samples;
         self.prn_bytes += o.prn_bytes;
+        self.sliced_words += o.sliced_words;
+        self.sliced_zero_words += o.sliced_zero_words;
+    }
+
+    /// Realized zero-word skip rate of the lane-sliced guards
+    /// (`0.0` when no lane-sliced kernel ran).
+    pub fn sliced_skip_rate(&self) -> f64 {
+        if self.sliced_words == 0 {
+            0.0
+        } else {
+            self.sliced_zero_words as f64 / self.sliced_words as f64
+        }
     }
 }
 

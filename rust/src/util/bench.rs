@@ -18,6 +18,55 @@ pub struct BenchResult {
     pub p95: Duration,
 }
 
+impl BenchResult {
+    /// One bench case as a flat JSON object, shared by every
+    /// `benches/*.rs` writer so the record schema cannot drift.
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"name\": \"{}\", \"mean_us\": {:.3}, \"p50_us\": {:.3}, \
+             \"p95_us\": {:.3}, \"iters\": {}}}",
+            crate::util::json::escape(&self.name),
+            self.mean.as_secs_f64() * 1e6,
+            self.p50.as_secs_f64() * 1e6,
+            self.p95.as_secs_f64() * 1e6,
+            self.iters
+        )
+    }
+}
+
+/// Run-provenance fragment every bench JSON record starts with:
+/// `measured: true` plus toolchain and host facts, captured at write
+/// time so the flags can never go stale as hand-maintained strings.
+/// Returns top-level `"key": value` pairs (no surrounding braces,
+/// two-space indent to match the writers' pretty format).
+pub fn metadata_json() -> String {
+    // `rustc --version` via the same compiler cargo drove (RUSTC env
+    // var when set); benches always run under cargo so a missing
+    // binary only happens on exotic setups — record that honestly.
+    let rustc = std::process::Command::new(
+        std::env::var("RUSTC").unwrap_or_else(|_| "rustc".into()),
+    )
+    .arg("--version")
+    .output()
+    .ok()
+    .and_then(|o| String::from_utf8(o.stdout).ok())
+    .map(|s| s.trim().to_string())
+    .filter(|s| !s.is_empty())
+    .unwrap_or_else(|| "unknown".into());
+    format!(
+        "\"measured\": true,\n  \"rustc\": \"{}\",\n  \"host\": \
+         {{\"os\": \"{}\", \"arch\": \"{}\", \"threads\": {}}},\n  \
+         \"debug_assertions\": {}",
+        crate::util::json::escape(&rustc),
+        std::env::consts::OS,
+        std::env::consts::ARCH,
+        std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1),
+        cfg!(debug_assertions)
+    )
+}
+
 impl std::fmt::Display for BenchResult {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
@@ -67,6 +116,33 @@ pub fn black_box<T>(x: T) -> T {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn metadata_fragment_is_honest_about_this_build() {
+        let m = metadata_json();
+        assert!(m.starts_with("\"measured\": true"));
+        assert!(m.contains(&format!(
+            "\"debug_assertions\": {}",
+            cfg!(debug_assertions)
+        )));
+        assert!(m.contains(std::env::consts::ARCH));
+        // Must splice into a JSON object without breaking it.
+        assert!(!m.contains('{') || m.contains('}'));
+    }
+
+    #[test]
+    fn result_json_round_trips_the_name() {
+        let r = BenchResult {
+            name: "quote\"me".into(),
+            iters: 3,
+            mean: Duration::from_micros(5),
+            p50: Duration::from_micros(4),
+            p95: Duration::from_micros(9),
+        };
+        let j = r.to_json();
+        assert!(j.contains("quote\\\"me"));
+        assert!(j.contains("\"iters\": 3"));
+    }
 
     #[test]
     fn bench_reports_sane_numbers() {
