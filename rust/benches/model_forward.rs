@@ -5,7 +5,10 @@
 //! pre-refactor backend) vs the lane-loop `forward_batch` kernel vs the
 //! lane-sliced kernel (one drive word per feature serving all 64 lanes,
 //! with realized zero-word skip rates) vs the chunked
-//! `NativeBackend::run` datapath. Overwrites the repo-root
+//! `NativeBackend::run` datapath, and a sparsity x early-exit sweep
+//! (input density 0.1/0.5/0.9 under an aggressive `ExitPolicy`) whose
+//! records carry `input_density`/`t_avg_realized`/`slice_skip_rate`
+//! extras. Overwrites the repo-root
 //! `BENCH_model.json` (override the path with `BENCH_MODEL_JSON=...`) so
 //! the native-pipeline perf trajectory is tracked across PRs.
 //!
@@ -15,7 +18,7 @@ use std::time::Duration;
 
 use xpikeformer::backend::InferenceBackend;
 use xpikeformer::config::{gpt_native, vit_native, BatchKernel,
-                          HardwareConfig, ModelDims};
+                          ExitPolicy, HardwareConfig, ModelDims};
 use xpikeformer::model::{NativeBackend, XpikeModel};
 use xpikeformer::util::bench::{bench, black_box, metadata_json};
 use xpikeformer::util::Rng;
@@ -151,6 +154,57 @@ fn main() {
     println!("    -> zero-word skip rates: crossbar drive {:.1}%, \
               ssa score/Q rows {:.1}%",
              drive_skip * 1e2, ssa_skip * 1e2);
+
+    // -- Sparsity x early-exit sweep (time-major streaming forward) ------
+    // Constant-valued inputs make the rate encoder's spike probability
+    // exactly the input density; an aggressive exit policy lets
+    // confident lanes retire early. Each record carries the realized
+    // sparsity facts as extras: `input_density`, `t_avg_realized`
+    // (vs `t_max`), `slice_skip_rate` (silent drive slices that
+    // short-circuited the crossbar walk).
+    let model_exit = XpikeModel::new(
+        &vit,
+        &HardwareConfig {
+            early_exit: Some(ExitPolicy { threshold: 0.05, min_steps: 2 }),
+            ..HardwareConfig::default()
+        },
+        42,
+    );
+    for density in [0.1f64, 0.5, 0.9] {
+        let xs = vec![density as f32; lanes * sl];
+        let r = bench(
+            &format!("forward_batch early_exit density={density} \
+                      lanes={lanes} {}",
+                     vit.name),
+            1,
+            budget,
+            || {
+                black_box(
+                    model_exit.forward_batch(&xs, lanes, &seeds).unwrap());
+            },
+        );
+        let (_, energy, exits) =
+            model_exit.forward_batch_exits(&xs, lanes, &seeds).unwrap();
+        let t_avg =
+            exits.iter().sum::<usize>() as f64 / exits.len() as f64;
+        let (mut slices, mut silent) = (0u64, 0u64);
+        for l in &energy.layers {
+            slices += l.aimc.drive_slices;
+            silent += l.aimc.silent_drive_slices;
+        }
+        let skip =
+            if slices == 0 { 0.0 } else { silent as f64 / slices as f64 };
+        println!("    -> density {density}: t_avg_realized {t_avg:.2} \
+                  of {}, slice skip {:.1}%",
+                 vit.t_steps, skip * 1e2);
+        records.push(
+            r.with_extra("input_density", density)
+                .with_extra("t_max", vit.t_steps as f64)
+                .with_extra("t_avg_realized", t_avg)
+                .with_extra("slice_skip_rate", skip)
+                .to_json(),
+        );
+    }
 
     // The serving datapath: lane_chunk-sized forward_batch calls on
     // parallel threads (locality within a chunk, cores across chunks).

@@ -1,7 +1,10 @@
 //! SSA engine benchmarks: cycle-level tile simulation throughput at the
 //! trained scales and at the paper's edge-workload scales (N=16..128),
 //! plus the packed-vs-legacy and serial-vs-parallel MHSA comparisons the
-//! bit-packing refactor was made for. Feeds §Perf in EXPERIMENTS.md
+//! bit-packing refactor was made for, and the 64-lane lane-sliced arm
+//! (batch vs time-major streaming, dense vs sparse spike activity, with
+//! `input_density`/`row_skip_rate` extras on the sparse records). Feeds
+//! §Perf in EXPERIMENTS.md
 //! (L3 hot path: the tile inner loop) and overwrites the repo-root
 //! `BENCH_ssa.json` (override the path with `BENCH_SSA_JSON=...`) so
 //! the perf trajectory is tracked across PRs.
@@ -10,9 +13,12 @@
 
 use std::time::Duration;
 
-use xpikeformer::spike::{and_popcount, and_popcount_scalar, SpikeVolume};
+use xpikeformer::spike::{and_popcount, and_popcount_scalar,
+                         LaneSlicedVolume, SpikeVolume};
 use xpikeformer::ssa::legacy::LegacyTile;
-use xpikeformer::ssa::{BitMatrix, SsaEngine, SsaTile};
+use xpikeformer::ssa::{run_mhsa_lanes_sliced, step_mhsa_sliced,
+                       stream_sliced_tiles, BitMatrix, HeadQkv,
+                       SlicedHeadQkv, SsaEngine, SsaTile};
 use xpikeformer::util::bench::{bench, black_box, metadata_json};
 use xpikeformer::util::Rng;
 
@@ -179,6 +185,98 @@ fn main() {
     records.push(r_bool_serial.to_json());
     records.push(r_packed_serial.to_json());
     records.push(r_packed_parallel.to_json());
+
+    // ---- Streaming lane-sliced MHSA under dense vs sparse spikes ----
+    // 64 batch lanes through the time-major lane-sliced tiles (the
+    // early-exit forward's kernel): batch arm vs streaming arm, with the
+    // sparse point (2% spike probability) exercising the silent-row
+    // short-circuits — surfaced in each streaming record's
+    // `input_density`/`row_skip_rate` extras.
+    let lanes = 64usize;
+    let lane_seeds: Vec<u32> = (0..lanes as u32).collect();
+    for density in [0.25f64, 0.02] {
+        let mut rng = Rng::seed_from_u64(4);
+        let qkv_lanes: Vec<Vec<HeadQkv>> = (0..lanes)
+            .map(|_| {
+                (0..heads)
+                    .map(|_| {
+                        let mut vol = || {
+                            SpikeVolume::from_bools(&mats(
+                                &mut rng, t, n, dk, density))
+                        };
+                        (vol(), vol(), vol())
+                    })
+                    .collect()
+            })
+            .collect();
+        let r_batch = bench(
+            &format!("mhsa lane-sliced batch density={density} \
+                      lanes={lanes} H={heads} N={n} dk={dk} T={t}"),
+            1,
+            budget,
+            || {
+                black_box(run_mhsa_lanes_sliced(n, dk, false, &lane_seeds,
+                                                &qkv_lanes));
+            },
+        );
+        records.push(r_batch.with_extra("input_density", density)
+                            .to_json());
+        // Streaming twin: pack per-head slabs once, then step all heads
+        // one timestep at a time (what the time-major forward drives).
+        let sliced: Vec<SlicedHeadQkv> = (0..heads)
+            .map(|h| {
+                let gather = |pick: fn(&HeadQkv) -> &SpikeVolume| {
+                    let refs: Vec<&SpikeVolume> = qkv_lanes
+                        .iter()
+                        .map(|lane| pick(&lane[h]))
+                        .collect();
+                    LaneSlicedVolume::transpose_from_lane_refs(&refs)
+                };
+                (gather(|q| &q.0), gather(|q| &q.1), gather(|q| &q.2))
+            })
+            .collect();
+        let run_stream = || {
+            let mut tiles =
+                stream_sliced_tiles(heads, n, dk, false, &lane_seeds);
+            for step in 0..t {
+                let qkv_t: Vec<_> = sliced
+                    .iter()
+                    .map(|(q, k, v)| (q.step(step).clone(),
+                                      k.step(step).clone(),
+                                      v.step(step).clone()))
+                    .collect();
+                black_box(step_mhsa_sliced(&mut tiles, &qkv_t));
+            }
+            tiles
+        };
+        let r_stream = bench(
+            &format!("mhsa lane-sliced stream density={density} \
+                      lanes={lanes} H={heads} N={n} dk={dk} T={t}"),
+            1,
+            budget,
+            || {
+                black_box(run_stream());
+            },
+        );
+        let tiles = run_stream();
+        let (mut rows, mut silent) = (0u64, 0u64);
+        for tile in &tiles {
+            for s in tile.lane_stats() {
+                rows += s.rows;
+                silent += s.silent_rows;
+            }
+        }
+        let skip =
+            if rows == 0 { 0.0 } else { silent as f64 / rows as f64 };
+        println!("    -> density {density}: silent-row skip {:.1}%",
+                 skip * 1e2);
+        records.push(
+            r_stream
+                .with_extra("input_density", density)
+                .with_extra("row_skip_rate", skip)
+                .to_json(),
+        );
+    }
 
     // ---- BENCH_ssa.json ----
     // Default to the repo root (one level above the crate) regardless of

@@ -165,6 +165,26 @@ impl SynapticArray {
         currents
     }
 
+    /// The exact output [`Self::mvm`] produces on an all-silent input:
+    /// zero Kirchhoff current everywhere, so only the per-column read
+    /// noise draw and SAR ADC quantization remain. Draw-for-draw
+    /// identical to `mvm` on a zero [`SpikeVector`] (one `normal_ms`
+    /// per column, ascending column order — noise is a property of the
+    /// read, not of the drive), but skips the bit-line scan and weight
+    /// rows entirely: the silent-slice fast path.
+    pub fn mvm_silent(&self, rng: &mut Rng, hw: &HardwareConfig)
+                      -> Vec<f32> {
+        let noise_std = hw.sigma_read * self.w_max as f64;
+        let levels = hw.adc_levels() as f32;
+        let step = self.adc_clip / levels;
+        (0..self.cols)
+            .map(|_| {
+                let i = rng.normal_ms(0.0, noise_std) as f32;
+                (i / step).round().clamp(-levels, levels) * step
+            })
+            .collect()
+    }
+
     /// Ideal (noise-free, drift-free, but quantized) MVM — used by tests
     /// to isolate ADC behaviour.
     pub fn mvm_ideal(&self, spikes: &SpikeVector, hw: &HardwareConfig)
@@ -305,6 +325,28 @@ mod tests {
             assert_eq!(skips.zero_words,
                        drive.iter().filter(|&&w| w == 0).count() as u64);
         }
+    }
+
+    #[test]
+    fn silent_mvm_bit_identical_to_zero_drive() {
+        // Noise ON: the silent fast path must consume the same draws in
+        // the same order as a full mvm over an all-zero spike vector.
+        let hw = HardwareConfig { sigma_read: 0.1,
+                                  ..HardwareConfig::default() };
+        let mut rng = Rng::seed_from_u64(41);
+        let weights: Vec<f32> = (0..80 * 36)
+            .map(|i| ((i * 31) % 100) as f32 / 500.0 - 0.1)
+            .collect();
+        let clip = adc_clip_of(&weights, &hw);
+        let sa = SynapticArray::program_block(&mut rng, &weights, 80, 36,
+                                              0.2, clip, &hw);
+        let mut r1 = Rng::seed_from_u64(777);
+        let mut r2 = Rng::seed_from_u64(777);
+        let want = sa.mvm(&mut r1, &SpikeVector::zeros(80), 1.5, &hw);
+        let got = sa.mvm_silent(&mut r2, &hw);
+        assert_eq!(got, want);
+        // RNG streams stay aligned after the call.
+        assert_eq!(r1.normal(), r2.normal());
     }
 
     #[test]

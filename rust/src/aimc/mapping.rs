@@ -130,6 +130,28 @@ impl MappedMatrix {
         out
     }
 
+    /// [`Self::mvm`] on an all-silent input without materializing or
+    /// scanning any drive: per (row block, col block) in `mvm`'s visit
+    /// order, only the per-column noise + ADC draws remain
+    /// ([`SynapticArray::mvm_silent`]), accumulated per output column
+    /// exactly as `mvm` accumulates. Bit- and draw-identical to
+    /// `self.mvm(rng, &SpikeVector::zeros(d_in), ..)` — the whole-slice
+    /// short-circuit of the time-major forward.
+    pub fn mvm_silent(&self, rng: &mut Rng, hw: &HardwareConfig)
+                      -> Vec<f32> {
+        let xb = hw.crossbar_dim;
+        let mut out = vec![0.0f32; self.d_out];
+        for row in self.blocks.iter() {
+            for (cb, sa) in row.iter().enumerate() {
+                let local = sa.mvm_silent(rng, hw);
+                for (c, v) in local.iter().enumerate() {
+                    out[cb * xb + c] += v;
+                }
+            }
+        }
+        out
+    }
+
     /// MVM followed by the shared LIF units — one "spiking neuron tile"
     /// step for a token (used by the standalone engine demo and tests).
     /// Packed spikes in, packed spikes out: the whole spiking linear
@@ -345,6 +367,23 @@ mod tests {
                        zero_rows * m.col_blocks() as u64);
             assert!(skips.skip_rate() >= 0.0);
         }
+    }
+
+    #[test]
+    fn mapped_silent_mvm_bit_identical_to_zero_drive() {
+        // Multi-block mapping, read noise ON: the silent path must
+        // reproduce mvm-on-zeros exactly, block order and all.
+        let hw = HardwareConfig::default();
+        let mut rng = Rng::seed_from_u64(15);
+        let (din, dout) = (300, 130); // 3 row blocks x 2 col blocks
+        let w = rand_weights(din * dout, 0.05);
+        let m = MappedMatrix::program(&mut rng, &w, din, dout, &hw);
+        let mut r1 = Rng::seed_from_u64(4242);
+        let mut r2 = Rng::seed_from_u64(4242);
+        let want = m.mvm(&mut r1, &SpikeVector::zeros(din), 2.0, &hw);
+        let got = m.mvm_silent(&mut r2, &hw);
+        assert_eq!(got, want);
+        assert_eq!(r1.normal(), r2.normal(), "draw streams stay aligned");
     }
 
     #[test]

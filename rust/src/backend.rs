@@ -42,6 +42,24 @@ pub trait InferenceBackend: Send + 'static {
         self.run(x, seeds.first().copied().unwrap_or(0))
     }
 
+    /// [`Self::run_seeded`] plus the per-lane *realized* timestep count:
+    /// `t_exits[lane]` is how many of the `t_max()` encoding steps the
+    /// backend actually executed for that lane before a dynamic-timestep
+    /// early exit fired (always `t_max()` when exits are disabled or
+    /// unsupported). Logit rows past the exit point replicate the last
+    /// realized row, so downstream prefix-mean decoding is unchanged.
+    ///
+    /// The default runs [`Self::run_seeded`] and reports every lane at
+    /// `t_max()` — correct for backends without an early-exit path (the
+    /// AOT/HLO artifacts, mocks). The native simulator overrides this to
+    /// surface its streaming loop's exit points.
+    fn run_seeded_t_exit(&self, x: &[f32], seeds: &[u32])
+                         -> Result<(Vec<f32>, Vec<usize>)> {
+        let logits = self.run_seeded(x, seeds)?;
+        let t_exits = vec![self.t_max(); self.batch()];
+        Ok((logits, t_exits))
+    }
+
     /// Executable batch size (the hardware's physical parallelism).
     fn batch(&self) -> usize;
 

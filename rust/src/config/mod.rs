@@ -178,6 +178,34 @@ pub enum BatchKernel {
     LaneSliced,
 }
 
+/// Dynamic-timestep early exit for the time-major batched forward
+/// (SEENN-style confidence thresholding adapted to spiking inference).
+///
+/// After each realized timestep `t` (0-based), a lane's head readout is
+/// accumulated into a running logit sum; the lane exits once
+/// `t + 1 >= min_steps` **and** the top-1/top-2 margin of the *mean*
+/// logits (`cum / (t + 1)`) reaches `threshold`. Exited lanes stop
+/// consuming crossbar drives, LIF updates and SSA draws; their
+/// remaining logit rows replicate the last realized step, so downstream
+/// prefix-mean prediction is unchanged in shape. `threshold =
+/// f32::INFINITY` never exits (a `margin >= inf` comparison is false
+/// for every finite margin), making the policy's no-op configuration
+/// provably bit-identical to `early_exit: None`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ExitPolicy {
+    /// Minimum top-1/top-2 margin of the running mean logits.
+    pub threshold: f32,
+    /// Never exit before this many timesteps have run (clamped to >= 1).
+    pub min_steps: usize,
+}
+
+impl Default for ExitPolicy {
+    fn default() -> Self {
+        // A conservative margin: exits only clearly-decided inputs.
+        ExitPolicy { threshold: 1.0, min_steps: 2 }
+    }
+}
+
 /// Hardware configuration — paper Table II plus clocking (§VII: 200 MHz).
 #[derive(Debug, Clone)]
 pub struct HardwareConfig {
@@ -218,6 +246,10 @@ pub struct HardwareConfig {
     pub lane_chunk: usize,
     /// Which batched-forward kernel to run (bit-identical results).
     pub batch_kernel: BatchKernel,
+    /// Dynamic-timestep early exit for the batched forward. `None`
+    /// (default) runs every lane for all `t_steps` — provably
+    /// bit-identical to the pre-exit kernels.
+    pub early_exit: Option<ExitPolicy>,
 }
 
 impl Default for HardwareConfig {
@@ -239,6 +271,7 @@ impl Default for HardwareConfig {
             adc_clip_kappa: 4.0,
             lane_chunk: 64,
             batch_kernel: BatchKernel::default(),
+            early_exit: None,
         }
     }
 }
@@ -376,6 +409,10 @@ mod tests {
         assert_eq!(hw.lane_chunk, 64,
                    "default chunk fills one lane-sliced word");
         assert_eq!(hw.batch_kernel, BatchKernel::LaneSliced);
+        assert_eq!(hw.early_exit, None,
+                   "exit policy is opt-in: default must be bit-identical");
+        let p = ExitPolicy::default();
+        assert!(p.threshold > 0.0 && p.min_steps >= 1);
     }
 
     #[test]

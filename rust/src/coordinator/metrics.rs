@@ -46,9 +46,35 @@ struct ShardCounters {
     failed: u64,
     batches: u64,
     batched_samples: u64,
+    /// Realized-timestep accounting for dynamic-timestep early exit:
+    /// sum/count of per-request `t_exit` values plus a bucketed
+    /// histogram ([`T_EXIT_BUCKETS`]).
+    t_exit_sum: u64,
+    t_exit_count: u64,
+    t_exit_hist: [u64; T_EXIT_BUCKETS.len()],
 }
 
 const RESERVOIR: usize = 65536;
+
+/// Histogram bucket labels for realized-timestep counts: exact 1..4,
+/// then coarsening ranges (spike encodings rarely exceed a few tens of
+/// steps).
+pub const T_EXIT_BUCKETS: [&str; 8] =
+    ["1", "2", "3", "4", "5-6", "7-8", "9-16", "17+"];
+
+/// Bucket index into [`T_EXIT_BUCKETS`] for one realized-timestep count.
+fn t_exit_bucket(t_exit: usize) -> usize {
+    match t_exit {
+        0..=1 => 0,
+        2 => 1,
+        3 => 2,
+        4 => 3,
+        5..=6 => 4,
+        7..=8 => 5,
+        9..=16 => 6,
+        _ => 7,
+    }
+}
 
 impl Default for Metrics {
     fn default() -> Self {
@@ -97,6 +123,18 @@ impl Metrics {
         }
     }
 
+    /// Record one completed request's realized timestep count (its
+    /// `t_exit`): `t_max` when early exit is disabled, fewer when the
+    /// shard's backend retired the lane early. Tracked per shard so the
+    /// exit distribution stays observable under sharded routing.
+    pub fn record_t_exit(&self, shard: usize, t_exit: usize) {
+        let mut m = self.inner.lock().unwrap();
+        let s = &mut m.shards[shard];
+        s.t_exit_sum += t_exit as u64;
+        s.t_exit_count += 1;
+        s.t_exit_hist[t_exit_bucket(t_exit)] += 1;
+    }
+
     /// Count one submission shed by queue-full backpressure (front
     /// queue — not attributable to a shard).
     pub fn record_rejected(&self) {
@@ -137,6 +175,11 @@ impl Metrics {
                 m.queue_waits_us.iter().sum::<u64>() as f64
                     / m.queue_waits_us.len() as f64
             },
+            mean_t_exit: {
+                let (sum, count) = m.shards.iter().fold((0u64, 0u64),
+                    |(s, c), sh| (s + sh.t_exit_sum, c + sh.t_exit_count));
+                if count == 0 { 0.0 } else { sum as f64 / count as f64 }
+            },
             per_shard: m
                 .shards
                 .iter()
@@ -147,6 +190,10 @@ impl Metrics {
                     mean_batch: if s.batches == 0 { 0.0 } else {
                         s.batched_samples as f64 / s.batches as f64
                     },
+                    mean_t_exit: if s.t_exit_count == 0 { 0.0 } else {
+                        s.t_exit_sum as f64 / s.t_exit_count as f64
+                    },
+                    t_exit_hist: s.t_exit_hist,
                 })
                 .collect(),
         }
@@ -160,6 +207,11 @@ pub struct ShardSnapshot {
     pub failed: u64,
     pub batches: u64,
     pub mean_batch: f64,
+    /// Mean realized timesteps per request on this shard (0 when no
+    /// `t_exit` has been recorded yet).
+    pub mean_t_exit: f64,
+    /// Realized-timestep histogram, bucketed per [`T_EXIT_BUCKETS`].
+    pub t_exit_hist: [u64; T_EXIT_BUCKETS.len()],
 }
 
 /// Point-in-time metrics view (merged totals + per-shard breakdown).
@@ -182,6 +234,10 @@ pub struct MetricsSnapshot {
     pub p95_us: u64,
     pub p99_us: u64,
     pub mean_queue_us: f64,
+    /// Mean realized timesteps per request across all shards — `t_max`
+    /// when early exit is disabled; lower means the dynamic-timestep
+    /// exit is saving encoding steps.
+    pub mean_t_exit: f64,
     /// Per-shard counters; entries sum to the merged totals.
     pub per_shard: Vec<ShardSnapshot>,
 }
@@ -197,12 +253,28 @@ impl std::fmt::Display for MetricsSnapshot {
             self.mean_batch, self.throughput_rps, self.p50_us, self.p95_us,
             self.p99_us, self.mean_queue_us
         )?;
+        if self.mean_t_exit > 0.0 {
+            write!(f, " t_exit={:.2}", self.mean_t_exit)?;
+        }
         if self.per_shard.len() > 1 {
             for (i, s) in self.per_shard.iter().enumerate() {
                 write!(f,
                        "\n  shard{i}: done={} failed={} batches={} \
                         mean_batch={:.2}",
                        s.completed, s.failed, s.batches, s.mean_batch)?;
+                if s.t_exit_hist.iter().any(|&c| c > 0) {
+                    write!(f, " t_exit={:.2} hist[", s.mean_t_exit)?;
+                    let mut sep = "";
+                    for (label, count) in
+                        T_EXIT_BUCKETS.iter().zip(&s.t_exit_hist)
+                    {
+                        if *count > 0 {
+                            write!(f, "{sep}{label}:{count}")?;
+                            sep = " ";
+                        }
+                    }
+                    write!(f, "]")?;
+                }
             }
         }
         Ok(())
@@ -295,5 +367,47 @@ mod tests {
         // The sharded display carries the per-shard lines.
         let text = s.to_string();
         assert!(text.contains("shard1: done=0 failed=7"), "{text}");
+    }
+
+    #[test]
+    fn t_exit_buckets_partition_the_counts() {
+        // Every count lands in exactly one bucket, and the boundaries
+        // match the labels: 1..4 exact, then 5-6, 7-8, 9-16, 17+.
+        assert_eq!(t_exit_bucket(0), 0);
+        assert_eq!(t_exit_bucket(1), 0);
+        assert_eq!(t_exit_bucket(2), 1);
+        assert_eq!(t_exit_bucket(4), 3);
+        assert_eq!(t_exit_bucket(5), 4);
+        assert_eq!(t_exit_bucket(6), 4);
+        assert_eq!(t_exit_bucket(7), 5);
+        assert_eq!(t_exit_bucket(8), 5);
+        assert_eq!(t_exit_bucket(9), 6);
+        assert_eq!(t_exit_bucket(16), 6);
+        assert_eq!(t_exit_bucket(17), 7);
+        assert_eq!(t_exit_bucket(1000), 7);
+    }
+
+    #[test]
+    fn t_exit_metrics_track_mean_and_histogram_per_shard() {
+        let m = Metrics::new(2);
+        // Before any t_exit: the display omits the section entirely.
+        assert!(!m.snapshot().to_string().contains("t_exit"));
+        m.record_t_exit(0, 1);
+        m.record_t_exit(0, 3);
+        m.record_t_exit(1, 4);
+        m.record_t_exit(1, 4);
+        m.record_t_exit(1, 10);
+        let s = m.snapshot();
+        assert!((s.mean_t_exit - 22.0 / 5.0).abs() < 1e-9);
+        assert!((s.per_shard[0].mean_t_exit - 2.0).abs() < 1e-9);
+        assert!((s.per_shard[1].mean_t_exit - 6.0).abs() < 1e-9);
+        assert_eq!(s.per_shard[0].t_exit_hist[0], 1); // "1"
+        assert_eq!(s.per_shard[0].t_exit_hist[2], 1); // "3"
+        assert_eq!(s.per_shard[1].t_exit_hist[3], 2); // "4"
+        assert_eq!(s.per_shard[1].t_exit_hist[6], 1); // "9-16"
+        let text = s.to_string();
+        assert!(text.contains("t_exit=4.40"), "{text}");
+        assert!(text.contains("shard0: done=0 failed=0"), "{text}");
+        assert!(text.contains("t_exit=6.00 hist[4:2 9-16:1]"), "{text}");
     }
 }

@@ -95,6 +95,13 @@ pub struct Response {
     pub logits_t: Vec<f32>,
     pub t_max: usize,
     pub classes: usize,
+    /// Encoding timesteps the backend actually executed for this sample
+    /// before a dynamic-timestep early exit fired — `t_max` when exits
+    /// are disabled or unsupported, and always `t_max` on the generate
+    /// path (decode runs the full window). Logit rows past `t_exit`
+    /// replicate the last realized row, so [`Self::predict`] /
+    /// [`Self::predict_at`] work unchanged.
+    pub t_exit: usize,
     pub queue_us: u64,
     pub e2e_us: u64,
 }
@@ -560,9 +567,11 @@ fn shard_loop<B: InferenceBackend>(shard: usize, backend: B, cfg: RunConfig,
                         let e2e_us =
                             g.enqueued.elapsed().as_micros() as u64;
                         metrics.record_done(shard, e2e_us, queue_us);
+                        // Decode always runs the full T window.
+                        metrics.record_t_exit(shard, t_max);
                         let _ = g.respond.send(Response {
-                            logits_t: logits, t_max, classes, queue_us,
-                            e2e_us,
+                            logits_t: logits, t_max, classes,
+                            t_exit: t_max, queue_us, e2e_us,
                         });
                     }
                     Err(e) => {
@@ -594,10 +603,10 @@ fn shard_loop<B: InferenceBackend>(shard: usize, backend: B, cfg: RunConfig,
             seeds[b] = seeds[last];
         }
         let started = Instant::now();
-        let result = backend.run_seeded(&x, &seeds);
+        let result = backend.run_seeded_t_exit(&x, &seeds);
         inflight[shard].fetch_sub(1, Ordering::SeqCst);
         match result {
-            Ok(logits) => {
+            Ok((logits, t_exits)) => {
                 for (b, req) in batch.into_iter().enumerate() {
                     // Slice this sample's [t, classes] lanes out of
                     // [t_max, exe_batch, classes].
@@ -606,12 +615,16 @@ fn shard_loop<B: InferenceBackend>(shard: usize, backend: B, cfg: RunConfig,
                         let off = (t * exe_batch + b) * classes;
                         mine.extend_from_slice(&logits[off..off + classes]);
                     }
+                    let t_exit =
+                        t_exits.get(b).copied().unwrap_or(t_max);
                     let queue_us =
                         (started - req.enqueued).as_micros() as u64;
                     let e2e_us = req.enqueued.elapsed().as_micros() as u64;
                     metrics.record_done(shard, e2e_us, queue_us);
+                    metrics.record_t_exit(shard, t_exit);
                     let _ = req.respond.send(Response {
-                        logits_t: mine, t_max, classes, queue_us, e2e_us,
+                        logits_t: mine, t_max, classes, t_exit, queue_us,
+                        e2e_us,
                     });
                 }
             }
@@ -817,6 +830,7 @@ mod tests {
                            f32::NAN, 1.0, 0.0 /* t1 */],
             t_max: 2,
             classes: 3,
+            t_exit: 2,
             queue_us: 0,
             e2e_us: 0,
         };
@@ -829,6 +843,7 @@ mod tests {
             logits_t: vec![f32::NAN, f32::NAN],
             t_max: 1,
             classes: 2,
+            t_exit: 1,
             queue_us: 0,
             e2e_us: 0,
         };
@@ -841,6 +856,7 @@ mod tests {
             logits_t: vec![0.0, 3.0, /* t0 */ 4.0, 0.0 /* t1 */],
             t_max: 2,
             classes: 2,
+            t_exit: 2,
             queue_us: 0,
             e2e_us: 0,
         };

@@ -23,6 +23,18 @@ pub struct AimcEnergy {
     pub drive_words: u64,
     /// Of those, all-zero words skipped by the event-driven guard.
     pub zero_drive_words: u64,
+    /// (t, token, lane) drive slices presented to the stage's crossbars
+    /// (event counter, not energy); zero on the analytical path.
+    pub drive_slices: u64,
+    /// Of those, all-zero slices short-circuited past the bit-line scan
+    /// (noise draws and ADC quantization still run, so outputs are
+    /// bit-identical).
+    pub silent_drive_slices: u64,
+    /// Input bit positions presented across all drive slices (the
+    /// density denominator).
+    pub drive_bits: u64,
+    /// Of those, bits that were spikes (the density numerator).
+    pub drive_spikes: u64,
 }
 
 impl AimcEnergy {
@@ -56,6 +68,26 @@ impl AimcEnergy {
         }
     }
 
+    /// Realized all-silent-slice rate of the crossbar drive traversal
+    /// (0.0 when the record tracked no slices).
+    pub fn slice_skip_rate(&self) -> f64 {
+        if self.drive_slices == 0 {
+            0.0
+        } else {
+            self.silent_drive_slices as f64 / self.drive_slices as f64
+        }
+    }
+
+    /// Realized spike density of the crossbar drives (0.0 when the
+    /// record tracked no bits).
+    pub fn input_density(&self) -> f64 {
+        if self.drive_bits == 0 {
+            0.0
+        } else {
+            self.drive_spikes as f64 / self.drive_bits as f64
+        }
+    }
+
     /// Accumulate another breakdown (summing per-layer into totals).
     pub fn add(&mut self, o: &AimcEnergy) {
         self.crossbar_pj += o.crossbar_pj;
@@ -65,6 +97,10 @@ impl AimcEnergy {
         self.dac_wl_pj += o.dac_wl_pj;
         self.drive_words += o.drive_words;
         self.zero_drive_words += o.zero_drive_words;
+        self.drive_slices += o.drive_slices;
+        self.silent_drive_slices += o.silent_drive_slices;
+        self.drive_bits += o.drive_bits;
+        self.drive_spikes += o.drive_spikes;
     }
 }
 
@@ -82,6 +118,11 @@ pub struct SsaEnergy {
     pub sliced_words: u64,
     /// Of those, all-zero words skipped by the event-driven guard.
     pub sliced_zero_words: u64,
+    /// Row-silence probes evaluated by the streaming (time-major) tiles
+    /// (event counter, not energy); zero on batch-tile paths.
+    pub rows: u64,
+    /// Of those, rows found all-silent and short-circuited.
+    pub silent_rows: u64,
 }
 
 impl SsaEnergy {
@@ -103,6 +144,8 @@ impl SsaEnergy {
             prn_pj: stats.prn_bytes as f64 * E_LFSR_BYTE,
             sliced_words: stats.sliced_words,
             sliced_zero_words: stats.sliced_zero_words,
+            rows: stats.rows,
+            silent_rows: stats.silent_rows,
         }
     }
 
@@ -116,6 +159,16 @@ impl SsaEnergy {
         }
     }
 
+    /// Realized row-silence skip rate of the streaming traversal (0.0
+    /// when the record has no row probes).
+    pub fn row_skip_rate(&self) -> f64 {
+        if self.rows == 0 {
+            0.0
+        } else {
+            self.silent_rows as f64 / self.rows as f64
+        }
+    }
+
     pub fn add(&mut self, o: &SsaEnergy) {
         self.and_pj += o.and_pj;
         self.counter_pj += o.counter_pj;
@@ -125,6 +178,8 @@ impl SsaEnergy {
         self.prn_pj += o.prn_pj;
         self.sliced_words += o.sliced_words;
         self.sliced_zero_words += o.sliced_zero_words;
+        self.rows += o.rows;
+        self.silent_rows += o.silent_rows;
     }
 }
 
@@ -157,6 +212,12 @@ pub struct ModelEnergy {
     pub layers: Vec<LayerEnergy>,
     /// Forward passes accumulated into this record.
     pub inferences: u64,
+    /// Timesteps actually executed, summed over the record's lanes.
+    /// Equals `inferences * t_steps` without early exit; smaller when
+    /// [`crate::config::ExitPolicy`] trips lanes early. The LIF,
+    /// residual and DAC/conversion terms above already scale with it —
+    /// this surfaces the realized `t` for reporting.
+    pub realized_steps: u64,
 }
 
 impl ModelEnergy {
@@ -168,6 +229,7 @@ impl ModelEnergy {
     /// appended) — the coordinator backend's rolling accumulator.
     pub fn add(&mut self, o: &ModelEnergy) {
         self.inferences += o.inferences;
+        self.realized_steps += o.realized_steps;
         for l in &o.layers {
             match self.layers.iter_mut().find(|m| m.name == l.name) {
                 Some(m) => {
@@ -444,17 +506,44 @@ mod tests {
         let mut a = ModelEnergy {
             layers: vec![layer("embed", 10), layer("blk0", 20)],
             inferences: 1,
+            realized_steps: 4,
         };
         let b = ModelEnergy {
             layers: vec![layer("blk0", 20), layer("head", 5)],
             inferences: 1,
+            realized_steps: 3,
         };
         a.add(&b);
         assert_eq!(a.inferences, 2);
+        assert_eq!(a.realized_steps, 7);
         assert_eq!(a.layers.len(), 3);
         let blk0 = a.layers.iter().find(|l| l.name == "blk0").unwrap();
         assert!((blk0.aimc.adc_pj - 40.0 * E_ADC_CONV).abs() < 1e-12);
         assert!(a.report().contains("head"));
+    }
+
+    #[test]
+    fn skip_counters_ride_along_without_energy() {
+        // Slice/density/row counters accumulate through add() but never
+        // contribute picojoules — they are diagnostics, not energy.
+        let mut a = AimcEnergy {
+            drive_slices: 10,
+            silent_drive_slices: 4,
+            drive_bits: 100,
+            drive_spikes: 25,
+            ..AimcEnergy::default()
+        };
+        assert_eq!(a.total_pj(), 0.0);
+        assert_eq!(a.slice_skip_rate(), 0.4);
+        assert_eq!(a.input_density(), 0.25);
+        a.add(&a.clone());
+        assert_eq!(a.slice_skip_rate(), 0.4);
+        let s = SsaEnergy { rows: 8, silent_rows: 2, ..SsaEnergy::default() };
+        assert_eq!(s.total_pj(), 0.0);
+        assert_eq!(s.row_skip_rate(), 0.25);
+        assert_eq!(AimcEnergy::default().slice_skip_rate(), 0.0);
+        assert_eq!(AimcEnergy::default().input_density(), 0.0);
+        assert_eq!(SsaEnergy::default().row_skip_rate(), 0.0);
     }
 
     #[test]

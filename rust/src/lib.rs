@@ -14,7 +14,14 @@
 //!   per feature serving up to 64 lanes — bit-identical per lane to the
 //!   serial path, with the lane-loop kernel kept as the selectable
 //!   equivalence oracle) and chunked across threads by the default
-//!   serving backend. `model::decode`
+//!   serving backend. Both batch kernels run *time-major* (one timestep
+//!   through all blocks plus head readout per step), which enables
+//!   dynamic-timestep early exit (`config::ExitPolicy` — lanes retire
+//!   once their readout margin clears; off by default, bit-exact when
+//!   off) and event-driven silent-slice short-circuits (all-zero spike
+//!   slices skip the crossbar walk; silent attention rows skip their
+//!   AND/popcount sweeps), with realized work surfaced through the
+//!   energy counters. `model::decode`
 //!   adds streaming autoregressive decode for causal models: per-session
 //!   `DecodeState` caching LIF banks, packed K/V spike volumes and
 //!   RNG/LFSR cursors, with `decode_step` bit-identical to the one-shot

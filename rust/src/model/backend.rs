@@ -76,10 +76,11 @@ impl NativeBackend {
     }
 
     /// Execute the full batch with explicit per-lane model seeds:
-    /// `lane_chunk`-sized [`XpikeModel::forward_batch`] calls on scoped
-    /// threads, reassembled into `[t_max, batch, classes]` logits.
+    /// `lane_chunk`-sized [`XpikeModel::forward_batch_exits`] calls on
+    /// scoped threads, reassembled into `[t_max, batch, classes]` logits
+    /// plus the per-lane realized timestep counts (batch order).
     fn run_with_lane_seeds(&self, x: &[f32], lane_seeds: &[u64])
-                           -> Result<Vec<f32>> {
+                           -> Result<(Vec<f32>, Vec<usize>)> {
         let sl = self.model.sample_len();
         let (t_max, classes) = (self.t_max(), self.classes());
         ensure!(x.len() == self.batch * sl,
@@ -90,7 +91,8 @@ impl NativeBackend {
                 self.batch);
         let chunk = self.model.hw.lane_chunk.max(1);
         let n_chunks = self.batch.div_ceil(chunk);
-        let mut slots: Vec<Option<Result<(Vec<f32>, ModelEnergy)>>> =
+        type ChunkOut = (Vec<f32>, ModelEnergy, Vec<usize>);
+        let mut slots: Vec<Option<Result<ChunkOut>>> =
             (0..n_chunks).map(|_| None).collect();
         std::thread::scope(|scope| {
             for (ci, slot) in slots.iter_mut().enumerate() {
@@ -100,19 +102,24 @@ impl NativeBackend {
                 let xs = &x[lo * sl..hi * sl];
                 let seeds = &lane_seeds[lo..hi];
                 scope.spawn(move || {
-                    *slot = Some(model.forward_batch(xs, hi - lo, seeds));
+                    *slot =
+                        Some(model.forward_batch_exits(xs, hi - lo, seeds));
                 });
             }
         });
         // Reassemble [t_max, batch, classes] from each chunk's lane-major
-        // [lanes, t_max, classes]; fold measured energy per chunk.
+        // [lanes, t_max, classes]; fold measured energy per chunk and
+        // splice per-lane exit points back into batch order.
         let mut out = vec![0.0f32; t_max * self.batch * classes];
+        let mut t_exits = vec![t_max; self.batch];
         let mut acc = self.energy.lock().unwrap();
         for (ci, slot) in slots.into_iter().enumerate() {
-            let (logits, energy) = slot.expect("chunk thread completed")?;
+            let (logits, energy, exits) =
+                slot.expect("chunk thread completed")?;
             acc.add(&energy);
             let lo = ci * chunk;
             let lanes = (lo + chunk).min(self.batch) - lo;
+            t_exits[lo..lo + lanes].copy_from_slice(&exits);
             for l in 0..lanes {
                 for t in 0..t_max {
                     let src = &logits[(l * t_max + t) * classes..]
@@ -123,7 +130,7 @@ impl NativeBackend {
             }
         }
         drop(acc);
-        Ok(out)
+        Ok((out, t_exits))
     }
 }
 
@@ -131,13 +138,27 @@ impl InferenceBackend for NativeBackend {
     fn run(&self, x: &[f32], seed: u32) -> Result<Vec<f32>> {
         let seeds: Vec<u64> =
             (0..self.batch).map(|l| lane_seed(seed, l)).collect();
-        self.run_with_lane_seeds(x, &seeds)
+        Ok(self.run_with_lane_seeds(x, &seeds)?.0)
     }
 
     /// Per-request seeds: lane `b` runs under `seeds[b]` alone — no lane
     /// index mixed in — so a request's logits are bit-identical wherever
     /// it lands in a batch (the coordinator's reproducibility contract).
     fn run_seeded(&self, x: &[f32], seeds: &[u32]) -> Result<Vec<f32>> {
+        ensure!(seeds.len() == self.batch,
+                "got {} seeds for batch {}", seeds.len(), self.batch);
+        let lane_seeds: Vec<u64> =
+            seeds.iter().map(|&s| s as u64).collect();
+        Ok(self.run_with_lane_seeds(x, &lane_seeds)?.0)
+    }
+
+    /// [`Self::run_seeded`] plus per-lane realized timesteps: under an
+    /// [`crate::config::ExitPolicy`] the streaming forward may retire
+    /// lanes before `t_max`, and the coordinator surfaces those exit
+    /// points in its serving metrics. Chunked exactly like `run_seeded`
+    /// — exits are spliced back into batch order.
+    fn run_seeded_t_exit(&self, x: &[f32], seeds: &[u32])
+                         -> Result<(Vec<f32>, Vec<usize>)> {
         ensure!(seeds.len() == self.batch,
                 "got {} seeds for batch {}", seeds.len(), self.batch);
         let lane_seeds: Vec<u64> =
@@ -308,6 +329,40 @@ mod tests {
         // Energy accumulates per execution (3 lanes x 2 runs).
         assert_eq!(b.energy().inferences, 6);
         assert!(b.energy().total_pj() > 0.0);
+    }
+
+    #[test]
+    fn run_seeded_t_exit_reports_realized_steps() {
+        use crate::config::ExitPolicy;
+        // Default policy (None): every lane reports the full window.
+        let b = backend(3);
+        let x = inputs(&b, 3, 12);
+        let (logits, exits) = b.run_seeded_t_exit(&x, &[4, 5, 6]).unwrap();
+        assert_eq!(exits, vec![b.t_max(); 3]);
+        assert_eq!(logits, b.run_seeded(&x, &[4, 5, 6]).unwrap());
+        // A trivially-satisfied exit policy retires every lane at its
+        // min_steps floor, across a chunk boundary (chunk 2, batch 3).
+        let dims = vit_native(1, 64, 2, 4);
+        let hw = HardwareConfig {
+            lane_chunk: 2,
+            early_exit: Some(ExitPolicy { threshold: 0.0, min_steps: 1 }),
+            ..HardwareConfig::default()
+        };
+        let be = NativeBackend::new(XpikeModel::new(&dims, &hw, 5), 3);
+        let (lg, exits) = be.run_seeded_t_exit(&x, &[4, 5, 6]).unwrap();
+        assert_eq!(exits, vec![1; 3], "zero threshold exits at min_steps");
+        assert_eq!(lg.len(), be.t_max() * 3 * be.classes());
+        // Rows past the exit replicate the realized row per lane.
+        let classes = be.classes();
+        for t in 1..be.t_max() {
+            for l in 0..3 {
+                let row = &lg[(t * 3 + l) * classes..][..classes];
+                let first = &lg[l * classes..][..classes];
+                assert_eq!(row, first, "t={t} lane={l}");
+            }
+        }
+        assert!(be.run_seeded_t_exit(&x, &[1, 2]).is_err(),
+                "seed count must match the batch");
     }
 
     #[test]

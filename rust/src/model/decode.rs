@@ -33,13 +33,24 @@
 //! one-shot [`XpikeModel::forward`] — the equivalence-oracle tests below
 //! enforce it, the same pattern that proved lane batching (PR 5) and bit
 //! packing (PR 2) safe.
+//!
+//! Event-driven sparsity diagnostics propagate here too: the shared
+//! crossbar drive path counts per-slice silence (all-zero spike slices
+//! skip the wordline traversal, see `AimcCounts`), and the incremental
+//! attention row applies the same row-silence short-circuits as the
+//! streaming SSA tile — a silent query row skips its AND/popcount sweep
+//! and an empty score row skips the output adders, both exact because
+//! Bernoulli draws are always >= 1. Decode has no dynamic-timestep early
+//! exit (each token must run the full `T` window to keep the cached
+//! state aligned), so [`ModelEnergy::realized_steps`] always reports
+//! `t_steps` per decode fold.
 
 use anyhow::{ensure, Result};
 
 use crate::config::ModelDims;
 use crate::energy::constants::{E_LIF_UPDATE, E_RESIDUAL_EL};
-use crate::energy::{AimcEnergy, LayerEnergy, ModelEnergy, SsaEnergy};
-use crate::model::forward::{AimcCounts, XpikeModel};
+use crate::energy::{LayerEnergy, ModelEnergy, SsaEnergy};
+use crate::model::forward::{aimc_energy, AimcCounts, XpikeModel};
 use crate::snn::{rate_encode_row, LifArray};
 use crate::spike::{and_popcount, SpikeVector, SpikeVolume};
 use crate::ssa::{draw_uniform, LfsrArray, SsaStats};
@@ -141,8 +152,7 @@ impl DecodeState {
             let mut layers = Vec::with_capacity(d.depth + 2);
             layers.push(LayerEnergy {
                 name: "embed".into(),
-                aimc: AimcEnergy::from_counts(lane.embed_counts.conversions,
-                                              lane.embed_counts.wl_pulses),
+                aimc: aimc_energy(&lane.embed_counts),
                 ssa: SsaEnergy::default(),
                 lif_pj: (t_max * self.tokens * dim) as f64 * E_LIF_UPDATE,
                 residual_pj: 0.0,
@@ -150,8 +160,7 @@ impl DecodeState {
             for (b, blk) in lane.blocks.iter().enumerate() {
                 layers.push(LayerEnergy {
                     name: format!("blk{b}"),
-                    aimc: AimcEnergy::from_counts(blk.counts.conversions,
-                                                  blk.counts.wl_pulses),
+                    aimc: aimc_energy(&blk.counts),
                     ssa: SsaEnergy::from_stats(&blk.stats,
                                                (heads * n * n) as u64),
                     lif_pj: (t_max * self.tokens * (5 * dim + hidden))
@@ -162,13 +171,18 @@ impl DecodeState {
             }
             layers.push(LayerEnergy {
                 name: "head".into(),
-                aimc: AimcEnergy::from_counts(lane.head_counts.conversions,
-                                              lane.head_counts.wl_pulses),
+                aimc: aimc_energy(&lane.head_counts),
                 ssa: SsaEnergy::default(),
                 lif_pj: 0.0,
                 residual_pj: 0.0,
             });
-            energy.add(&ModelEnergy { layers, inferences: 1 });
+            // Decode always runs the full T window per token (no early
+            // exit on the incremental path).
+            energy.add(&ModelEnergy {
+                layers,
+                inferences: 1,
+                realized_steps: t_max as u64,
+            });
         }
         energy
     }
@@ -426,13 +440,26 @@ impl XpikeModel {
                     for t in 0..t_max {
                         let qv = hc.q.step(t);
                         let kv = hc.k.step(t);
+                        // Row-silence probes, mirroring the streaming
+                        // tile: a silent query row contributes no
+                        // counter increments and can never clear a draw
+                        // (draws are >= 1), so the AND/popcount work is
+                        // skipped without changing any result.
+                        stats.rows += 2;
+                        let q_silent = qv.row_is_zero(m);
+                        if q_silent {
+                            stats.silent_rows += 1;
+                        }
                         // Q.K counter increments for every new (i, j)
                         // pair with max(i, j) == m (the tile counts all
                         // pairs pre-mask; summed over steps this is the
                         // full n x n total).
-                        for j in 0..=m {
-                            stats.counter_incs +=
-                                and_popcount(qv.row(m), kv.row(j)) as u64;
+                        if !q_silent {
+                            for j in 0..=m {
+                                stats.counter_incs +=
+                                    and_popcount(qv.row(m), kv.row(j))
+                                        as u64;
+                            }
                         }
                         for i in 0..m {
                             stats.counter_incs +=
@@ -440,25 +467,34 @@ impl XpikeModel {
                         }
                         // Masked score row m of window t (keys j <= m).
                         let mut score = SpikeVector::zeros(n);
-                        for j in 0..=m {
-                            let count =
-                                and_popcount(qv.row(m), kv.row(j));
-                            if count >= hc.score_draws[t][m * n + j] {
-                                score.set(j, true);
+                        if !q_silent {
+                            for j in 0..=m {
+                                let count =
+                                    and_popcount(qv.row(m), kv.row(j));
+                                if count >= hc.score_draws[t][m * n + j] {
+                                    score.set(j, true);
+                                }
                             }
                         }
                         // Output row m of window t: column adders over
-                        // the attended values.
+                        // the attended values; an empty score row can
+                        // never fire an output, so it short-circuits.
+                        let score_silent = score.is_zero();
+                        if score_silent {
+                            stats.silent_rows += 1;
+                        }
                         let vv = hc.v.step(t);
-                        for c in 0..dh {
-                            let mut sum = 0u32;
-                            for j in 0..=m {
-                                if score.get(j) && vv.get(j, c) {
-                                    sum += 1;
+                        if !score_silent {
+                            for c in 0..dh {
+                                let mut sum = 0u32;
+                                for j in 0..=m {
+                                    if score.get(j) && vv.get(j, c) {
+                                        sum += 1;
+                                    }
                                 }
-                            }
-                            if sum >= hc.out_draws[t][m * dh + c] {
-                                attn_rows[t].set(h * dh + c, true);
+                                if sum >= hc.out_draws[t][m * dh + c] {
+                                    attn_rows[t].set(h * dh + c, true);
+                                }
                             }
                         }
                     }
@@ -679,6 +715,41 @@ mod tests {
         assert_eq!(last, want, "decode drifted from one-shot forward");
         assert_energy_identical(&sa.energy(), &want_e);
         assert_energy_identical(&sb.energy(), &want_e);
+    }
+
+    #[test]
+    fn sparse_decode_counts_skipped_work() {
+        // All-zero token features never spike under rate coding (strict
+        // `<` against draws in [0,1)), so every embed drive slice is
+        // silent and the skip counters must say so — while the decode
+        // stream itself stays finite and deterministic.
+        let dims = odd_gpt(2);
+        let model = XpikeModel::new(&dims, &HardwareConfig::default(), 21);
+        let zeros = vec![0.0f32; dims.in_feat];
+        let mut st = model.begin_decode(1, &[77]).unwrap();
+        let mut st2 = model.begin_decode(1, &[77]).unwrap();
+        for m in 0..dims.n_tokens {
+            let l = model.decode_step(&mut st, &zeros).unwrap();
+            let l2 = model.decode_step(&mut st2, &zeros).unwrap();
+            assert_eq!(l, l2, "step {m} reproducible on sparse input");
+            assert!(l.iter().all(|v| v.is_finite()));
+        }
+        let e = st.energy();
+        let embed = &e.layers[0].aimc;
+        assert!(embed.drive_slices > 0);
+        assert_eq!(embed.silent_drive_slices, embed.drive_slices,
+                   "zero input must silence every embed drive slice");
+        assert_eq!(embed.drive_spikes, 0);
+        assert!(embed.zero_drive_words > 0);
+        assert_eq!(embed.slice_skip_rate(), 1.0);
+        assert_eq!(embed.input_density(), 0.0);
+        // The SSA row probes fire on the incremental path too.
+        let blk = &e.layers[1].ssa;
+        assert!(blk.rows > 0, "decode must count attention row probes");
+        assert!(blk.silent_rows > 0,
+                "all-silent Q rows must register as skipped");
+        assert_eq!(e.realized_steps, dims.t_steps as u64,
+                   "decode always runs the full T window");
     }
 
     #[test]

@@ -35,41 +35,98 @@
 //! the whole slab (per-lane counts via vertical counters, zero drive
 //! words skipped), while the PR 5 **lane-loop** kernel advances lanes
 //! one at a time and stays in the tree as the equivalence oracle.
+//!
+//! # Time-major streaming + dynamic-timestep early exit
+//!
+//! Both kernels run **time-major**: one timestep flows through the
+//! rate encoders, every encoder block (streaming SSA tiles hold the
+//! latched scores between steps) and the head readout before the next
+//! timestep starts. The serial per-lane RNG stream is preserved by
+//! per-segment cursors ([`LaneCursors`]): the draw stream of the old
+//! stage-major order is segment-contiguous (embed, per block Q/K/V then
+//! FFN, head — each internally `for t { for token }`), so one cloned
+//! cursor per segment replays exactly the serial draws. With
+//! `hw.early_exit: None` the restructuring is therefore bit-invisible:
+//! logits, stats attribution and folded energy are unchanged.
+//!
+//! With an [`ExitPolicy`] set, each lane accumulates its per-step head
+//! readout and exits once the top-1/top-2 margin of the running *mean*
+//! logits clears the threshold (see [`ExitPolicy`]); remaining logit
+//! rows replicate the last realized step. The lane-loop kernel retires
+//! lanes individually (an exited lane consumes no further draws, LIF
+//! updates or SSA steps); the lane-sliced kernel advances the whole
+//! slab in lock-step — the hardware word really does clock all 64 lanes
+//! — and stops only when *every* lane's margin has cleared, so each
+//! lane's realized step count is the slab's (the honest accounting of
+//! the slicing trade-off). [`ModelEnergy::realized_steps`] and the
+//! per-request `t_exit` surface the realized work; LIF/residual terms
+//! scale with executed steps, and the AIMC/SSA counters shrink
+//! automatically because the skipped steps never run.
+//!
+//! Event-driven **silent-slice short-circuits** ride along in both
+//! kernels: an all-zero (t, token) drive slice skips the crossbar's
+//! bit-line scan (noise draws and ADC quantization still run —
+//! [`MappedMatrix::mvm_silent`] is draw-for-draw identical), and the
+//! streaming SSA tiles skip AND/popcount word loops for silent query
+//! and score rows. Realized skip and density rates land in
+//! [`AimcEnergy`]/[`SsaEnergy`] as counters excluded from the
+//! kernel-equivalence contract.
 
 use anyhow::{ensure, Result};
 
 use crate::aimc::{AimcEngine, DriveSkips, MappedMatrix};
-use crate::config::{BatchKernel, DriftConfig, HardwareConfig, ModelDims,
-                    ModelKind};
+use crate::config::{BatchKernel, DriftConfig, ExitPolicy, HardwareConfig,
+                    ModelDims, ModelKind};
 use crate::energy::constants::{E_LIF_UPDATE, E_RESIDUAL_EL};
 use crate::energy::{AimcEnergy, LayerEnergy, ModelEnergy, SsaEnergy};
 use crate::model::params::ModelParams;
 use crate::snn::{rate_encode_row, LifArray};
-use crate::spike::{LaneSlicedVolume, SpikeVector, SpikeVolume};
-use crate::ssa::{run_mhsa_lanes, run_mhsa_sliced, HeadQkv, SlicedHeadQkv,
-                 SsaEngine};
+use crate::spike::{LaneSlicedMatrix, SpikeMatrix, SpikeVector};
+use crate::ssa::{merge_head_stats, merge_sliced_head_stats, step_mhsa_lanes,
+                 step_mhsa_sliced, stream_sliced_tiles,
+                 stream_tiles_for_lanes, HeadQkvStep, LaneSlicedTileStream,
+                 SlicedHeadQkvStep, SsaStats, SsaTileStream};
 use crate::util::Rng;
 
 /// Rolling AIMC event counters for one pipeline stage (per lane).
 /// Shared with [`crate::model::decode`], which accumulates the same
-/// counters token-by-token. The drive-word counters record the
-/// lane-sliced kernel's shared zero-word skip accounting (copied
-/// identically into every lane of a slab; zero on the lane-loop and
-/// decode paths) and are excluded from the kernel-equivalence contract.
+/// counters token-by-token.
+///
+/// Two counter families ride along as diagnostics, excluded from the
+/// kernel-equivalence contract:
+///
+/// * **word counters** (`drive_words`/`zero_drive_words`) record the
+///   packed-word zero-skip guards. Their *unit differs by kernel*: the
+///   serial path counts 64-feature spike words per crossbar traversal,
+///   the lane-sliced path counts 64-lane drive words.
+/// * **slice counters** (`drive_slices`/`silent_drive_slices`,
+///   `drive_bits`/`drive_spikes`) record per-(t, token, lane) drive
+///   slices, how many were entirely silent (short-circuiting the
+///   bit-line scan), and the slice bit/spike totals behind the realized
+///   input density. These units are identical on every kernel.
 #[derive(Default, Clone)]
 pub(crate) struct AimcCounts {
     pub(crate) conversions: u64,
     pub(crate) wl_pulses: u64,
     pub(crate) drive_words: u64,
     pub(crate) zero_drive_words: u64,
+    pub(crate) drive_slices: u64,
+    pub(crate) silent_drive_slices: u64,
+    pub(crate) drive_bits: u64,
+    pub(crate) drive_spikes: u64,
 }
 
 /// Measured AIMC layer energy from one lane's counters, with the skip
 /// diagnostics carried along (they are event counts, not energy).
-fn aimc_energy(c: &AimcCounts) -> AimcEnergy {
+/// Shared with [`crate::model::decode`]'s energy fold.
+pub(crate) fn aimc_energy(c: &AimcCounts) -> AimcEnergy {
     let mut e = AimcEnergy::from_counts(c.conversions, c.wl_pulses);
     e.drive_words = c.drive_words;
     e.zero_drive_words = c.zero_drive_words;
+    e.drive_slices = c.drive_slices;
+    e.silent_drive_slices = c.silent_drive_slices;
+    e.drive_bits = c.drive_bits;
+    e.drive_spikes = c.drive_spikes;
     e
 }
 
@@ -82,12 +139,30 @@ pub(crate) struct Stage<'m> {
 
 impl Stage<'_> {
     /// Crossbar MVM (+GDC) for one packed token row, with event counting.
+    /// An all-zero drive slice short-circuits the bit-line traversal via
+    /// [`MappedMatrix::mvm_silent`] — same noise draws and ADC
+    /// quantization, so the output is bit-identical.
     pub(crate) fn mvm(&self, rng: &mut Rng, spikes: &SpikeVector,
                       t_seconds: f64, hw: &HardwareConfig,
                       counts: &mut AimcCounts) -> Vec<f32> {
-        counts.conversions += self.matrix.conversions_per_mvm();
-        counts.wl_pulses += self.matrix.wl_pulses(spikes, hw);
-        let mut pre = self.matrix.mvm(rng, spikes, t_seconds, hw);
+        let m = self.matrix;
+        counts.conversions += m.conversions_per_mvm();
+        let wl = m.wl_pulses(spikes, hw);
+        counts.wl_pulses += wl;
+        let cb = m.col_blocks() as u64;
+        let words = spikes.words();
+        counts.drive_words += words.len() as u64 * cb;
+        counts.zero_drive_words +=
+            words.iter().filter(|&&w| w == 0).count() as u64 * cb;
+        counts.drive_slices += 1;
+        counts.drive_bits += m.d_in as u64;
+        counts.drive_spikes += wl / cb;
+        let mut pre = if wl == 0 {
+            counts.silent_drive_slices += 1;
+            m.mvm_silent(rng, hw)
+        } else {
+            m.mvm(rng, spikes, t_seconds, hw)
+        };
         if self.alpha != 1.0 {
             for v in &mut pre {
                 *v /= self.alpha;
@@ -113,17 +188,31 @@ impl Stage<'_> {
     pub(crate) fn mvm_lanes(&self, rngs: &mut [Rng], drive: &[u64],
                             t_seconds: f64, hw: &HardwareConfig,
                             counts: &mut [AimcCounts]) -> Vec<Vec<f32>> {
-        let pulses = self.matrix.wl_pulses_lanes(drive, rngs.len());
+        let m = self.matrix;
+        let or = drive.iter().fold(0u64, |acc, &w| acc | w);
+        // A fully silent slab skips even the vertical-counter scan;
+        // per-lane silence is what the slice counters attribute.
+        let pulses = if or == 0 {
+            vec![0u64; rngs.len()]
+        } else {
+            m.wl_pulses_lanes(drive, rngs.len())
+        };
         let mut skips = DriveSkips::default();
-        let mut pre =
-            self.matrix.mvm_lanes(rngs, drive, t_seconds, hw, &mut skips);
-        for ((c, p), lane_pre) in
-            counts.iter_mut().zip(pulses).zip(pre.iter_mut())
+        let mut pre = m.mvm_lanes(rngs, drive, t_seconds, hw, &mut skips);
+        let cb = m.col_blocks() as u64;
+        for (lane, ((c, p), lane_pre)) in
+            counts.iter_mut().zip(pulses).zip(pre.iter_mut()).enumerate()
         {
-            c.conversions += self.matrix.conversions_per_mvm();
+            c.conversions += m.conversions_per_mvm();
             c.wl_pulses += p;
             c.drive_words += skips.words;
             c.zero_drive_words += skips.zero_words;
+            c.drive_slices += 1;
+            if or & (1u64 << lane) == 0 {
+                c.silent_drive_slices += 1;
+            }
+            c.drive_bits += m.d_in as u64;
+            c.drive_spikes += p / cb;
             if self.alpha != 1.0 {
                 for v in lane_pre.iter_mut() {
                     *v /= self.alpha;
@@ -145,6 +234,60 @@ impl Stage<'_> {
             .map(|(p, lif)| lif.step(p))
             .collect()
     }
+}
+
+/// All six crossbar stages of one encoder block, resolved once per
+/// forward — the time-major loop revisits every block each timestep, so
+/// stage lookup/GDC resolution must not repeat per step.
+struct BlockStages<'m> {
+    wq: Stage<'m>,
+    wk: Stage<'m>,
+    wv: Stage<'m>,
+    wo: Stage<'m>,
+    w1: Stage<'m>,
+    w2: Stage<'m>,
+}
+
+/// Per-lane RNG cursors, one per *segment* of the serial draw stream.
+///
+/// The serial (stage-major) forward consumes one lane's stream in
+/// segment order — embed, then per block Q/K/V then FFN, then head —
+/// each segment internally `for t { for token }`. The time-major loop
+/// interleaves segments per timestep, so it keeps an independent cursor
+/// per segment, advanced in the serial (t, token) order *within* that
+/// segment; the concatenation of all cursors' draw histories is exactly
+/// the serial stream, which is what makes the restructuring bit-exact.
+/// Cursors are positioned by replaying the segment's draw *counts*
+/// (both `uniform_f32` and `normal` advance the generator identically
+/// regardless of how the values are used).
+struct LaneCursors {
+    embed: Rng,
+    /// Per block: (Q/K/V segment, FFN segment).
+    blocks: Vec<(Rng, Rng)>,
+    head: Rng,
+}
+
+/// Early-exit decision on the running logit sum: exit once the top-1 /
+/// top-2 margin of the mean logits clears the threshold. `steps` is the
+/// number of accumulated timesteps. Never exits with fewer than two
+/// classes (a degenerate margin would be +inf) or before `min_steps`;
+/// an infinite threshold or NaN margin never clears.
+fn margin_cleared(cum: &[f64], steps: usize, p: &ExitPolicy) -> bool {
+    if cum.len() < 2 || steps < p.min_steps.max(1) {
+        return false;
+    }
+    let s = steps as f64;
+    let (mut top1, mut top2) = (f64::NEG_INFINITY, f64::NEG_INFINITY);
+    for &c in cum {
+        let m = c / s;
+        if m > top1 {
+            top2 = top1;
+            top1 = m;
+        } else if m > top2 {
+            top2 = m;
+        }
+    }
+    top1 - top2 >= p.threshold as f64
 }
 
 /// The native model: a checkpoint programmed onto simulated PCM crossbars
@@ -230,6 +373,60 @@ impl XpikeModel {
         Stage { matrix, alpha }
     }
 
+    /// The six stages of block `b`, resolved once.
+    fn block_stages(&self, b: usize) -> BlockStages<'_> {
+        BlockStages {
+            wq: self.stage(&format!("blk{b}.wq")),
+            wk: self.stage(&format!("blk{b}.wk")),
+            wv: self.stage(&format!("blk{b}.wv")),
+            wo: self.stage(&format!("blk{b}.wo")),
+            w1: self.stage(&format!("blk{b}.w1")),
+            w2: self.stage(&format!("blk{b}.w2")),
+        }
+    }
+
+    /// Build one lane's per-segment RNG cursors (see [`LaneCursors`]) by
+    /// replaying the serial stream's draw counts: per (t, token) slice
+    /// the embed segment draws `in_feat` encoder uniforms plus the
+    /// embedding matrix's conversion normals; the Q/K/V and FFN segments
+    /// draw their three matrices' conversion normals; the head segment
+    /// is the stream's tail and needs no replay.
+    fn lane_cursors(&self, seed: u64, embed: &Stage<'_>,
+                    blocks: &[BlockStages<'_>]) -> LaneCursors {
+        let d = &self.dims;
+        let slices = (d.t_steps * d.n_tokens) as u64;
+        let mut rng = Rng::seed_from_u64(seed);
+        let embed_cur = rng.clone();
+        let e_norms = embed.matrix.conversions_per_mvm();
+        for _ in 0..slices {
+            for _ in 0..d.in_feat {
+                rng.uniform_f32();
+            }
+            for _ in 0..e_norms {
+                rng.normal();
+            }
+        }
+        let mut bl = Vec::with_capacity(blocks.len());
+        for bs in blocks {
+            let qkv_cur = rng.clone();
+            let q_norms = bs.wq.matrix.conversions_per_mvm()
+                + bs.wk.matrix.conversions_per_mvm()
+                + bs.wv.matrix.conversions_per_mvm();
+            for _ in 0..slices * q_norms {
+                rng.normal();
+            }
+            let ffn_cur = rng.clone();
+            let f_norms = bs.wo.matrix.conversions_per_mvm()
+                + bs.w1.matrix.conversions_per_mvm()
+                + bs.w2.matrix.conversions_per_mvm();
+            for _ in 0..slices * f_norms {
+                rng.normal();
+            }
+            bl.push((qkv_cur, ffn_cur));
+        }
+        LaneCursors { embed: embed_cur, blocks: bl, head: rng }
+    }
+
     /// One full forward pass for a single sample.
     ///
     /// `x` is the flattened `[n_tokens, in_feat]` feature matrix in
@@ -256,8 +453,25 @@ impl XpikeModel {
     /// [`Self::forward`] call with `(xs[lane], seeds[lane])`, under
     /// either [`BatchKernel`] — the kernel choice in
     /// `self.hw.batch_kernel` changes simulator speed only.
+    ///
+    /// Thin wrapper over [`Self::forward_batch_exits`] discarding the
+    /// realized timestep counts.
     pub fn forward_batch(&self, xs: &[f32], lanes: usize, seeds: &[u64])
                          -> Result<(Vec<f32>, ModelEnergy)> {
+        let (logits, energy, _) = self.forward_batch_exits(xs, lanes,
+                                                           seeds)?;
+        Ok((logits, energy))
+    }
+
+    /// [`Self::forward_batch`] plus the per-lane realized timestep
+    /// counts (`t_exit`). Without `hw.early_exit` every lane realizes
+    /// `t_steps`; with a policy, lanes may exit early (see the module
+    /// doc) and logit rows past a lane's exit replicate its last
+    /// realized readout, keeping the `[lanes, t_max, classes]` shape.
+    pub fn forward_batch_exits(&self, xs: &[f32], lanes: usize,
+                               seeds: &[u64])
+                               -> Result<(Vec<f32>, ModelEnergy,
+                                          Vec<usize>)> {
         let d = &self.dims;
         let sl = self.sample_len();
         ensure!(lanes > 0, "lanes must be positive");
@@ -268,7 +482,7 @@ impl XpikeModel {
                  (n_tokens x in_feat)", xs.len());
         ensure!(d.dim % d.heads == 0, "dim {} not divisible by {} heads",
                 d.dim, d.heads);
-        let (logits, lane_layers) = match self.hw.batch_kernel {
+        let (logits, lane_layers, t_exits) = match self.hw.batch_kernel {
             BatchKernel::LaneLoop => {
                 self.forward_lane_loop(xs, lanes, seeds)
             }
@@ -281,15 +495,17 @@ impl XpikeModel {
                 let mut logits =
                     Vec::with_capacity(lanes * d.t_steps * d.classes);
                 let mut layers = Vec::with_capacity(lanes);
+                let mut exits = Vec::with_capacity(lanes);
                 for start in (0..lanes).step_by(64) {
                     let end = (start + 64).min(lanes);
-                    let (lg, ll) = self.forward_slab_sliced(
+                    let (lg, ll, ex) = self.forward_slab_sliced(
                         &xs[start * sl..end * sl], end - start,
                         &seeds[start..end]);
                     logits.extend_from_slice(&lg);
                     layers.extend(ll);
+                    exits.extend(ex);
                 }
-                (logits, layers)
+                (logits, layers, exits)
             }
         };
         // Fold per-lane breakdowns exactly the way the serving backend
@@ -297,476 +513,530 @@ impl XpikeModel {
         // never per slab — so batched energy == serial energy to the
         // last f64 bit under either kernel.
         let mut energy = ModelEnergy::default();
-        for layers in lane_layers {
-            energy.add(&ModelEnergy { layers, inferences: 1 });
+        for (layers, &exec) in lane_layers.into_iter().zip(&t_exits) {
+            energy.add(&ModelEnergy {
+                layers,
+                inferences: 1,
+                realized_steps: exec as u64,
+            });
         }
-        Ok((logits, energy))
+        Ok((logits, energy, t_exits))
     }
 
     /// The PR 5 lane-loop kernel ([`BatchKernel::LaneLoop`]): lanes
     /// advanced one at a time through the feature-major spike kernels
-    /// (one popcount per synapse per lane). Kept as the equivalence
-    /// oracle for [`Self::forward_slab_sliced`].
+    /// (one popcount per synapse per lane), time-major — one timestep
+    /// flows through every layer before the next starts, so a lane
+    /// whose readout margin clears the exit policy retires immediately
+    /// (no further draws, LIF updates or SSA steps on that lane). Kept
+    /// as the equivalence oracle for [`Self::forward_slab_sliced`].
     fn forward_lane_loop(&self, xs: &[f32], lanes: usize, seeds: &[u64])
-                         -> (Vec<f32>, Vec<Vec<LayerEnergy>>) {
+                         -> (Vec<f32>, Vec<Vec<LayerEnergy>>, Vec<usize>) {
         let d = &self.dims;
         let (n, dim, t_max) = (d.n_tokens, d.dim, d.t_steps);
         let (heads, dh, hidden) = (d.heads, d.d_head(), d.hidden());
         let classes = d.classes;
         let sl = self.sample_len();
-        let mut rngs: Vec<Rng> =
-            seeds.iter().map(|&s| Rng::seed_from_u64(s)).collect();
         let t_sec = self.drift.t_seconds;
         let hw = &self.hw;
-        let mut lane_layers: Vec<Vec<LayerEnergy>> =
-            (0..lanes).map(|_| Vec::with_capacity(d.depth + 2)).collect();
+        let policy = hw.early_exit;
 
-        // -- Spike encoding + AIMC patch embedding ------------------------
-        // The embedding matrix is traversed once per (t, token) and
-        // applied across all lanes; each lane's encoder + read-noise
-        // draws come from its own stream, in serial order.
+        // Stages resolved once; per-segment RNG cursors replay each
+        // lane's serial draw order (see [`LaneCursors`]).
         let embed = self.stage("embed");
+        let blocks: Vec<BlockStages<'_>> =
+            (0..d.depth).map(|b| self.block_stages(b)).collect();
+        let head = self.stage("head");
+        let mut cursors: Vec<LaneCursors> = seeds
+            .iter()
+            .map(|&s| self.lane_cursors(s, &embed, &blocks))
+            .collect();
+
+        // Persistent per-lane state: LIF banks integrate across
+        // timesteps; streaming SSA tiles hold latched scores, the V
+        // alignment FIFO and LFSR positions between steps. PRN seeds per
+        // (lane, block) match the stage-major engines exactly.
         let mut embed_lifs: Vec<Vec<LifArray>> =
             (0..lanes).map(|_| vec![LifArray::new(dim); n]).collect();
-        let mut counts: Vec<AimcCounts> =
-            (0..lanes).map(|_| AimcCounts::default()).collect();
-        let mut cur: Vec<SpikeVolume> = (0..lanes)
-            .map(|_| SpikeVolume::zeros(t_max, n, dim))
+        let mut qkv_lifs: Vec<Vec<Vec<Vec<LifArray>>>> = (0..d.depth)
+            .map(|_| {
+                (0..lanes)
+                    .map(|_| {
+                        (0..3).map(|_| vec![LifArray::new(dim); n])
+                            .collect()
+                    })
+                    .collect()
+            })
             .collect();
+        let mut wo_lifs: Vec<Vec<Vec<LifArray>>> = (0..d.depth)
+            .map(|_| {
+                (0..lanes).map(|_| vec![LifArray::new(dim); n]).collect()
+            })
+            .collect();
+        let mut w1_lifs: Vec<Vec<Vec<LifArray>>> = (0..d.depth)
+            .map(|_| {
+                (0..lanes).map(|_| vec![LifArray::new(hidden); n])
+                    .collect()
+            })
+            .collect();
+        let mut w2_lifs: Vec<Vec<Vec<LifArray>>> = (0..d.depth)
+            .map(|_| {
+                (0..lanes).map(|_| vec![LifArray::new(dim); n]).collect()
+            })
+            .collect();
+        let mut tiles: Vec<Vec<Vec<SsaTileStream>>> = (0..d.depth)
+            .map(|b| {
+                let lane_seeds: Vec<u32> = seeds
+                    .iter()
+                    .map(|&s| (s as u32) ^ (0x51CA_D0 + b as u32))
+                    .collect();
+                stream_tiles_for_lanes(&lane_seeds, heads, n, dh,
+                                       self.causal)
+            })
+            .collect();
+        let mut embed_counts = vec![AimcCounts::default(); lanes];
+        let mut blk_counts: Vec<Vec<AimcCounts>> = (0..d.depth)
+            .map(|_| vec![AimcCounts::default(); lanes])
+            .collect();
+        let mut head_counts = vec![AimcCounts::default(); lanes];
+
+        let mut cur: Vec<SpikeMatrix> =
+            (0..lanes).map(|_| SpikeMatrix::zeros(n, dim)).collect();
+        let mut logits = vec![0.0f32; lanes * t_max * classes];
+        let mut active = vec![true; lanes];
+        let mut realized = vec![0usize; lanes];
+        let mut cum = vec![vec![0.0f64; classes]; lanes];
+
         for t in 0..t_max {
-            for tok in 0..n {
-                for lane in 0..lanes {
-                    let x = &xs[lane * sl..(lane + 1) * sl];
-                    let feats = &x[tok * d.in_feat..(tok + 1) * d.in_feat];
-                    let enc = rate_encode_row(&mut rngs[lane], feats);
-                    let sp = embed.step(&mut rngs[lane], &enc,
-                                        &mut embed_lifs[lane][tok], t_sec,
-                                        hw, &mut counts[lane]);
-                    cur[lane].step_mut(t).set_row(tok, &sp);
+            // -- Spike encoding + AIMC patch embedding --------------------
+            for lane in 0..lanes {
+                if !active[lane] {
+                    continue;
+                }
+                let rng = &mut cursors[lane].embed;
+                let x = &xs[lane * sl..(lane + 1) * sl];
+                for tok in 0..n {
+                    let feats =
+                        &x[tok * d.in_feat..(tok + 1) * d.in_feat];
+                    let enc = rate_encode_row(rng, feats);
+                    let sp = embed.step(rng, &enc,
+                                        &mut embed_lifs[lane][tok],
+                                        t_sec, hw,
+                                        &mut embed_counts[lane]);
+                    cur[lane].set_row(tok, &sp);
                 }
             }
-        }
-        for (layers, c) in lane_layers.iter_mut().zip(&counts) {
-            layers.push(LayerEnergy {
-                name: "embed".into(),
-                aimc: aimc_energy(c),
-                ssa: SsaEnergy::default(),
-                lif_pj: (t_max * n * dim) as f64 * E_LIF_UPDATE,
-                residual_pj: 0.0,
-            });
-        }
-
-        // -- Encoder blocks ----------------------------------------------
-        for b in 0..d.depth {
-            let wq = self.stage(&format!("blk{b}.wq"));
-            let wk = self.stage(&format!("blk{b}.wk"));
-            let wv = self.stage(&format!("blk{b}.wv"));
-            let wo = self.stage(&format!("blk{b}.wo"));
-            let w1 = self.stage(&format!("blk{b}.w1"));
-            let w2 = self.stage(&format!("blk{b}.w2"));
-            let mut counts: Vec<AimcCounts> =
-                (0..lanes).map(|_| AimcCounts::default()).collect();
-            let mut qkv: Vec<Vec<HeadQkv>> = (0..lanes)
-                .map(|_| {
-                    (0..heads)
-                        .map(|_| (SpikeVolume::zeros(t_max, n, dh),
-                                  SpikeVolume::zeros(t_max, n, dh),
-                                  SpikeVolume::zeros(t_max, n, dh)))
-                        .collect()
-                })
-                .collect();
-            // Q/K/V projections stream token-by-token per timestep (the
-            // LIF banks integrate across t), splitting each packed
-            // dim-wide row into per-head d_k slices. Each projection
-            // matrix is walked once per (t, token), lanes innermost.
-            let mut qkv_lifs: Vec<Vec<Vec<LifArray>>> = (0..lanes)
-                .map(|_| {
-                    (0..3).map(|_| vec![LifArray::new(dim); n]).collect()
-                })
-                .collect();
-            for t in 0..t_max {
-                for tok in 0..n {
-                    let rows: Vec<SpikeVector> = cur
-                        .iter()
-                        .map(|vol| vol.step(t).row_vector(tok))
-                        .collect();
-                    for (which, stage) in [&wq, &wk, &wv].into_iter()
-                        .enumerate()
-                    {
-                        for lane in 0..lanes {
+            // -- Encoder blocks -------------------------------------------
+            for (b, bs) in blocks.iter().enumerate() {
+                // Q/K/V projections for this step, split into per-head
+                // d_k slices; only live lanes project (a `None` slot
+                // freezes the lane's tiles).
+                let mut qkv_t: Vec<Option<Vec<HeadQkvStep>>> = active
+                    .iter()
+                    .map(|&a| {
+                        a.then(|| {
+                            (0..heads)
+                                .map(|_| {
+                                    (SpikeMatrix::zeros(n, dh),
+                                     SpikeMatrix::zeros(n, dh),
+                                     SpikeMatrix::zeros(n, dh))
+                                })
+                                .collect()
+                        })
+                    })
+                    .collect();
+                for lane in 0..lanes {
+                    let Some(lane_heads) = qkv_t[lane].as_mut() else {
+                        continue;
+                    };
+                    let rng = &mut cursors[lane].blocks[b].0;
+                    for tok in 0..n {
+                        let row = cur[lane].row_vector(tok);
+                        for (which, stage) in
+                            [&bs.wq, &bs.wk, &bs.wv].into_iter()
+                                .enumerate()
+                        {
                             let sp = stage.step(
-                                &mut rngs[lane], &rows[lane],
-                                &mut qkv_lifs[lane][which][tok], t_sec,
-                                hw, &mut counts[lane]);
-                            for (h, hv) in qkv[lane].iter_mut().enumerate()
+                                rng, &row,
+                                &mut qkv_lifs[b][lane][which][tok],
+                                t_sec, hw, &mut blk_counts[b][lane]);
+                            for (h, hv) in
+                                lane_heads.iter_mut().enumerate()
                             {
                                 let slice =
                                     sp.extract(h * dh, (h + 1) * dh);
-                                let vol = match which {
+                                let m = match which {
                                     0 => &mut hv.0,
                                     1 => &mut hv.1,
                                     _ => &mut hv.2,
                                 };
-                                vol.step_mut(t).set_row(tok, &slice);
+                                m.set_row(tok, &slice);
                             }
                         }
                     }
                 }
-            }
-            // Multi-head SSA over the whole encoding window: the SAC
-            // array tiles across (lane, head) in one parallel wave; each
-            // lane's PRN seed derives from (its seed, block).
-            let mut engines: Vec<SsaEngine> = seeds
-                .iter()
-                .map(|&s| {
-                    SsaEngine::new(heads, n, dh, self.causal,
-                                   (s as u32) ^ (0x51CA_D0 + b as u32))
-                })
-                .collect();
-            let ssa_results = run_mhsa_lanes(&mut engines, &qkv);
-            // Concatenate head outputs back to dim-wide rows, per lane.
-            let mut attns: Vec<SpikeVolume> = Vec::with_capacity(lanes);
-            let mut lane_stats = Vec::with_capacity(lanes);
-            for (head_outs, stats) in ssa_results {
-                let mut attn = SpikeVolume::zeros(t_max, n, dim);
-                for (h, vol) in head_outs.iter().enumerate() {
-                    for t in 0..t_max {
-                        let step = vol.step(t);
-                        let out = attn.step_mut(t);
+                // One SSA step across all live (lane, head) tiles.
+                let attn_heads = step_mhsa_lanes(&mut tiles[b], &qkv_t);
+                // Concatenate heads, then wo + residual + FFN + residual.
+                for lane in 0..lanes {
+                    let Some(head_outs) = &attn_heads[lane] else {
+                        continue;
+                    };
+                    let mut attn = SpikeMatrix::zeros(n, dim);
+                    for (h, m) in head_outs.iter().enumerate() {
                         for tok in 0..n {
-                            step.row_vector(tok).for_each_set(
-                                |i| out.set(tok, h * dh + i, true));
+                            m.row_vector(tok).for_each_set(
+                                |i| attn.set(tok, h * dh + i, true));
                         }
                     }
-                }
-                attns.push(attn);
-                lane_stats.push(stats);
-            }
-            // Output projection + residual + FFN + residual: stage-major
-            // per (t, token) so each matrix is applied across all lanes
-            // back-to-back (per-lane rng order stays wo, w1, w2).
-            let mut wo_lifs: Vec<Vec<LifArray>> =
-                (0..lanes).map(|_| vec![LifArray::new(dim); n]).collect();
-            let mut w1_lifs: Vec<Vec<LifArray>> = (0..lanes)
-                .map(|_| vec![LifArray::new(hidden); n])
-                .collect();
-            let mut w2_lifs: Vec<Vec<LifArray>> =
-                (0..lanes).map(|_| vec![LifArray::new(dim); n]).collect();
-            let mut blk_outs: Vec<SpikeVolume> = (0..lanes)
-                .map(|_| SpikeVolume::zeros(t_max, n, dim))
-                .collect();
-            for t in 0..t_max {
-                for tok in 0..n {
-                    let mut r1s: Vec<SpikeVector> =
-                        Vec::with_capacity(lanes);
-                    for lane in 0..lanes {
-                        let a_row = attns[lane].step(t).row_vector(tok);
-                        let o = wo.step(&mut rngs[lane], &a_row,
-                                        &mut wo_lifs[lane][tok], t_sec,
-                                        hw, &mut counts[lane]);
+                    let rng = &mut cursors[lane].blocks[b].1;
+                    let mut out = SpikeMatrix::zeros(n, dim);
+                    for tok in 0..n {
+                        let a_row = attn.row_vector(tok);
+                        let o = bs.wo.step(rng, &a_row,
+                                           &mut wo_lifs[b][lane][tok],
+                                           t_sec, hw,
+                                           &mut blk_counts[b][lane]);
+                        // r1 = wo out OR block input (spike residual).
                         let mut r1 = o;
-                        r1.or_assign(&cur[lane].step(t).row_vector(tok));
-                        r1s.push(r1);
-                    }
-                    let mut h_sps: Vec<SpikeVector> =
-                        Vec::with_capacity(lanes);
-                    for (lane, r1) in r1s.iter().enumerate() {
-                        h_sps.push(w1.step(&mut rngs[lane], r1,
-                                           &mut w1_lifs[lane][tok], t_sec,
-                                           hw, &mut counts[lane]));
-                    }
-                    for (lane, h_sp) in h_sps.iter().enumerate() {
-                        let f_sp = w2.step(&mut rngs[lane], h_sp,
-                                           &mut w2_lifs[lane][tok], t_sec,
-                                           hw, &mut counts[lane]);
+                        r1.or_assign(&cur[lane].row_vector(tok));
+                        let h_sp = bs.w1.step(
+                            rng, &r1, &mut w1_lifs[b][lane][tok], t_sec,
+                            hw, &mut blk_counts[b][lane]);
+                        let f_sp = bs.w2.step(
+                            rng, &h_sp, &mut w2_lifs[b][lane][tok],
+                            t_sec, hw, &mut blk_counts[b][lane]);
                         let mut r2 = f_sp;
-                        r2.or_assign(&r1s[lane]);
-                        blk_outs[lane].step_mut(t).set_row(tok, &r2);
+                        r2.or_assign(&r1);
+                        out.set_row(tok, &r2);
                     }
+                    cur[lane] = out;
                 }
             }
-            cur = blk_outs;
-            for ((layers, c), stats) in
-                lane_layers.iter_mut().zip(&counts).zip(&lane_stats)
-            {
-                layers.push(LayerEnergy {
-                    name: format!("blk{b}"),
-                    aimc: aimc_energy(c),
-                    ssa: SsaEnergy::from_stats(stats,
-                                               (heads * n * n) as u64),
-                    lif_pj: (t_max * n * (5 * dim + hidden)) as f64
-                        * E_LIF_UPDATE,
-                    residual_pj: (2 * t_max * n * dim) as f64
-                        * E_RESIDUAL_EL,
-                });
-            }
-        }
-
-        // -- Classification head (analog readout per step) ---------------
-        // ViT: token-mean (GAP) readout. Causal ICL models: the *query*
-        // (last) token carries the in-context answer, so only it is read
-        // out — averaging the 18 context-pair tokens in would dilute the
-        // prediction 19x (paper Task 2 semantics).
-        let head = self.stage("head");
-        let mut counts: Vec<AimcCounts> =
-            (0..lanes).map(|_| AimcCounts::default()).collect();
-        let mut logits = vec![0.0f32; lanes * t_max * classes];
-        for t in 0..t_max {
-            if self.causal {
-                for lane in 0..lanes {
-                    let row = cur[lane].step(t).row_vector(n - 1);
-                    let out = head.mvm(&mut rngs[lane], &row, t_sec, hw,
-                                       &mut counts[lane]);
-                    let off = (lane * t_max + t) * classes;
+            // -- Head readout + exit decision -----------------------------
+            // ViT: token-mean (GAP) readout. Causal ICL models: the
+            // *query* (last) token carries the in-context answer, so
+            // only it is read out (paper Task 2 semantics).
+            for lane in 0..lanes {
+                if !active[lane] {
+                    continue;
+                }
+                let rng = &mut cursors[lane].head;
+                let off = (lane * t_max + t) * classes;
+                if self.causal {
+                    let row = cur[lane].row_vector(n - 1);
+                    let out = head.mvm(rng, &row, t_sec, hw,
+                                       &mut head_counts[lane]);
                     logits[off..off + classes].copy_from_slice(&out);
-                }
-            } else {
-                let mut accs = vec![vec![0.0f64; classes]; lanes];
-                for tok in 0..n {
-                    for lane in 0..lanes {
-                        let row = cur[lane].step(t).row_vector(tok);
-                        let out = head.mvm(&mut rngs[lane], &row, t_sec,
-                                           hw, &mut counts[lane]);
-                        for (a, v) in accs[lane].iter_mut().zip(&out) {
+                } else {
+                    let mut acc = vec![0.0f64; classes];
+                    for tok in 0..n {
+                        let row = cur[lane].row_vector(tok);
+                        let out = head.mvm(rng, &row, t_sec, hw,
+                                           &mut head_counts[lane]);
+                        for (a, v) in acc.iter_mut().zip(&out) {
                             *a += *v as f64;
                         }
                     }
-                }
-                for (lane, acc) in accs.iter().enumerate() {
-                    let off = (lane * t_max + t) * classes;
                     for (dst, &a) in
-                        logits[off..off + classes].iter_mut().zip(acc)
+                        logits[off..off + classes].iter_mut().zip(&acc)
                     {
                         *dst = (a / n as f64) as f32;
                     }
                 }
+                realized[lane] = t + 1;
+                if let Some(p) = &policy {
+                    for (c, v) in cum[lane]
+                        .iter_mut()
+                        .zip(&logits[off..off + classes])
+                    {
+                        *c += *v as f64;
+                    }
+                    if margin_cleared(&cum[lane], t + 1, p) {
+                        active[lane] = false;
+                    }
+                }
+            }
+            if active.iter().all(|&a| !a) {
+                break;
             }
         }
-        for (layers, c) in lane_layers.iter_mut().zip(&counts) {
+        // Unexecuted steps replicate the last realized readout, keeping
+        // the [t_max, classes] logit shape (and any prefix-mean
+        // prediction over it) stable under early exit.
+        for lane in 0..lanes {
+            let e = realized[lane];
+            if e == 0 {
+                continue;
+            }
+            let base = lane * t_max * classes;
+            for t in e..t_max {
+                logits.copy_within(
+                    base + (e - 1) * classes..base + e * classes,
+                    base + t * classes);
+            }
+        }
+        // Per-lane layer breakdowns; LIF/residual terms scale with the
+        // steps the lane actually executed (AIMC/SSA counters already
+        // do, because skipped steps never ran).
+        let mut lane_layers: Vec<Vec<LayerEnergy>> =
+            Vec::with_capacity(lanes);
+        for lane in 0..lanes {
+            let exec = realized[lane];
+            let mut layers = Vec::with_capacity(d.depth + 2);
+            layers.push(LayerEnergy {
+                name: "embed".into(),
+                aimc: aimc_energy(&embed_counts[lane]),
+                ssa: SsaEnergy::default(),
+                lif_pj: (exec * n * dim) as f64 * E_LIF_UPDATE,
+                residual_pj: 0.0,
+            });
+            for b in 0..d.depth {
+                layers.push(LayerEnergy {
+                    name: format!("blk{b}"),
+                    aimc: aimc_energy(&blk_counts[b][lane]),
+                    ssa: SsaEnergy::from_stats(
+                        &merge_head_stats(&tiles[b][lane]),
+                        (heads * n * n) as u64),
+                    lif_pj: (exec * n * (5 * dim + hidden)) as f64
+                        * E_LIF_UPDATE,
+                    residual_pj: (2 * exec * n * dim) as f64
+                        * E_RESIDUAL_EL,
+                });
+            }
             layers.push(LayerEnergy {
                 name: "head".into(),
-                aimc: aimc_energy(c),
+                aimc: aimc_energy(&head_counts[lane]),
                 ssa: SsaEnergy::default(),
                 lif_pj: 0.0,
                 residual_pj: 0.0,
             });
+            lane_layers.push(layers);
         }
-        (logits, lane_layers)
+        (logits, lane_layers, realized)
     }
 
     /// The lane-sliced kernel ([`BatchKernel::LaneSliced`]) for one slab
     /// of `lanes <= 64`: every spike tensor between the rate encoders
-    /// and the head readout is lane-major ([`LaneSlicedVolume`]), so
-    /// each crossbar weight row is read once per (t, token) and
-    /// broadcast to every driving lane, each SSA Q.K / score.V AND and
-    /// causal word mask serves the whole slab, and per-lane counts are
-    /// recovered by vertical counters. Per-lane RNG/LFSR streams are
-    /// consumed in the serial order, so each lane stays bit-identical to
-    /// the lane-loop oracle in logits, stats attribution and folded
-    /// energy; the zero-word skip counters are the only sliced-path
-    /// extra and are excluded from that contract.
+    /// and the head readout is lane-major ([`LaneSlicedMatrix`] per
+    /// timestep), so each crossbar weight row is read once per (t,
+    /// token) and broadcast to every driving lane, each SSA Q.K /
+    /// score.V AND and causal word mask serves the whole slab, and
+    /// per-lane counts are recovered by vertical counters. Per-lane
+    /// RNG/LFSR streams are consumed in the serial order, so each lane
+    /// stays bit-identical to the lane-loop oracle in logits, stats
+    /// attribution and folded energy; the zero-word skip counters are
+    /// the only sliced-path unit difference and are excluded from that
+    /// contract.
+    ///
+    /// Time-major with slab-level early exit: the packed lane word
+    /// really does clock all lanes at once, so no lane retires
+    /// individually — the slab stops only when *every* lane's margin
+    /// has cleared, and each lane's realized step count is the slab's.
     fn forward_slab_sliced(&self, xs: &[f32], lanes: usize, seeds: &[u64])
-                           -> (Vec<f32>, Vec<Vec<LayerEnergy>>) {
+                           -> (Vec<f32>, Vec<Vec<LayerEnergy>>,
+                               Vec<usize>) {
         debug_assert!((1..=64).contains(&lanes));
         let d = &self.dims;
         let (n, dim, t_max) = (d.n_tokens, d.dim, d.t_steps);
         let (heads, dh, hidden) = (d.heads, d.d_head(), d.hidden());
         let classes = d.classes;
         let sl = self.sample_len();
-        let mut rngs: Vec<Rng> =
-            seeds.iter().map(|&s| Rng::seed_from_u64(s)).collect();
         let t_sec = self.drift.t_seconds;
         let hw = &self.hw;
-        let mut lane_layers: Vec<Vec<LayerEnergy>> =
-            (0..lanes).map(|_| Vec::with_capacity(d.depth + 2)).collect();
+        let policy = hw.early_exit;
 
-        // -- Spike encoding + AIMC patch embedding ------------------------
-        // One drive word per input feature: each lane rate-encodes from
-        // its own stream (serial draw order), the packed word drives the
-        // embedding crossbars once for the whole slab.
+        // Stages resolved once; per-segment cursors transposed into
+        // per-segment rng banks (`step_lanes` wants `&mut [Rng]` in
+        // lane order).
         let embed = self.stage("embed");
+        let blocks: Vec<BlockStages<'_>> =
+            (0..d.depth).map(|b| self.block_stages(b)).collect();
+        let head = self.stage("head");
+        let mut embed_rngs: Vec<Rng> = Vec::with_capacity(lanes);
+        let mut qkv_rngs: Vec<Vec<Rng>> =
+            (0..d.depth).map(|_| Vec::with_capacity(lanes)).collect();
+        let mut ffn_rngs: Vec<Vec<Rng>> =
+            (0..d.depth).map(|_| Vec::with_capacity(lanes)).collect();
+        let mut head_rngs: Vec<Rng> = Vec::with_capacity(lanes);
+        for &s in seeds {
+            let c = self.lane_cursors(s, &embed, &blocks);
+            embed_rngs.push(c.embed);
+            for (b, (q, f)) in c.blocks.into_iter().enumerate() {
+                qkv_rngs[b].push(q);
+                ffn_rngs[b].push(f);
+            }
+            head_rngs.push(c.head);
+        }
+
+        // Persistent slab state: LIF banks indexed [tok][lane] so a
+        // whole token bank passes to `step_lanes`; one streaming sliced
+        // tile per (block, head) advances all lanes in lock-step.
         let mut embed_lifs: Vec<Vec<LifArray>> =
             (0..n).map(|_| vec![LifArray::new(dim); lanes]).collect();
-        let mut counts: Vec<AimcCounts> =
-            (0..lanes).map(|_| AimcCounts::default()).collect();
-        let mut cur = LaneSlicedVolume::zeros(t_max, n, dim, lanes);
+        let mut qkv_lifs: Vec<Vec<Vec<Vec<LifArray>>>> = (0..d.depth)
+            .map(|_| {
+                (0..3)
+                    .map(|_| {
+                        (0..n).map(|_| vec![LifArray::new(dim); lanes])
+                            .collect()
+                    })
+                    .collect()
+            })
+            .collect();
+        let mut wo_lifs: Vec<Vec<Vec<LifArray>>> = (0..d.depth)
+            .map(|_| {
+                (0..n).map(|_| vec![LifArray::new(dim); lanes]).collect()
+            })
+            .collect();
+        let mut w1_lifs: Vec<Vec<Vec<LifArray>>> = (0..d.depth)
+            .map(|_| {
+                (0..n).map(|_| vec![LifArray::new(hidden); lanes])
+                    .collect()
+            })
+            .collect();
+        let mut w2_lifs: Vec<Vec<Vec<LifArray>>> = (0..d.depth)
+            .map(|_| {
+                (0..n).map(|_| vec![LifArray::new(dim); lanes]).collect()
+            })
+            .collect();
+        // Per-lane LFSR seeds match the lane-loop engines exactly.
+        let mut tiles: Vec<Vec<LaneSlicedTileStream>> = (0..d.depth)
+            .map(|b| {
+                let engine_seeds: Vec<u32> = seeds
+                    .iter()
+                    .map(|&s| (s as u32) ^ (0x51CA_D0 + b as u32))
+                    .collect();
+                stream_sliced_tiles(heads, n, dh, self.causal,
+                                    &engine_seeds)
+            })
+            .collect();
+        let mut embed_counts = vec![AimcCounts::default(); lanes];
+        let mut blk_counts: Vec<Vec<AimcCounts>> = (0..d.depth)
+            .map(|_| vec![AimcCounts::default(); lanes])
+            .collect();
+        let mut head_counts = vec![AimcCounts::default(); lanes];
+
+        let mut cur = LaneSlicedMatrix::zeros(n, dim, lanes);
         let mut drive = vec![0u64; d.in_feat];
+        let mut h_drive = vec![0u64; hidden];
+        let mut logits = vec![0.0f32; lanes * t_max * classes];
+        let mut cleared = vec![false; lanes];
+        let mut cum = vec![vec![0.0f64; classes]; lanes];
+        let mut slab_steps = 0usize;
+
         for t in 0..t_max {
+            // -- Spike encoding + AIMC patch embedding --------------------
+            // One drive word per input feature: each lane rate-encodes
+            // from its own stream, the packed word drives the embedding
+            // crossbars once for the whole slab.
             for tok in 0..n {
                 drive.fill(0);
-                for (lane, rng) in rngs.iter_mut().enumerate() {
+                for (lane, rng) in embed_rngs.iter_mut().enumerate() {
                     let x = &xs[lane * sl..(lane + 1) * sl];
-                    let feats = &x[tok * d.in_feat..(tok + 1) * d.in_feat];
+                    let feats =
+                        &x[tok * d.in_feat..(tok + 1) * d.in_feat];
                     let enc = rate_encode_row(rng, feats);
                     enc.for_each_set(|i| drive[i] |= 1u64 << lane);
                 }
-                let sps = embed.step_lanes(&mut rngs, &drive,
+                let sps = embed.step_lanes(&mut embed_rngs, &drive,
                                            &mut embed_lifs[tok], t_sec,
-                                           hw, &mut counts);
-                let step = cur.step_mut(t);
+                                           hw, &mut embed_counts);
+                cur.row_mut(tok).fill(0);
                 for (lane, sp) in sps.iter().enumerate() {
-                    step.or_row(tok, lane, sp);
+                    cur.or_row(tok, lane, sp);
                 }
             }
-        }
-        for (layers, c) in lane_layers.iter_mut().zip(&counts) {
-            layers.push(LayerEnergy {
-                name: "embed".into(),
-                aimc: aimc_energy(c),
-                ssa: SsaEnergy::default(),
-                lif_pj: (t_max * n * dim) as f64 * E_LIF_UPDATE,
-                residual_pj: 0.0,
-            });
-        }
-
-        // -- Encoder blocks ----------------------------------------------
-        for b in 0..d.depth {
-            let wq = self.stage(&format!("blk{b}.wq"));
-            let wk = self.stage(&format!("blk{b}.wk"));
-            let wv = self.stage(&format!("blk{b}.wv"));
-            let wo = self.stage(&format!("blk{b}.wo"));
-            let w1 = self.stage(&format!("blk{b}.w1"));
-            let w2 = self.stage(&format!("blk{b}.w2"));
-            let mut counts: Vec<AimcCounts> =
-                (0..lanes).map(|_| AimcCounts::default()).collect();
-            // Q/K/V stay lane-sliced straight through to the SSA tiles:
-            // the block-input row *is* the drive word slice, and the
-            // per-head split ORs lane bits into `[heads][t, n, d_k]`
-            // lane-sliced volumes.
-            let mut qkv: Vec<SlicedHeadQkv> = (0..heads)
-                .map(|_| {
-                    (LaneSlicedVolume::zeros(t_max, n, dh, lanes),
-                     LaneSlicedVolume::zeros(t_max, n, dh, lanes),
-                     LaneSlicedVolume::zeros(t_max, n, dh, lanes))
-                })
-                .collect();
-            let mut qkv_lifs: Vec<Vec<Vec<LifArray>>> = (0..3)
-                .map(|_| {
-                    (0..n).map(|_| vec![LifArray::new(dim); lanes])
-                        .collect()
-                })
-                .collect();
-            for t in 0..t_max {
+            // -- Encoder blocks -------------------------------------------
+            for (b, bs) in blocks.iter().enumerate() {
+                // Q/K/V stay lane-sliced straight through to the SSA
+                // tiles: the block-input row *is* the drive word slice,
+                // and the per-head split ORs lane bits into
+                // `[heads](n, d_k)` lane-sliced matrices.
+                let mut qkv_t: Vec<SlicedHeadQkvStep> = (0..heads)
+                    .map(|_| {
+                        (LaneSlicedMatrix::zeros(n, dh, lanes),
+                         LaneSlicedMatrix::zeros(n, dh, lanes),
+                         LaneSlicedMatrix::zeros(n, dh, lanes))
+                    })
+                    .collect();
                 for tok in 0..n {
                     for (which, stage) in
-                        [&wq, &wk, &wv].into_iter().enumerate()
+                        [&bs.wq, &bs.wk, &bs.wv].into_iter().enumerate()
                     {
                         let sps = stage.step_lanes(
-                            &mut rngs, cur.step(t).row(tok),
-                            &mut qkv_lifs[which][tok], t_sec, hw,
-                            &mut counts);
+                            &mut qkv_rngs[b], cur.row(tok),
+                            &mut qkv_lifs[b][which][tok], t_sec, hw,
+                            &mut blk_counts[b]);
                         for (lane, sp) in sps.iter().enumerate() {
                             let bit = 1u64 << lane;
                             sp.for_each_set(|i| {
                                 let (h, c) = (i / dh, i % dh);
-                                let vol = match which {
-                                    0 => &mut qkv[h].0,
-                                    1 => &mut qkv[h].1,
-                                    _ => &mut qkv[h].2,
+                                let m = match which {
+                                    0 => &mut qkv_t[h].0,
+                                    1 => &mut qkv_t[h].1,
+                                    _ => &mut qkv_t[h].2,
                                 };
-                                vol.step_mut(t).row_mut(tok)[c] |= bit;
+                                m.row_mut(tok)[c] |= bit;
                             });
                         }
                     }
                 }
-            }
-            // Multi-head SSA, lane-sliced: tiles thread per head, each
-            // advancing the whole slab per op; per-lane LFSR seeds match
-            // the lane-loop engines exactly.
-            let engine_seeds: Vec<u32> = seeds
-                .iter()
-                .map(|&s| (s as u32) ^ (0x51CA_D0 + b as u32))
-                .collect();
-            let (head_outs, lane_stats) = run_mhsa_sliced(
-                heads, n, dh, self.causal, &engine_seeds, &qkv);
-            // Concatenate heads back to dim-wide rows: whole lane words
-            // copy at once (one OR serves the slab).
-            let mut attn = LaneSlicedVolume::zeros(t_max, n, dim, lanes);
-            for (h, vol) in head_outs.iter().enumerate() {
-                for t in 0..t_max {
-                    let src = vol.step(t);
-                    let dst = attn.step_mut(t);
+                // One SSA step per head tile, threaded per head.
+                let head_outs = step_mhsa_sliced(&mut tiles[b], &qkv_t);
+                // Concatenate heads back to dim-wide rows: whole lane
+                // words copy at once (one OR serves the slab).
+                let mut attn = LaneSlicedMatrix::zeros(n, dim, lanes);
+                for (h, m) in head_outs.iter().enumerate() {
                     for tok in 0..n {
-                        let row = dst.row_mut(tok);
+                        let row = attn.row_mut(tok);
                         for c in 0..dh {
-                            row[h * dh + c] |= src.word(tok, c);
+                            row[h * dh + c] |= m.word(tok, c);
                         }
                     }
                 }
-            }
-            // Output projection + residual + FFN + residual. Residual
-            // ORs act on lane words; per-lane rng order stays wo, w1,
-            // w2, as in the oracle.
-            let mut wo_lifs: Vec<Vec<LifArray>> =
-                (0..n).map(|_| vec![LifArray::new(dim); lanes]).collect();
-            let mut w1_lifs: Vec<Vec<LifArray>> = (0..n)
-                .map(|_| vec![LifArray::new(hidden); lanes])
-                .collect();
-            let mut w2_lifs: Vec<Vec<LifArray>> =
-                (0..n).map(|_| vec![LifArray::new(dim); lanes]).collect();
-            let mut blk_out = LaneSlicedVolume::zeros(t_max, n, dim, lanes);
-            let mut h_drive = vec![0u64; hidden];
-            for t in 0..t_max {
+                // Output projection + residual + FFN + residual.
+                // Residual ORs act on lane words; per-lane rng order
+                // stays wo, w1, w2, as in the oracle.
+                let mut blk_out = LaneSlicedMatrix::zeros(n, dim, lanes);
                 for tok in 0..n {
-                    let o_sps = wo.step_lanes(&mut rngs,
-                                              attn.step(t).row(tok),
-                                              &mut wo_lifs[tok], t_sec,
-                                              hw, &mut counts);
-                    // r1 = wo out OR block input (spike-driven residual).
-                    let mut r1 = cur.step(t).row(tok).to_vec();
+                    let o_sps = bs.wo.step_lanes(
+                        &mut ffn_rngs[b], attn.row(tok),
+                        &mut wo_lifs[b][tok], t_sec, hw,
+                        &mut blk_counts[b]);
+                    // r1 = wo out OR block input (spike residual).
+                    let mut r1 = cur.row(tok).to_vec();
                     for (lane, sp) in o_sps.iter().enumerate() {
                         let bit = 1u64 << lane;
                         sp.for_each_set(|i| r1[i] |= bit);
                     }
-                    let h_sps = w1.step_lanes(&mut rngs, &r1,
-                                              &mut w1_lifs[tok], t_sec,
-                                              hw, &mut counts);
+                    let h_sps = bs.w1.step_lanes(
+                        &mut ffn_rngs[b], &r1, &mut w1_lifs[b][tok],
+                        t_sec, hw, &mut blk_counts[b]);
                     h_drive.fill(0);
                     for (lane, sp) in h_sps.iter().enumerate() {
                         let bit = 1u64 << lane;
                         sp.for_each_set(|i| h_drive[i] |= bit);
                     }
-                    let f_sps = w2.step_lanes(&mut rngs, &h_drive,
-                                              &mut w2_lifs[tok], t_sec,
-                                              hw, &mut counts);
+                    let f_sps = bs.w2.step_lanes(
+                        &mut ffn_rngs[b], &h_drive, &mut w2_lifs[b][tok],
+                        t_sec, hw, &mut blk_counts[b]);
                     // r2 = FFN out OR r1, stored as the block output.
-                    let row = blk_out.step_mut(t).row_mut(tok);
+                    let row = blk_out.row_mut(tok);
                     row.copy_from_slice(&r1);
                     for (lane, sp) in f_sps.iter().enumerate() {
                         let bit = 1u64 << lane;
                         sp.for_each_set(|i| row[i] |= bit);
                     }
                 }
+                cur = blk_out;
             }
-            cur = blk_out;
-            for ((layers, c), stats) in
-                lane_layers.iter_mut().zip(&counts).zip(&lane_stats)
-            {
-                layers.push(LayerEnergy {
-                    name: format!("blk{b}"),
-                    aimc: aimc_energy(c),
-                    ssa: SsaEnergy::from_stats(stats,
-                                               (heads * n * n) as u64),
-                    lif_pj: (t_max * n * (5 * dim + hidden)) as f64
-                        * E_LIF_UPDATE,
-                    residual_pj: (2 * t_max * n * dim) as f64
-                        * E_RESIDUAL_EL,
-                });
-            }
-        }
-
-        // -- Classification head (analog readout per step) ---------------
-        // Same readout semantics as the oracle: causal models read the
-        // query token only, ViT averages tokens in f64 per lane.
-        let head = self.stage("head");
-        let mut counts: Vec<AimcCounts> =
-            (0..lanes).map(|_| AimcCounts::default()).collect();
-        let mut logits = vec![0.0f32; lanes * t_max * classes];
-        for t in 0..t_max {
+            // -- Head readout + exit decision -----------------------------
+            // Same readout semantics as the oracle: causal models read
+            // the query token only, ViT averages tokens in f64 per lane.
             if self.causal {
-                let outs = head.mvm_lanes(&mut rngs,
-                                          cur.step(t).row(n - 1), t_sec,
-                                          hw, &mut counts);
+                let outs = head.mvm_lanes(&mut head_rngs, cur.row(n - 1),
+                                          t_sec, hw, &mut head_counts);
                 for (lane, out) in outs.iter().enumerate() {
                     let off = (lane * t_max + t) * classes;
                     logits[off..off + classes].copy_from_slice(out);
@@ -774,9 +1044,9 @@ impl XpikeModel {
             } else {
                 let mut accs = vec![vec![0.0f64; classes]; lanes];
                 for tok in 0..n {
-                    let outs = head.mvm_lanes(&mut rngs,
-                                              cur.step(t).row(tok), t_sec,
-                                              hw, &mut counts);
+                    let outs = head.mvm_lanes(&mut head_rngs,
+                                              cur.row(tok), t_sec, hw,
+                                              &mut head_counts);
                     for (acc, out) in accs.iter_mut().zip(&outs) {
                         for (a, v) in acc.iter_mut().zip(out) {
                             *a += *v as f64;
@@ -792,17 +1062,81 @@ impl XpikeModel {
                     }
                 }
             }
+            slab_steps = t + 1;
+            if let Some(p) = &policy {
+                for lane in 0..lanes {
+                    if cleared[lane] {
+                        continue;
+                    }
+                    let off = (lane * t_max + t) * classes;
+                    for (c, v) in cum[lane]
+                        .iter_mut()
+                        .zip(&logits[off..off + classes])
+                    {
+                        *c += *v as f64;
+                    }
+                    if margin_cleared(&cum[lane], t + 1, p) {
+                        cleared[lane] = true;
+                    }
+                }
+                if cleared.iter().all(|&c| c) {
+                    break;
+                }
+            }
         }
-        for (layers, c) in lane_layers.iter_mut().zip(&counts) {
+        // Unexecuted steps replicate the slab's last realized readout.
+        for lane in 0..lanes {
+            if slab_steps == 0 {
+                break;
+            }
+            let base = lane * t_max * classes;
+            for t in slab_steps..t_max {
+                logits.copy_within(
+                    base + (slab_steps - 1) * classes
+                        ..base + slab_steps * classes,
+                    base + t * classes);
+            }
+        }
+        // Per-lane layer breakdowns: every lane realized the slab's
+        // step count (lock-step), so LIF/residual terms scale with
+        // `slab_steps`.
+        let blk_ssa: Vec<Vec<SsaStats>> = tiles
+            .iter()
+            .map(|bank| merge_sliced_head_stats(bank))
+            .collect();
+        let mut lane_layers: Vec<Vec<LayerEnergy>> =
+            Vec::with_capacity(lanes);
+        for lane in 0..lanes {
+            let mut layers = Vec::with_capacity(d.depth + 2);
+            layers.push(LayerEnergy {
+                name: "embed".into(),
+                aimc: aimc_energy(&embed_counts[lane]),
+                ssa: SsaEnergy::default(),
+                lif_pj: (slab_steps * n * dim) as f64 * E_LIF_UPDATE,
+                residual_pj: 0.0,
+            });
+            for b in 0..d.depth {
+                layers.push(LayerEnergy {
+                    name: format!("blk{b}"),
+                    aimc: aimc_energy(&blk_counts[b][lane]),
+                    ssa: SsaEnergy::from_stats(&blk_ssa[b][lane],
+                                               (heads * n * n) as u64),
+                    lif_pj: (slab_steps * n * (5 * dim + hidden)) as f64
+                        * E_LIF_UPDATE,
+                    residual_pj: (2 * slab_steps * n * dim) as f64
+                        * E_RESIDUAL_EL,
+                });
+            }
             layers.push(LayerEnergy {
                 name: "head".into(),
-                aimc: aimc_energy(c),
+                aimc: aimc_energy(&head_counts[lane]),
                 ssa: SsaEnergy::default(),
                 lif_pj: 0.0,
                 residual_pj: 0.0,
             });
+            lane_layers.push(layers);
         }
-        (logits, lane_layers)
+        (logits, lane_layers, vec![slab_steps; lanes])
     }
 }
 
@@ -907,16 +1241,171 @@ mod tests {
                     assert_eq!(g.ssa.total_pj(), w.ssa.total_pj(),
                                "{} ssa attribution", g.name);
                 }
-                // Skip-rate accounting exists only on the sliced path.
+                // Word-skip accounting exists on both paths, but in
+                // different units (packed-feature words serially,
+                // packed-lane words sliced), so only nonzero-ness is
+                // checked; the per-slice counters use identical units
+                // on both kernels and must agree exactly.
                 let drive_words: u64 = ge.layers.iter()
                     .map(|l| l.aimc.drive_words).sum();
                 assert!(drive_words > 0, "sliced path counts drive words");
-                assert_eq!(we.layers.iter()
-                    .map(|l| l.aimc.drive_words).sum::<u64>(), 0);
+                assert!(we.layers.iter()
+                    .map(|l| l.aimc.drive_words).sum::<u64>() > 0,
+                    "serial path counts drive words");
                 assert!(ge.layers.iter()
                     .any(|l| l.ssa.sliced_words > 0));
+                for (g, w) in ge.layers.iter().zip(&we.layers) {
+                    assert_eq!(g.aimc.drive_slices, w.aimc.drive_slices,
+                               "{} drive slices", g.name);
+                    assert_eq!(g.aimc.silent_drive_slices,
+                               w.aimc.silent_drive_slices,
+                               "{} silent slices", g.name);
+                    assert_eq!(g.aimc.drive_bits, w.aimc.drive_bits);
+                    assert_eq!(g.aimc.drive_spikes, w.aimc.drive_spikes);
+                }
             }
         }
+    }
+
+    #[test]
+    fn margin_cleared_guards_degenerate_cases() {
+        let p = ExitPolicy { threshold: 1.0, min_steps: 2 };
+        // Margin 3.0 at step 2 clears; step 1 is below min_steps.
+        assert!(margin_cleared(&[8.0, 2.0], 2, &p));
+        assert!(!margin_cleared(&[8.0, 2.0], 1, &p));
+        // Below threshold: mean margin (8-6)/4 = 0.5 < 1.0.
+        assert!(!margin_cleared(&[8.0, 6.0], 4, &p));
+        // Fewer than two classes would make the margin +inf: never exit.
+        assert!(!margin_cleared(&[8.0], 2, &p));
+        assert!(!margin_cleared(&[], 2, &p));
+        // Infinite threshold and NaN margins never clear.
+        let inf = ExitPolicy { threshold: f32::INFINITY, min_steps: 1 };
+        assert!(!margin_cleared(&[8.0, 2.0], 1, &inf));
+        assert!(!margin_cleared(&[f64::NAN, 2.0], 2, &p));
+        // min_steps 0 is treated as 1, not "exit before any step".
+        let zero = ExitPolicy { threshold: 0.0, min_steps: 0 };
+        assert!(margin_cleared(&[8.0, 2.0], 1, &zero));
+    }
+
+    #[test]
+    fn early_exit_infinite_threshold_bit_identical_to_default() {
+        // threshold = +inf arms the exit machinery but can never fire:
+        // logits, folded energy and realized steps must be bit-identical
+        // to early_exit: None, under both kernels.
+        for kernel in [BatchKernel::LaneSliced, BatchKernel::LaneLoop] {
+            let hw_off = HardwareConfig { batch_kernel: kernel,
+                                          ..HardwareConfig::default() };
+            let hw_inf = HardwareConfig {
+                batch_kernel: kernel,
+                early_exit: Some(ExitPolicy {
+                    threshold: f32::INFINITY,
+                    min_steps: 1,
+                }),
+                ..HardwareConfig::default()
+            };
+            let dims = vit_native(1, 32, 2, 2);
+            let off = XpikeModel::new(&dims, &hw_off, 23);
+            let inf = XpikeModel::new(&dims, &hw_inf, 23);
+            let lanes = 2usize;
+            let seeds = [40u64, 41];
+            let xs: Vec<f32> = (0..lanes)
+                .flat_map(|l| sample(&off, 300 + l as u64))
+                .collect();
+            let (la, ea, ta) =
+                off.forward_batch_exits(&xs, lanes, &seeds).unwrap();
+            let (lb, eb, tb) =
+                inf.forward_batch_exits(&xs, lanes, &seeds).unwrap();
+            assert_eq!(la, lb, "{kernel:?} logits");
+            assert_eq!(ea.total_pj(), eb.total_pj(), "{kernel:?} energy");
+            assert_eq!(ta, vec![dims.t_steps; lanes]);
+            assert_eq!(tb, ta, "{kernel:?} all steps realized");
+            assert_eq!(ea.realized_steps,
+                       (lanes * dims.t_steps) as u64);
+            assert_eq!(eb.realized_steps, ea.realized_steps);
+        }
+    }
+
+    #[test]
+    fn early_exit_trips_and_reports_realized_work() {
+        // threshold 0.0 / min_steps 1 exits every lane after its first
+        // readout (top1 - top2 >= 0 always holds): realized steps drop
+        // to 1, energy shrinks accordingly, and the remaining logit
+        // rows replicate the realized one. All lanes exit at the same
+        // step, so the two kernels stay bit-identical even mid-exit.
+        let dims = vit_native(1, 32, 2, 3);
+        let policy = Some(ExitPolicy { threshold: 0.0, min_steps: 1 });
+        let lanes = 3usize;
+        let seeds = [7u64, 8, 9];
+        let mut results = Vec::new();
+        for kernel in [BatchKernel::LaneSliced, BatchKernel::LaneLoop] {
+            let hw_full = HardwareConfig { batch_kernel: kernel,
+                                           ..HardwareConfig::default() };
+            let hw_exit = HardwareConfig { batch_kernel: kernel,
+                                           early_exit: policy,
+                                           ..HardwareConfig::default() };
+            let full = XpikeModel::new(&dims, &hw_full, 29);
+            let exit = XpikeModel::new(&dims, &hw_exit, 29);
+            let xs: Vec<f32> = (0..lanes)
+                .flat_map(|l| sample(&full, 400 + l as u64))
+                .collect();
+            let (lg, en, tx) =
+                exit.forward_batch_exits(&xs, lanes, &seeds).unwrap();
+            let (_, full_en) =
+                full.forward_batch(&xs, lanes, &seeds).unwrap();
+            assert_eq!(tx, vec![1usize; lanes], "{kernel:?} exits at 1");
+            assert_eq!(en.realized_steps, lanes as u64);
+            assert!(en.total_pj() < full_en.total_pj(),
+                    "{kernel:?} early exit must save energy: {} vs {}",
+                    en.total_pj(), full_en.total_pj());
+            let per = dims.t_steps * dims.classes;
+            for lane in 0..lanes {
+                let row0 = &lg[lane * per..lane * per + dims.classes];
+                for t in 1..dims.t_steps {
+                    let off = lane * per + t * dims.classes;
+                    assert_eq!(&lg[off..off + dims.classes], row0,
+                               "{kernel:?} lane {lane} row {t} \
+                                replicates the realized readout");
+                }
+            }
+            results.push(lg);
+        }
+        assert_eq!(results[0], results[1],
+                   "kernels agree under a uniform exit step");
+    }
+
+    #[test]
+    fn silent_drive_slices_short_circuit_on_zero_input() {
+        // An all-zero sample never spikes out of the rate encoders, so
+        // every embed drive slice is silent; both kernels must count
+        // (and skip) the same slices and still produce identical,
+        // finite logits — the silent path draws the same noise stream.
+        let dims = vit_native(1, 32, 2, 2);
+        let hw_loop = HardwareConfig { batch_kernel: BatchKernel::LaneLoop,
+                                       ..HardwareConfig::default() };
+        let sliced = XpikeModel::new(&dims, &HardwareConfig::default(), 31);
+        let looped = XpikeModel::new(&dims, &hw_loop, 31);
+        let lanes = 2usize;
+        let seeds = [3u64, 4];
+        let xs = vec![0.0f32; lanes * sliced.sample_len()];
+        let (gl, ge) = sliced.forward_batch(&xs, lanes, &seeds).unwrap();
+        let (wl, we) = looped.forward_batch(&xs, lanes, &seeds).unwrap();
+        assert_eq!(gl, wl, "silent short-circuits stay bit-identical");
+        assert!(gl.iter().all(|v| v.is_finite()));
+        for e in [&ge, &we] {
+            let embed = &e.layers[0].aimc;
+            assert!(embed.drive_slices > 0);
+            assert_eq!(embed.silent_drive_slices, embed.drive_slices,
+                       "all embed slices are silent on zero input");
+            assert_eq!(embed.slice_skip_rate(), 1.0);
+            assert_eq!(embed.input_density(), 0.0);
+            assert_eq!(embed.drive_spikes, 0);
+        }
+        // Dense input by contrast drives real spikes.
+        let dense = vec![1.0f32; lanes * sliced.sample_len()];
+        let (_, de) = sliced.forward_batch(&dense, lanes, &seeds).unwrap();
+        let embed = &de.layers[0].aimc;
+        assert_eq!(embed.silent_drive_slices, 0);
+        assert!(embed.input_density() > 0.9);
     }
 
     #[test]

@@ -11,7 +11,12 @@
 //!   accounting ([`crate::energy::ModelEnergy`]). The lane-batched
 //!   `forward_batch` advances several samples in lock-step per crossbar
 //!   traversal (SSA tiling across lane x head), each lane bit-identical
-//!   to the serial single-sample path;
+//!   to the serial single-sample path. The batch kernels stream
+//!   *time-major* — one timestep through the whole depth per step — so
+//!   a [`crate::config::ExitPolicy`] can retire confident lanes before
+//!   the full `T` window (`forward_batch_exits` reports realized
+//!   steps), and all-silent spike slices short-circuit the crossbar and
+//!   attention row work with the skips counted in the energy breakdown;
 //! * [`backend`] — [`NativeBackend`]: `lane_chunk`-sized `forward_batch`
 //!   calls on scoped threads behind the
 //!   [`crate::backend::InferenceBackend`] seam (per-request seeds via

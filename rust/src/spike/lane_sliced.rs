@@ -188,6 +188,14 @@ impl LaneSlicedMatrix {
         self.words.iter().map(|w| w.count_ones() as u64).sum()
     }
 
+    /// `true` when row `r` is silent for *every* lane (all lane words
+    /// zero) — the slice-silence probe of the lane-sliced kernel's
+    /// silent-slice short-circuits.
+    #[inline]
+    pub fn row_is_zero(&self, r: usize) -> bool {
+        self.row(r).iter().all(|&w| w == 0)
+    }
+
     /// Fraction of lane words that are all-zero — the realized
     /// zero-word skip opportunity of the event-driven guards.
     pub fn zero_word_fraction(&self) -> f64 {
@@ -572,5 +580,15 @@ mod tests {
         assert!((m.zero_word_fraction() - 0.75).abs() < 1e-12);
         assert_eq!(LaneSlicedMatrix::zeros(0, 0, 4).zero_word_fraction(),
                    0.0);
+    }
+
+    #[test]
+    fn row_silence_probe_sees_any_lane() {
+        let mut m = LaneSlicedMatrix::zeros(3, 5, 33);
+        assert!((0..3).all(|r| m.row_is_zero(r)));
+        m.set(1, 4, 32, true);
+        assert!(m.row_is_zero(0) && !m.row_is_zero(1) && m.row_is_zero(2));
+        m.set(1, 4, 32, false);
+        assert!(m.row_is_zero(1));
     }
 }

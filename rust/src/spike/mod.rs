@@ -236,6 +236,14 @@ impl SpikeVector {
         self.words.iter().map(|w| w.count_ones()).sum()
     }
 
+    /// `true` when no bit is set — the slice-silence probe behind the
+    /// event-driven silent-slice short-circuits (a word-OR fold; pad
+    /// bits are always zero, so no masking is needed).
+    #[inline]
+    pub fn is_zero(&self) -> bool {
+        self.words.iter().all(|&w| w == 0)
+    }
+
     /// Spike density in `[0, 1]`.
     pub fn density(&self) -> f64 {
         if self.len == 0 {
@@ -417,6 +425,13 @@ impl SpikeMatrix {
     #[inline]
     pub fn row_and_popcount(&self, r: usize, other: &[u64]) -> u32 {
         and_popcount(self.row(r), other)
+    }
+
+    /// `true` when row `r` holds no spikes — the per-(t, token) slice
+    /// silence probe (word-OR over the packed row; pad bits are zero).
+    #[inline]
+    pub fn row_is_zero(&self, r: usize) -> bool {
+        self.row(r).iter().all(|&w| w == 0)
     }
 
     /// Total spike count.
@@ -816,6 +831,25 @@ mod tests {
             b.iter().flatten().flatten().filter(|&&x| x).count();
         let want = ones as f64 / (3 * 5 * 65) as f64;
         assert!((vol.density() - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn silence_probes_track_exact_emptiness() {
+        for &len in WIDTHS {
+            let mut v = SpikeVector::zeros(len);
+            assert!(v.is_zero(), "len={len}");
+            v.set(len - 1, true);
+            assert!(!v.is_zero(), "len={len}");
+            v.set(len - 1, false);
+            assert!(v.is_zero(), "cleared again, len={len}");
+
+            let mut m = SpikeMatrix::zeros(3, len);
+            assert!((0..3).all(|r| m.row_is_zero(r)));
+            m.set(1, len - 1, true);
+            assert!(m.row_is_zero(0) && !m.row_is_zero(1)
+                        && m.row_is_zero(2),
+                    "only the touched row goes live, len={len}");
+        }
     }
 
     #[test]

@@ -9,7 +9,7 @@
 
 use crate::spike::{and_popcount, causal_row_mask, SpikeMatrix, SpikeVolume};
 use crate::ssa::lfsr::LfsrArray;
-use crate::ssa::tile::{draw_uniform, SsaStats, SsaTile};
+use crate::ssa::tile::{draw_uniform, SsaStats, SsaTile, SsaTileStream};
 use crate::ssa::BitMatrix;
 
 /// Algorithm-level SSA (paper Algorithm 1) on packed spike volumes,
@@ -196,6 +196,84 @@ pub fn run_mhsa_lanes(engines: &mut [SsaEngine], qkv: &[Vec<HeadQkv>])
         .collect()
 }
 
+/// One timestep of per-head Q/K/V spikes for a streaming (time-major)
+/// attention step.
+pub type HeadQkvStep = (SpikeMatrix, SpikeMatrix, SpikeMatrix);
+
+/// Seed the per-lane streaming tile banks the way [`SsaEngine::new`]
+/// seeds batch tiles (`seed ^ (head + 1)`), so a time-major forward
+/// consuming these tiles step by step replays the batch engines'
+/// LFSR streams exactly.
+pub fn stream_tiles_for_lanes(lane_seeds: &[u32], heads: usize, n: usize,
+                              d_k: usize, causal: bool)
+                              -> Vec<Vec<SsaTileStream>> {
+    lane_seeds
+        .iter()
+        .map(|&seed| {
+            (0..heads)
+                .map(|h| SsaTileStream::new(n, d_k, causal,
+                                            seed ^ (h as u32 + 1)))
+                .collect()
+        })
+        .collect()
+}
+
+/// Advance every live lane's multi-head attention by one timestep: one
+/// scoped OS thread per (lane, head) streaming tile, the time-major
+/// counterpart of [`run_mhsa_lanes`]. `qkv_t[lane]` is `None` for lanes
+/// that already exited early — their tiles are left untouched (no
+/// draws, no stats), and `None` is returned in their slot. Tiles share
+/// no state, so scheduling cannot reorder any lane's draws.
+pub fn step_mhsa_lanes(tiles: &mut [Vec<SsaTileStream>],
+                       qkv_t: &[Option<Vec<HeadQkvStep>>])
+                       -> Vec<Option<Vec<SpikeMatrix>>> {
+    assert_eq!(tiles.len(), qkv_t.len(),
+               "one streaming tile bank per batch lane");
+    let mut results: Vec<Option<Vec<Option<SpikeMatrix>>>> = qkv_t
+        .iter()
+        .map(|lane| lane.as_ref().map(|qkv| vec![None; qkv.len()]))
+        .collect();
+    std::thread::scope(|scope| {
+        for ((bank, lane_qkv), slots) in
+            tiles.iter_mut().zip(qkv_t).zip(results.iter_mut())
+        {
+            let (Some(lane_qkv), Some(slots)) = (lane_qkv, slots) else {
+                continue;
+            };
+            assert_eq!(lane_qkv.len(), bank.len());
+            for ((tile, (q, k, v)), slot) in
+                bank.iter_mut().zip(lane_qkv).zip(slots.iter_mut())
+            {
+                scope.spawn(move || {
+                    *slot = Some(tile.step(q, k, v));
+                });
+            }
+        }
+    });
+    results
+        .into_iter()
+        .map(|lane| {
+            lane.map(|slots| {
+                slots
+                    .into_iter()
+                    .map(|s| s.expect("tile thread completed"))
+                    .collect()
+            })
+        })
+        .collect()
+}
+
+/// Merge one lane's per-head streaming-tile stats in head order, exactly
+/// as [`SsaEngine::run_mhsa`] merges batch-tile stats (cycles take the
+/// max across parallel tiles, events sum).
+pub fn merge_head_stats(bank: &[SsaTileStream]) -> SsaStats {
+    let mut stats = SsaStats::default();
+    for tile in bank {
+        stats.add(&tile.stats());
+    }
+    stats
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -319,5 +397,73 @@ mod tests {
         let (so, ss) = ser.run_mhsa_serial(&qkv);
         assert_eq!(po, so, "thread scheduling must not change outputs");
         assert_eq!(ps, ss);
+    }
+
+    #[test]
+    fn streaming_lanes_bit_identical_to_batch_mhsa() {
+        // Feeding step_mhsa_lanes one timestep at a time must reproduce
+        // run_mhsa_lanes head-for-head and draw-for-draw. A lane whose
+        // qkv slot goes None (early exit) is simply frozen.
+        let (n, d_k, heads, lanes, t_steps) = (5, 16, 2, 3, 4);
+        let qkv: Vec<Vec<HeadQkv>> = (0..lanes)
+            .map(|lane| {
+                (0..heads)
+                    .map(|h| {
+                        let salt = lane * 100 + h * 10;
+                        (mats(t_steps, n, d_k, salt + 1, 0.4),
+                         mats(t_steps, n, d_k, salt + 2, 0.4),
+                         mats(t_steps, n, d_k, salt + 3, 0.4))
+                    })
+                    .collect()
+            })
+            .collect();
+        let lane_seeds: Vec<u32> = (0..lanes as u32).map(|l| 31 + l)
+            .collect();
+        let mut engines: Vec<SsaEngine> = lane_seeds
+            .iter()
+            .map(|&s| SsaEngine::new(heads, n, d_k, true, s))
+            .collect();
+        let want = run_mhsa_lanes(&mut engines, &qkv);
+
+        let mut tiles =
+            stream_tiles_for_lanes(&lane_seeds, heads, n, d_k, true);
+        // Lane 1 "exits" after 2 steps; check only the executed prefix.
+        let exit_at = [t_steps, 2, t_steps];
+        for t in 0..t_steps {
+            let qkv_t: Vec<Option<Vec<HeadQkvStep>>> = (0..lanes)
+                .map(|lane| (t < exit_at[lane]).then(|| {
+                    qkv[lane]
+                        .iter()
+                        .map(|(q, k, v)| (q.step(t).clone(),
+                                          k.step(t).clone(),
+                                          v.step(t).clone()))
+                        .collect()
+                }))
+                .collect();
+            let outs = step_mhsa_lanes(&mut tiles, &qkv_t);
+            for lane in 0..lanes {
+                match &outs[lane] {
+                    Some(heads_out) => {
+                        assert!(t < exit_at[lane]);
+                        for (h, out) in heads_out.iter().enumerate() {
+                            assert_eq!(out, want[lane].0[h].step(t),
+                                       "lane {lane} head {h} t {t}");
+                        }
+                    }
+                    None => assert!(t >= exit_at[lane], "lane {lane}"),
+                }
+            }
+        }
+        // Full-length lanes reconcile stats exactly with the batch run;
+        // the exited lane stopped short of the batch totals.
+        for lane in [0, 2] {
+            let merged = merge_head_stats(&tiles[lane]);
+            assert_eq!(merged, want[lane].1, "lane {lane}");
+            assert_eq!(merged.prn_bytes, want[lane].1.prn_bytes);
+            assert_eq!(merged.cycles, want[lane].1.cycles);
+        }
+        assert!(merge_head_stats(&tiles[1]).prn_bytes
+                    < want[1].1.prn_bytes);
+        assert_eq!(tiles[1][0].steps(), 2);
     }
 }

@@ -159,9 +159,268 @@ impl LaneSlicedTile {
     }
 }
 
+/// Streaming (time-major) lane-sliced tile: one [`Self::step`] per
+/// timestep, the lane-sliced counterpart of
+/// [`super::tile::SsaTileStream`]. The whole slab advances in lock-step
+/// — under early exit the time-major forward simply stops calling
+/// `step` once every lane's margin has cleared, so realized work is
+/// charged per slab step, not per lane.
+///
+/// Draw order per step (scores latch, then the same window's output
+/// phase) matches [`LaneSlicedTile::run`]'s flattened stream exactly;
+/// after `T` steps every lane's outputs and stats are bit-identical to
+/// one batch `run` over the full volume. Row-silence probes short-
+/// circuit the AND/add word loops for (a) all-lane-silent query rows at
+/// latch and (b) all-lane-silent latched score rows in the output phase
+/// — the shared zero-word guard counters are bulk-charged so
+/// `sliced_words` / `sliced_zero_words` still reconcile with the batch
+/// tile, and the probes themselves land in `SsaStats::{rows,
+/// silent_rows}`.
+pub struct LaneSlicedTileStream {
+    pub n: usize,
+    pub d_k: usize,
+    causal: bool,
+    lfsrs: Vec<LfsrArray>,
+    /// Latched score words for the current window.
+    scores: LaneSlicedMatrix,
+    /// Per-row silence of the latched (masked) score rows.
+    row_silent: Vec<bool>,
+    /// Per-lane stats, *excluding* the shared slab counters below.
+    stats: Vec<SsaStats>,
+    // Shared guard counters (one word / one probe serves every lane);
+    // copied into each lane's stats by `lane_stats`.
+    words: u64,
+    zero_words: u64,
+    rows: u64,
+    silent_rows: u64,
+    steps: usize,
+}
+
+impl LaneSlicedTileStream {
+    /// `lane_seeds[l]` must be the seed lane `l`'s solo tile would use.
+    pub fn new(n: usize, d_k: usize, causal: bool, lane_seeds: &[u32])
+               -> Self {
+        assert!(d_k <= 256, "UINT8 counter bounds d_K at 256 (paper IV-B2)");
+        assert!(!lane_seeds.is_empty() && lane_seeds.len() <= 64,
+                "lane-sliced tile serves 1..=64 lanes");
+        let lanes = lane_seeds.len();
+        LaneSlicedTileStream {
+            n,
+            d_k,
+            causal,
+            lfsrs: lane_seeds.iter().map(|&s| LfsrArray::new(s)).collect(),
+            scores: LaneSlicedMatrix::zeros(n, n, lanes),
+            row_silent: vec![false; n],
+            stats: vec![SsaStats::default(); lanes],
+            words: 0,
+            zero_words: 0,
+            rows: 0,
+            silent_rows: 0,
+            steps: 0,
+        }
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.lfsrs.len()
+    }
+
+    /// Timesteps advanced so far (slab steps — every lane in lock-step).
+    pub fn steps(&self) -> usize {
+        self.steps
+    }
+
+    /// Per-lane stats with the shared slab counters folded in, exactly
+    /// as [`LaneSlicedTile::run`] copies them into every lane.
+    pub fn lane_stats(&self) -> Vec<SsaStats> {
+        self.stats
+            .iter()
+            .map(|s| {
+                let mut s = *s;
+                s.sliced_words = self.words;
+                s.sliced_zero_words = self.zero_words;
+                s.rows = self.rows;
+                s.silent_rows = self.silent_rows;
+                s
+            })
+            .collect()
+    }
+
+    /// Advance one timestep for the whole slab: latch scores from
+    /// `(q_t, k_t)`, then emit this window's `[N x d_K]` lane-sliced
+    /// attention output from the latched scores and `v_t`.
+    pub fn step(&mut self, q: &LaneSlicedMatrix, k: &LaneSlicedMatrix,
+                v: &LaneSlicedMatrix) -> LaneSlicedMatrix {
+        let (n, d_k, lanes) = (self.n, self.d_k, self.lanes());
+        for (name, m) in [("q", q), ("k", k), ("v", v)] {
+            assert!(m.rows() == n && m.cols() == d_k,
+                    "{name}: {}x{} spikes for a {n}x{d_k} tile",
+                    m.rows(), m.cols());
+            assert_eq!(m.lanes(), lanes, "{name}: lane count mismatch");
+        }
+        if self.steps == 0 {
+            // The batch tile's iteration-0 window: d_K pipeline-fill
+            // cycles per lane, no draws.
+            for s in self.stats.iter_mut() {
+                s.cycles += d_k as u64;
+                s.and_ops += 2 * (n * n * d_k) as u64;
+            }
+        }
+        let mut vc = VerticalCounter::new();
+        // Score latch (row-major; each lane's own LFSR in lane order).
+        for i in 0..n {
+            self.scores.row_mut(i).fill(0);
+            let q_row = q.row(i);
+            self.rows += 1;
+            let q_silent = q.row_is_zero(i);
+            if q_silent {
+                self.silent_rows += 1;
+                // Every (j, word) guard would have fired; charge the
+                // counters without walking the words.
+                self.words += (n * q_row.len()) as u64;
+                self.zero_words += (n * q_row.len()) as u64;
+            }
+            for j in 0..n {
+                vc.clear();
+                if !q_silent {
+                    let k_row = k.row(j);
+                    for (cc, &qw) in q_row.iter().enumerate() {
+                        self.words += 1;
+                        if qw == 0 {
+                            self.zero_words += 1; // silent query feature
+                            continue;
+                        }
+                        vc.add_word(qw & k_row[cc]);
+                    }
+                }
+                for (l, st) in self.stats.iter_mut().enumerate() {
+                    let count = vc.count(l);
+                    st.counter_incs += count as u64;
+                    st.encoder_samples += 1;
+                    let r = draw_uniform(&mut self.lfsrs[l], d_k as u32,
+                                         st);
+                    if count >= r {
+                        self.scores.set(i, j, l, true);
+                    }
+                }
+            }
+            if self.causal {
+                // One word store masks key j for all 64 lanes.
+                self.scores.row_mut(i)[i + 1..].fill(0);
+            }
+        }
+        // Output phase for the same window. Score-row silence is
+        // column-invariant: probe once per row, reuse across the c loop.
+        for (i, s) in self.row_silent.iter_mut().enumerate() {
+            *s = self.scores.row_is_zero(i);
+            self.rows += 1;
+            if *s {
+                self.silent_rows += 1;
+            }
+        }
+        let mut out = LaneSlicedMatrix::zeros(n, d_k, lanes);
+        for c in 0..d_k {
+            for s in self.stats.iter_mut() {
+                s.cycles += 1;
+                s.and_ops += 2 * (n * n) as u64; // hardware events
+            }
+            for i in 0..n {
+                vc.clear();
+                let s_row = self.scores.row(i);
+                if self.row_silent[i] {
+                    self.words += s_row.len() as u64;
+                    self.zero_words += s_row.len() as u64;
+                } else {
+                    for (j, &sw) in s_row.iter().enumerate() {
+                        self.words += 1;
+                        if sw == 0 {
+                            self.zero_words += 1; // silent score: skip
+                            continue;
+                        }
+                        vc.add_word(sw & v.word(j, c));
+                    }
+                }
+                for (l, st) in self.stats.iter_mut().enumerate() {
+                    let sum = vc.count(l);
+                    st.adder_ops += 1;
+                    st.encoder_samples += 1;
+                    let r = draw_uniform(&mut self.lfsrs[l], n as u32, st);
+                    if sum >= r {
+                        out.set(i, c, l, true);
+                    }
+                }
+            }
+        }
+        self.steps += 1;
+        out
+    }
+}
+
 /// Lane-sliced Q/K/V for one head (counterpart of [`HeadQkv`]).
 pub type SlicedHeadQkv =
     (LaneSlicedVolume, LaneSlicedVolume, LaneSlicedVolume);
+
+/// One timestep of lane-sliced Q/K/V for one head (counterpart of
+/// [`crate::ssa::engine::HeadQkvStep`]).
+pub type SlicedHeadQkvStep =
+    (LaneSlicedMatrix, LaneSlicedMatrix, LaneSlicedMatrix);
+
+/// Seed one streaming tile per head, deriving head `h`'s per-lane seeds
+/// as `lane_engine_seeds[l] ^ (h + 1)` — exactly how [`run_mhsa_sliced`]
+/// (and [`super::SsaEngine::new`]) seed their tiles, so a time-major
+/// forward consuming these step by step replays the same LFSR streams.
+pub fn stream_sliced_tiles(heads: usize, n: usize, d_k: usize,
+                           causal: bool, lane_engine_seeds: &[u32])
+                           -> Vec<LaneSlicedTileStream> {
+    (0..heads)
+        .map(|h| {
+            let seeds: Vec<u32> = lane_engine_seeds
+                .iter()
+                .map(|&s| s ^ (h as u32 + 1))
+                .collect();
+            LaneSlicedTileStream::new(n, d_k, causal, &seeds)
+        })
+        .collect()
+}
+
+/// Advance every head's streaming tile by one timestep, one scoped OS
+/// thread per head (the time-major counterpart of [`run_mhsa_sliced`]).
+/// Returns per-head lane-sliced outputs for this step. Tiles share no
+/// state, so scheduling cannot reorder any lane's draws.
+pub fn step_mhsa_sliced(tiles: &mut [LaneSlicedTileStream],
+                        qkv_t: &[SlicedHeadQkvStep])
+                        -> Vec<LaneSlicedMatrix> {
+    assert_eq!(tiles.len(), qkv_t.len(),
+               "one streaming tile per head");
+    let mut results: Vec<Option<LaneSlicedMatrix>> =
+        (0..tiles.len()).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        for ((tile, (q, k, v)), slot) in
+            tiles.iter_mut().zip(qkv_t).zip(results.iter_mut())
+        {
+            scope.spawn(move || {
+                *slot = Some(tile.step(q, k, v));
+            });
+        }
+    });
+    results
+        .into_iter()
+        .map(|r| r.expect("tile thread completed"))
+        .collect()
+}
+
+/// Per-lane stats merged across a head bank in head order (cycles max,
+/// events sum) — the same merge [`run_mhsa_sliced`] performs.
+pub fn merge_sliced_head_stats(tiles: &[LaneSlicedTileStream])
+                               -> Vec<SsaStats> {
+    let lanes = tiles.first().map_or(0, |t| t.lanes());
+    let mut merged = vec![SsaStats::default(); lanes];
+    for tile in tiles {
+        for (m, s) in merged.iter_mut().zip(tile.lane_stats()) {
+            m.add(&s);
+        }
+    }
+    merged
+}
 
 /// Lane-sliced multi-head attention: one [`LaneSlicedTile`] per head on
 /// a scoped OS thread (the parallel-tile wave of
@@ -333,6 +592,148 @@ mod tests {
             assert_eq!(s.sliced_zero_words, s.sliced_words);
             assert_eq!(s.sliced_skip_rate(), 1.0);
             assert_eq!(s.cycles, (2 + 1) * 8);
+        }
+    }
+
+    #[test]
+    fn streaming_sliced_tile_bit_identical_to_batch_run() {
+        // One step() per timestep must reproduce LaneSlicedTile::run
+        // draw-for-draw for every lane: outputs, per-lane stats, and
+        // even the shared guard-counter totals.
+        for &(n, d_k, causal, lanes) in
+            &[(5usize, 16usize, false, 3usize), (4, 20, true, 7)]
+        {
+            let t_steps = 4;
+            let vols = |salt: usize| -> Vec<SpikeVolume> {
+                (0..lanes)
+                    .map(|l| mats(t_steps, n, d_k, salt + l * 100, 0.3))
+                    .collect()
+            };
+            let q = LaneSlicedVolume::transpose_from_lanes(&vols(1));
+            let k = LaneSlicedVolume::transpose_from_lanes(&vols(2));
+            let v = LaneSlicedVolume::transpose_from_lanes(&vols(3));
+            let seeds: Vec<u32> =
+                (0..lanes).map(|l| 55 + l as u32).collect();
+            let (want, want_stats) =
+                LaneSlicedTile::new(n, d_k, causal, &seeds)
+                    .run(&q, &k, &v);
+            let mut stream =
+                LaneSlicedTileStream::new(n, d_k, causal, &seeds);
+            for t in 0..t_steps {
+                let out = stream.step(q.step(t), k.step(t), v.step(t));
+                for c in 0..d_k {
+                    for i in 0..n {
+                        assert_eq!(out.word(i, c), want.step(t).word(i, c),
+                                   "n={n} lanes={lanes} t={t} i={i} c={c}");
+                    }
+                }
+            }
+            assert_eq!(stream.steps(), t_steps);
+            let got_stats = stream.lane_stats();
+            for (l, (gs, ws)) in
+                got_stats.iter().zip(&want_stats).enumerate()
+            {
+                assert_eq!(gs, ws, "lane {l}");
+                assert_eq!(gs.prn_bytes, ws.prn_bytes, "lane {l}");
+                assert_eq!(gs.cycles, ws.cycles, "lane {l}");
+                // Bulk-charged guard counters reconcile exactly.
+                assert_eq!(gs.sliced_words, ws.sliced_words, "lane {l}");
+                assert_eq!(gs.sliced_zero_words, ws.sliced_zero_words,
+                           "lane {l}");
+                // Row probes are streaming-only diagnostics.
+                assert_eq!(gs.rows, (2 * n * t_steps) as u64);
+                assert_eq!(ws.rows, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_sliced_silent_rows_short_circuit_and_stay_exact() {
+        // All-zero Q silences every query row for the whole slab; the
+        // bulk guard charges must match the batch tile's word-by-word
+        // tallies and the PRN streams must stay aligned.
+        let (n, d_k, lanes, t_steps) = (4, 8, 5, 3);
+        let zv: Vec<SpikeVolume> =
+            (0..lanes).map(|_| SpikeVolume::zeros(t_steps, n, d_k))
+                .collect();
+        let ones: Vec<SpikeVolume> = (0..lanes)
+            .map(|_| {
+                let b = vec![vec![vec![true; d_k]; n]; t_steps];
+                SpikeVolume::from_bools(&b)
+            })
+            .collect();
+        let q = LaneSlicedVolume::transpose_from_lanes(&zv);
+        let kv = LaneSlicedVolume::transpose_from_lanes(&ones);
+        let seeds: Vec<u32> = (0..lanes as u32).map(|l| l + 3).collect();
+        let (want, want_stats) =
+            LaneSlicedTile::new(n, d_k, false, &seeds).run(&q, &kv, &kv);
+        let mut stream = LaneSlicedTileStream::new(n, d_k, false, &seeds);
+        for t in 0..t_steps {
+            let out = stream.step(q.step(t), kv.step(t), kv.step(t));
+            for c in 0..d_k {
+                for i in 0..n {
+                    assert_eq!(out.word(i, c), want.step(t).word(i, c),
+                               "t={t} i={i} c={c}");
+                }
+            }
+        }
+        for (gs, ws) in stream.lane_stats().iter().zip(&want_stats) {
+            assert_eq!(gs, ws);
+            assert_eq!(gs.sliced_words, ws.sliced_words);
+            assert_eq!(gs.sliced_zero_words, ws.sliced_zero_words);
+            // Every query row and every latched score row was silent.
+            assert_eq!(gs.silent_rows, gs.rows);
+            assert!(gs.silent_rows > 0);
+            assert_eq!(gs.row_skip_rate(), 1.0);
+        }
+    }
+
+    #[test]
+    fn streaming_mhsa_sliced_bit_identical_to_batch() {
+        // step_mhsa_sliced over T steps == run_mhsa_sliced, head by
+        // head, with merged per-lane stats reconciling in head order.
+        let (n, d_k, heads, lanes, t_steps) = (4, 16, 2, 3, 3);
+        let qkv_lanes = lane_qkv(lanes, heads, t_steps, n, d_k, 0.4);
+        let seeds: Vec<u32> = (0..lanes).map(|l| 77 + l as u32).collect();
+        let sliced: Vec<SlicedHeadQkv> = (0..heads)
+            .map(|h| {
+                let gather = |pick: fn(&HeadQkv) -> &SpikeVolume| {
+                    let refs: Vec<&SpikeVolume> = qkv_lanes
+                        .iter()
+                        .map(|lane| pick(&lane[h]))
+                        .collect();
+                    LaneSlicedVolume::transpose_from_lane_refs(&refs)
+                };
+                (gather(|t| &t.0), gather(|t| &t.1), gather(|t| &t.2))
+            })
+            .collect();
+        let (want_outs, want_stats) =
+            run_mhsa_sliced(heads, n, d_k, true, &seeds, &sliced);
+        let mut tiles = stream_sliced_tiles(heads, n, d_k, true, &seeds);
+        for t in 0..t_steps {
+            let qkv_t: Vec<SlicedHeadQkvStep> = sliced
+                .iter()
+                .map(|(q, k, v)| (q.step(t).clone(), k.step(t).clone(),
+                                  v.step(t).clone()))
+                .collect();
+            let outs = step_mhsa_sliced(&mut tiles, &qkv_t);
+            for (h, out) in outs.iter().enumerate() {
+                for c in 0..d_k {
+                    for i in 0..n {
+                        assert_eq!(out.word(i, c),
+                                   want_outs[h].step(t).word(i, c),
+                                   "h={h} t={t} i={i} c={c}");
+                    }
+                }
+            }
+        }
+        for (l, (gs, ws)) in merge_sliced_head_stats(&tiles)
+            .iter()
+            .zip(&want_stats)
+            .enumerate()
+        {
+            assert_eq!(gs, ws, "lane {l}");
+            assert_eq!(gs.prn_bytes, ws.prn_bytes, "lane {l}");
         }
     }
 

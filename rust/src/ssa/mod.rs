@@ -6,17 +6,25 @@
 //! * [`sac`]       — one stochastic attention cell: AND gate, UINT8
 //!   counter, score latch, d_K-bit FIFO for V alignment, output AND;
 //! * [`tile`]      — the N x N SAC array with streaming dataflow, column
-//!   adders and Bernoulli encoders; counts cycles and gate events;
+//!   adders and Bernoulli encoders; counts cycles and gate events; plus
+//!   the time-major [`tile::SsaTileStream`] (one `step` per timestep)
+//!   that the early-exit forward drives, bit-identical to a batch `run`
+//!   with row-silence short-circuits counted in
+//!   [`SsaStats::rows`]/[`SsaStats::silent_rows`];
 //! * [`engine`]    — multi-tile (one tile per head) engine running heads
 //!   on parallel OS threads, the lane-batched
 //!   [`engine::run_mhsa_lanes`] tiling across (lane, head) for the
-//!   batched native forward, and the algorithm-level reference (paper
-//!   Algorithm 1) used to prove the cycle-level model bit-exact;
+//!   batched native forward, the streaming
+//!   [`engine::step_mhsa_lanes`] advancing live lanes one timestep at a
+//!   time, and the algorithm-level reference (paper Algorithm 1) used
+//!   to prove the cycle-level model bit-exact;
 //! * [`lane_sliced`] — the lane-major batched tile: Q/K/V packed as
 //!   [`crate::spike::LaneSlicedVolume`] so one AND and one causal word
 //!   store serve up to 64 batch lanes, with per-lane counts recovered by
 //!   vertical counters; bit-identical per lane to the
-//!   [`engine::run_mhsa_lanes`] lane-loop oracle;
+//!   [`engine::run_mhsa_lanes`] lane-loop oracle; its streaming twin
+//!   [`lane_sliced::LaneSlicedTileStream`] advances the whole slab in
+//!   lock-step for the time-major forward;
 //! * [`legacy`]    — the frozen pre-refactor `Vec<Vec<bool>>`
 //!   implementations, kept as the bit-exactness oracle and the
 //!   benchmark baseline.
@@ -51,13 +59,17 @@ pub mod sac;
 pub mod tile;
 
 pub use crate::spike::{SpikeMatrix, SpikeVector, SpikeVolume};
-pub use engine::{run_mhsa_lanes, ssa_reference, ssa_reference_bools,
-                 HeadQkv, SsaEngine};
-pub use lane_sliced::{run_mhsa_lanes_sliced, run_mhsa_sliced,
-                      LaneSlicedTile, SlicedHeadQkv};
+pub use engine::{merge_head_stats, run_mhsa_lanes, ssa_reference,
+                 ssa_reference_bools, step_mhsa_lanes,
+                 stream_tiles_for_lanes, HeadQkv, HeadQkvStep, SsaEngine};
+pub use lane_sliced::{merge_sliced_head_stats, run_mhsa_lanes_sliced,
+                      run_mhsa_sliced, step_mhsa_sliced,
+                      stream_sliced_tiles, LaneSlicedTile,
+                      LaneSlicedTileStream, SlicedHeadQkv,
+                      SlicedHeadQkvStep};
 pub use lfsr::{Lfsr32, LfsrArray};
 pub use sac::{bernoulli_encode, Sac};
-pub use tile::{draw_uniform, SsaStats, SsaTile};
+pub use tile::{draw_uniform, SsaStats, SsaTile, SsaTileStream};
 
 /// A binary matrix `[rows][cols]` (token-major spike matrix) — the legacy
 /// unpacked interchange format. The datapath itself runs on

@@ -35,12 +35,23 @@ pub struct SsaStats {
     pub sliced_words: u64,
     /// Of [`Self::sliced_words`], all-zero words skipped outright.
     pub sliced_zero_words: u64,
+    /// Row-silence probes evaluated by the *streaming* tiles'
+    /// short-circuits: one per (step, query row) at score latch and one
+    /// per (step, score row) in the output phase. Simulator-path
+    /// diagnostic like `sliced_words` — the batch tiles never probe
+    /// rows, so this stays 0 on the oracle paths.
+    pub rows: u64,
+    /// Of [`Self::rows`], rows found all-silent and short-circuited
+    /// past their AND/popcount word loops (the Bernoulli draws still
+    /// advance, so outputs are unchanged).
+    pub silent_rows: u64,
 }
 
 /// Equality covers the *hardware-event attribution* only: the
-/// `sliced_*` skip counters describe which simulator kernel ran (the
-/// lane-loop oracle never examines lane words), so two bit-identical
-/// runs on different kernels must still compare equal.
+/// `sliced_*` skip counters and the `rows`/`silent_rows` probes
+/// describe which simulator kernel ran (the lane-loop oracle never
+/// examines lane words; the batch tiles never probe rows), so two
+/// bit-identical runs on different kernels must still compare equal.
 impl PartialEq for SsaStats {
     fn eq(&self, o: &Self) -> bool {
         self.cycles == o.cycles
@@ -62,6 +73,8 @@ impl SsaStats {
         self.prn_bytes += o.prn_bytes;
         self.sliced_words += o.sliced_words;
         self.sliced_zero_words += o.sliced_zero_words;
+        self.rows += o.rows;
+        self.silent_rows += o.silent_rows;
     }
 
     /// Realized zero-word skip rate of the lane-sliced guards
@@ -71,6 +84,16 @@ impl SsaStats {
             0.0
         } else {
             self.sliced_zero_words as f64 / self.sliced_words as f64
+        }
+    }
+
+    /// Realized silent-row short-circuit rate of the streaming tiles
+    /// (`0.0` when no streaming kernel ran).
+    pub fn row_skip_rate(&self) -> f64 {
+        if self.rows == 0 {
+            0.0
+        } else {
+            self.silent_rows as f64 / self.rows as f64
         }
     }
 }
@@ -222,6 +245,157 @@ impl SsaTile {
     }
 }
 
+/// Streaming (time-major) SSA tile: one [`SsaTileStream::step`] call per
+/// timestep instead of one [`SsaTile::run`] over the whole window — the
+/// attention engine of the time-major forward, where a timestep flows
+/// through every block before the next timestep starts (and may never
+/// start, under dynamic-timestep early exit).
+///
+/// The PRN stream is consumed in exactly the batch tile's *flattened*
+/// draw order — the scores(t) latch, then the output draws for the same
+/// window — which is also the order [`ssa_reference`] materializes
+/// (scores(0), out(0), scores(1), out(1), ...), so after `T` steps the
+/// emitted outputs and accumulated [`SsaStats`] totals are bit-identical
+/// to one `SsaTile::run` over the full `T`-step volume. The batch
+/// tile's iteration-0 pipeline-fill window (cycles + AND events, no
+/// draws) is charged on the first step; each later window's counters
+/// land one step earlier than the pipelined attribution, but every
+/// total reconciles exactly.
+///
+/// Silent rows short-circuit: an all-zero Q row latches an all-zero
+/// score row without running its `n` AND/popcount word loops, and an
+/// all-zero (post-causal-mask) score row skips its `d_k` column-adder
+/// popcounts. The Bernoulli comparisons and PRN draws still run:
+/// `draw_uniform` returns `1..=i_max`, so a zero count never fires and
+/// the hardware still clocks the comparator — outputs stay bit-exact.
+/// Skipped row scans are surfaced via `SsaStats::{rows, silent_rows}`.
+pub struct SsaTileStream {
+    pub n: usize,
+    pub d_k: usize,
+    causal_masks: Option<Vec<Vec<u64>>>,
+    lfsr: LfsrArray,
+    /// Scores latched for the current window.
+    scores: SpikeMatrix,
+    /// Per-row silence of the latched (masked) score rows.
+    row_silent: Vec<bool>,
+    stats: SsaStats,
+    steps: usize,
+}
+
+impl SsaTileStream {
+    pub fn new(n: usize, d_k: usize, causal: bool, seed: u32) -> Self {
+        assert!(d_k <= 256, "UINT8 counter bounds d_K at 256 (paper IV-B2)");
+        SsaTileStream {
+            n,
+            d_k,
+            causal_masks: causal.then(|| {
+                (0..n).map(|i| causal_row_mask(i, n)).collect()
+            }),
+            lfsr: LfsrArray::new(seed),
+            scores: SpikeMatrix::zeros(n, n),
+            row_silent: vec![false; n],
+            steps: 0,
+            stats: SsaStats::default(),
+        }
+    }
+
+    /// Timesteps advanced so far.
+    pub fn steps(&self) -> usize {
+        self.steps
+    }
+
+    /// Accumulated gate stats — equal to the batch tile's totals after
+    /// the same number of steps (plus the streaming-only row probes).
+    pub fn stats(&self) -> SsaStats {
+        self.stats
+    }
+
+    /// Advance one timestep: latch scores from `(q_t, k_t)`, then emit
+    /// this window's `[N x d_K]` attention output from the latched
+    /// scores and `v_t`.
+    pub fn step(&mut self, q: &SpikeMatrix, k: &SpikeMatrix,
+                v: &SpikeMatrix) -> SpikeMatrix {
+        let (n, d_k) = (self.n, self.d_k);
+        for (name, m) in [("q", q), ("k", k), ("v", v)] {
+            assert!(m.rows() == n && m.cols() == d_k,
+                    "{name}: {}x{} spikes for a {n}x{d_k} tile", m.rows(),
+                    m.cols());
+        }
+        if self.steps == 0 {
+            // The batch tile's iteration-0 window: d_K pipeline-fill
+            // cycles whose phase-2 arm never runs (no scores latched
+            // yet) but whose hardware AND events are still clocked.
+            self.stats.cycles += d_k as u64;
+            self.stats.and_ops += 2 * (n * n * d_k) as u64;
+        }
+        // Score latch (row-major draws, as the batch tile latches at
+        // the end of this window).
+        for i in 0..n {
+            self.scores.clear_row(i);
+            self.stats.rows += 1;
+            let q_silent = q.row_is_zero(i);
+            if q_silent {
+                self.stats.silent_rows += 1;
+            }
+            for j in 0..n {
+                // popcount(0 AND k_j) == 0: the word loop is skipped,
+                // the encoder comparison + draw still happen.
+                let count = if q_silent {
+                    0
+                } else {
+                    and_popcount(q.row(i), k.row(j))
+                };
+                self.stats.counter_incs += count as u64;
+                self.stats.encoder_samples += 1;
+                let r = draw_uniform(&mut self.lfsr, d_k as u32,
+                                     &mut self.stats);
+                if count >= r {
+                    self.scores.set(i, j, true);
+                }
+            }
+            if let Some(masks) = &self.causal_masks {
+                for (w, m) in self.scores.row_mut(i).iter_mut()
+                    .zip(&masks[i])
+                {
+                    *w &= m;
+                }
+            }
+        }
+        // Output phase for the same window (the batch tile runs it in
+        // the next iteration's c-loop; totals reconcile after T steps).
+        for (i, s) in self.row_silent.iter_mut().enumerate() {
+            *s = self.scores.row_is_zero(i);
+            self.stats.rows += 1;
+            if *s {
+                self.stats.silent_rows += 1;
+            }
+        }
+        let v_t = v.transposed();
+        let mut out = SpikeMatrix::zeros(n, d_k);
+        for c in 0..d_k {
+            self.stats.cycles += 1;
+            self.stats.and_ops += 2 * (n * n) as u64;
+            let v_mask = v_t.row(c);
+            for i in 0..n {
+                let sum = if self.row_silent[i] {
+                    0
+                } else {
+                    self.scores.row_and_popcount(i, v_mask)
+                };
+                self.stats.adder_ops += 1;
+                self.stats.encoder_samples += 1;
+                let r = draw_uniform(&mut self.lfsr, n as u32,
+                                     &mut self.stats);
+                if sum >= r {
+                    out.set(i, c, true);
+                }
+            }
+        }
+        self.steps += 1;
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -298,6 +472,73 @@ mod tests {
         let rate = out.density();
         // E[score] = E[QK dot]/d_k = 0.25; V=1 => E[A] = ceil-ish 0.25.
         assert!((rate - 0.25).abs() < 0.03, "rate {rate}");
+    }
+
+    #[test]
+    fn streaming_tile_bit_identical_to_batch_run() {
+        // Feeding the volume one timestep at a time through SsaTileStream
+        // must reproduce SsaTile::run draw-for-draw: same outputs, same
+        // core stats totals. Only the streaming tile probes rows.
+        let pat = |t: usize, i: usize, c: usize, salt: usize| {
+            let h = (t * 1315423911 + i * 2654435761 + c * 97 + salt)
+                as u64;
+            (h.wrapping_mul(0x9E3779B97F4A7C15) >> 62) & 3 == 1
+        };
+        for (n, d_k, causal, t_steps) in
+            [(4, 8, false, 3), (5, 16, true, 4), (8, 64, true, 7),
+             (3, 33, false, 5)]
+        {
+            let mk = |salt: usize| {
+                vol((0..t_steps)
+                    .map(|t| bits(n, d_k, |i, c| pat(t, i, c, salt)))
+                    .collect())
+            };
+            let (q, k, v) = (mk(1), mk(2), mk(3));
+            let (want, want_stats) =
+                SsaTile::new(n, d_k, causal, 77).run(&q, &k, &v);
+            let mut stream = SsaTileStream::new(n, d_k, causal, 77);
+            for t in 0..t_steps {
+                let out = stream.step(q.step(t), k.step(t), v.step(t));
+                assert_eq!(&out, want.step(t),
+                           "n={n} d_k={d_k} causal={causal} t={t}");
+            }
+            let got = stream.stats();
+            // PartialEq covers the six contract fields...
+            assert_eq!(got, want_stats);
+            // ...and the flattened schedule makes even the raw draw and
+            // cycle tallies identical.
+            assert_eq!(got.cycles, want_stats.cycles);
+            assert_eq!(got.and_ops, want_stats.and_ops);
+            assert_eq!(got.counter_incs, want_stats.counter_incs);
+            assert_eq!(got.adder_ops, want_stats.adder_ops);
+            assert_eq!(got.encoder_samples, want_stats.encoder_samples);
+            assert_eq!(got.prn_bytes, want_stats.prn_bytes);
+            // Row probes are a streaming-only diagnostic.
+            assert_eq!(got.rows, (2 * n * t_steps) as u64);
+            assert_eq!(want_stats.rows, 0);
+        }
+    }
+
+    #[test]
+    fn streaming_silent_rows_short_circuit_and_stay_exact() {
+        // All-zero Q silences every query row; the short-circuit must
+        // not disturb the PRN stream or the emitted spikes.
+        let (n, d_k, t_steps) = (6, 16, 4);
+        let z = vol(vec![bits(n, d_k, |_, _| false); t_steps]);
+        let ones = vol(vec![bits(n, d_k, |_, _| true); t_steps]);
+        let (want, want_stats) =
+            SsaTile::new(n, d_k, false, 11).run(&z, &ones, &ones);
+        let mut stream = SsaTileStream::new(n, d_k, false, 11);
+        for t in 0..t_steps {
+            let out = stream.step(z.step(t), ones.step(t), ones.step(t));
+            assert_eq!(&out, want.step(t), "t={t}");
+        }
+        let got = stream.stats();
+        assert_eq!(got, want_stats);
+        // Every Q row and every latched score row was silent.
+        assert_eq!(got.silent_rows, got.rows);
+        assert!(got.silent_rows > 0);
+        assert_eq!(got.row_skip_rate(), 1.0);
     }
 
     #[test]

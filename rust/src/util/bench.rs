@@ -16,21 +16,42 @@ pub struct BenchResult {
     pub mean: Duration,
     pub p50: Duration,
     pub p95: Duration,
+    /// Case-specific numeric facts appended to the JSON record
+    /// (`key: value` pairs in insertion order) — e.g. `input_density`,
+    /// `t_avg_realized`, `slice_skip_rate` for the sparsity benches.
+    /// Keys must be unique and JSON-safe identifiers.
+    pub extras: Vec<(String, f64)>,
 }
 
 impl BenchResult {
+    /// Append one case-specific numeric fact to the JSON record
+    /// (builder style: `bench(...).with_extra("input_density", 0.1)`).
+    pub fn with_extra(mut self, key: &str, value: f64) -> BenchResult {
+        self.extras.push((key.to_string(), value));
+        self
+    }
+
     /// One bench case as a flat JSON object, shared by every
     /// `benches/*.rs` writer so the record schema cannot drift.
     pub fn to_json(&self) -> String {
-        format!(
+        let mut j = format!(
             "{{\"name\": \"{}\", \"mean_us\": {:.3}, \"p50_us\": {:.3}, \
-             \"p95_us\": {:.3}, \"iters\": {}}}",
+             \"p95_us\": {:.3}, \"iters\": {}",
             crate::util::json::escape(&self.name),
             self.mean.as_secs_f64() * 1e6,
             self.p50.as_secs_f64() * 1e6,
             self.p95.as_secs_f64() * 1e6,
             self.iters
-        )
+        );
+        for (k, v) in &self.extras {
+            // f64::to_string is round-trip exact and never produces
+            // NaN/inf-invalid JSON for finite values; guard the rest.
+            let v = if v.is_finite() { *v } else { -1.0 };
+            j.push_str(&format!(", \"{}\": {}",
+                                crate::util::json::escape(k), v));
+        }
+        j.push('}');
+        j
     }
 }
 
@@ -102,6 +123,7 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, budget: Duration,
         mean,
         p50: p(0.50),
         p95: p(0.95),
+        extras: Vec::new(),
     };
     println!("{r}");
     r
@@ -138,10 +160,33 @@ mod tests {
             mean: Duration::from_micros(5),
             p50: Duration::from_micros(4),
             p95: Duration::from_micros(9),
+            extras: Vec::new(),
         };
         let j = r.to_json();
         assert!(j.contains("quote\\\"me"));
         assert!(j.contains("\"iters\": 3"));
+        assert!(j.ends_with('}') && !j.contains(", \"\""),
+                "no extras -> unchanged flat record: {j}");
+    }
+
+    #[test]
+    fn extras_append_to_the_json_record() {
+        let r = BenchResult {
+            name: "sparse".into(),
+            iters: 1,
+            mean: Duration::from_micros(5),
+            p50: Duration::from_micros(5),
+            p95: Duration::from_micros(5),
+            extras: Vec::new(),
+        }
+        .with_extra("input_density", 0.1)
+        .with_extra("t_avg_realized", 2.5)
+        .with_extra("bad", f64::NAN);
+        let j = r.to_json();
+        assert!(j.contains("\"input_density\": 0.1"), "{j}");
+        assert!(j.contains("\"t_avg_realized\": 2.5"), "{j}");
+        assert!(j.contains("\"bad\": -1"), "{j}");
+        assert!(j.starts_with('{') && j.ends_with('}'));
     }
 
     #[test]
