@@ -317,6 +317,9 @@ pub struct RunConfig {
     pub batch_window_us: u64,
     /// Bounded queue depth; beyond this, submitters see backpressure.
     pub queue_depth: usize,
+    /// End-to-end latency SLO in microseconds; requests slower than this
+    /// increment the SLO-violation counters (0 disables SLO accounting).
+    pub slo_us: u64,
     /// Inference seed base (per-request seeds are derived from it).
     pub seed: u64,
     pub drift: DriftConfig,
@@ -328,6 +331,7 @@ impl Default for RunConfig {
             max_batch: 8,
             batch_window_us: 500,
             queue_depth: 256,
+            slo_us: 0,
             seed: 42,
             drift: DriftConfig::default(),
         }
@@ -347,6 +351,9 @@ impl RunConfig {
         }
         if let Some(v) = j.get("queue_depth").and_then(|v| v.as_usize()) {
             c.queue_depth = v;
+        }
+        if let Some(v) = j.get("slo_us").and_then(|v| v.as_f64()) {
+            c.slo_us = v as u64;
         }
         if let Some(v) = j.get("seed").and_then(|v| v.as_f64()) {
             c.seed = v as u64;
@@ -442,10 +449,11 @@ mod tests {
     fn run_config_json_overrides() {
         let dir = std::env::temp_dir().join("xpk_runcfg.json");
         std::fs::write(&dir,
-            r#"{"max_batch": 4, "drift": {"t_seconds": 3600.0,
+            r#"{"max_batch": 4, "slo_us": 2500, "drift": {"t_seconds": 3600.0,
                 "gdc": false}}"#).unwrap();
         let c = RunConfig::from_json_file(dir.to_str().unwrap()).unwrap();
         assert_eq!(c.max_batch, 4);
+        assert_eq!(c.slo_us, 2500);
         assert_eq!(c.drift.t_seconds, 3600.0);
         assert!(!c.drift.gdc);
         assert_eq!(c.queue_depth, RunConfig::default().queue_depth);

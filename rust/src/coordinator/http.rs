@@ -1,0 +1,723 @@
+//! Std-only HTTP/1.1 front door for the coordinator: `/infer`,
+//! `/generate`, `/metrics`, `/healthz` over JSON.
+//!
+//! Deliberately minimal-dependency (see the note in `Cargo.toml`): the
+//! offline build has no tokio, so the server is a blocking
+//! `TcpListener` accept loop with one thread per connection, capped at
+//! [`HttpOptions::max_connections`]. That is the right shape for this
+//! workload: request concurrency is bounded by the admission gauge long
+//! before thread count matters, and every request ends up blocking on
+//! the coordinator's response channel anyway.
+//!
+//! **Admission control:** before enqueueing, `/infer` and `/generate`
+//! check the outstanding-requests gauge against
+//! [`HttpOptions::shed_at`] and shed with **429 Too Many Requests**
+//! (counted in the `shed` metric, `Retry-After: 1`) once the server
+//! already holds that much unresolved work — load is refused at the
+//! front door *before* the bounded queues saturate and start blocking
+//! connection threads. Malformed requests get 400s; an unknown path
+//! 404; `/healthz` turns 503 when no shard is in the Serving state.
+//!
+//! Bodies and responses are JSON. `f32` logits are serialized with
+//! Rust's shortest round-trip formatting, so a client parsing them back
+//! recovers bit-identical values — the HTTP path preserves the
+//! coordinator's bit-reproducibility contract (non-finite values
+//! serialize as `null`).
+//!
+//! Request schemas:
+//!
+//! ```text
+//! POST /infer    {"x": [f32; sample_len], "seed": u32?}
+//! POST /generate {"session": u64, "token": [f32; token_len], "seed": u32?}
+//! POST /generate {"session": u64, "close": true}
+//! ```
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::{Client, Metrics, Response, Server};
+use crate::util::json::escape;
+use crate::util::Json;
+
+/// Front-door tuning knobs.
+#[derive(Debug, Clone)]
+pub struct HttpOptions {
+    /// Shed (429) once the outstanding-requests gauge reaches this many
+    /// admitted-but-unresolved requests. Keep it at or below the
+    /// coordinator's `queue_depth` so shedding fires before submission
+    /// starts blocking.
+    pub shed_at: usize,
+    /// Maximum concurrent connections; excess connects get 503.
+    pub max_connections: usize,
+    /// Maximum request body size in bytes; larger bodies get 413.
+    pub max_body_bytes: usize,
+    /// Socket read timeout — idle keep-alive connections close after
+    /// this long.
+    pub read_timeout_ms: u64,
+}
+
+impl Default for HttpOptions {
+    fn default() -> Self {
+        HttpOptions {
+            shed_at: 256,
+            max_connections: 64,
+            max_body_bytes: 1 << 20,
+            read_timeout_ms: 5_000,
+        }
+    }
+}
+
+/// Everything a connection thread needs to serve requests.
+struct Ctx {
+    client: Client,
+    metrics: Arc<Metrics>,
+    opts: HttpOptions,
+}
+
+/// The running HTTP front door (accept thread + per-connection threads).
+pub struct HttpServer {
+    local: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<std::thread::JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral test port) and
+    /// start serving requests against `server`'s client. The front door
+    /// holds a [`Client`] clone, so the coordinator keeps running until
+    /// the `HttpServer` is shut down or dropped — shut the front door
+    /// first, then the [`Server`].
+    pub fn attach(server: &Server, addr: &str, opts: HttpOptions)
+                  -> Result<HttpServer> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("bind {addr}"))?;
+        let local = listener.local_addr()?;
+        let ctx = Arc::new(Ctx {
+            client: server.client(),
+            metrics: Arc::clone(&server.metrics),
+            opts,
+        });
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_a = Arc::clone(&stop);
+        let active = Arc::new(AtomicUsize::new(0));
+        let accept = std::thread::Builder::new()
+            .name("xpike-http".into())
+            .spawn(move || {
+                for stream in listener.incoming() {
+                    if stop_a.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let Ok(stream) = stream else { continue };
+                    if active.load(Ordering::SeqCst)
+                        >= ctx.opts.max_connections
+                    {
+                        let _ = write_response(
+                            &mut &stream, 503,
+                            &err_json("too many connections"), false);
+                        continue;
+                    }
+                    active.fetch_add(1, Ordering::SeqCst);
+                    let ctx_c = Arc::clone(&ctx);
+                    let active_c = Arc::clone(&active);
+                    let _ = std::thread::Builder::new()
+                        .name("xpike-http-conn".into())
+                        .spawn(move || {
+                            handle_conn(stream, &ctx_c);
+                            active_c.fetch_sub(1, Ordering::SeqCst);
+                        });
+                }
+            })
+            .context("spawn http accept thread")?;
+        Ok(HttpServer { local, stop, accept: Some(accept) })
+    }
+
+    /// The bound address (pass port 0 to `attach` to pick a free one).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local
+    }
+
+    /// Stop accepting connections and join the accept thread. In-flight
+    /// connections finish on their own threads (each bounded by the
+    /// read timeout).
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Unblock the accept() call with a throwaway connection.
+        let _ = TcpStream::connect(self.local);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+/// One parsed request off a connection.
+struct HttpRequest {
+    method: String,
+    path: String,
+    keep_alive: bool,
+    body: Vec<u8>,
+}
+
+/// Outcome of reading one request off a connection.
+enum Parsed {
+    /// A complete request.
+    Req(HttpRequest),
+    /// Clean close, read timeout or I/O error: drop the connection.
+    Eof,
+    /// Protocol violation: respond with this status and close.
+    Bad(u16, &'static str),
+}
+
+/// Read one `\n`-terminated line (CR stripped), bounded at `max` bytes;
+/// `None` on clean EOF before any byte.
+fn read_line_bounded<R: BufRead>(r: &mut R, max: usize)
+                                 -> std::io::Result<Option<Vec<u8>>> {
+    let mut line = Vec::new();
+    loop {
+        let buf = r.fill_buf()?;
+        if buf.is_empty() {
+            return Ok(if line.is_empty() { None } else { Some(line) });
+        }
+        if let Some(pos) = buf.iter().position(|&b| b == b'\n') {
+            line.extend_from_slice(&buf[..pos]);
+            r.consume(pos + 1);
+            if line.last() == Some(&b'\r') {
+                line.pop();
+            }
+            return Ok(Some(line));
+        }
+        line.extend_from_slice(buf);
+        let n = buf.len();
+        r.consume(n);
+        if line.len() > max {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData, "line too long"));
+        }
+    }
+}
+
+/// Parse one HTTP/1.x request (request line, headers, sized body).
+fn read_request<R: BufRead>(r: &mut R, max_body: usize) -> Parsed {
+    // Tolerate a little leading whitespace between pipelined requests.
+    let mut line = Vec::new();
+    for _ in 0..8 {
+        match read_line_bounded(r, 8192) {
+            Ok(Some(l)) if l.is_empty() => continue,
+            Ok(Some(l)) => {
+                line = l;
+                break;
+            }
+            Ok(None) | Err(_) => return Parsed::Eof,
+        }
+    }
+    let Ok(text) = std::str::from_utf8(&line) else {
+        return Parsed::Bad(400, "bad request line");
+    };
+    let mut parts = text.split_whitespace();
+    let (Some(method), Some(path), Some(version)) =
+        (parts.next(), parts.next(), parts.next())
+    else {
+        return Parsed::Bad(400, "bad request line");
+    };
+    if !version.starts_with("HTTP/1.") {
+        return Parsed::Bad(400, "unsupported protocol");
+    }
+    let mut keep_alive = version == "HTTP/1.1";
+    let mut content_length = 0usize;
+    for _ in 0..100 {
+        let header = match read_line_bounded(r, 8192) {
+            Ok(Some(h)) => h,
+            Ok(None) | Err(_) => return Parsed::Eof,
+        };
+        if header.is_empty() {
+            let mut body = vec![0u8; content_length];
+            if content_length > 0 && r.read_exact(&mut body).is_err() {
+                return Parsed::Eof;
+            }
+            return Parsed::Req(HttpRequest {
+                method: method.to_string(),
+                path: path.to_string(),
+                keep_alive,
+                body,
+            });
+        }
+        let text = String::from_utf8_lossy(&header).to_ascii_lowercase();
+        let Some((name, value)) = text.split_once(':') else {
+            return Parsed::Bad(400, "bad header");
+        };
+        let value = value.trim();
+        match name.trim() {
+            "content-length" => match value.parse::<usize>() {
+                Ok(n) if n <= max_body => content_length = n,
+                Ok(_) => return Parsed::Bad(413, "body too large"),
+                Err(_) => return Parsed::Bad(400, "bad content-length"),
+            },
+            "connection" => {
+                if value.contains("close") {
+                    keep_alive = false;
+                } else if value.contains("keep-alive") {
+                    keep_alive = true;
+                }
+            }
+            _ => {}
+        }
+    }
+    Parsed::Bad(400, "too many headers")
+}
+
+/// Serve one connection: parse, dispatch, respond, repeat (keep-alive).
+fn handle_conn(stream: TcpStream, ctx: &Ctx) {
+    let timeout = Duration::from_millis(ctx.opts.read_timeout_ms.max(1));
+    let _ = stream.set_read_timeout(Some(timeout));
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = stream;
+    loop {
+        match read_request(&mut reader, ctx.opts.max_body_bytes) {
+            Parsed::Eof => return,
+            Parsed::Bad(status, msg) => {
+                let _ = write_response(&mut writer, status,
+                                       &err_json(msg), false);
+                return;
+            }
+            Parsed::Req(req) => {
+                let (status, body) = handle(&req, ctx);
+                if write_response(&mut writer, status, &body,
+                                  req.keep_alive)
+                    .is_err()
+                {
+                    return;
+                }
+                if !req.keep_alive {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// Route one request (pure aside from the coordinator calls).
+fn handle(req: &HttpRequest, ctx: &Ctx) -> (u16, String) {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => healthz(ctx),
+        ("GET", "/metrics") => (200, ctx.metrics.snapshot().to_json()),
+        ("POST", "/infer") => infer(req, ctx),
+        ("POST", "/generate") => generate(req, ctx),
+        (_, "/healthz" | "/metrics" | "/infer" | "/generate") => {
+            (405, err_json("method not allowed"))
+        }
+        _ => (404, err_json("unknown endpoint")),
+    }
+}
+
+fn healthz(ctx: &Ctx) -> (u16, String) {
+    let serving = ctx.metrics.serving_shards();
+    let outstanding = ctx.metrics.outstanding();
+    let status = if serving > 0 { "ok" } else { "down" };
+    let code = if serving > 0 { 200 } else { 503 };
+    (code, format!(
+        "{{\"status\":\"{status}\",\"shards_serving\":{serving},\
+         \"outstanding\":{outstanding}}}"))
+}
+
+/// Admission control: 429 once the outstanding gauge reaches `shed_at`.
+fn shed(ctx: &Ctx) -> Option<(u16, String)> {
+    if ctx.metrics.outstanding() as usize >= ctx.opts.shed_at {
+        ctx.metrics.record_shed();
+        return Some((429, err_json("overloaded; retry later")));
+    }
+    None
+}
+
+/// Parse a JSON object body (400 on anything else).
+fn parse_body(body: &[u8]) -> std::result::Result<Json, (u16, String)> {
+    let text = std::str::from_utf8(body)
+        .map_err(|_| (400, err_json("body is not UTF-8")))?;
+    match Json::parse(text) {
+        Ok(j @ Json::Obj(_)) => Ok(j),
+        Ok(_) => Err((400, err_json("body must be a JSON object"))),
+        Err(_) => Err((400, err_json("malformed JSON"))),
+    }
+}
+
+/// Extract `key` as a flat f32 vector.
+fn parse_f32_vec(j: &Json, key: &'static str)
+                 -> std::result::Result<Vec<f32>, (u16, String)> {
+    let arr = j.get(key).and_then(Json::as_arr).ok_or_else(|| {
+        (400, err_json_owned(format!("missing array field: {key}")))
+    })?;
+    let mut v = Vec::with_capacity(arr.len());
+    for e in arr {
+        match e.as_f64() {
+            Some(f) => v.push(f as f32),
+            None => {
+                return Err((400, err_json_owned(format!(
+                    "{key} must contain only numbers"))));
+            }
+        }
+    }
+    Ok(v)
+}
+
+fn infer(req: &HttpRequest, ctx: &Ctx) -> (u16, String) {
+    if let Some(r) = shed(ctx) {
+        return r;
+    }
+    let j = match parse_body(&req.body) {
+        Ok(j) => j,
+        Err(r) => return r,
+    };
+    let x = match parse_f32_vec(&j, "x") {
+        Ok(x) => x,
+        Err(r) => return r,
+    };
+    if x.len() != ctx.client.sample_len() {
+        return (400, err_json_owned(format!(
+            "bad input length {} != {}", x.len(),
+            ctx.client.sample_len())));
+    }
+    let seed = j.get("seed").and_then(Json::as_f64).unwrap_or(0.0) as u32;
+    match ctx.client.infer(x, seed) {
+        Ok(pending) => match pending.wait() {
+            Ok(resp) => (200, response_json(&resp, None)),
+            Err(_) => (500, err_json("execution failed")),
+        },
+        Err(_) => (500, err_json("server stopped")),
+    }
+}
+
+fn generate(req: &HttpRequest, ctx: &Ctx) -> (u16, String) {
+    let j = match parse_body(&req.body) {
+        Ok(j) => j,
+        Err(r) => return r,
+    };
+    let Some(session) = j.get("session").and_then(Json::as_f64) else {
+        return (400, err_json("missing field: session"));
+    };
+    let session = session as u64;
+    if j.get("close").and_then(Json::as_bool) == Some(true) {
+        return match ctx.client.close_session(session) {
+            Ok(()) => {
+                (200, format!("{{\"session\":{session},\"closed\":true}}"))
+            }
+            Err(_) => (500, err_json("server stopped")),
+        };
+    }
+    let Some(token_len) = ctx.client.token_len() else {
+        return (501, err_json("backend does not support incremental \
+                               generation"));
+    };
+    if let Some(r) = shed(ctx) {
+        return r;
+    }
+    let token = match parse_f32_vec(&j, "token") {
+        Ok(t) => t,
+        Err(r) => return r,
+    };
+    if token.len() != token_len {
+        return (400, err_json_owned(format!(
+            "bad token length {} != {token_len}", token.len())));
+    }
+    let seed = j.get("seed").and_then(Json::as_f64).unwrap_or(0.0) as u32;
+    match ctx.client.generate(session, token, seed) {
+        Ok(pending) => match pending.wait() {
+            Ok(resp) => (200, response_json(&resp, Some(session))),
+            // The session's shard died or was never bindable.
+            Err(_) => (500, err_json("generation failed")),
+        },
+        Err(_) => (500, err_json("server stopped")),
+    }
+}
+
+/// Shortest round-trip f32 formatting; non-finite becomes `null`.
+fn fmt_f32(v: f32) -> String {
+    if v.is_finite() { format!("{v}") } else { "null".into() }
+}
+
+/// Serialize one coordinator [`Response`] (plus the session id on the
+/// generate path).
+fn response_json(r: &Response, session: Option<u64>) -> String {
+    let mut s = String::with_capacity(64 + 12 * r.logits_t.len());
+    s.push('{');
+    if let Some(id) = session {
+        s.push_str(&format!("\"session\":{id},"));
+    }
+    s.push_str("\"logits\":[");
+    for (i, v) in r.logits_t.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&fmt_f32(*v));
+    }
+    s.push_str(&format!(
+        "],\"t_max\":{},\"classes\":{},\"t_exit\":{},\"queue_us\":{},\
+         \"e2e_us\":{},\"prediction\":{}}}",
+        r.t_max, r.classes, r.t_exit, r.queue_us, r.e2e_us, r.predict()));
+    s
+}
+
+fn err_json(msg: &str) -> String {
+    format!("{{\"error\":\"{}\"}}", escape(msg))
+}
+
+fn err_json_owned(msg: String) -> String {
+    err_json(&msg)
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+fn write_response<W: Write>(w: &mut W, status: u16, body: &str,
+                            keep_alive: bool) -> std::io::Result<()> {
+    write!(w, "HTTP/1.1 {status} {}\r\ncontent-type: application/json\
+               \r\ncontent-length: {}\r\n",
+           reason(status), body.len())?;
+    if status == 429 {
+        write!(w, "retry-after: 1\r\n")?;
+    }
+    if !keep_alive {
+        write!(w, "connection: close\r\n")?;
+    }
+    write!(w, "\r\n{body}")?;
+    w.flush()
+}
+
+/// Minimal blocking HTTP/1.1 client for tests and the CLI smoke driver:
+/// one request per connection (`Connection: close`); returns the status
+/// code and body.
+pub fn http_request(addr: SocketAddr, method: &str, path: &str,
+                    body: Option<&str>) -> Result<(u16, String)> {
+    let mut stream = TcpStream::connect(addr)
+        .with_context(|| format!("connect {addr}"))?;
+    let body = body.unwrap_or("");
+    write!(stream,
+           "{method} {path} HTTP/1.1\r\nhost: {addr}\r\nconnection: \
+            close\r\ncontent-length: {}\r\n\r\n{body}",
+           body.len())?;
+    stream.flush()?;
+    let mut reader = BufReader::new(stream);
+    let status_line = read_line_bounded(&mut reader, 8192)?
+        .ok_or_else(|| anyhow::anyhow!("empty response"))?;
+    let status_text = String::from_utf8_lossy(&status_line).into_owned();
+    let status: u16 = status_text
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| {
+            anyhow::anyhow!("bad status line: {status_text}")
+        })?;
+    let mut content_len: Option<usize> = None;
+    loop {
+        let header = read_line_bounded(&mut reader, 8192)?
+            .ok_or_else(|| anyhow::anyhow!("truncated response"))?;
+        if header.is_empty() {
+            break;
+        }
+        let text = String::from_utf8_lossy(&header).to_ascii_lowercase();
+        if let Some(v) = text.strip_prefix("content-length:") {
+            content_len = Some(v.trim().parse()?);
+        }
+    }
+    let body = match content_len {
+        Some(n) => {
+            let mut b = vec![0u8; n];
+            reader.read_exact(&mut b)?;
+            b
+        }
+        None => {
+            let mut b = Vec::new();
+            reader.read_to_end(&mut b)?;
+            b
+        }
+    };
+    Ok((status, String::from_utf8(body)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn parse(raw: &str) -> Parsed {
+        read_request(&mut Cursor::new(raw.as_bytes()), 1 << 20)
+    }
+
+    #[test]
+    fn parses_a_post_with_body() {
+        let raw = "POST /infer HTTP/1.1\r\nHost: x\r\n\
+                   Content-Length: 11\r\n\r\n{\"x\":[1,2]}";
+        match parse(raw) {
+            Parsed::Req(r) => {
+                assert_eq!(r.method, "POST");
+                assert_eq!(r.path, "/infer");
+                assert!(r.keep_alive, "HTTP/1.1 defaults to keep-alive");
+                assert_eq!(r.body, b"{\"x\":[1,2]}");
+            }
+            _ => panic!("expected a parsed request"),
+        }
+    }
+
+    #[test]
+    fn keep_alive_follows_version_and_connection_header() {
+        match parse("GET /metrics HTTP/1.0\r\n\r\n") {
+            Parsed::Req(r) => assert!(!r.keep_alive),
+            _ => panic!("1.0 request must parse"),
+        }
+        match parse("GET /metrics HTTP/1.1\r\nConnection: close\r\n\r\n") {
+            Parsed::Req(r) => assert!(!r.keep_alive),
+            _ => panic!("request must parse"),
+        }
+        match parse("GET /m HTTP/1.0\r\nConnection: keep-alive\r\n\r\n") {
+            Parsed::Req(r) => assert!(r.keep_alive),
+            _ => panic!("request must parse"),
+        }
+    }
+
+    #[test]
+    fn missing_content_length_means_empty_body() {
+        match parse("GET /healthz HTTP/1.1\r\n\r\n") {
+            Parsed::Req(r) => assert!(r.body.is_empty()),
+            _ => panic!("expected a parsed request"),
+        }
+    }
+
+    #[test]
+    fn pipelined_requests_parse_sequentially() {
+        let raw = "GET /healthz HTTP/1.1\r\n\r\n\
+                   POST /infer HTTP/1.1\r\nContent-Length: 2\r\n\r\n{}";
+        let mut cur = Cursor::new(raw.as_bytes());
+        match read_request(&mut cur, 1 << 20) {
+            Parsed::Req(r) => assert_eq!(r.path, "/healthz"),
+            _ => panic!("first request"),
+        }
+        match read_request(&mut cur, 1 << 20) {
+            Parsed::Req(r) => {
+                assert_eq!(r.path, "/infer");
+                assert_eq!(r.body, b"{}");
+            }
+            _ => panic!("second request"),
+        }
+        match read_request(&mut cur, 1 << 20) {
+            Parsed::Eof => {}
+            _ => panic!("clean EOF after the stream drains"),
+        }
+    }
+
+    #[test]
+    fn protocol_violations_map_to_statuses() {
+        match parse("NONSENSE\r\n\r\n") {
+            Parsed::Bad(400, _) => {}
+            _ => panic!("bad request line -> 400"),
+        }
+        match parse("GET / SPDY/3\r\n\r\n") {
+            Parsed::Bad(400, _) => {}
+            _ => panic!("unsupported protocol -> 400"),
+        }
+        match parse("POST /infer HTTP/1.1\r\nContent-Length: nope\r\n\r\n")
+        {
+            Parsed::Bad(400, _) => {}
+            _ => panic!("bad content-length -> 400"),
+        }
+        let big = format!(
+            "POST /infer HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+            (1 << 20) + 1);
+        match parse(&big) {
+            Parsed::Bad(413, _) => {}
+            _ => panic!("oversized body -> 413"),
+        }
+    }
+
+    #[test]
+    fn truncated_body_is_eof_not_a_request() {
+        match parse("POST /infer HTTP/1.1\r\nContent-Length: 10\r\n\r\n{}")
+        {
+            Parsed::Eof => {}
+            _ => panic!("short body must not produce a request"),
+        }
+    }
+
+    #[test]
+    fn f32_serialization_round_trips_bit_exactly() {
+        for v in [0.1f32, -3.75, 1e-8, 123456.78, f32::MIN_POSITIVE,
+                  -0.0, 7.0e20]
+        {
+            let parsed =
+                Json::parse(&fmt_f32(v)).unwrap().as_f64().unwrap() as f32;
+            assert_eq!(parsed.to_bits(), v.to_bits(), "{v}");
+        }
+        assert_eq!(fmt_f32(f32::NAN), "null");
+        assert_eq!(fmt_f32(f32::INFINITY), "null");
+    }
+
+    #[test]
+    fn response_json_is_valid_and_carries_prediction() {
+        let r = Response {
+            logits_t: vec![0.5, 2.5, 1.0, 0.25],
+            t_max: 2,
+            classes: 2,
+            t_exit: 2,
+            queue_us: 3,
+            e2e_us: 9,
+        };
+        let j = Json::parse(&response_json(&r, Some(42))).unwrap();
+        assert_eq!(j.get("session").and_then(Json::as_usize), Some(42));
+        assert_eq!(j.get("t_exit").and_then(Json::as_usize), Some(2));
+        let logits = j.get("logits").and_then(Json::as_arr).unwrap();
+        assert_eq!(logits.len(), 4);
+        assert_eq!(logits[1].as_f64(), Some(2.5));
+        // Cumulative logits: class 0 = 1.5, class 1 = 2.75.
+        assert_eq!(j.get("prediction").and_then(Json::as_usize), Some(1));
+        // The infer path carries no session field.
+        let j2 = Json::parse(&response_json(&r, None)).unwrap();
+        assert!(j2.get("session").is_none());
+    }
+
+    #[test]
+    fn err_json_escapes_payloads() {
+        let j = Json::parse(&err_json("he said \"no\"\n")).unwrap();
+        assert_eq!(j.get("error").and_then(Json::as_str),
+                   Some("he said \"no\"\n"));
+    }
+
+    #[test]
+    fn write_response_emits_content_length_and_retry_after() {
+        let mut out = Vec::new();
+        write_response(&mut out, 429, "{}", true).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"),
+                "{text}");
+        assert!(text.contains("content-length: 2\r\n"), "{text}");
+        assert!(text.contains("retry-after: 1\r\n"), "{text}");
+        assert!(text.ends_with("\r\n\r\n{}"), "{text}");
+        let mut out = Vec::new();
+        write_response(&mut out, 200, "{}", false).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.contains("connection: close\r\n"), "{text}");
+    }
+}

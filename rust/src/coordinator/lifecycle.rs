@@ -1,0 +1,594 @@
+//! Shard lifecycle: the state machine behind elastic shard management.
+//!
+//! Every backend shard moves through a small, explicit state machine:
+//!
+//! ```text
+//!   Starting ──► Serving ──► Draining ──► Retired ──► (slot reusable)
+//!       │           │            │
+//!       └───────────┴────────────┴──────► Dead
+//! ```
+//!
+//! * **Starting** — the replica's executor thread is being spawned; no
+//!   work is routed to it yet.
+//! * **Serving** — the steady state: the shard takes new batches and may
+//!   accept new generation-session bindings.
+//! * **Draining** — the shard takes no *new* batches and no *new*
+//!   sessions, but keeps executing everything already queued to it and
+//!   keeps serving tokens of generation sessions still pinned to it
+//!   (their spike-state cache lives in its backend). Entered by the
+//!   scale-down policy or an explicit [`super::Server::drain_shard`].
+//! * **Retired** — a drained shard whose queue emptied and whose last
+//!   pinned session closed: its executor exits cleanly and the slot can
+//!   be reused by a later scale-up.
+//! * **Dead** — the executor thread panicked mid-run. Terminal: the
+//!   PR 5 dead-shard re-routing is exactly the `Serving → Dead`
+//!   transition (sessions evicted, queued batches bounced to
+//!   survivors).
+//!
+//! The scaling policy is deliberately event-driven and deterministic:
+//! the router observes shard load at every batch dispatch (no timers,
+//! no background threads), counts *consecutive* pressure / idle
+//! observations, and acts once a streak crosses the configured
+//! threshold. That makes lifecycle transitions reproducible in tests —
+//! submit K requests, get the same transitions every time — while still
+//! tracking sustained load in production, where dispatches happen
+//! continuously.
+
+use std::cmp::Reverse;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::SyncSender;
+use std::sync::Arc;
+
+use super::metrics::Metrics;
+use super::ShardMsg;
+
+/// Lifecycle state of one backend shard (see the module docs for the
+/// transition diagram).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ShardState {
+    /// Executor thread being spawned; not routable yet.
+    Starting,
+    /// Steady state: takes new batches and new session bindings.
+    #[default]
+    Serving,
+    /// No new work; in-flight batches and pinned sessions finish here.
+    Draining,
+    /// Drained to empty and cleanly shut down; the slot is reusable.
+    Retired,
+    /// Executor panicked; terminal (sessions evicted, batches bounced).
+    Dead,
+}
+
+impl ShardState {
+    /// Short lowercase label used in metrics output and JSON.
+    pub fn label(&self) -> &'static str {
+        match self {
+            ShardState::Starting => "starting",
+            ShardState::Serving => "serving",
+            ShardState::Draining => "draining",
+            ShardState::Retired => "retired",
+            ShardState::Dead => "dead",
+        }
+    }
+
+    /// Whether the state machine permits a `self -> to` transition.
+    ///
+    /// `Retired -> Starting` is the slot-reuse edge (a later scale-up
+    /// respawns a retired slot); `Dead` and every other pair is
+    /// terminal or invalid.
+    pub fn can_transition(&self, to: ShardState) -> bool {
+        use ShardState::*;
+        matches!(
+            (self, to),
+            (Starting, Serving)
+                | (Starting, Dead)
+                | (Serving, Draining)
+                | (Serving, Dead)
+                | (Draining, Retired)
+                | (Draining, Dead)
+                | (Retired, Starting)
+        )
+    }
+}
+
+/// Elastic shard-scaling configuration.
+///
+/// The router observes shard load once per batch dispatch. A
+/// **pressure** observation is "every serving shard already has work in
+/// flight" (the new batch must queue behind a busy executor); an
+/// **idle** observation is "at least two serving shards are completely
+/// idle" (the fleet is over-provisioned for the offered load). Streaks
+/// of consecutive observations — not instantaneous readings — trigger
+/// scaling, so a single burst or a single quiet dispatch never flaps
+/// the fleet.
+#[derive(Debug, Clone)]
+pub struct ElasticConfig {
+    /// Never drain below this many serving shards.
+    pub min_shards: usize,
+    /// Never spawn beyond this many live (starting/serving/draining)
+    /// shards.
+    pub max_shards: usize,
+    /// Replicas to spawn at startup (clamped into `min..=max`).
+    pub initial_shards: usize,
+    /// Consecutive pressure observations before spawning a replica.
+    pub scale_up_after: u32,
+    /// Consecutive idle observations before draining a replica.
+    pub scale_down_after: u32,
+}
+
+impl Default for ElasticConfig {
+    fn default() -> Self {
+        ElasticConfig {
+            min_shards: 1,
+            max_shards: 4,
+            initial_shards: 1,
+            scale_up_after: 4,
+            scale_down_after: 64,
+        }
+    }
+}
+
+impl ElasticConfig {
+    /// Clamp the fields into a consistent shape (`max >= min >= 1`,
+    /// `initial` within `min..=max`).
+    pub fn normalized(&self) -> ElasticConfig {
+        let min = self.min_shards.max(1);
+        let max = self.max_shards.max(min);
+        ElasticConfig {
+            min_shards: min,
+            max_shards: max,
+            initial_shards: self.initial_shards.clamp(min, max),
+            scale_up_after: self.scale_up_after.max(1),
+            scale_down_after: self.scale_down_after.max(1),
+        }
+    }
+}
+
+/// Spawns shard `i`'s executor thread and returns its work queue.
+pub(crate) type Spawner =
+    Box<dyn FnMut(usize) -> SyncSender<ShardMsg> + Send>;
+
+/// One shard slot the router routes through.
+struct Slot {
+    /// Work queue into the executor; `None` once retired/dead (dropping
+    /// the sender closes the queue, so a draining executor exits after
+    /// finishing what it already holds).
+    tx: Option<SyncSender<ShardMsg>>,
+    state: ShardState,
+    /// Generation sessions currently pinned to this shard (maintained
+    /// by the router; retirement requires it to reach zero).
+    sessions: usize,
+}
+
+/// The router's view of the shard fleet: slots + states + the scaling
+/// streak counters. Owned by the router thread; per-shard load lives in
+/// the shared `inflight` atomics so executors can decrement it.
+pub(crate) struct ShardSet {
+    slots: Vec<Slot>,
+    inflight: Arc<Vec<AtomicUsize>>,
+    metrics: Arc<Metrics>,
+    /// `None` in fixed mode (`Server::start_sharded`): no scaling.
+    spawner: Option<Spawner>,
+    elastic: ElasticConfig,
+    pressure_streak: u32,
+    idle_streak: u32,
+}
+
+impl ShardSet {
+    /// Fixed fleet: the PR 5 contract — a static set of shards, no
+    /// scaling, dead shards parked forever.
+    pub(crate) fn fixed(
+        txs: Vec<SyncSender<ShardMsg>>,
+        inflight: Arc<Vec<AtomicUsize>>,
+        metrics: Arc<Metrics>,
+    ) -> ShardSet {
+        let slots = txs
+            .into_iter()
+            .map(|tx| Slot {
+                tx: Some(tx),
+                state: ShardState::Serving,
+                sessions: 0,
+            })
+            .collect();
+        ShardSet {
+            slots,
+            inflight,
+            metrics,
+            spawner: None,
+            elastic: ElasticConfig::default(),
+            pressure_streak: 0,
+            idle_streak: 0,
+        }
+    }
+
+    /// Elastic fleet: spawn `initial_shards` replicas now, scale within
+    /// `min..=max` on sustained pressure / idle streaks.
+    pub(crate) fn elastic(
+        spawner: Spawner,
+        elastic: ElasticConfig,
+        inflight: Arc<Vec<AtomicUsize>>,
+        metrics: Arc<Metrics>,
+    ) -> ShardSet {
+        let elastic = elastic.normalized();
+        let mut set = ShardSet {
+            slots: Vec::new(),
+            inflight,
+            metrics,
+            spawner: Some(spawner),
+            elastic: elastic.clone(),
+            pressure_streak: 0,
+            idle_streak: 0,
+        };
+        for _ in 0..elastic.initial_shards {
+            set.spawn_shard();
+        }
+        set
+    }
+
+    #[cfg(test)]
+    pub(crate) fn state(&self, shard: usize) -> ShardState {
+        self.slots[shard].state
+    }
+
+    pub(crate) fn tx(&self, shard: usize) -> Option<&SyncSender<ShardMsg>> {
+        self.slots[shard].tx.as_ref()
+    }
+
+    pub(crate) fn load(&self, shard: usize) -> usize {
+        self.inflight[shard].load(Ordering::SeqCst)
+    }
+
+    pub(crate) fn add_inflight(&self, shard: usize) {
+        self.inflight[shard].fetch_add(1, Ordering::SeqCst);
+    }
+
+    fn set_state(&mut self, shard: usize, to: ShardState) {
+        let from = self.slots[shard].state;
+        debug_assert!(
+            from.can_transition(to),
+            "invalid shard transition {from:?} -> {to:?}"
+        );
+        self.slots[shard].state = to;
+        self.metrics.record_state(shard, to);
+    }
+
+    /// Serving shards only.
+    fn serving(&self) -> impl Iterator<Item = usize> + '_ {
+        (0..self.slots.len())
+            .filter(|&i| self.slots[i].state == ShardState::Serving)
+    }
+
+    #[cfg(test)]
+    pub(crate) fn serving_count(&self) -> usize {
+        self.serving().count()
+    }
+
+    /// Shards that currently hold an executor thread (the scale-up cap
+    /// counts draining shards too — they still burn a replica).
+    fn live_count(&self) -> usize {
+        self.slots
+            .iter()
+            .filter(|s| {
+                matches!(
+                    s.state,
+                    ShardState::Starting
+                        | ShardState::Serving
+                        | ShardState::Draining
+                )
+            })
+            .count()
+    }
+
+    /// Pick the least-loaded *serving* shard; ties resolve round-robin
+    /// starting at `rr` (so idle shards alternate deterministically —
+    /// the PR 5 routing contract, now restricted to routable states).
+    /// `None` when no shard is serving.
+    pub(crate) fn pick(&self, rr: &mut usize) -> Option<usize> {
+        let n = self.slots.len();
+        if n == 0 {
+            return None;
+        }
+        let mut best: Option<(usize, usize)> = None;
+        for k in 0..n {
+            let i = (*rr + k) % n;
+            if self.slots[i].state != ShardState::Serving {
+                continue;
+            }
+            let load = self.load(i);
+            if best.map(|(_, bl)| load < bl).unwrap_or(true) {
+                best = Some((i, load));
+            }
+        }
+        let (i, _) = best?;
+        *rr = (i + 1) % n;
+        Some(i)
+    }
+
+    /// Whether a generation token may still be routed to its pinned
+    /// shard: serving, or draining (sticky sessions survive a drain —
+    /// their cached state lives there until they close).
+    pub(crate) fn token_routable(&self, shard: usize) -> bool {
+        matches!(
+            self.slots[shard].state,
+            ShardState::Serving | ShardState::Draining
+        )
+    }
+
+    pub(crate) fn bind_session(&mut self, shard: usize) {
+        self.slots[shard].sessions += 1;
+    }
+
+    pub(crate) fn unbind_session(&mut self, shard: usize) {
+        self.slots[shard].sessions =
+            self.slots[shard].sessions.saturating_sub(1);
+    }
+
+    /// One load observation per batch dispatch: update the pressure /
+    /// idle streaks and act when one crosses its threshold. No-op in
+    /// fixed mode.
+    pub(crate) fn observe_and_scale(&mut self) {
+        if self.spawner.is_none() {
+            return;
+        }
+        let serving: Vec<usize> = self.serving().collect();
+        if serving.is_empty() {
+            return;
+        }
+        let idle = serving.iter().filter(|&&i| self.load(i) == 0).count();
+        if idle == 0 {
+            // Every serving shard is busy: this batch queues behind one.
+            self.pressure_streak += 1;
+            self.idle_streak = 0;
+        } else if idle >= 2 {
+            // More than one idle replica: over-provisioned.
+            self.idle_streak += 1;
+            self.pressure_streak = 0;
+        } else {
+            self.pressure_streak = 0;
+            self.idle_streak = 0;
+        }
+        if self.pressure_streak >= self.elastic.scale_up_after
+            && self.live_count() < self.elastic.max_shards
+        {
+            self.spawn_shard();
+            self.pressure_streak = 0;
+        }
+        if self.idle_streak >= self.elastic.scale_down_after
+            && serving.len() > self.elastic.min_shards
+        {
+            self.begin_policy_drain();
+            self.idle_streak = 0;
+        }
+    }
+
+    /// Spawn a replica into a reusable retired slot, or a fresh slot if
+    /// capacity (the preallocated inflight counters) allows.
+    fn spawn_shard(&mut self) {
+        let idx = self
+            .slots
+            .iter()
+            .position(|s| s.state == ShardState::Retired)
+            .or_else(|| {
+                (self.slots.len() < self.inflight.len())
+                    .then_some(self.slots.len())
+            });
+        let Some(i) = idx else {
+            eprintln!(
+                "coordinator: shard capacity exhausted ({} slots); \
+                 not scaling up",
+                self.slots.len()
+            );
+            return;
+        };
+        self.metrics.ensure_shard(i);
+        if i == self.slots.len() {
+            self.slots.push(Slot {
+                tx: None,
+                state: ShardState::Starting,
+                sessions: 0,
+            });
+            self.metrics.record_state(i, ShardState::Starting);
+        } else {
+            self.set_state(i, ShardState::Starting);
+        }
+        self.inflight[i].store(0, Ordering::SeqCst);
+        let tx = (self.spawner.as_mut().expect("elastic mode"))(i);
+        self.slots[i].tx = Some(tx);
+        self.set_state(i, ShardState::Serving);
+        self.metrics.record_spawn();
+    }
+
+    /// Scale-down victim: the serving shard with the fewest pinned
+    /// sessions (preferring zero, so sticky streams are never
+    /// disturbed), highest index on ties (the most recently spawned
+    /// replica retires first).
+    fn begin_policy_drain(&mut self) {
+        let victim = self
+            .serving()
+            .min_by_key(|&i| (self.slots[i].sessions, Reverse(i)));
+        if let Some(i) = victim {
+            self.begin_drain(i);
+        }
+    }
+
+    /// Move `shard` to Draining (no-op unless it is Serving). New
+    /// batches and new sessions stop routing to it; queued work and
+    /// already-pinned sessions keep executing there.
+    pub(crate) fn begin_drain(&mut self, shard: usize) {
+        if shard < self.slots.len()
+            && self.slots[shard].state == ShardState::Serving
+        {
+            self.set_state(shard, ShardState::Draining);
+            self.metrics.record_drain();
+        }
+    }
+
+    /// Retire every drained shard that has emptied: no work in flight
+    /// and no pinned sessions left. Dropping the sender closes its
+    /// queue, so the executor thread exits once it finishes draining.
+    pub(crate) fn maybe_retire(&mut self) {
+        for i in 0..self.slots.len() {
+            if self.slots[i].state == ShardState::Draining
+                && self.load(i) == 0
+                && self.slots[i].sessions == 0
+            {
+                self.slots[i].tx = None;
+                self.set_state(i, ShardState::Retired);
+                self.metrics.record_retire();
+            }
+        }
+    }
+
+    /// Park a dead shard (executor thread gone) and evict every
+    /// generation session pinned to it: the sessions' cached decode
+    /// state died with the executor, so their future tokens must fail
+    /// loudly instead of silently restarting the stream on another
+    /// shard.
+    pub(crate) fn mark_dead(
+        &mut self,
+        shard: usize,
+        sessions: &mut HashMap<u64, usize>,
+    ) {
+        self.slots[shard].tx = None;
+        self.slots[shard].sessions = 0;
+        // Dead is reachable from every live state.
+        self.slots[shard].state = ShardState::Dead;
+        self.metrics.record_state(shard, ShardState::Dead);
+        let before = sessions.len();
+        sessions.retain(|_, s| *s != shard);
+        let evicted = before - sessions.len();
+        if evicted > 0 {
+            eprintln!(
+                "coordinator: evicted {evicted} generation session(s) \
+                 pinned to dead shard {shard}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    fn fixed_set(n: usize) -> ShardSet {
+        let txs = (0..n)
+            .map(|_| mpsc::sync_channel::<ShardMsg>(1).0)
+            .collect();
+        let inflight =
+            Arc::new((0..n).map(|_| AtomicUsize::new(0)).collect());
+        ShardSet::fixed(txs, inflight, Arc::new(Metrics::new(n)))
+    }
+
+    #[test]
+    fn transition_matrix_matches_the_machine() {
+        use ShardState::*;
+        let all = [Starting, Serving, Draining, Retired, Dead];
+        let legal = [
+            (Starting, Serving),
+            (Starting, Dead),
+            (Serving, Draining),
+            (Serving, Dead),
+            (Draining, Retired),
+            (Draining, Dead),
+            (Retired, Starting),
+        ];
+        for from in all {
+            for to in all {
+                let want = legal.contains(&(from, to));
+                assert_eq!(
+                    from.can_transition(to),
+                    want,
+                    "{from:?} -> {to:?}"
+                );
+            }
+        }
+        assert_eq!(Serving.label(), "serving");
+        assert_eq!(ShardState::default(), Serving);
+    }
+
+    #[test]
+    fn normalized_clamps_into_shape() {
+        let e = ElasticConfig {
+            min_shards: 0,
+            max_shards: 0,
+            initial_shards: 9,
+            scale_up_after: 0,
+            scale_down_after: 0,
+        }
+        .normalized();
+        assert_eq!((e.min_shards, e.max_shards, e.initial_shards), (1, 1, 1));
+        assert!(e.scale_up_after >= 1 && e.scale_down_after >= 1);
+    }
+
+    #[test]
+    fn pick_alternates_idle_shards_and_prefers_light_load() {
+        let set = fixed_set(3);
+        let mut rr = 0;
+        // All idle: deterministic round-robin.
+        assert_eq!(set.pick(&mut rr), Some(0));
+        assert_eq!(set.pick(&mut rr), Some(1));
+        assert_eq!(set.pick(&mut rr), Some(2));
+        assert_eq!(set.pick(&mut rr), Some(0));
+        // Loaded shards lose to an idle one regardless of rotation.
+        set.inflight[1].store(2, Ordering::SeqCst);
+        set.inflight[2].store(1, Ordering::SeqCst);
+        assert_eq!(set.pick(&mut rr), Some(0));
+        set.inflight[0].store(3, Ordering::SeqCst);
+        assert_eq!(set.pick(&mut rr), Some(2));
+    }
+
+    #[test]
+    fn pick_skips_non_serving_states() {
+        let mut set = fixed_set(3);
+        let mut rr = 0;
+        set.begin_drain(1);
+        assert_eq!(set.state(1), ShardState::Draining);
+        // Draining shards take no new batches...
+        assert_eq!(set.pick(&mut rr), Some(0));
+        assert_eq!(set.pick(&mut rr), Some(2));
+        assert_eq!(set.pick(&mut rr), Some(0));
+        // ...but still accept their pinned sessions' tokens.
+        assert!(set.token_routable(1));
+        let mut sessions = HashMap::new();
+        set.mark_dead(0, &mut sessions);
+        set.mark_dead(2, &mut sessions);
+        assert_eq!(set.pick(&mut rr), None, "no serving shard left");
+        assert!(!set.token_routable(0));
+    }
+
+    #[test]
+    fn mark_dead_evicts_only_its_sessions() {
+        let mut set = fixed_set(2);
+        let mut sessions = HashMap::new();
+        sessions.insert(1u64, 0usize);
+        sessions.insert(2u64, 1usize);
+        sessions.insert(3u64, 0usize);
+        set.bind_session(0);
+        set.bind_session(0);
+        set.bind_session(1);
+        set.mark_dead(0, &mut sessions);
+        assert_eq!(set.state(0), ShardState::Dead);
+        assert_eq!(sessions.len(), 1);
+        assert_eq!(sessions.get(&2), Some(&1));
+    }
+
+    #[test]
+    fn drain_retires_only_when_empty() {
+        let mut set = fixed_set(2);
+        set.begin_drain(1);
+        set.add_inflight(1);
+        set.bind_session(1);
+        set.maybe_retire();
+        assert_eq!(set.state(1), ShardState::Draining, "work in flight");
+        set.inflight[1].store(0, Ordering::SeqCst);
+        set.maybe_retire();
+        assert_eq!(set.state(1), ShardState::Draining, "session pinned");
+        set.unbind_session(1);
+        set.maybe_retire();
+        assert_eq!(set.state(1), ShardState::Retired);
+        assert!(set.tx(1).is_none(), "retired queue must be closed");
+        assert_eq!(set.serving_count(), 1);
+    }
+}

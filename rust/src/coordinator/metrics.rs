@@ -1,17 +1,30 @@
 //! Serving metrics: throughput, latency distribution, batch occupancy —
 //! aggregated across the server plus per-shard execution counters.
 //!
-//! The latency reservoir is global and bounded: percentiles are exact
-//! over the most recent `RESERVOIR` (65 536) completions, kept in a
-//! sliding ring buffer so memory stays constant under long uptimes;
-//! `completed`/`failed`/batch occupancy are also
-//! tracked per shard so the sharded router's balance and per-shard
-//! failures stay observable. [`Metrics::snapshot`] returns the merged
-//! view with the per-shard breakdown attached; per-shard counts always
-//! sum to the totals.
+//! Latency reservoirs are bounded: the merged percentiles are exact over
+//! the most recent `RESERVOIR` (65 536) completions, and every shard
+//! additionally keeps its *own* sliding window of `SHARD_RESERVOIR`
+//! (8 192) samples so the per-shard p50/p99 columns are truthful even
+//! when shards see disjoint latency distributions (a draining shard, a
+//! cold replica). `completed`/`failed`/batch occupancy are also tracked
+//! per shard so the sharded router's balance and per-shard failures stay
+//! observable, alongside each shard's lifecycle
+//! [`ShardState`]. [`Metrics::snapshot`] returns the merged view with
+//! the per-shard breakdown attached; per-shard counts always sum to the
+//! totals.
+//!
+//! The admission-control gauge (`outstanding`) counts requests admitted
+//! by a [`super::Client`] and not yet completed or failed; the HTTP
+//! front door sheds load (429, counted in `shed`) once it crosses the
+//! configured threshold. If a shard executor panics mid-run its batch's
+//! gauge entries are never decremented — the shard is marked dead and
+//! the stuck gauge conservatively keeps shedding, which is the safe
+//! failure mode.
 
 use std::sync::Mutex;
 use std::time::Instant;
+
+use super::lifecycle::ShardState;
 
 /// Lock-protected metrics sink shared by the router, shard executors and
 /// reporters.
@@ -19,6 +32,8 @@ use std::time::Instant;
 pub struct Metrics {
     inner: Mutex<Inner>,
     started: Instant,
+    /// End-to-end latency SLO in microseconds; 0 disables SLO counting.
+    slo_us: u64,
 }
 
 #[derive(Debug, Default)]
@@ -27,25 +42,40 @@ struct Inner {
     batches: u64,
     batched_samples: u64,
     /// End-to-end latencies in microseconds (sliding ring buffer of the
-    /// most recent [`RESERVOIR`] completions; see `sample_cursor`).
+    /// most recent `RESERVOIR` completions; see `sample_cursor`).
     latencies_us: Vec<u64>,
     queue_waits_us: Vec<u64>,
     /// Next ring-buffer slot once the reservoir is full. Both sample vecs
     /// advance in lockstep, so one cursor serves both.
     sample_cursor: usize,
     rejected: u64,
+    /// Submissions shed by the HTTP front door's admission control.
+    shed: u64,
+    /// Requests admitted and not yet completed/failed (admission gauge).
+    outstanding: u64,
     /// Requests lost to backend execution failures.
     failed: u64,
+    /// Completions whose end-to-end latency exceeded the SLO.
+    slo_violations: u64,
+    /// Lifecycle events across the fleet (elastic mode).
+    spawned: u64,
+    drained: u64,
+    retired: u64,
     /// Per-shard execution counters (index == shard).
     shards: Vec<ShardCounters>,
 }
 
 #[derive(Debug, Default, Clone)]
 struct ShardCounters {
+    state: ShardState,
     completed: u64,
     failed: u64,
     batches: u64,
     batched_samples: u64,
+    /// Per-shard end-to-end latency ring (`SHARD_RESERVOIR` samples).
+    lat_us: Vec<u64>,
+    lat_cursor: usize,
+    slo_violations: u64,
     /// Realized-timestep accounting for dynamic-timestep early exit:
     /// sum/count of per-request `t_exit` values plus a bucketed
     /// histogram ([`T_EXIT_BUCKETS`]).
@@ -55,6 +85,9 @@ struct ShardCounters {
 }
 
 const RESERVOIR: usize = 65536;
+/// Per-shard latency window: smaller than the merged reservoir because a
+/// fleet can hold many shards, but still plenty for stable p99s.
+const SHARD_RESERVOIR: usize = 8192;
 
 /// Histogram bucket labels for realized-timestep counts: exact 1..4,
 /// then coarsening ranges (spike encodings rarely exceed a few tens of
@@ -76,6 +109,14 @@ fn t_exit_bucket(t_exit: usize) -> usize {
     }
 }
 
+/// Exact percentile over a sorted sample window (0 when empty).
+fn percentile(sorted: &[u64], p: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    sorted[((sorted.len() - 1) as f64 * p) as usize]
+}
+
 impl Default for Metrics {
     fn default() -> Self {
         Metrics::new(1)
@@ -83,19 +124,97 @@ impl Default for Metrics {
 }
 
 impl Metrics {
-    /// Metrics for a server with `n_shards` backend shards (>= 1).
+    /// Metrics for a server with `n_shards` backend shards (>= 1), no
+    /// SLO tracking.
     pub fn new(n_shards: usize) -> Metrics {
+        Metrics::with_slo(n_shards, 0)
+    }
+
+    /// Metrics with an end-to-end latency SLO: completions slower than
+    /// `slo_us` microseconds count as violations (globally and per
+    /// shard). `slo_us == 0` disables SLO counting.
+    pub fn with_slo(n_shards: usize, slo_us: u64) -> Metrics {
         let inner = Inner {
             shards: vec![ShardCounters::default(); n_shards.max(1)],
             ..Inner::default()
         };
-        Metrics { inner: Mutex::new(inner), started: Instant::now() }
+        Metrics { inner: Mutex::new(inner), started: Instant::now(), slo_us }
     }
 
+    /// Number of shard slots currently tracked.
     pub fn n_shards(&self) -> usize {
         self.inner.lock().unwrap().shards.len()
     }
 
+    /// The configured latency SLO in microseconds (0 = disabled).
+    pub fn slo_us(&self) -> u64 {
+        self.slo_us
+    }
+
+    /// Grow the per-shard table to cover shard index `shard` (elastic
+    /// scale-up spawns shards past the initial count).
+    pub fn ensure_shard(&self, shard: usize) {
+        let mut m = self.inner.lock().unwrap();
+        while m.shards.len() <= shard {
+            m.shards.push(ShardCounters::default());
+        }
+    }
+
+    /// Record a lifecycle transition of `shard` to `state`.
+    pub fn record_state(&self, shard: usize, state: ShardState) {
+        self.inner.lock().unwrap().shards[shard].state = state;
+    }
+
+    /// Current lifecycle state of `shard`.
+    pub fn shard_state(&self, shard: usize) -> ShardState {
+        self.inner.lock().unwrap().shards[shard].state
+    }
+
+    /// Number of shards currently in the Serving state.
+    pub fn serving_shards(&self) -> usize {
+        self.inner
+            .lock()
+            .unwrap()
+            .shards
+            .iter()
+            .filter(|s| s.state == ShardState::Serving)
+            .count()
+    }
+
+    /// Count one replica spawn (elastic scale-up or initial spawn).
+    pub fn record_spawn(&self) {
+        self.inner.lock().unwrap().spawned += 1;
+    }
+
+    /// Count one drain initiation (scale-down or explicit).
+    pub fn record_drain(&self) {
+        self.inner.lock().unwrap().drained += 1;
+    }
+
+    /// Count one completed retirement (drained shard emptied).
+    pub fn record_retire(&self) {
+        self.inner.lock().unwrap().retired += 1;
+    }
+
+    /// Count one admitted request (raises the `outstanding` gauge;
+    /// lowered again by [`Self::record_done`]/[`Self::record_failed`]).
+    pub fn record_admitted(&self) {
+        self.inner.lock().unwrap().outstanding += 1;
+    }
+
+    /// The admission gauge: requests admitted and not yet resolved.
+    pub fn outstanding(&self) -> u64 {
+        self.inner.lock().unwrap().outstanding
+    }
+
+    /// Count one submission shed by the front door's admission control
+    /// (HTTP 429 — distinct from `rejected`, the in-process queue-full
+    /// signal).
+    pub fn record_shed(&self) {
+        self.inner.lock().unwrap().shed += 1;
+    }
+
+    /// Record one executed batch of `batch_size` requests on `shard`.
     pub fn record_batch(&self, shard: usize, batch_size: usize) {
         let mut m = self.inner.lock().unwrap();
         m.batches += 1;
@@ -104,10 +223,18 @@ impl Metrics {
         m.shards[shard].batched_samples += batch_size as u64;
     }
 
+    /// Record one completed request on `shard` with its end-to-end and
+    /// queue-wait latencies (lowers the admission gauge; feeds the
+    /// global and per-shard latency windows and the SLO counters).
     pub fn record_done(&self, shard: usize, e2e_us: u64, queue_us: u64) {
+        let slo_us = self.slo_us;
         let mut m = self.inner.lock().unwrap();
         m.completed += 1;
-        m.shards[shard].completed += 1;
+        m.outstanding = m.outstanding.saturating_sub(1);
+        if slo_us > 0 && e2e_us > slo_us {
+            m.slo_violations += 1;
+            m.shards[shard].slo_violations += 1;
+        }
         if m.latencies_us.len() < RESERVOIR {
             m.latencies_us.push(e2e_us);
             m.queue_waits_us.push(queue_us);
@@ -120,6 +247,14 @@ impl Metrics {
             m.latencies_us[c] = e2e_us;
             m.queue_waits_us[c] = queue_us;
             m.sample_cursor = (c + 1) % RESERVOIR;
+        }
+        let s = &mut m.shards[shard];
+        s.completed += 1;
+        if s.lat_us.len() < SHARD_RESERVOIR {
+            s.lat_us.push(e2e_us);
+        } else {
+            s.lat_us[s.lat_cursor] = e2e_us;
+            s.lat_cursor = (s.lat_cursor + 1) % SHARD_RESERVOIR;
         }
     }
 
@@ -145,32 +280,31 @@ impl Metrics {
     pub fn record_failed(&self, shard: usize, n: u64) {
         let mut m = self.inner.lock().unwrap();
         m.failed += n;
+        m.outstanding = m.outstanding.saturating_sub(n);
         m.shards[shard].failed += n;
     }
 
+    /// Take a consistent point-in-time view of every counter and the
+    /// latency percentiles.
     pub fn snapshot(&self) -> MetricsSnapshot {
         let m = self.inner.lock().unwrap();
         let mut lat = m.latencies_us.clone();
         lat.sort_unstable();
-        let pct = |p: f64| -> u64 {
-            if lat.is_empty() {
-                return 0;
-            }
-            lat[((lat.len() - 1) as f64 * p) as usize]
-        };
         let elapsed = self.started.elapsed().as_secs_f64();
         MetricsSnapshot {
             completed: m.completed,
             rejected: m.rejected,
+            shed: m.shed,
+            outstanding: m.outstanding,
             failed: m.failed,
             batches: m.batches,
             mean_batch: if m.batches == 0 { 0.0 } else {
                 m.batched_samples as f64 / m.batches as f64
             },
             throughput_rps: m.completed as f64 / elapsed.max(1e-9),
-            p50_us: pct(0.50),
-            p95_us: pct(0.95),
-            p99_us: pct(0.99),
+            p50_us: percentile(&lat, 0.50),
+            p95_us: percentile(&lat, 0.95),
+            p99_us: percentile(&lat, 0.99),
             mean_queue_us: if m.queue_waits_us.is_empty() { 0.0 } else {
                 m.queue_waits_us.iter().sum::<u64>() as f64
                     / m.queue_waits_us.len() as f64
@@ -180,20 +314,33 @@ impl Metrics {
                     |(s, c), sh| (s + sh.t_exit_sum, c + sh.t_exit_count));
                 if count == 0 { 0.0 } else { sum as f64 / count as f64 }
             },
+            slo_us: self.slo_us,
+            slo_violations: m.slo_violations,
+            spawned: m.spawned,
+            drained: m.drained,
+            retired: m.retired,
             per_shard: m
                 .shards
                 .iter()
-                .map(|s| ShardSnapshot {
-                    completed: s.completed,
-                    failed: s.failed,
-                    batches: s.batches,
-                    mean_batch: if s.batches == 0 { 0.0 } else {
-                        s.batched_samples as f64 / s.batches as f64
-                    },
-                    mean_t_exit: if s.t_exit_count == 0 { 0.0 } else {
-                        s.t_exit_sum as f64 / s.t_exit_count as f64
-                    },
-                    t_exit_hist: s.t_exit_hist,
+                .map(|s| {
+                    let mut sl = s.lat_us.clone();
+                    sl.sort_unstable();
+                    ShardSnapshot {
+                        state: s.state,
+                        completed: s.completed,
+                        failed: s.failed,
+                        batches: s.batches,
+                        mean_batch: if s.batches == 0 { 0.0 } else {
+                            s.batched_samples as f64 / s.batches as f64
+                        },
+                        p50_us: percentile(&sl, 0.50),
+                        p99_us: percentile(&sl, 0.99),
+                        slo_violations: s.slo_violations,
+                        mean_t_exit: if s.t_exit_count == 0 { 0.0 } else {
+                            s.t_exit_sum as f64 / s.t_exit_count as f64
+                        },
+                        t_exit_hist: s.t_exit_hist,
+                    }
                 })
                 .collect(),
         }
@@ -203,10 +350,23 @@ impl Metrics {
 /// One shard's execution counters inside a [`MetricsSnapshot`].
 #[derive(Debug, Clone, Default)]
 pub struct ShardSnapshot {
+    /// Lifecycle state at snapshot time.
+    pub state: ShardState,
+    /// Requests completed on this shard.
     pub completed: u64,
+    /// Requests lost to execution failures on this shard.
     pub failed: u64,
+    /// Batches executed on this shard.
     pub batches: u64,
+    /// Mean requests per executed batch on this shard.
     pub mean_batch: f64,
+    /// Median end-to-end latency over this shard's own sliding window
+    /// of up to 8 192 recent completions.
+    pub p50_us: u64,
+    /// p99 end-to-end latency over this shard's own window.
+    pub p99_us: u64,
+    /// Completions on this shard that exceeded the latency SLO.
+    pub slo_violations: u64,
     /// Mean realized timesteps per request on this shard (0 when no
     /// `t_exit` has been recorded yet).
     pub mean_t_exit: f64,
@@ -218,28 +378,99 @@ pub struct ShardSnapshot {
 ///
 /// Latency percentiles (`p50_us`/`p95_us`/`p99_us`) and `mean_queue_us`
 /// are computed over a bounded sliding window of the most recent
-/// 65 536 completions (the reservoir size), so the metrics sink uses
-/// constant memory regardless of server uptime. Counters (`completed`,
-/// `failed`, `batches`, ...) remain exact lifetime totals.
+/// 65 536 completions (the reservoir size) — per-shard percentiles over
+/// each shard's own window of 8 192 — so the metrics sink uses constant
+/// memory regardless of server uptime. Counters (`completed`, `failed`,
+/// `batches`, ...) remain exact lifetime totals.
 #[derive(Debug, Clone)]
 pub struct MetricsSnapshot {
+    /// Requests completed across all shards (lifetime total).
     pub completed: u64,
+    /// Submissions rejected by queue-full backpressure (`try_infer`).
     pub rejected: u64,
+    /// Submissions shed by HTTP admission control (429s).
+    pub shed: u64,
+    /// Admission gauge: requests admitted and not yet resolved.
+    pub outstanding: u64,
     /// Requests dropped by backend execution failures.
     pub failed: u64,
+    /// Batches executed across all shards.
     pub batches: u64,
+    /// Mean requests per executed batch (continuous-batching occupancy).
     pub mean_batch: f64,
+    /// Completions per second since server start.
     pub throughput_rps: f64,
+    /// Median end-to-end latency over the sliding sample window.
     pub p50_us: u64,
+    /// p95 end-to-end latency over the sliding sample window.
     pub p95_us: u64,
+    /// p99 end-to-end latency over the sliding sample window.
     pub p99_us: u64,
+    /// Mean queue wait (admission to execution start) over the window.
     pub mean_queue_us: f64,
     /// Mean realized timesteps per request across all shards — `t_max`
     /// when early exit is disabled; lower means the dynamic-timestep
     /// exit is saving encoding steps.
     pub mean_t_exit: f64,
+    /// Configured latency SLO in microseconds (0 = disabled).
+    pub slo_us: u64,
+    /// Completions slower than the SLO (0 when disabled).
+    pub slo_violations: u64,
+    /// Replica spawns performed by the elastic lifecycle (including the
+    /// initial fleet; 0 in fixed mode).
+    pub spawned: u64,
+    /// Drains initiated (scale-down policy or explicit).
+    pub drained: u64,
+    /// Retirements completed (drained shards that emptied).
+    pub retired: u64,
     /// Per-shard counters; entries sum to the merged totals.
     pub per_shard: Vec<ShardSnapshot>,
+}
+
+/// JSON-safe float: non-finite values (possible under extreme analog
+/// drift) become `null` instead of producing invalid JSON.
+fn json_f64(v: f64) -> String {
+    if v.is_finite() { format!("{v}") } else { "null".into() }
+}
+
+impl MetricsSnapshot {
+    /// Serialize the snapshot as a JSON object (the `/metrics` endpoint
+    /// body). Field names match the struct fields; per-shard entries
+    /// carry their lifecycle `state` label and per-shard percentiles.
+    pub fn to_json(&self) -> String {
+        let mut s = String::with_capacity(512);
+        s.push_str(&format!(
+            "{{\"completed\":{},\"rejected\":{},\"shed\":{},\
+             \"outstanding\":{},\"failed\":{},\"batches\":{},\
+             \"mean_batch\":{},\"throughput_rps\":{},\"p50_us\":{},\
+             \"p95_us\":{},\"p99_us\":{},\"mean_queue_us\":{},\
+             \"mean_t_exit\":{},\"slo_us\":{},\"slo_violations\":{},\
+             \"spawned\":{},\"drained\":{},\"retired\":{},\
+             \"per_shard\":[",
+            self.completed, self.rejected, self.shed, self.outstanding,
+            self.failed, self.batches, json_f64(self.mean_batch),
+            json_f64(self.throughput_rps), self.p50_us, self.p95_us,
+            self.p99_us, json_f64(self.mean_queue_us),
+            json_f64(self.mean_t_exit), self.slo_us, self.slo_violations,
+            self.spawned, self.drained, self.retired
+        ));
+        for (i, sh) in self.per_shard.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!(
+                "{{\"shard\":{},\"state\":\"{}\",\"completed\":{},\
+                 \"failed\":{},\"batches\":{},\"mean_batch\":{},\
+                 \"p50_us\":{},\"p99_us\":{},\"slo_violations\":{},\
+                 \"mean_t_exit\":{}}}",
+                i, sh.state.label(), sh.completed, sh.failed, sh.batches,
+                json_f64(sh.mean_batch), sh.p50_us, sh.p99_us,
+                sh.slo_violations, json_f64(sh.mean_t_exit)
+            ));
+        }
+        s.push_str("]}");
+        s
+    }
 }
 
 impl std::fmt::Display for MetricsSnapshot {
@@ -253,6 +484,17 @@ impl std::fmt::Display for MetricsSnapshot {
             self.mean_batch, self.throughput_rps, self.p50_us, self.p95_us,
             self.p99_us, self.mean_queue_us
         )?;
+        if self.shed > 0 || self.outstanding > 0 {
+            write!(f, " shed={} outstanding={}", self.shed,
+                   self.outstanding)?;
+        }
+        if self.slo_us > 0 {
+            write!(f, " slo_viol={}", self.slo_violations)?;
+        }
+        if self.spawned + self.drained + self.retired > 0 {
+            write!(f, " lifecycle[spawned:{} drained:{} retired:{}]",
+                   self.spawned, self.drained, self.retired)?;
+        }
         if self.mean_t_exit > 0.0 {
             write!(f, " t_exit={:.2}", self.mean_t_exit)?;
         }
@@ -262,6 +504,12 @@ impl std::fmt::Display for MetricsSnapshot {
                        "\n  shard{i}: done={} failed={} batches={} \
                         mean_batch={:.2}",
                        s.completed, s.failed, s.batches, s.mean_batch)?;
+                if s.state != ShardState::Serving {
+                    write!(f, " state={}", s.state.label())?;
+                }
+                if s.completed > 0 {
+                    write!(f, " p50={}us p99={}us", s.p50_us, s.p99_us)?;
+                }
                 if s.t_exit_hist.iter().any(|&c| c > 0) {
                     write!(f, " t_exit={:.2} hist[", s.mean_t_exit)?;
                     let mut sep = "";
@@ -284,6 +532,7 @@ impl std::fmt::Display for MetricsSnapshot {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::Json;
 
     #[test]
     fn percentiles_ordered() {
@@ -312,11 +561,13 @@ mod tests {
         let inner = m.inner.lock().unwrap();
         assert_eq!(inner.latencies_us.len(), RESERVOIR);
         assert_eq!(inner.queue_waits_us.len(), RESERVOIR);
+        assert_eq!(inner.shards[0].lat_us.len(), SHARD_RESERVOIR);
         drop(inner);
         let s = m.snapshot();
         assert_eq!(s.completed, 2 * RESERVOIR as u64);
         assert_eq!(s.p50_us, 5_000, "window should have slid");
         assert_eq!(s.p99_us, 5_000);
+        assert_eq!(s.per_shard[0].p99_us, 5_000, "shard window slid too");
         assert!((s.mean_queue_us - 50.0).abs() < 1e-9);
     }
 
@@ -367,6 +618,120 @@ mod tests {
         // The sharded display carries the per-shard lines.
         let text = s.to_string();
         assert!(text.contains("shard1: done=0 failed=7"), "{text}");
+    }
+
+    #[test]
+    fn per_shard_percentiles_are_disjoint_when_latencies_are() {
+        // The small-fix regression: the latency reservoir used to be
+        // shared across shards, so per-shard percentiles were impossible.
+        // Two shards with disjoint latency distributions must now report
+        // distinct p99s.
+        let m = Metrics::new(2);
+        for _ in 0..100 {
+            m.record_done(0, 1_000, 0);
+            m.record_done(1, 9_000, 0);
+        }
+        let s = m.snapshot();
+        assert_eq!(s.per_shard[0].p50_us, 1_000);
+        assert_eq!(s.per_shard[0].p99_us, 1_000);
+        assert_eq!(s.per_shard[1].p50_us, 9_000);
+        assert_eq!(s.per_shard[1].p99_us, 9_000);
+        // The merged window sees both populations.
+        assert_eq!(s.p50_us, 1_000);
+        assert_eq!(s.p99_us, 9_000);
+        let text = s.to_string();
+        assert!(text.contains("p99=1000us"), "{text}");
+        assert!(text.contains("p99=9000us"), "{text}");
+    }
+
+    #[test]
+    fn outstanding_gauge_tracks_admission_to_resolution() {
+        let m = Metrics::new(1);
+        assert_eq!(m.outstanding(), 0);
+        for _ in 0..5 {
+            m.record_admitted();
+        }
+        assert_eq!(m.outstanding(), 5);
+        m.record_done(0, 100, 10);
+        m.record_failed(0, 2);
+        assert_eq!(m.outstanding(), 2);
+        let s = m.snapshot();
+        assert_eq!(s.outstanding, 2);
+        // Saturating: resolutions without admissions never underflow
+        // (pre-existing tests call record_done directly).
+        m.record_failed(0, 99);
+        assert_eq!(m.outstanding(), 0);
+    }
+
+    #[test]
+    fn shed_and_lifecycle_counters_surface_in_display() {
+        let m = Metrics::new(1);
+        m.record_shed();
+        m.record_shed();
+        m.record_spawn();
+        m.record_drain();
+        m.record_retire();
+        let s = m.snapshot();
+        assert_eq!((s.shed, s.spawned, s.drained, s.retired), (2, 1, 1, 1));
+        let text = s.to_string();
+        assert!(text.contains("shed=2"), "{text}");
+        assert!(text.contains("lifecycle[spawned:1 drained:1 retired:1]"),
+                "{text}");
+    }
+
+    #[test]
+    fn slo_violations_counted_globally_and_per_shard() {
+        let m = Metrics::with_slo(2, 500);
+        assert_eq!(m.slo_us(), 500);
+        m.record_done(0, 100, 0); // within SLO
+        m.record_done(0, 501, 0); // violation
+        m.record_done(1, 9_000, 0); // violation
+        let s = m.snapshot();
+        assert_eq!(s.slo_violations, 2);
+        assert_eq!(s.per_shard[0].slo_violations, 1);
+        assert_eq!(s.per_shard[1].slo_violations, 1);
+        assert!(s.to_string().contains("slo_viol=2"));
+        // Disabled SLO counts nothing.
+        let off = Metrics::new(1);
+        off.record_done(0, u64::MAX / 2, 0);
+        assert_eq!(off.snapshot().slo_violations, 0);
+    }
+
+    #[test]
+    fn shard_table_grows_and_tracks_states() {
+        let m = Metrics::new(1);
+        m.ensure_shard(2);
+        assert_eq!(m.n_shards(), 3);
+        assert_eq!(m.shard_state(1), ShardState::Serving);
+        m.record_state(2, ShardState::Draining);
+        assert_eq!(m.shard_state(2), ShardState::Draining);
+        assert_eq!(m.serving_shards(), 2);
+        let s = m.snapshot();
+        assert_eq!(s.per_shard[2].state, ShardState::Draining);
+        assert!(s.to_string().contains("state=draining"));
+    }
+
+    #[test]
+    fn snapshot_round_trips_through_json() {
+        let m = Metrics::with_slo(2, 1_000);
+        m.record_batch(0, 4);
+        m.record_admitted();
+        m.record_done(0, 2_000, 10);
+        m.record_shed();
+        m.record_state(1, ShardState::Draining);
+        let j = Json::parse(&m.snapshot().to_json()).expect("valid JSON");
+        assert_eq!(j.get("completed").and_then(Json::as_usize), Some(1));
+        assert_eq!(j.get("shed").and_then(Json::as_usize), Some(1));
+        assert_eq!(j.get("slo_violations").and_then(Json::as_usize),
+                   Some(1));
+        let shards = j.get("per_shard").and_then(Json::as_arr).unwrap();
+        assert_eq!(shards.len(), 2);
+        assert_eq!(shards[0].get("state").and_then(Json::as_str),
+                   Some("serving"));
+        assert_eq!(shards[1].get("state").and_then(Json::as_str),
+                   Some("draining"));
+        assert_eq!(shards[0].get("p50_us").and_then(Json::as_usize),
+                   Some(2_000));
     }
 
     #[test]

@@ -1,25 +1,43 @@
-//! L3 inference coordinator: request queue -> dynamic batcher/router ->
-//! sharded backend executors, with backpressure and serving metrics.
+//! L3 inference coordinator: request queue -> continuous batcher/router
+//! -> sharded backend executors, with admission control, an elastic
+//! shard lifecycle and serving metrics — plus an optional HTTP front
+//! door ([`http`]).
 //!
 //! Executors are anything implementing
 //! [`InferenceBackend`](crate::backend::InferenceBackend) — the native
 //! simulator ([`crate::model::NativeBackend`], the default), the PJRT
 //! runtime behind the `pjrt` feature, or a test mock. Backends run a
 //! fixed batch size B (the engines' physical parallelism, like the
-//! paper's N^2 SAC array); the router merges up to B queued requests per
-//! execution — classic dynamic batching (vLLM-style) adapted to a
-//! fixed-shape executable — and fans gathered batches out across one or
-//! more backend *shards* ([`Server::start_sharded`]): per-shard bounded
+//! paper's N^2 SAC array); the router batches **continuously**: the
+//! first queued request opens a forming batch whose admission window is
+//! anchored at that request's *admission* time, later requests join
+//! until the batch fills (B) or the window expires, and non-batch work
+//! (generation tokens, session closes, drains) is routed inline while
+//! the batch keeps forming — no work type stalls another. Formed
+//! batches fan out across one or more backend *shards*
+//! ([`Server::start_sharded`] for a fixed fleet,
+//! [`Server::start_elastic`] for a self-scaling one): per-shard bounded
 //! queues and executor threads, least-loaded routing with round-robin
-//! tie-break, per-shard metrics merged into one
-//! [`MetricsSnapshot`]. Seeds are per-request end to end
-//! ([`InferenceBackend::run_seeded`] receives one seed per lane): on
-//! backends that honor per-lane seeds (the native simulator), stochastic
-//! spiking inference stays bit-reproducible request-by-request
-//! regardless of batching, lane placement or shard assignment.
-//! Single-seed backends (the AOT/HLO artifacts) fall back to the head
-//! request's seed, where only a head-of-batch request is reproducible —
-//! the pre-refactor contract.
+//! tie-break over the shards in the Serving lifecycle state, per-shard
+//! metrics merged into one [`MetricsSnapshot`]. Seeds are per-request
+//! end to end ([`InferenceBackend::run_seeded`] receives one seed per
+//! lane): on backends that honor per-lane seeds (the native simulator),
+//! stochastic spiking inference stays bit-reproducible
+//! request-by-request regardless of batching, lane placement or shard
+//! assignment. Single-seed backends (the AOT/HLO artifacts) fall back
+//! to the head request's seed, where only a head-of-batch request is
+//! reproducible — the pre-refactor contract.
+//!
+//! # Shard lifecycle
+//!
+//! Every shard carries a [`ShardState`] (`Starting -> Serving ->
+//! Draining -> Retired`, with `Dead` reachable from any live state —
+//! see [`lifecycle`]). In elastic mode the router observes fleet load
+//! at every batch dispatch and spawns a replica after a sustained
+//! pressure streak or drains the least-pinned one after a sustained
+//! idle streak; [`Server::drain_shard`] exposes the same drain path as
+//! an operator hook. Draining shards finish their queued work and keep
+//! serving the generation sessions pinned to them, then retire.
 //!
 //! # Streaming generation
 //!
@@ -32,32 +50,45 @@
 //! first token and held until [`Client::close_session`] or shard death —
 //! a dead shard's sessions are evicted (their cached state died with the
 //! executor), and in-flight tokens of evicted sessions fail rather than
-//! silently restarting the stream elsewhere.
+//! silently restarting the stream elsewhere. A *draining* shard is not
+//! dead: its pinned sessions keep streaming on it until they close
+//! (sticky routing survives drains); only *new* sessions avoid it.
 //!
 //! The build is offline (no tokio): the coordinator is a router thread
 //! over a bounded `std::sync::mpsc` channel (the backpressure boundary)
 //! feeding shallow per-shard batch channels, with per-request response
-//! channels.
+//! channels. The HTTP front door is the same std-only story — see
+//! [`http`].
+#![warn(missing_docs)]
 
+pub mod http;
+pub mod lifecycle;
 pub mod metrics;
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::AtomicUsize;
 use std::sync::mpsc::{self, Receiver, SyncSender, TrySendError};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::backend::{nan_safe_argmax_last, InferenceBackend};
 use crate::config::RunConfig;
+use lifecycle::ShardSet;
+pub use http::{HttpOptions, HttpServer};
+pub use lifecycle::{ElasticConfig, ShardState};
 pub use metrics::{Metrics, MetricsSnapshot, ShardSnapshot};
 
 /// One inference request: flattened input sample + stochastic seed.
 pub struct Request {
+    /// Flattened input sample (`x_len_per_sample` features).
     pub x: Vec<f32>,
+    /// Per-request stochastic seed (bit-reproducibility contract).
     pub seed: u32,
+    /// Admission time; anchors the batching window and latency metrics.
     pub enqueued: Instant,
+    /// Where the executor sends this request's [`Response`].
     pub respond: mpsc::Sender<Response>,
 }
 
@@ -70,7 +101,9 @@ pub struct GenRequest {
     /// Stochastic seed; only the session's *first* token's seed primes
     /// the stream (the decode analogue of one seed per request).
     pub seed: u32,
+    /// Admission time; anchors latency metrics.
     pub enqueued: Instant,
+    /// Where the executor sends this token's [`Response`].
     pub respond: mpsc::Sender<Response>,
 }
 
@@ -79,10 +112,12 @@ enum Work {
     Infer(Request),
     Generate(GenRequest),
     Close { session: u64 },
+    /// Operator request: begin draining one shard.
+    Drain(usize),
 }
 
 /// Messages a shard executor consumes.
-enum ShardMsg {
+pub(crate) enum ShardMsg {
     Batch(Vec<Request>),
     Generate(GenRequest),
     Close(u64),
@@ -92,8 +127,11 @@ enum ShardMsg {
 /// `generate`, the newest token position's logits).
 #[derive(Debug, Clone)]
 pub struct Response {
+    /// Per-timestep head logits, `[t_max, classes]` row-major.
     pub logits_t: Vec<f32>,
+    /// Encoding window length the executable runs.
     pub t_max: usize,
+    /// Number of output classes per timestep row.
     pub classes: usize,
     /// Encoding timesteps the backend actually executed for this sample
     /// before a dynamic-timestep early exit fired — `t_max` when exits
@@ -102,7 +140,9 @@ pub struct Response {
     /// replicate the last realized row, so [`Self::predict`] /
     /// [`Self::predict_at`] work unchanged.
     pub t_exit: usize,
+    /// Microseconds spent queued before execution started.
     pub queue_us: u64,
+    /// End-to-end microseconds from admission to response.
     pub e2e_us: u64,
 }
 
@@ -165,6 +205,7 @@ impl Client {
                 x, seed, enqueued: Instant::now(), respond: tx,
             }))
             .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        self.metrics.record_admitted();
         Ok(Pending(rx))
     }
 
@@ -177,7 +218,10 @@ impl Client {
         match self.tx.try_send(Work::Infer(Request {
             x, seed, enqueued: Instant::now(), respond: tx,
         })) {
-            Ok(()) => Ok(Some(Pending(rx))),
+            Ok(()) => {
+                self.metrics.record_admitted();
+                Ok(Some(Pending(rx)))
+            }
             Err(TrySendError::Full(_)) => {
                 self.metrics.record_rejected();
                 Ok(None)
@@ -193,10 +237,20 @@ impl Client {
         self.infer(x, seed)?.wait()
     }
 
+    /// Flattened per-sample feature length the shards expect.
+    pub fn sample_len(&self) -> usize {
+        self.sample_len
+    }
+
     /// Per-token feature length of the generate path, if the shards
     /// support incremental decode.
     pub fn token_len(&self) -> Option<usize> {
         self.token_len
+    }
+
+    /// Live metrics sink of the server this client submits to.
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
     }
 
     /// Submit the next token of generation session `session` (blocks on
@@ -219,6 +273,7 @@ impl Client {
                 respond: tx,
             }))
             .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        self.metrics.record_admitted();
         Ok(Pending(rx))
     }
 
@@ -233,10 +288,12 @@ impl Client {
 
 /// The running coordinator: router thread + one executor per shard.
 pub struct Server {
+    /// Shared metrics sink; snapshot it any time.
     pub metrics: Arc<Metrics>,
     client: Option<Client>,
     router: Option<std::thread::JoinHandle<()>>,
-    shards: Vec<std::thread::JoinHandle<()>>,
+    /// Executor join handles; elastic mode appends as replicas spawn.
+    shards: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
 }
 
 impl Server {
@@ -247,13 +304,14 @@ impl Server {
         Self::start_sharded(vec![backend], cfg)
     }
 
-    /// Spawn the coordinator over several backend shards (e.g. multiple
-    /// [`crate::model::NativeBackend`] replicas today, PJRT devices
-    /// later): gathered batches fan out least-loaded (round-robin on
-    /// ties) across per-shard queues + executor threads; generation
+    /// Spawn the coordinator over a *fixed* set of backend shards (e.g.
+    /// multiple [`crate::model::NativeBackend`] replicas today, PJRT
+    /// devices later): formed batches fan out least-loaded (round-robin
+    /// on ties) across per-shard queues + executor threads; generation
     /// sessions pin to one shard (their spike-state cache lives there).
     /// All shards must share the executable shape (batch, T, classes,
-    /// sample length, token length).
+    /// sample length, token length). The fleet does not scale;
+    /// [`Self::drain_shard`] still works for explicit removal.
     pub fn start_sharded<B: InferenceBackend>(backends: Vec<B>,
                                               cfg: RunConfig) -> Server {
         assert!(!backends.is_empty(), "need at least one shard backend");
@@ -271,21 +329,21 @@ impl Server {
                      capability");
         }
         let n_shards = backends.len();
-        let metrics = Arc::new(Metrics::new(n_shards));
+        let metrics = Arc::new(Metrics::with_slo(n_shards, cfg.slo_us));
         let (tx, rx) = mpsc::sync_channel::<Work>(cfg.queue_depth);
         // Messages a shard holds beyond the one it is executing: shallow,
         // so a busy shard pushes backpressure into the front queue
         // instead of hoarding requests another shard could serve.
         let inflight: Arc<Vec<AtomicUsize>> =
             Arc::new((0..n_shards).map(|_| AtomicUsize::new(0)).collect());
+        let handles = Arc::new(Mutex::new(Vec::with_capacity(n_shards)));
         let mut shard_txs = Vec::with_capacity(n_shards);
-        let mut shards = Vec::with_capacity(n_shards);
         for (si, backend) in backends.into_iter().enumerate() {
             let (stx, srx) = mpsc::sync_channel::<ShardMsg>(1);
             let m = Arc::clone(&metrics);
             let cfg_s = cfg.clone();
             let inflight_s = Arc::clone(&inflight);
-            shards.push(
+            handles.lock().unwrap().push(
                 std::thread::Builder::new()
                     .name(format!("xpike-shard-{si}"))
                     .spawn(move || {
@@ -295,15 +353,94 @@ impl Server {
             );
             shard_txs.push(stx);
         }
+        let shard_set =
+            ShardSet::fixed(shard_txs, inflight, Arc::clone(&metrics));
+        Self::finish_start(tx, rx, shard_set, metrics, handles, cfg,
+                           exe_batch, sample_len, token_len)
+    }
+
+    /// Spawn the coordinator with an **elastic** shard fleet: `factory`
+    /// builds backend replica `i` on demand (for
+    /// [`crate::model::NativeBackend`] a `move |_| native.clone()`
+    /// sharing one model), the fleet starts at
+    /// `elastic.initial_shards` and scales within
+    /// `min_shards..=max_shards` on sustained queue-depth signals —
+    /// see [`ElasticConfig`] for the policy. Every replica the factory
+    /// returns must match replica 0's executable shape.
+    pub fn start_elastic<B, F>(mut factory: F, cfg: RunConfig,
+                               elastic: ElasticConfig) -> Server
+    where
+        B: InferenceBackend,
+        F: FnMut(usize) -> B + Send + 'static,
+    {
+        let elastic = elastic.normalized();
+        let first = factory(0);
+        let exe_batch = first.batch();
+        let sample_len = first.x_len_per_sample();
+        let (t_max, classes) = (first.t_max(), first.classes());
+        let token_len = first.generate_token_len();
+        let metrics =
+            Arc::new(Metrics::with_slo(elastic.initial_shards, cfg.slo_us));
+        let (tx, rx) = mpsc::sync_channel::<Work>(cfg.queue_depth);
+        // Slot capacity: retired slots are reused by later spawns, but
+        // dead slots (panicked executors) are permanently parked — give
+        // the fleet headroom beyond `max_shards` so a few deaths don't
+        // exhaust scale-up.
+        let capacity = elastic.max_shards * 4;
+        let inflight: Arc<Vec<AtomicUsize>> =
+            Arc::new((0..capacity).map(|_| AtomicUsize::new(0)).collect());
+        let handles = Arc::new(Mutex::new(Vec::new()));
+        let mut first_slot = Some(first);
+        let spawner: lifecycle::Spawner = {
+            let metrics = Arc::clone(&metrics);
+            let cfg = cfg.clone();
+            let inflight = Arc::clone(&inflight);
+            let handles = Arc::clone(&handles);
+            Box::new(move |si: usize| {
+                // The probe replica becomes shard 0; later spawns (and
+                // slot reuses) come from the factory.
+                let backend = first_slot
+                    .take()
+                    .unwrap_or_else(|| factory(si));
+                assert!(backend.batch() == exe_batch
+                            && backend.t_max() == t_max
+                            && backend.classes() == classes
+                            && backend.x_len_per_sample() == sample_len
+                            && backend.generate_token_len() == token_len,
+                        "replica {si} does not match replica 0's \
+                         executable shape");
+                let (stx, srx) = mpsc::sync_channel::<ShardMsg>(1);
+                let m = Arc::clone(&metrics);
+                let cfg_s = cfg.clone();
+                let inflight_s = Arc::clone(&inflight);
+                let h = std::thread::Builder::new()
+                    .name(format!("xpike-shard-{si}"))
+                    .spawn(move || {
+                        shard_loop(si, backend, cfg_s, srx, m, inflight_s)
+                    })
+                    .expect("spawn shard executor");
+                handles.lock().unwrap().push(h);
+                stx
+            })
+        };
+        let shard_set = ShardSet::elastic(spawner, elastic,
+                                          Arc::clone(&inflight),
+                                          Arc::clone(&metrics));
+        Self::finish_start(tx, rx, shard_set, metrics, handles, cfg,
+                           exe_batch, sample_len, token_len)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn finish_start(tx: SyncSender<Work>, rx: Receiver<Work>,
+                    shard_set: ShardSet, metrics: Arc<Metrics>,
+                    handles: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+                    cfg: RunConfig, exe_batch: usize, sample_len: usize,
+                    token_len: Option<usize>) -> Server {
         let cfg_r = cfg.clone();
         let m_r = Arc::clone(&metrics);
-        let inflight_r = Arc::clone(&inflight);
         let router = std::thread::Builder::new()
             .name("xpike-router".into())
-            .spawn(move || {
-                router_loop(cfg_r, rx, shard_txs, m_r, inflight_r,
-                            exe_batch)
-            })
+            .spawn(move || router_loop(cfg_r, rx, shard_set, m_r, exe_batch))
             .expect("spawn router");
         let client = Client {
             tx,
@@ -315,12 +452,26 @@ impl Server {
             metrics,
             client: Some(client),
             router: Some(router),
-            shards,
+            shards: handles,
         }
     }
 
+    /// A cloneable submission handle.
     pub fn client(&self) -> Client {
         self.client.as_ref().expect("server running").clone()
+    }
+
+    /// Begin draining `shard` (operator hook; the elastic scale-down
+    /// policy uses the same path): it finishes its queued batches and
+    /// keeps serving its pinned generation sessions, takes nothing new,
+    /// and retires once empty. A no-op unless the shard is Serving.
+    pub fn drain_shard(&self, shard: usize) -> Result<()> {
+        self.client
+            .as_ref()
+            .expect("server running")
+            .tx
+            .send(Work::Drain(shard))
+            .map_err(|_| anyhow::anyhow!("server stopped"))
     }
 
     /// Graceful shutdown: close the submit side, join the router (which
@@ -335,7 +486,9 @@ impl Server {
         if let Some(h) = self.router.take() {
             let _ = h.join();
         }
-        for h in self.shards.drain(..) {
+        let handles: Vec<_> =
+            self.shards.lock().unwrap().drain(..).collect();
+        for h in handles {
             let _ = h.join();
         }
     }
@@ -347,195 +500,218 @@ impl Drop for Server {
     }
 }
 
-/// Collect up to `max_batch` inference requests behind `first`.
-///
-/// The batching window opens at *admission* (`first.enqueued`), not at
-/// the moment the router got around to calling `gather`: a request that
-/// already sat out its window in the queue closes the batch immediately
-/// instead of paying the window a second time, and a late call never
-/// stretches a freshly-admitted request's gather budget (the
-/// batch-window latency-floor fix). Non-batch work (generate/close)
-/// interrupts the window and is handed back for the router to process
-/// next.
-fn gather(first: Request, rx: &Receiver<Work>, max_batch: usize,
-          window: Duration) -> (Vec<Request>, Option<Work>) {
-    let deadline = first.enqueued + window;
-    let mut batch = vec![first];
-    // Zero-latency drain of whatever already queued behind the first.
-    while batch.len() < max_batch {
-        match rx.try_recv() {
-            Ok(Work::Infer(req)) => batch.push(req),
-            Ok(other) => return (batch, Some(other)),
-            Err(_) => break,
-        }
-    }
-    while batch.len() < max_batch {
-        let now = Instant::now();
-        if now >= deadline {
-            break;
-        }
-        match rx.recv_timeout(deadline - now) {
-            Ok(Work::Infer(req)) => batch.push(req),
-            Ok(other) => return (batch, Some(other)),
-            Err(_) => break, // window closed or senders gone
-        }
-    }
-    (batch, None)
+/// A batch under continuous formation: requests admitted so far plus
+/// the dispatch deadline.
+struct Forming {
+    batch: Vec<Request>,
+    deadline: Instant,
 }
 
-/// Pick the least-loaded shard; ties resolve round-robin starting at
-/// `rr` (so idle shards alternate deterministically).
-fn pick_shard(inflight: &[AtomicUsize], rr: &mut usize) -> usize {
-    let n = inflight.len();
-    let mut best = *rr % n;
-    let mut best_load = inflight[best].load(Ordering::SeqCst);
-    for i in 1..n {
-        let s = (*rr + i) % n;
-        let load = inflight[s].load(Ordering::SeqCst);
-        if load < best_load {
-            best = s;
-            best_load = load;
-        }
+impl Forming {
+    /// Open a batch around its first request. The admission window is
+    /// anchored at the request's *admission* time (`enqueued`), not at
+    /// the moment the router got to it: a request that already sat out
+    /// its window in the queue dispatches immediately instead of paying
+    /// the window a second time, and a late router never stretches a
+    /// freshly-admitted request's budget (the batch-window latency-floor
+    /// contract, preserved from the gather-based batcher).
+    fn open(first: Request, window: Duration) -> Forming {
+        let deadline = first.enqueued + window;
+        Forming { batch: vec![first], deadline }
     }
-    *rr = (best + 1) % n;
-    best
-}
 
-/// Load sentinel a dead shard (executor thread gone) is parked at, so
-/// [`pick_shard`] only returns it once every shard is dead.
-const DEAD_SHARD_LOAD: usize = usize::MAX / 2;
+    fn admit(&mut self, req: Request) {
+        self.batch.push(req);
+    }
 
-/// Park a dead shard and evict every generation session pinned to it:
-/// the sessions' cached decode state died with the executor, so their
-/// future tokens must fail loudly instead of silently restarting the
-/// stream on another shard.
-fn mark_shard_dead(shard: usize, inflight: &[AtomicUsize],
-                   sessions: &mut HashMap<u64, usize>) {
-    inflight[shard].store(DEAD_SHARD_LOAD, Ordering::SeqCst);
-    let before = sessions.len();
-    sessions.retain(|_, s| *s != shard);
-    let evicted = before - sessions.len();
-    if evicted > 0 {
-        eprintln!("coordinator: evicted {evicted} generation session(s) \
-                   pinned to dead shard {shard}");
+    /// Ready to dispatch: full, or the admission window has expired.
+    fn ready(&self, max_batch: usize) -> bool {
+        self.batch.len() >= max_batch || Instant::now() >= self.deadline
     }
 }
 
-/// Front half of the datapath: gather dynamic batches off the bounded
-/// request queue and fan them out across the shard queues, routing
-/// generation tokens to their session's pinned shard. A batch bounced
-/// off a dead shard (executor panicked) is re-routed to the survivors;
-/// requests are lost — and counted as failed — only when no shard is
-/// left. Generation tokens are never re-routed: the session's state is
-/// gone with its shard.
-fn router_loop(cfg: RunConfig, rx: Receiver<Work>,
-               shard_txs: Vec<SyncSender<ShardMsg>>,
-               metrics: Arc<Metrics>, inflight: Arc<Vec<AtomicUsize>>,
-               exe_batch: usize) {
+/// Outcome of one wait of the continuous batcher's event loop.
+enum Step {
+    /// New work arrived.
+    Got(Work),
+    /// The forming batch's admission window expired with no new work.
+    Expired,
+    /// All clients disconnected.
+    Closed,
+}
+
+/// Wait for the next event: blocking when nothing is forming, bounded
+/// by the forming batch's deadline otherwise (continuous batching — the
+/// router keeps absorbing and routing work while a batch forms).
+fn next_step(rx: &Receiver<Work>, forming: &Option<Forming>) -> Step {
+    match forming {
+        None => match rx.recv() {
+            Ok(w) => Step::Got(w),
+            Err(_) => Step::Closed,
+        },
+        Some(f) => {
+            let left =
+                f.deadline.saturating_duration_since(Instant::now());
+            match rx.recv_timeout(left) {
+                Ok(w) => Step::Got(w),
+                Err(mpsc::RecvTimeoutError::Timeout) => Step::Expired,
+                Err(mpsc::RecvTimeoutError::Disconnected) => Step::Closed,
+            }
+        }
+    }
+}
+
+/// Front half of the datapath: continuously form batches off the
+/// bounded request queue and fan them out across the serving shards,
+/// routing generation tokens to their session's pinned shard inline
+/// (they never stall a forming batch). Each dispatch feeds the elastic
+/// lifecycle one load observation. A batch bounced off a dead shard
+/// (executor panicked) is re-routed to the survivors; requests are lost
+/// — and counted as failed — only when no serving shard is left.
+/// Generation tokens are never re-routed: the session's state is gone
+/// with its shard.
+fn router_loop(cfg: RunConfig, rx: Receiver<Work>, mut shards: ShardSet,
+               metrics: Arc<Metrics>, exe_batch: usize) {
     let max_batch = cfg.max_batch.min(exe_batch).max(1);
     let window = Duration::from_micros(cfg.batch_window_us);
     let mut rr = 0usize;
     // Sticky session -> shard bindings for the generate path.
     let mut sessions: HashMap<u64, usize> = HashMap::new();
-    // Work that interrupted a batching window, processed next iteration.
-    let mut stash: Option<Work> = None;
+    let mut forming: Option<Forming> = None;
     loop {
-        let work = match stash.take() {
-            Some(w) => w,
-            None => match rx.recv() {
-                Ok(w) => w,
-                Err(_) => break,
+        shards.maybe_retire();
+        if forming.as_ref().map(|f| f.ready(max_batch)).unwrap_or(false) {
+            let f = forming.take().expect("checked above");
+            dispatch_batch(f.batch, &mut shards, &mut rr, &mut sessions,
+                           &metrics);
+            continue;
+        }
+        match next_step(&rx, &forming) {
+            Step::Closed => break,
+            Step::Expired => continue,
+            Step::Got(Work::Infer(req)) => match forming.as_mut() {
+                Some(f) => f.admit(req),
+                None => forming = Some(Forming::open(req, window)),
             },
+            Step::Got(Work::Generate(g)) => {
+                route_generate(g, &mut shards, &mut rr, &mut sessions,
+                               &metrics);
+            }
+            Step::Got(Work::Close { session }) => {
+                close_session(session, &mut shards, &mut sessions);
+            }
+            Step::Got(Work::Drain(shard)) => shards.begin_drain(shard),
+        }
+    }
+    // Flush whatever was still forming when the clients disconnected.
+    if let Some(f) = forming.take() {
+        dispatch_batch(f.batch, &mut shards, &mut rr, &mut sessions,
+                       &metrics);
+    }
+    // Dropping the ShardSet closes every shard queue; executors drain
+    // and exit.
+}
+
+/// Send one formed batch to the best serving shard, marking shards dead
+/// and re-routing on executor loss.
+fn dispatch_batch(batch: Vec<Request>, shards: &mut ShardSet,
+                  rr: &mut usize, sessions: &mut HashMap<u64, usize>,
+                  metrics: &Arc<Metrics>) {
+    if batch.is_empty() {
+        return;
+    }
+    let mut batch = batch;
+    loop {
+        // One load observation per dispatch drives the elastic policy
+        // (spawn happens *before* the pick, so a scale-up serves the
+        // batch that triggered it).
+        shards.observe_and_scale();
+        let Some(shard) = shards.pick(rr) else {
+            eprintln!("coordinator: no serving shard; dropping {} \
+                       request(s)", batch.len());
+            metrics.record_failed(0, batch.len() as u64);
+            return;
         };
-        match work {
-            Work::Infer(first) => {
-                let (gathered, interrupt) =
-                    gather(first, &rx, max_batch, window);
-                stash = interrupt;
-                let mut batch = gathered;
-                loop {
-                    let shard = pick_shard(&inflight, &mut rr);
-                    if inflight[shard].load(Ordering::SeqCst)
-                        >= DEAD_SHARD_LOAD
-                    {
-                        // Even the best pick is parked: every shard is
-                        // dead. Drop the responders (submitters observe
-                        // channel closure) and account the loss.
-                        eprintln!("coordinator: all shards gone; \
-                                   dropping {} request(s)", batch.len());
-                        metrics.record_failed(shard, batch.len() as u64);
-                        break;
-                    }
-                    inflight[shard].fetch_add(1, Ordering::SeqCst);
-                    match shard_txs[shard].send(ShardMsg::Batch(batch)) {
-                        Ok(()) => break,
-                        Err(mpsc::SendError(bounced)) => {
-                            // Shard executor gone (panicked mid-run):
-                            // park it and re-route the returned batch to
-                            // a surviving shard.
-                            eprintln!("coordinator: shard {shard} \
-                                       executor gone; re-routing");
-                            mark_shard_dead(shard, &inflight,
-                                            &mut sessions);
-                            batch = match bounced {
-                                ShardMsg::Batch(b) => b,
-                                _ => unreachable!("sent a batch"),
-                            };
-                        }
-                    }
-                }
-            }
-            Work::Generate(g) => {
-                let shard = match sessions.get(&g.session) {
-                    Some(&s) => s,
-                    None => {
-                        let s = pick_shard(&inflight, &mut rr);
-                        if inflight[s].load(Ordering::SeqCst)
-                            >= DEAD_SHARD_LOAD
-                        {
-                            eprintln!("coordinator: all shards gone; \
-                                       dropping generate token");
-                            metrics.record_failed(s, 1);
-                            continue;
-                        }
-                        sessions.insert(g.session, s);
-                        s
-                    }
+        shards.add_inflight(shard);
+        let tx = shards.tx(shard).expect("serving shard has a queue")
+            .clone();
+        match tx.send(ShardMsg::Batch(batch)) {
+            Ok(()) => return,
+            Err(mpsc::SendError(bounced)) => {
+                // Shard executor gone (panicked mid-run): park it and
+                // re-route the returned batch to a surviving shard.
+                eprintln!("coordinator: shard {shard} executor gone; \
+                           re-routing");
+                shards.mark_dead(shard, sessions);
+                batch = match bounced {
+                    ShardMsg::Batch(b) => b,
+                    _ => unreachable!("sent a batch"),
                 };
-                if inflight[shard].load(Ordering::SeqCst)
-                    >= DEAD_SHARD_LOAD
-                {
-                    // Bound shard died since binding: the session's
-                    // cached state is gone; fail the token and unpin.
-                    sessions.remove(&g.session);
-                    metrics.record_failed(shard, 1);
-                    continue;
-                }
-                inflight[shard].fetch_add(1, Ordering::SeqCst);
-                if shard_txs[shard].send(ShardMsg::Generate(g)).is_err() {
-                    mark_shard_dead(shard, &inflight, &mut sessions);
-                    metrics.record_failed(shard, 1);
-                }
-            }
-            Work::Close { session } => {
-                if let Some(shard) = sessions.remove(&session) {
-                    if inflight[shard].load(Ordering::SeqCst)
-                        < DEAD_SHARD_LOAD
-                    {
-                        inflight[shard].fetch_add(1, Ordering::SeqCst);
-                        if shard_txs[shard]
-                            .send(ShardMsg::Close(session))
-                            .is_err()
-                        {
-                            mark_shard_dead(shard, &inflight,
-                                            &mut sessions);
-                        }
-                    }
-                }
             }
         }
     }
-    // Dropping shard_txs closes every shard queue; executors drain & exit.
+}
+
+/// Route one generation token to its session's pinned shard, binding
+/// new sessions to the best *serving* shard (draining shards keep their
+/// existing sessions but take no new ones).
+fn route_generate(g: GenRequest, shards: &mut ShardSet, rr: &mut usize,
+                  sessions: &mut HashMap<u64, usize>,
+                  metrics: &Arc<Metrics>) {
+    let shard = match sessions.get(&g.session).copied() {
+        Some(s) if shards.token_routable(s) => s,
+        Some(s) => {
+            // Defensive: the binding outlived its shard; the cached
+            // state is gone, so fail the token and unpin.
+            sessions.remove(&g.session);
+            shards.unbind_session(s);
+            metrics.record_failed(s, 1);
+            return;
+        }
+        None => match shards.pick(rr) {
+            Some(s) => {
+                sessions.insert(g.session, s);
+                shards.bind_session(s);
+                s
+            }
+            None => {
+                eprintln!("coordinator: no serving shard; dropping \
+                           generate token");
+                metrics.record_failed(0, 1);
+                return;
+            }
+        },
+    };
+    shards.add_inflight(shard);
+    let Some(tx) = shards.tx(shard).cloned() else {
+        // Routable shards always hold a queue; defensive fallback.
+        sessions.remove(&g.session);
+        metrics.record_failed(shard, 1);
+        return;
+    };
+    if tx.send(ShardMsg::Generate(g)).is_err() {
+        shards.mark_dead(shard, sessions);
+        metrics.record_failed(shard, 1);
+    }
+}
+
+/// Unpin a closing session and tell its shard to drop the cached state.
+fn close_session(session: u64, shards: &mut ShardSet,
+                 sessions: &mut HashMap<u64, usize>) {
+    if let Some(shard) = sessions.remove(&session) {
+        shards.unbind_session(shard);
+        if !shards.token_routable(shard) {
+            return;
+        }
+        shards.add_inflight(shard);
+        let send_failed = match shards.tx(shard).cloned() {
+            Some(tx) => tx.send(ShardMsg::Close(session)).is_err(),
+            None => false,
+        };
+        if send_failed {
+            shards.mark_dead(shard, sessions);
+        }
+    }
 }
 
 /// One shard's executor: pad each routed batch to the executable shape,
@@ -545,6 +721,7 @@ fn shard_loop<B: InferenceBackend>(shard: usize, backend: B, cfg: RunConfig,
                                    rx: Receiver<ShardMsg>,
                                    metrics: Arc<Metrics>,
                                    inflight: Arc<Vec<AtomicUsize>>) {
+    use std::sync::atomic::Ordering;
     let exe_batch = backend.batch();
     let sample_len = backend.x_len_per_sample();
     let t_max = backend.t_max();
@@ -651,76 +828,64 @@ mod tests {
                   respond: tx }
     }
 
-    /// Pull the next Work off the queue, expecting an inference request.
-    fn recv_infer(rx: &Receiver<Work>) -> Request {
-        match rx.recv().expect("work queued") {
-            Work::Infer(r) => r,
-            _ => panic!("expected Work::Infer"),
-        }
+    fn aged_req(v: f32, age: Duration,
+                tx_keep: &mut Vec<mpsc::Receiver<Response>>) -> Request {
+        let (tx, rx) = mpsc::channel();
+        tx_keep.push(rx);
+        Request { x: vec![v], seed: 0,
+                  enqueued: Instant::now() - age, respond: tx }
     }
 
     #[test]
-    fn gather_respects_max_batch() {
-        let (tx, rx) = mpsc::sync_channel::<Work>(16);
+    fn forming_batch_is_ready_at_max_batch() {
         let mut keep = Vec::new();
-        for i in 0..5 {
-            tx.send(Work::Infer(req(i as f32, &mut keep))).unwrap();
-        }
-        let first = recv_infer(&rx);
-        let (b1, stash) =
-            gather(first, &rx, 3, Duration::from_millis(5));
-        assert_eq!(b1.len(), 3);
-        assert!(stash.is_none());
-        let first = recv_infer(&rx);
-        let (b2, _) = gather(first, &rx, 3, Duration::from_millis(5));
-        assert_eq!(b2.len(), 2);
+        let mut f =
+            Forming::open(req(1.0, &mut keep), Duration::from_secs(60));
+        assert!(!f.ready(3), "one of three, window open");
+        f.admit(req(2.0, &mut keep));
+        assert!(!f.ready(3));
+        f.admit(req(3.0, &mut keep));
+        assert!(f.ready(3), "full batch dispatches before the deadline");
+        assert_eq!(f.batch.len(), 3);
     }
 
     #[test]
-    fn gather_window_closes_partial_batch() {
-        let (tx, rx) = mpsc::sync_channel::<Work>(16);
+    fn forming_window_expires_a_partial_batch() {
         let mut keep = Vec::new();
-        tx.send(Work::Infer(req(1.0, &mut keep))).unwrap();
-        let first = recv_infer(&rx);
+        let f =
+            Forming::open(req(1.0, &mut keep), Duration::from_millis(10));
         let t0 = Instant::now();
-        let (batch, _) = gather(first, &rx, 8, Duration::from_millis(10));
-        assert_eq!(batch.len(), 1);
+        while !f.ready(8) {
+            std::thread::yield_now();
+        }
+        assert_eq!(f.batch.len(), 1);
         assert!(t0.elapsed() >= Duration::from_millis(9));
     }
 
     #[test]
-    fn gather_window_starts_at_admission_not_at_call() {
+    fn forming_window_anchors_at_admission_not_at_open() {
         // Regression (batch-window latency floor): a request that
         // already waited out its window in the queue must dispatch
-        // immediately — the old code re-armed the window at gather time,
-        // adding a full extra window of latency under a busy router.
-        let (tx, rx) = mpsc::sync_channel::<Work>(16);
+        // immediately — re-arming the window at open time would add a
+        // full extra window of latency under a busy router.
         let mut keep = Vec::new();
-        tx.send(Work::Infer(req(1.0, &mut keep))).unwrap();
-        let first = recv_infer(&rx);
-        std::thread::sleep(Duration::from_millis(20));
-        let t0 = Instant::now();
-        let (batch, _) = gather(first, &rx, 8, Duration::from_millis(15));
-        assert_eq!(batch.len(), 1);
-        assert!(t0.elapsed() < Duration::from_millis(10),
-                "expired window must close instantly, took {:?}",
-                t0.elapsed());
+        let f = Forming::open(
+            aged_req(1.0, Duration::from_millis(20), &mut keep),
+            Duration::from_millis(15));
+        assert!(f.ready(8), "expired admission window closes instantly");
     }
 
     #[test]
-    fn gather_does_not_wait_for_slow_producer_past_admission_window() {
-        // A slow producer whose second request lands after the *first
-        // request's* window expired must not be absorbed into the batch:
-        // under the call-anchored deadline the late gather call would
-        // have stretched the window and caught it.
+    fn next_step_does_not_wait_past_the_admission_window() {
+        // A slow producer whose next request lands after the *first
+        // request's* window expired must not be absorbed: the expired
+        // deadline bounds the wait at zero.
         let (tx, rx) = mpsc::sync_channel::<Work>(16);
         let mut keep = Vec::new();
-        tx.send(Work::Infer(req(1.0, &mut keep))).unwrap();
-        let first = recv_infer(&rx);
-        // Router is "busy" past the whole 20ms window...
-        std::thread::sleep(Duration::from_millis(25));
+        let forming = Some(Forming::open(
+            aged_req(1.0, Duration::from_millis(25), &mut keep),
+            Duration::from_millis(20)));
         let producer = std::thread::spawn(move || {
-            // ...and the slow producer's next request is still 15ms out.
             std::thread::sleep(Duration::from_millis(15));
             let (rtx, rrx) = mpsc::channel();
             let _ = tx.send(Work::Infer(Request {
@@ -729,97 +894,60 @@ mod tests {
             }));
             rrx
         });
-        let (batch, _) = gather(first, &rx, 8, Duration::from_millis(20));
-        assert_eq!(batch.len(), 1,
-                   "expired admission window must not re-open");
+        let t0 = Instant::now();
+        match next_step(&rx, &forming) {
+            Step::Expired => {}
+            _ => panic!("expired window must close, not absorb"),
+        }
+        assert!(t0.elapsed() < Duration::from_millis(10),
+                "expired admission window must not re-open, took {:?}",
+                t0.elapsed());
         drop(producer.join().unwrap());
     }
 
     #[test]
-    fn gather_drains_queued_requests_within_window() {
-        // Requests already sitting in the queue join the batch with the
-        // admission window still open.
+    fn batcher_drains_queued_requests_within_window() {
+        // Requests already sitting in the queue join the forming batch
+        // with the admission window still open — the router's admit
+        // loop, driven here by hand.
         let (tx, rx) = mpsc::sync_channel::<Work>(16);
         let mut keep = Vec::new();
-        tx.send(Work::Infer(req(1.0, &mut keep))).unwrap();
-        tx.send(Work::Infer(req(2.0, &mut keep))).unwrap();
-        tx.send(Work::Infer(req(3.0, &mut keep))).unwrap();
-        let first = recv_infer(&rx);
-        let (batch, stash) =
-            gather(first, &rx, 8, Duration::from_millis(30));
-        assert_eq!(batch.len(), 3);
-        assert!(stash.is_none());
-    }
-
-    #[test]
-    fn gather_hands_back_non_batch_work() {
-        // A generate token in the stream interrupts batching and comes
-        // back as the stash for the router's next iteration.
-        let (tx, rx) = mpsc::sync_channel::<Work>(16);
-        let mut keep = Vec::new();
-        tx.send(Work::Infer(req(1.0, &mut keep))).unwrap();
-        let (gtx, _grx) = mpsc::channel();
-        tx.send(Work::Generate(GenRequest {
-            session: 7, token: vec![0.5], seed: 0,
-            enqueued: Instant::now(), respond: gtx,
-        })).unwrap();
-        tx.send(Work::Infer(req(2.0, &mut keep))).unwrap();
-        let first = recv_infer(&rx);
-        let (batch, stash) =
-            gather(first, &rx, 8, Duration::from_millis(30));
-        assert_eq!(batch.len(), 1);
-        match stash {
-            Some(Work::Generate(g)) => assert_eq!(g.session, 7),
-            _ => panic!("generate token must be handed back"),
+        for i in 0..3 {
+            tx.send(Work::Infer(req(i as f32, &mut keep))).unwrap();
         }
+        let mut forming: Option<Forming> = None;
+        let window = Duration::from_millis(30);
+        while forming.as_ref().map(|f| f.batch.len()).unwrap_or(0) < 3 {
+            match next_step(&rx, &forming) {
+                Step::Got(Work::Infer(r)) => match forming.as_mut() {
+                    Some(f) => f.admit(r),
+                    None => forming = Some(Forming::open(r, window)),
+                },
+                _ => panic!("three queued requests expected"),
+            }
+        }
+        let f = forming.unwrap();
+        assert_eq!(f.batch.len(), 3);
+        assert!(!f.ready(8), "window still open after a zero-wait drain");
     }
 
     #[test]
-    fn gather_returns_partial_batch_when_senders_gone() {
+    fn next_step_reports_disconnect_for_flush() {
+        // Senders gone while a batch is forming: the router must learn
+        // quickly (and then flush the partial batch).
         let (tx, rx) = mpsc::sync_channel::<Work>(4);
         let mut keep = Vec::new();
-        tx.send(Work::Infer(req(1.0, &mut keep))).unwrap();
-        let first = recv_infer(&rx);
+        let forming = Some(Forming::open(req(1.0, &mut keep),
+                                         Duration::from_millis(250)));
         drop(tx);
         let t0 = Instant::now();
-        let (batch, stash) =
-            gather(first, &rx, 4, Duration::from_millis(250));
-        assert_eq!(batch.len(), 1);
-        assert!(stash.is_none());
+        match next_step(&rx, &forming) {
+            Step::Closed => {}
+            _ => panic!("disconnect must surface"),
+        }
         assert!(t0.elapsed() < Duration::from_millis(200),
-                "disconnect must close the window early");
-    }
-
-    #[test]
-    fn pick_shard_alternates_idle_shards_and_prefers_light_load() {
-        let inflight: Vec<AtomicUsize> =
-            (0..3).map(|_| AtomicUsize::new(0)).collect();
-        let mut rr = 0;
-        // All idle: deterministic round-robin.
-        assert_eq!(pick_shard(&inflight, &mut rr), 0);
-        assert_eq!(pick_shard(&inflight, &mut rr), 1);
-        assert_eq!(pick_shard(&inflight, &mut rr), 2);
-        assert_eq!(pick_shard(&inflight, &mut rr), 0);
-        // Loaded shards lose to an idle one regardless of rotation.
-        inflight[1].store(2, Ordering::SeqCst);
-        inflight[2].store(1, Ordering::SeqCst);
-        assert_eq!(pick_shard(&inflight, &mut rr), 0);
-        inflight[0].store(3, Ordering::SeqCst);
-        assert_eq!(pick_shard(&inflight, &mut rr), 2);
-    }
-
-    #[test]
-    fn mark_shard_dead_evicts_only_its_sessions() {
-        let inflight: Vec<AtomicUsize> =
-            (0..2).map(|_| AtomicUsize::new(0)).collect();
-        let mut sessions = HashMap::new();
-        sessions.insert(1u64, 0usize);
-        sessions.insert(2u64, 1usize);
-        sessions.insert(3u64, 0usize);
-        mark_shard_dead(0, &inflight, &mut sessions);
-        assert_eq!(inflight[0].load(Ordering::SeqCst), DEAD_SHARD_LOAD);
-        assert_eq!(sessions.len(), 1);
-        assert_eq!(sessions.get(&2), Some(&1));
+                "disconnect must close the wait early");
+        assert_eq!(forming.unwrap().batch.len(), 1);
     }
 
     #[test]

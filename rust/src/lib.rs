@@ -3,7 +3,7 @@
 //! Reproduction of *Xpikeformer: Hybrid Analog-Digital Hardware Acceleration
 //! for Spiking Transformers* (Song, Katti, Simeone, Rajendran — IEEE TVLSI
 //! 2025). This crate is the Layer-3 runtime + hardware simulator of the
-//! three-layer stack (see `DESIGN.md`):
+//! three-layer stack (see `docs/ARCHITECTURE.md` at the repo root):
 //!
 //! * [`model`]        — the native Rust forward pass: spike encoding →
 //!   per-block AIMC crossbar projections + SSA attention + LIF neurons +
@@ -59,14 +59,24 @@
 //!   plus the measured per-layer breakdown the native model produces.
 //! * [`baselines`]    — ANN-Quant (SwiftTron-like), ANN-Quant+AIMC,
 //!   SNN-Digi-Opt, X-Former and GPU roofline models (paper §VII).
-//! * [`coordinator`]  — inference server: request queue, dynamic
-//!   batcher/router, generic over any `InferenceBackend` and sharded
-//!   across backend replicas (`Server::start_sharded`: per-shard queues +
-//!   executors, least-loaded routing, merged per-shard metrics; Fig 6
+//! * [`coordinator`]  — the inference server, generic over any
+//!   `InferenceBackend`: a router thread performs continuous batching
+//!   (requests admit into the forming batch until it fills or its
+//!   admission-anchored deadline expires) and fans batches least-loaded
+//!   across per-shard queues + executors (`Server::start_sharded`; Fig 6
 //!   dataflow scheduling). Streaming generation rides the same queue:
 //!   `Client::generate` pins each session to one shard (sticky routing —
 //!   the spike-state cache lives there) with eviction on close or shard
-//!   death.
+//!   death. A shard-lifecycle state machine ([`coordinator::lifecycle`]:
+//!   Starting → Serving → Draining → Retired/Dead) underpins both
+//!   explicit drains and the elastic fleet (`Server::start_elastic`
+//!   spawns/retires replicas on sustained queue-depth streaks; draining
+//!   shards keep serving their pinned sessions until empty), and the
+//!   std-only HTTP/JSON front door ([`coordinator::http`]: `/infer`,
+//!   `/generate`, `/metrics`, `/healthz`) adds backpressure-aware
+//!   admission control (429 shedding) with per-shard p50/p99 + SLO
+//!   counters in [`coordinator::MetricsSnapshot`] (operator guide:
+//!   `docs/SERVING.md`).
 //! * [`workloads`]    — synthetic image + ICL MIMO workload generators.
 //! * [`config`]       — model-dimension presets (paper scale, native
 //!   simulator scale) and the Table-II hardware configuration.

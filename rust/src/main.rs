@@ -3,7 +3,8 @@
 //!
 //! ```text
 //! xpikeformer serve  [--backend native|pjrt] [--requests N] [--max-batch B]
-//!                    [--shards S]
+//!                    [--shards S|auto] [--http ADDR] [--window-us U]
+//!                    [--queue-depth D] [--shed-at N] [--slo-us U]
 //! xpikeformer repro  <table2..table6|fig7..fig10b|all-efficiency>
 //! xpikeformer list   [--artifacts DIR]            (requires --features pjrt)
 //! xpikeformer eval   --model vit_xpike_2-64 ...   (requires --features pjrt)
@@ -14,17 +15,23 @@
 //! crossbars and serves live generator traffic through the dynamic
 //! batcher — `--shards S` fans batches out across S native backend
 //! replicas of the same programmed model (the shard-router datapath;
-//! PJRT devices later). The artifact-based commands need `pjrt`.
+//! PJRT devices later), and `--shards auto` runs the elastic fleet that
+//! spawns/retires replicas on sustained load. `--http ADDR` opens the
+//! JSON front door (`/infer`, `/generate`, `/metrics`, `/healthz`; see
+//! docs/SERVING.md) and drives the smoke traffic through it over
+//! loopback. The artifact-based commands need `pjrt`.
 //!
 //! (Offline build: argument parsing is hand-rolled, no clap.)
 
 use anyhow::{bail, Result};
 
 use xpikeformer::config::{gpt_native, HardwareConfig, RunConfig};
-use xpikeformer::coordinator::Server;
+use xpikeformer::coordinator::http::http_request;
+use xpikeformer::coordinator::{ElasticConfig, HttpOptions, HttpServer,
+                               Server};
 use xpikeformer::model::{NativeBackend, XpikeModel};
 use xpikeformer::repro::{self, ReproCtx};
-use xpikeformer::util::Rng;
+use xpikeformer::util::{Json, Rng};
 use xpikeformer::workloads::{ber, MimoGenerator};
 
 /// Tiny flag parser: `--key value` and `--switch` forms.
@@ -63,6 +70,10 @@ impl Args {
         self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
     }
 
+    fn opt(&self, key: &str) -> Option<&String> {
+        self.flags.get(key)
+    }
+
     #[cfg(feature = "pjrt")]
     fn has(&self, key: &str) -> bool {
         self.flags.contains_key(key)
@@ -71,7 +82,8 @@ impl Args {
 
 const USAGE: &str = "usage: xpikeformer [--artifacts DIR] <command>\n\
   serve [--backend native|pjrt] [--requests N] [--max-batch B]\n\
-        [--shards S] [--model NAME]\n\
+        [--shards S|auto] [--model NAME] [--http ADDR] [--window-us U]\n\
+        [--queue-depth D] [--shed-at N] [--slo-us U]\n\
                                 serve live MIMO traffic (native default)\n\
   repro <experiment> [--seed N] regenerate a paper table/figure\n\
          (table2 table3 table4 table5 table6 fig7 fig8 fig9 fig10a\n\
@@ -204,14 +216,16 @@ fn cmd_serve(artifacts: &str, args: &Args) -> Result<()> {
 /// no artifacts — the whole request path is the Rust hardware model.
 /// With `--shards S > 1` the coordinator fans batches out across S
 /// backend replicas of the one programmed model (clones share crossbars
-/// and the energy accumulator — several execution engines on one chip).
-/// Ends with a streaming-decode demo: one sample served token-by-token
-/// through a pinned generation session, converging on the one-shot
-/// batch result.
+/// and the energy accumulator — several execution engines on one chip);
+/// `--shards auto` starts the elastic fleet instead, which spawns and
+/// retires replicas on sustained load. With `--http ADDR` the smoke
+/// traffic is driven through the JSON front door over loopback rather
+/// than the in-process client. Ends with a streaming-decode demo: one
+/// sample served token-by-token through a pinned generation session,
+/// converging on the one-shot batch result.
 fn serve_native(args: &Args, requests: usize, max_batch: usize)
                 -> Result<()> {
-    let shards: usize = args.get("shards", "1").parse()?;
-    anyhow::ensure!(shards >= 1, "--shards must be >= 1");
+    let shards_flag = args.get("shards", "1");
     let (nt, nr) = (2usize, 2usize);
     // `--model` selects a native MIMO preset (the serve demo drives the
     // 2x2 generator, so only 2x2 presets apply); unknown names error
@@ -232,11 +246,54 @@ fn serve_native(args: &Args, requests: usize, max_batch: usize)
     println!("programmed {} synaptic arrays", model.total_arrays());
     let native = NativeBackend::new(model, max_batch.max(1));
     let energy_handle = native.clone();
-    let cfg = RunConfig { max_batch, ..RunConfig::default() };
-    let replicas: Vec<NativeBackend> =
-        (0..shards).map(|_| native.clone()).collect();
-    println!("serving across {shards} shard(s)");
-    let server = Server::start_sharded(replicas, cfg);
+    let defaults = RunConfig::default();
+    let cfg = RunConfig {
+        max_batch,
+        batch_window_us: args
+            .get("window-us", &defaults.batch_window_us.to_string())
+            .parse()?,
+        queue_depth: args
+            .get("queue-depth", &defaults.queue_depth.to_string())
+            .parse()?,
+        slo_us: args.get("slo-us", &defaults.slo_us.to_string()).parse()?,
+        ..defaults
+    };
+    let server = if shards_flag == "auto" {
+        let max_shards = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(2)
+            .clamp(1, 8);
+        println!("serving with elastic shards (1..={max_shards} replicas)");
+        Server::start_elastic(
+            move |_| native.clone(),
+            cfg,
+            ElasticConfig { max_shards, ..ElasticConfig::default() },
+        )
+    } else {
+        let shards: usize = shards_flag.parse().map_err(|_| {
+            anyhow::anyhow!("--shards takes a count or `auto`, \
+                             got '{shards_flag}'")
+        })?;
+        anyhow::ensure!(shards >= 1, "--shards must be >= 1 (or `auto`)");
+        let replicas: Vec<NativeBackend> =
+            (0..shards).map(|_| native.clone()).collect();
+        println!("serving across {shards} fixed shard(s)");
+        Server::start_sharded(replicas, cfg)
+    };
+    if let Some(addr) = args.opt("http") {
+        let shed_at: usize = args.get("shed-at", "256").parse()?;
+        let opts = HttpOptions { shed_at, ..HttpOptions::default() };
+        let front = HttpServer::attach(&server, addr, opts)?;
+        let bound = front.local_addr();
+        println!("http front door on http://{bound}/ \
+                  (endpoints: /infer /generate /metrics /healthz)");
+        let outcome = serve_http_smoke(&server, bound, requests, nt);
+        front.shutdown();
+        server.shutdown();
+        println!("\nmeasured energy per layer:\n{}",
+                 energy_handle.energy().report());
+        return outcome;
+    }
     let client = server.client();
     let gen = MimoGenerator::new(nt, nr, 10.0);
     let mut rng = Rng::seed_from_u64(1);
@@ -291,6 +348,99 @@ fn serve_native(args: &Args, requests: usize, max_batch: usize)
              energy_handle.energy().report());
     drop(client);
     server.shutdown();
+    Ok(())
+}
+
+/// Render an f32 slice as a JSON number array (generator values are
+/// always finite).
+fn json_f32s(xs: &[f32]) -> String {
+    let mut s = String::from("[");
+    for (i, v) in xs.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&format!("{v}"));
+    }
+    s.push(']');
+    s
+}
+
+/// Drive the smoke traffic through the HTTP front door over loopback:
+/// the same MIMO generator stream the in-process demo uses, but every
+/// request round-trips JSON over a real TCP connection. `--requests 0`
+/// instead keeps the server up until the process is killed (for manual
+/// curl / external load tools).
+fn serve_http_smoke(server: &Server, addr: std::net::SocketAddr,
+                    requests: usize, nt: usize) -> Result<()> {
+    if requests == 0 {
+        println!("serving until the process is killed (--requests 0)");
+        loop {
+            std::thread::park();
+        }
+    }
+    let client = server.client();
+    let (status, body) = http_request(addr, "GET", "/healthz", None)?;
+    println!("GET /healthz -> {status} {body}");
+    let gen = MimoGenerator::new(nt, nt, 10.0);
+    let mut rng = Rng::seed_from_u64(1);
+    let mut correct = 0usize;
+    let mut preds = Vec::new();
+    let mut truths: Vec<u32> = Vec::new();
+    for i in 0..requests {
+        let (x, label) = gen.sample(&mut rng);
+        truths.push(label);
+        let req = format!("{{\"x\":{},\"seed\":{i}}}", json_f32s(&x));
+        let (status, resp) =
+            http_request(addr, "POST", "/infer", Some(&req))?;
+        anyhow::ensure!(status == 200, "POST /infer -> {status}: {resp}");
+        let pred = Json::parse(&resp)?
+            .get("prediction")
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| anyhow::anyhow!("no prediction in {resp}"))?;
+        preds.push(pred as u32);
+        if pred as u32 == label {
+            correct += 1;
+        }
+    }
+    println!("accuracy over http: {correct}/{requests} (untrained \
+              weights: chance-level is expected)");
+    println!("BER: {:.4}", ber(&preds, &truths, nt));
+    // Streaming decode over the wire: one sample token-by-token through
+    // a pinned generation session, then the same sample one-shot — the
+    // final predictions agree (PR 6 decode equivalence, now end to end
+    // through JSON).
+    if let Some(token_len) = client.token_len() {
+        let (x, _) = gen.sample(&mut rng);
+        let mut streamed = 0usize;
+        for tok in x.chunks(token_len) {
+            let req = format!(
+                "{{\"session\":1,\"token\":{},\"seed\":{requests}}}",
+                json_f32s(tok));
+            let (status, resp) =
+                http_request(addr, "POST", "/generate", Some(&req))?;
+            anyhow::ensure!(status == 200,
+                            "POST /generate -> {status}: {resp}");
+            streamed = Json::parse(&resp)?
+                .get("prediction")
+                .and_then(|v| v.as_usize())
+                .unwrap_or(usize::MAX);
+        }
+        let (status, _) = http_request(
+            addr, "POST", "/generate",
+            Some("{\"session\":1,\"close\":true}"))?;
+        anyhow::ensure!(status == 200, "session close -> {status}");
+        let req = format!("{{\"x\":{},\"seed\":{requests}}}",
+                          json_f32s(&x));
+        let (_, resp) = http_request(addr, "POST", "/infer", Some(&req))?;
+        let oneshot = Json::parse(&resp)?
+            .get("prediction")
+            .and_then(|v| v.as_usize())
+            .unwrap_or(usize::MAX);
+        println!("streamed prediction {streamed} == one-shot {oneshot}");
+    }
+    let (_, metrics) = http_request(addr, "GET", "/metrics", None)?;
+    println!("GET /metrics -> {metrics}");
+    drop(client);
     Ok(())
 }
 

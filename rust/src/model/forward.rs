@@ -42,7 +42,7 @@
 //! rate encoders, every encoder block (streaming SSA tiles hold the
 //! latched scores between steps) and the head readout before the next
 //! timestep starts. The serial per-lane RNG stream is preserved by
-//! per-segment cursors ([`LaneCursors`]): the draw stream of the old
+//! per-segment cursors (`LaneCursors`): the draw stream of the old
 //! stage-major order is segment-contiguous (embed, per block Q/K/V then
 //! FFN, head — each internally `for t { for token }`), so one cloned
 //! cursor per segment replays exactly the serial draws. With

@@ -11,8 +11,11 @@
 //! router balances batches and merges snapshots, and the bounded queue
 //! exerts backpressure. The generate path is covered against a
 //! session-recording mock: sticky session→shard routing, first-token
-//! seeding, close-time eviction, capability probing, and shard-death
-//! eviction surfacing failures to the waiters.
+//! seeding, close-time eviction, capability probing, inline routing
+//! around the continuously-forming batch, and shard-death eviction
+//! surfacing failures to the waiters. (Lifecycle scaling and the HTTP
+//! front door have their own suites: `lifecycle.rs`,
+//! `http_front_door.rs`.)
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
@@ -566,11 +569,12 @@ fn generate_requires_capability_and_valid_token() {
 }
 
 #[test]
-fn generate_tokens_interrupt_the_batching_window() {
-    // An infer request gathering under a long window must dispatch as
-    // soon as a generate token arrives behind it (the token is not batch
-    // work), and the token itself is served next — no head-of-line
-    // blocking in either direction.
+fn generate_tokens_ride_alongside_the_forming_batch() {
+    // Continuous batching: a generate token arriving while an infer
+    // batch is forming is routed inline — it neither joins the batch nor
+    // flushes it. The infers before and after it still merge into ONE
+    // execution (filling the batch dispatches it), and the token is
+    // served on its own — no head-of-line blocking in either direction.
     let backend = GenMock::new(0);
     let execs = Arc::clone(&backend.infer_execs);
     let server = Server::start(backend, cfg(2, 200_000, 32));
@@ -584,10 +588,11 @@ fn generate_tokens_interrupt_the_batching_window() {
     assert_eq!(rg.logits_t[0], GenMock::glogit(0, 9, 5, 1, 0.25, 0, 0));
     let rb = b.wait().unwrap();
     assert_eq!(rb.logits_t[0], MockBackend::logit(2.0, 6, 0, 0));
-    // The generate token split the infers into two executions — under an
-    // uninterrupted 200ms window they would have merged into one batch.
-    assert_eq!(*execs.lock().unwrap(), 2,
-               "generate must interrupt the gather window");
+    // One execution for both infers: the inline token did not split the
+    // forming batch, and `b` completed it (full => dispatch) long before
+    // the 200ms window would have expired.
+    assert_eq!(*execs.lock().unwrap(), 1,
+               "infers must merge around the inline generate token");
     drop(client);
     server.shutdown();
 }

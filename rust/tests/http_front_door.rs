@@ -1,0 +1,265 @@
+//! End-to-end tests for the HTTP/JSON front door on a loopback port:
+//! `/infer` responses bit-identical to the in-process `Client`, a
+//! multi-step `/generate` session matching the in-process stream,
+//! protocol errors mapped to 4xx statuses, and 429 load-shedding under
+//! synthetic saturation — all deterministic (rendezvous channels, no
+//! sleeps-as-synchronization).
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+
+use xpikeformer::backend::InferenceBackend;
+use xpikeformer::config::{gpt_native, HardwareConfig, RunConfig};
+use xpikeformer::coordinator::http::http_request;
+use xpikeformer::coordinator::{HttpOptions, HttpServer, Server};
+use xpikeformer::model::{NativeBackend, XpikeModel};
+use xpikeformer::util::{Json, Rng};
+
+/// Render a f32 slice as a JSON number array, the same shortest
+/// round-trip formatting the server uses on the way out.
+fn json_arr(xs: &[f32]) -> String {
+    let body: Vec<String> = xs.iter().map(|v| format!("{v}")).collect();
+    format!("[{}]", body.join(","))
+}
+
+/// Pull the `logits` array out of an `/infer` / `/generate` response.
+fn logits_of(resp: &str) -> Vec<f32> {
+    Json::parse(resp)
+        .unwrap()
+        .get("logits")
+        .and_then(Json::as_arr)
+        .expect("response carries logits")
+        .iter()
+        .map(|v| v.as_f64().expect("finite logit") as f32)
+        .collect()
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|f| f.to_bits()).collect()
+}
+
+/// A small causal native model served behind the front door.
+fn native_server() -> Server {
+    let dims = gpt_native(1, 64, 2, 2, 2, 4);
+    let model = XpikeModel::new(&dims, &HardwareConfig::default(), 42);
+    Server::start(NativeBackend::new(model, 2), RunConfig::default())
+}
+
+#[test]
+fn http_infer_is_bit_identical_to_in_process_client() {
+    let server = native_server();
+    let front = HttpServer::attach(&server, "127.0.0.1:0",
+                                   HttpOptions::default())
+        .unwrap();
+    let addr = front.local_addr();
+    let client = server.client();
+    let mut rng = Rng::seed_from_u64(3);
+    let x: Vec<f32> =
+        (0..client.sample_len()).map(|_| rng.uniform_f32()).collect();
+    let in_proc = client.infer_blocking(x.clone(), 7).unwrap();
+    let body = format!("{{\"x\":{},\"seed\":7}}", json_arr(&x));
+    let (status, resp) =
+        http_request(addr, "POST", "/infer", Some(&body)).unwrap();
+    assert_eq!(status, 200, "{resp}");
+    assert_eq!(bits(&logits_of(&resp)), bits(&in_proc.logits_t),
+               "the JSON round trip must preserve every logit bit");
+    let j = Json::parse(&resp).unwrap();
+    assert_eq!(j.get("prediction").and_then(Json::as_usize),
+               Some(in_proc.predict()));
+    assert_eq!(j.get("classes").and_then(Json::as_usize),
+               Some(in_proc.classes));
+    // The observability endpoints serve alongside inference.
+    let (hs, hb) = http_request(addr, "GET", "/healthz", None).unwrap();
+    assert_eq!(hs, 200);
+    assert!(hb.contains("\"status\":\"ok\""), "{hb}");
+    let (ms, mb) = http_request(addr, "GET", "/metrics", None).unwrap();
+    assert_eq!(ms, 200);
+    let mj = Json::parse(&mb).unwrap();
+    assert_eq!(mj.get("completed").and_then(Json::as_usize), Some(2));
+    assert_eq!(mj.get("per_shard").and_then(Json::as_arr).unwrap().len(),
+               1);
+    front.shutdown();
+    drop(client);
+    server.shutdown();
+}
+
+#[test]
+fn http_generate_session_matches_in_process_stream() {
+    // Stream one sample token-by-token through a `/generate` session and
+    // through the in-process client under the same seed: every step's
+    // logits must agree bit-for-bit, and the final prediction must match
+    // the one-shot `/infer` of the full sample (the decode-equivalence
+    // contract, now exercised end to end through JSON).
+    let server = native_server();
+    let front = HttpServer::attach(&server, "127.0.0.1:0",
+                                   HttpOptions::default())
+        .unwrap();
+    let addr = front.local_addr();
+    let client = server.client();
+    let token_len = client.token_len().expect("causal model");
+    let mut rng = Rng::seed_from_u64(5);
+    let x: Vec<f32> =
+        (0..client.sample_len()).map(|_| rng.uniform_f32()).collect();
+    let mut http_steps = Vec::new();
+    let mut local_steps = Vec::new();
+    for tok in x.chunks(token_len) {
+        let body = format!("{{\"session\":200,\"token\":{},\"seed\":9}}",
+                           json_arr(tok));
+        let (status, resp) =
+            http_request(addr, "POST", "/generate", Some(&body)).unwrap();
+        assert_eq!(status, 200, "{resp}");
+        assert!(resp.contains("\"session\":200"), "{resp}");
+        http_steps.push(bits(&logits_of(&resp)));
+        let local =
+            client.generate(100, tok.to_vec(), 9).unwrap().wait().unwrap();
+        local_steps.push(bits(&local.logits_t));
+    }
+    assert_eq!(http_steps, local_steps,
+               "every streamed step must match the in-process client \
+                bit-for-bit");
+    let (status, resp) = http_request(
+        addr, "POST", "/generate",
+        Some("{\"session\":200,\"close\":true}"))
+        .unwrap();
+    assert_eq!(status, 200);
+    assert!(resp.contains("\"closed\":true"), "{resp}");
+    client.close_session(100).unwrap();
+    // Decode equivalence through the wire: the streamed final prediction
+    // equals the one-shot prediction of the same (sample, seed).
+    let body = format!("{{\"x\":{},\"seed\":9}}", json_arr(&x));
+    let (status, resp) =
+        http_request(addr, "POST", "/infer", Some(&body)).unwrap();
+    assert_eq!(status, 200, "{resp}");
+    let streamed_last = http_steps.last().unwrap();
+    let oneshot_bits = bits(&logits_of(&resp));
+    assert_eq!(streamed_last, &oneshot_bits,
+               "final streamed logits must equal the one-shot forward");
+    front.shutdown();
+    drop(client);
+    server.shutdown();
+}
+
+/// Gated single-lane mock: executions announce themselves and block for
+/// a permit, so the test controls exactly how many admitted requests are
+/// outstanding at any moment.
+#[derive(Clone)]
+struct GatedMock {
+    started: Sender<()>,
+    permits: Arc<Mutex<Receiver<()>>>,
+}
+
+impl InferenceBackend for GatedMock {
+    fn run(&self, x: &[f32], _seed: u32) -> anyhow::Result<Vec<f32>> {
+        self.started.send(()).unwrap();
+        self.permits.lock().unwrap().recv().unwrap();
+        Ok(vec![x[0], 0.0])
+    }
+
+    fn batch(&self) -> usize {
+        1
+    }
+
+    fn t_max(&self) -> usize {
+        1
+    }
+
+    fn classes(&self) -> usize {
+        2
+    }
+
+    fn x_len_per_sample(&self) -> usize {
+        1
+    }
+}
+
+#[test]
+fn saturation_sheds_429_before_queues_overflow() {
+    let (started_tx, started_rx) = channel();
+    let (permit_tx, permit_rx) = channel();
+    let backend = GatedMock {
+        started: started_tx,
+        permits: Arc::new(Mutex::new(permit_rx)),
+    };
+    let cfg = RunConfig {
+        max_batch: 1,
+        batch_window_us: 0,
+        queue_depth: 32,
+        seed: 0,
+        ..RunConfig::default()
+    };
+    let server = Server::start(backend, cfg);
+    let opts = HttpOptions { shed_at: 2, ..HttpOptions::default() };
+    let front = HttpServer::attach(&server, "127.0.0.1:0", opts).unwrap();
+    let addr = front.local_addr();
+    let client = server.client();
+    // Two admitted-but-unresolved requests: the outstanding gauge sits
+    // exactly at shed_at (admission is counted synchronously on submit;
+    // the gate keeps both unresolved).
+    let p1 = client.infer(vec![1.0], 0).unwrap();
+    let p2 = client.infer(vec![2.0], 0).unwrap();
+    started_rx.recv().unwrap(); // the first is executing, the gauge is 2
+    let (status, resp) =
+        http_request(addr, "POST", "/infer",
+                     Some("{\"x\":[3.0],\"seed\":0}"))
+            .unwrap();
+    assert_eq!(status, 429, "saturated front door must shed: {resp}");
+    assert!(resp.contains("overloaded"), "{resp}");
+    assert!(server.metrics.snapshot().shed >= 1);
+    // Resolve the backlog; the gauge drains to zero before each `wait`
+    // returns (completion is recorded before the response is delivered).
+    permit_tx.send(()).unwrap();
+    permit_tx.send(()).unwrap();
+    assert_eq!(p1.wait().unwrap().logits_t[0], 1.0);
+    assert_eq!(p2.wait().unwrap().logits_t[0], 2.0);
+    assert_eq!(server.metrics.snapshot().outstanding, 0);
+    // Admission recovers: the same request now passes (one more permit
+    // lets the gated executor finish it).
+    permit_tx.send(()).unwrap();
+    let (status, resp) =
+        http_request(addr, "POST", "/infer",
+                     Some("{\"x\":[3.0],\"seed\":0}"))
+            .unwrap();
+    assert_eq!(status, 200, "{resp}");
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.completed, 3);
+    assert!(snap.shed >= 1);
+    assert!(snap.to_string().contains("shed="), "{snap}");
+    front.shutdown();
+    drop(client);
+    server.shutdown();
+}
+
+#[test]
+fn protocol_errors_map_to_4xx_over_the_wire() {
+    let server = native_server();
+    let front = HttpServer::attach(&server, "127.0.0.1:0",
+                                   HttpOptions::default())
+        .unwrap();
+    let addr = front.local_addr();
+    let cases: [(&str, &str, Option<&str>, u16); 6] = [
+        ("POST", "/infer", Some("{not json"), 400),
+        ("POST", "/infer", Some("[1,2,3]"), 400),
+        ("POST", "/infer", Some("{\"x\":[1.0],\"seed\":0}"), 400),
+        ("POST", "/infer", Some("{\"seed\":0}"), 400),
+        ("GET", "/nope", None, 404),
+        ("DELETE", "/infer", None, 405),
+    ];
+    for (method, path, body, want) in cases {
+        let (status, resp) =
+            http_request(addr, method, path, body).unwrap();
+        assert_eq!(status, want,
+                   "{method} {path} with {body:?} -> {resp}");
+        assert!(Json::parse(&resp).is_ok(),
+                "error bodies must be JSON: {resp}");
+    }
+    // A generate token without a session id is rejected before any
+    // admission accounting happens.
+    let (status, resp) = http_request(
+        addr, "POST", "/generate", Some("{\"token\":[0.0,0.0]}"))
+        .unwrap();
+    assert_eq!(status, 400, "{resp}");
+    assert_eq!(server.metrics.snapshot().completed, 0,
+               "malformed requests must never reach the coordinator");
+    front.shutdown();
+    server.shutdown();
+}

@@ -1,0 +1,274 @@
+//! Elastic shard-lifecycle tests against deterministic mock replicas:
+//! queue pressure spawns a replica, sustained idle drains + retires one,
+//! and sticky generate sessions survive a drain of their shard — all
+//! observable in `MetricsSnapshot`. Synchronization goes through
+//! rendezvous channels and the router's sequential event order, never
+//! through sleeps.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+
+use xpikeformer::backend::InferenceBackend;
+use xpikeformer::config::RunConfig;
+use xpikeformer::coordinator::{ElasticConfig, Server, ShardState};
+
+/// Rendezvous gate for batch executions: the executor announces its
+/// replica id on `started`, then blocks until a permit arrives — so a
+/// test can deterministically hold work in flight on a chosen shard.
+#[derive(Clone)]
+struct Gate {
+    started: Sender<usize>,
+    permits: Arc<Mutex<Receiver<()>>>,
+}
+
+impl Gate {
+    fn new() -> (Gate, Receiver<usize>, Sender<()>) {
+        let (started_tx, started_rx) = channel();
+        let (permit_tx, permit_rx) = channel();
+        let gate = Gate {
+            started: started_tx,
+            permits: Arc::new(Mutex::new(permit_rx)),
+        };
+        (gate, started_rx, permit_tx)
+    }
+}
+
+/// Mock replica (batch 1, T 1, 2 classes, 1 feature): every logit
+/// encodes `1000 * id + input`, so a response proves which replica
+/// served it. Batch executions optionally block on the gate; generate
+/// steps are instant and sessions closed via `end_generate` are logged.
+#[derive(Clone)]
+struct Replica {
+    id: usize,
+    gate: Option<Gate>,
+    closed: Arc<Mutex<Vec<u64>>>,
+}
+
+impl Replica {
+    fn new(id: usize, gate: Option<Gate>) -> Replica {
+        Replica { id, gate, closed: Arc::new(Mutex::new(Vec::new())) }
+    }
+
+    fn logit(id: usize, x0: f32) -> f32 {
+        1000.0 * id as f32 + x0
+    }
+}
+
+impl InferenceBackend for Replica {
+    fn run(&self, x: &[f32], _seed: u32) -> anyhow::Result<Vec<f32>> {
+        if let Some(gate) = &self.gate {
+            gate.started.send(self.id).unwrap();
+            gate.permits.lock().unwrap().recv().unwrap();
+        }
+        Ok(vec![Self::logit(self.id, x[0]), 0.0])
+    }
+
+    fn batch(&self) -> usize {
+        1
+    }
+
+    fn t_max(&self) -> usize {
+        1
+    }
+
+    fn classes(&self) -> usize {
+        2
+    }
+
+    fn x_len_per_sample(&self) -> usize {
+        1
+    }
+
+    fn generate_token_len(&self) -> Option<usize> {
+        Some(1)
+    }
+
+    fn generate_step(&self, _session: u64, token: &[f32], _seed: u32)
+                     -> anyhow::Result<Vec<f32>> {
+        Ok(vec![Self::logit(self.id, token[0]), 0.0])
+    }
+
+    fn end_generate(&self, session: u64) {
+        self.closed.lock().unwrap().push(session);
+    }
+}
+
+fn cfg() -> RunConfig {
+    RunConfig {
+        max_batch: 1,
+        batch_window_us: 0,
+        queue_depth: 32,
+        seed: 0,
+        ..RunConfig::default()
+    }
+}
+
+#[test]
+fn queue_pressure_spawns_a_replica() {
+    // One initial replica, scale-up after 2 consecutive pressure
+    // observations. Three submissions against a gated executor: A runs
+    // (blocked), B queues behind it (pressure 1), C's dispatch sees the
+    // streak hit 2 and spawns replica 1 — which serves C immediately.
+    let (gate, started_rx, permit_tx) = Gate::new();
+    let factory_calls = Arc::new(Mutex::new(Vec::new()));
+    let calls = Arc::clone(&factory_calls);
+    let server = Server::start_elastic(
+        move |i| {
+            calls.lock().unwrap().push(i);
+            Replica::new(i, Some(gate.clone()))
+        },
+        cfg(),
+        ElasticConfig {
+            min_shards: 1,
+            max_shards: 2,
+            initial_shards: 1,
+            scale_up_after: 2,
+            scale_down_after: 1_000_000,
+        },
+    );
+    let client = server.client();
+    let a = client.infer(vec![0.0], 0).unwrap();
+    let b = client.infer(vec![1.0], 0).unwrap();
+    let c = client.infer(vec![2.0], 0).unwrap();
+    // Rendezvous: before any permit is granted, two *distinct* replicas
+    // must have started work — A on replica 0 and C on the replica the
+    // pressure streak spawned (B is queued behind A on replica 0).
+    let mut first_two = [started_rx.recv().unwrap(),
+                         started_rx.recv().unwrap()];
+    first_two.sort_unstable();
+    assert_eq!(first_two, [0, 1],
+               "queue pressure must spawn replica 1 while A blocks");
+    for _ in 0..3 {
+        permit_tx.send(()).unwrap();
+    }
+    assert_eq!(a.wait().unwrap().logits_t[0], Replica::logit(0, 0.0));
+    assert_eq!(b.wait().unwrap().logits_t[0], Replica::logit(0, 1.0),
+               "B drains on replica 0 behind A");
+    assert_eq!(c.wait().unwrap().logits_t[0], Replica::logit(1, 2.0),
+               "C must be served by the freshly spawned replica");
+    assert_eq!(factory_calls.lock().unwrap().as_slice(), &[0, 1],
+               "factory builds the probe replica and the scale-up one");
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.completed, 3);
+    assert_eq!(snap.spawned, 2, "initial replica + scale-up replica");
+    assert_eq!(snap.per_shard.len(), 2);
+    assert!(snap.per_shard.iter().all(|s| s.state == ShardState::Serving));
+    drop(client);
+    server.shutdown();
+}
+
+#[test]
+fn sustained_idle_drains_and_retires_a_replica() {
+    // Two initial replicas, scale-down after 3 consecutive idle
+    // observations. Four sequential blocking requests: the first three
+    // dispatches each observe >= 2 idle replicas; the third crosses the
+    // threshold and drains the sessionless highest-index replica, which
+    // retires as soon as the router observes it empty.
+    let server = Server::start_elastic(
+        |i| Replica::new(i, None),
+        cfg(),
+        ElasticConfig {
+            min_shards: 1,
+            max_shards: 2,
+            initial_shards: 2,
+            scale_up_after: 1_000_000,
+            scale_down_after: 3,
+        },
+    );
+    let client = server.client();
+    // Idle replicas alternate round-robin until the drain; afterwards
+    // everything lands on the survivor.
+    let expect = [Replica::logit(0, 0.0), Replica::logit(1, 1.0),
+                  Replica::logit(0, 2.0), Replica::logit(0, 3.0)];
+    for (i, want) in expect.iter().enumerate() {
+        let r = client.infer_blocking(vec![i as f32], i as u32).unwrap();
+        assert_eq!(r.logits_t[0], *want, "request {i} routing");
+    }
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.completed, 4);
+    assert_eq!(snap.spawned, 2);
+    assert_eq!(snap.drained, 1, "idle streak must drain one replica");
+    assert_eq!(snap.retired, 1, "the drained replica must retire");
+    assert_eq!(snap.per_shard[0].state, ShardState::Serving);
+    assert_eq!(snap.per_shard[1].state, ShardState::Retired);
+    let text = snap.to_string();
+    assert!(text.contains("lifecycle[spawned:2 drained:1 retired:1]"),
+            "{text}");
+    drop(client);
+    server.shutdown();
+}
+
+#[test]
+fn draining_preserves_in_flight_work_and_sticky_sessions() {
+    // The operator-drain path on a fixed fleet: draining a shard keeps
+    // its queued batch work and its pinned generate sessions alive,
+    // refuses new batches and new sessions, and retires only once both
+    // are gone.
+    let (gate, started_rx, permit_tx) = Gate::new();
+    let r0 = Replica::new(0, Some(gate.clone()));
+    let r1 = Replica::new(1, Some(gate));
+    let closed_on_1 = Arc::clone(&r1.closed);
+    let server = Server::start_sharded(vec![r0, r1], cfg());
+    let client = server.client();
+    // Pin session 9 -> shard 0 and session 11 -> shard 1 (idle shards
+    // alternate round-robin; generate steps are not gated).
+    let g9 = client.generate(9, vec![0.5], 1).unwrap().wait().unwrap();
+    assert_eq!(g9.logits_t[0], Replica::logit(0, 0.5));
+    let g11 = client.generate(11, vec![0.5], 1).unwrap().wait().unwrap();
+    assert_eq!(g11.logits_t[0], Replica::logit(1, 0.5));
+    // Hold one gated batch on each shard, then drain shard 1 while its
+    // batch is still in flight.
+    let a1 = client.infer(vec![10.0], 0).unwrap();
+    let a2 = client.infer(vec![11.0], 0).unwrap();
+    let mut started = [started_rx.recv().unwrap(),
+                       started_rx.recv().unwrap()];
+    started.sort_unstable();
+    assert_eq!(started, [0, 1], "one gated batch held on each shard");
+    server.drain_shard(1).unwrap();
+    // Routed strictly after the drain (same queue): the pinned session
+    // still reaches shard 1 — sticky sessions survive the drain.
+    let g11b = client.generate(11, vec![0.75], 1).unwrap();
+    for _ in 0..2 {
+        permit_tx.send(()).unwrap();
+    }
+    assert_eq!(a1.wait().unwrap().logits_t[0], Replica::logit(0, 10.0));
+    assert_eq!(a2.wait().unwrap().logits_t[0], Replica::logit(1, 11.0),
+               "work already queued on the draining shard must finish");
+    assert_eq!(g11b.wait().unwrap().logits_t[0], Replica::logit(1, 0.75),
+               "a session pinned to a draining shard keeps serving there");
+    // New sessions and new batches avoid the draining shard.
+    let g12 = client.generate(12, vec![0.25], 1).unwrap().wait().unwrap();
+    assert_eq!(g12.logits_t[0], Replica::logit(0, 0.25),
+               "draining shards take no new sessions");
+    permit_tx.send(()).unwrap();
+    let b = client.infer_blocking(vec![20.0], 0).unwrap();
+    assert_eq!(b.logits_t[0], Replica::logit(0, 20.0),
+               "draining shards take no new batches");
+    // Closing the last pinned session lets the shard retire. The close
+    // is processed asynchronously by the shard executor, so drive the
+    // router with bounded ticks until it observes the shard empty.
+    client.close_session(11).unwrap();
+    let mut retired = false;
+    for i in 0..5000 {
+        if server.metrics.snapshot().retired == 1 {
+            retired = true;
+            break;
+        }
+        permit_tx.send(()).unwrap();
+        let _ = client.infer_blocking(vec![30.0 + i as f32], 0).unwrap();
+        std::thread::yield_now();
+    }
+    assert!(retired, "shard 1 must retire once drained and unpinned");
+    assert_eq!(closed_on_1.lock().unwrap().as_slice(), &[11],
+               "the close must evict the session on its own shard");
+    // The surviving pinned session is untouched by the retirement.
+    let g9b = client.generate(9, vec![0.9], 1).unwrap().wait().unwrap();
+    assert_eq!(g9b.logits_t[0], Replica::logit(0, 0.9));
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.drained, 1);
+    assert_eq!(snap.retired, 1);
+    assert_eq!(snap.per_shard[1].state, ShardState::Retired);
+    assert_eq!(snap.failed, 0, "no request may be lost across the drain");
+    drop(client);
+    server.shutdown();
+}
