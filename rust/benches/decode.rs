@@ -6,10 +6,13 @@
 //! replaces), (b) the per-token step cost at increasing prefix lengths —
 //! the cached K/V volumes and RNG cursors keep the crossbar work per
 //! token constant, so step cost must stay near-flat instead of growing
-//! with the recomputed prefix — and (c) tokens/s of incremental decode
-//! vs full-recompute autoregression (one whole forward per emitted
-//! token). Overwrites the repo-root `BENCH_decode.json` (override the
-//! path with `BENCH_DECODE_JSON=...`).
+//! with the recomputed prefix — (c) tokens/s of incremental decode vs
+//! full-recompute autoregression (one whole forward per emitted
+//! token), and (d) a co-resident-sessions sweep (1/8/64) through
+//! `decode_step_batch`: the lane-sliced kernel packs up to 64 sessions
+//! per AND-popcount word, so aggregate tokens/s should grow far faster
+//! than per-session cost. Overwrites the repo-root `BENCH_decode.json`
+//! (override the path with `BENCH_DECODE_JSON=...`).
 //!
 //! Run: `cargo bench --bench decode`
 
@@ -112,6 +115,52 @@ fn main() {
     println!("    -> {tok_s_inc:.1} tok/s incremental vs \
               {tok_s_full:.1} tok/s full recompute ({speedup:.2}x)");
 
+    // Co-resident sessions through the batched kernel: one weight-row
+    // visit and one AND-popcount word serve every session in a slab, so
+    // aggregate throughput should scale far better than linearly in
+    // occupancy while per-session tokens/s degrades only mildly.
+    let mut sweep: Vec<String> = Vec::new();
+    for &occupancy in &[1usize, 8, 64] {
+        let seeds: Vec<u64> =
+            (0..occupancy as u64).map(|i| 7 + i).collect();
+        let r = bench(
+            &format!("batched decode window {} ({occupancy} sessions)",
+                     dims.name),
+            1,
+            budget,
+            || {
+                let mut states: Vec<_> = seeds
+                    .iter()
+                    .map(|&s| model.begin_decode(1, &[s]).unwrap())
+                    .collect();
+                for m in 0..n {
+                    let row = &x[m * in_feat..(m + 1) * in_feat];
+                    let step_xs: Vec<f32> = row
+                        .iter()
+                        .copied()
+                        .cycle()
+                        .take(occupancy * in_feat)
+                        .collect();
+                    let mut refs: Vec<_> = states.iter_mut().collect();
+                    black_box(
+                        model.decode_step_batch(&mut refs, &step_xs)
+                            .unwrap(),
+                    );
+                }
+            },
+        );
+        records.push(r.to_json());
+        let window_s = r.mean.as_secs_f64();
+        let agg = (occupancy * n) as f64 / window_s;
+        let per = agg / occupancy as f64;
+        println!("    -> {occupancy:2} co-resident sessions: {agg:.1} \
+                  tok/s aggregate, {per:.1} tok/s per session");
+        sweep.push(format!(
+            "{{\"sessions\": {occupancy}, \"tokens_per_s_aggregate\": \
+             {agg:.1}, \"tokens_per_s_per_session\": {per:.1}}}"
+        ));
+    }
+
     let path = std::env::var("BENCH_DECODE_JSON").unwrap_or_else(|_| {
         concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_decode.json").into()
     });
@@ -126,6 +175,7 @@ fn main() {
          \"tokens_per_s_incremental\": {tok_s_inc:.1},\n  \
          \"tokens_per_s_full_recompute\": {tok_s_full:.1},\n  \
          \"incremental_vs_full_recompute_speedup\": {speedup:.3},\n  \
+         \"co_resident_sessions\": [\n    {}\n  ],\n  \
          \"results\": [\n    {}\n  ]\n}}\n",
         metadata_json(),
         escape(&dims.name),
@@ -136,6 +186,7 @@ fn main() {
         step_us[probes[1]],
         probes[2],
         step_us[probes[2]],
+        sweep.join(",\n    "),
         records.join(",\n    ")
     );
     match std::fs::write(&path, &json) {

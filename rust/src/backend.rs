@@ -99,6 +99,27 @@ pub trait InferenceBackend: Send + 'static {
         anyhow::bail!("backend does not support incremental generation")
     }
 
+    /// Advance several generate sessions one token each in a single
+    /// call, returning per-entry results in input order (the output
+    /// length always equals `steps.len()`). Entries usually hit
+    /// distinct sessions — a shard executor draining its queue — but
+    /// may repeat one; repeats must be stepped serially in entry order.
+    ///
+    /// The default loops [`Self::generate_step`], so single-session
+    /// backends (mocks, the PJRT runtime) keep working unchanged. The
+    /// native backend overrides this with a lane-sliced batched decode
+    /// kernel that steps up to 64 co-resident sessions per packed word
+    /// — each bit-identical to its solo serial walk.
+    fn generate_steps(&self, steps: &[(u64, &[f32], u32)])
+                      -> Vec<Result<Vec<f32>>> {
+        steps
+            .iter()
+            .map(|&(session, token, seed)| {
+                self.generate_step(session, token, seed)
+            })
+            .collect()
+    }
+
     /// Drop session `session`'s decode state, if any. Ending a session
     /// mid-window discards its partial work; completed windows are
     /// accounted automatically. Default: no-op.
@@ -180,5 +201,39 @@ mod tests {
         assert_eq!(nan_safe_argmax_last(&[f64::NAN, 2.0, 1.0]), 1);
         assert_eq!(nan_safe_argmax_last(&[f64::NAN, f64::NAN]), 0);
         assert_eq!(nan_safe_argmax_last(&[]), 0);
+    }
+
+    #[test]
+    fn generate_steps_default_loops_generate_step_in_order() {
+        // A backend that only implements the single-session hook: the
+        // batched entry point must visit every entry in input order and
+        // surface per-entry results — including repeats and failures.
+        struct SerialOnly;
+        impl InferenceBackend for SerialOnly {
+            fn run(&self, _x: &[f32], _seed: u32) -> Result<Vec<f32>> {
+                anyhow::bail!("unused")
+            }
+            fn batch(&self) -> usize { 1 }
+            fn t_max(&self) -> usize { 1 }
+            fn classes(&self) -> usize { 1 }
+            fn x_len_per_sample(&self) -> usize { 1 }
+            fn generate_step(&self, session: u64, token: &[f32],
+                             seed: u32) -> Result<Vec<f32>> {
+                anyhow::ensure!(token[0] >= 0.0, "bad token");
+                Ok(vec![session as f32 * 100.0
+                    + token[0] * 10.0 + seed as f32])
+            }
+        }
+        let b = SerialOnly;
+        let t1 = [1.0f32];
+        let t2 = [2.0f32];
+        let bad = [-1.0f32];
+        let out = b.generate_steps(&[(7, &t1, 3), (8, &bad, 0),
+                                     (7, &t2, 9)]);
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[0].as_ref().unwrap(), &vec![713.0]);
+        assert!(out[1].is_err(), "failures stay per-entry");
+        assert_eq!(out[2].as_ref().unwrap(), &vec![729.0],
+                   "repeated session steps serially in order");
     }
 }

@@ -82,6 +82,11 @@ struct ShardCounters {
     t_exit_sum: u64,
     t_exit_count: u64,
     t_exit_hist: [u64; T_EXIT_BUCKETS.len()],
+    /// Batched-decode occupancy: dispatches issued, total sessions
+    /// stepped across them, and the widest single dispatch.
+    decode_dispatches: u64,
+    decode_sessions: u64,
+    decode_max_batch: u64,
 }
 
 const RESERVOIR: usize = 65536;
@@ -270,6 +275,20 @@ impl Metrics {
         s.t_exit_hist[t_exit_bucket(t_exit)] += 1;
     }
 
+    /// Record one batched decode dispatch on `shard` that stepped
+    /// `sessions` generate sessions in a single lane-sliced call. The
+    /// mean over dispatches is the decode-side occupancy analogue of
+    /// [`Self::record_batch`]'s continuous-batching occupancy; the
+    /// drained count (`sessions - dispatches`) says how many queue
+    /// waits the gather eliminated.
+    pub fn record_decode_dispatch(&self, shard: usize, sessions: usize) {
+        let mut m = self.inner.lock().unwrap();
+        let s = &mut m.shards[shard];
+        s.decode_dispatches += 1;
+        s.decode_sessions += sessions as u64;
+        s.decode_max_batch = s.decode_max_batch.max(sessions as u64);
+    }
+
     /// Count one submission shed by queue-full backpressure (front
     /// queue — not attributable to a shard).
     pub fn record_rejected(&self) {
@@ -314,6 +333,18 @@ impl Metrics {
                     |(s, c), sh| (s + sh.t_exit_sum, c + sh.t_exit_count));
                 if count == 0 { 0.0 } else { sum as f64 / count as f64 }
             },
+            decode_dispatches: m.shards.iter()
+                .map(|s| s.decode_dispatches).sum(),
+            mean_decode_batch: {
+                let (d, n) = m.shards.iter().fold((0u64, 0u64), |(d, n), s| {
+                    (d + s.decode_dispatches, n + s.decode_sessions)
+                });
+                if d == 0 { 0.0 } else { n as f64 / d as f64 }
+            },
+            max_decode_batch: m.shards.iter()
+                .map(|s| s.decode_max_batch).max().unwrap_or(0),
+            decode_drained: m.shards.iter()
+                .map(|s| s.decode_sessions - s.decode_dispatches).sum(),
             slo_us: self.slo_us,
             slo_violations: m.slo_violations,
             spawned: m.spawned,
@@ -340,6 +371,16 @@ impl Metrics {
                             s.t_exit_sum as f64 / s.t_exit_count as f64
                         },
                         t_exit_hist: s.t_exit_hist,
+                        decode_dispatches: s.decode_dispatches,
+                        mean_decode_batch: if s.decode_dispatches == 0 {
+                            0.0
+                        } else {
+                            s.decode_sessions as f64
+                                / s.decode_dispatches as f64
+                        },
+                        max_decode_batch: s.decode_max_batch,
+                        decode_drained:
+                            s.decode_sessions - s.decode_dispatches,
                     }
                 })
                 .collect(),
@@ -372,6 +413,16 @@ pub struct ShardSnapshot {
     pub mean_t_exit: f64,
     /// Realized-timestep histogram, bucketed per [`T_EXIT_BUCKETS`].
     pub t_exit_hist: [u64; T_EXIT_BUCKETS.len()],
+    /// Batched decode dispatches issued by this shard's executor.
+    pub decode_dispatches: u64,
+    /// Mean generate sessions per decode dispatch (decode occupancy;
+    /// 0 when no dispatch has happened yet).
+    pub mean_decode_batch: f64,
+    /// Widest single decode dispatch (sessions in one slab call).
+    pub max_decode_batch: u64,
+    /// Queue waits eliminated by gathering: sessions stepped minus
+    /// dispatches issued (0 when every dispatch held one session).
+    pub decode_drained: u64,
 }
 
 /// Point-in-time metrics view (merged totals + per-shard breakdown).
@@ -412,6 +463,16 @@ pub struct MetricsSnapshot {
     /// when early exit is disabled; lower means the dynamic-timestep
     /// exit is saving encoding steps.
     pub mean_t_exit: f64,
+    /// Batched decode dispatches across all shards.
+    pub decode_dispatches: u64,
+    /// Mean generate sessions per decode dispatch across all shards
+    /// (the decode-side occupancy analogue of `mean_batch`).
+    pub mean_decode_batch: f64,
+    /// Widest single decode dispatch observed on any shard.
+    pub max_decode_batch: u64,
+    /// Sessions stepped minus dispatches issued, across all shards:
+    /// how many decode queue waits the gather window eliminated.
+    pub decode_drained: u64,
     /// Configured latency SLO in microseconds (0 = disabled).
     pub slo_us: u64,
     /// Completions slower than the SLO (0 when disabled).
@@ -444,14 +505,18 @@ impl MetricsSnapshot {
              \"outstanding\":{},\"failed\":{},\"batches\":{},\
              \"mean_batch\":{},\"throughput_rps\":{},\"p50_us\":{},\
              \"p95_us\":{},\"p99_us\":{},\"mean_queue_us\":{},\
-             \"mean_t_exit\":{},\"slo_us\":{},\"slo_violations\":{},\
+             \"mean_t_exit\":{},\"decode_dispatches\":{},\
+             \"mean_decode_batch\":{},\"max_decode_batch\":{},\
+             \"decode_drained\":{},\"slo_us\":{},\"slo_violations\":{},\
              \"spawned\":{},\"drained\":{},\"retired\":{},\
              \"per_shard\":[",
             self.completed, self.rejected, self.shed, self.outstanding,
             self.failed, self.batches, json_f64(self.mean_batch),
             json_f64(self.throughput_rps), self.p50_us, self.p95_us,
             self.p99_us, json_f64(self.mean_queue_us),
-            json_f64(self.mean_t_exit), self.slo_us, self.slo_violations,
+            json_f64(self.mean_t_exit), self.decode_dispatches,
+            json_f64(self.mean_decode_batch), self.max_decode_batch,
+            self.decode_drained, self.slo_us, self.slo_violations,
             self.spawned, self.drained, self.retired
         ));
         for (i, sh) in self.per_shard.iter().enumerate() {
@@ -462,10 +527,14 @@ impl MetricsSnapshot {
                 "{{\"shard\":{},\"state\":\"{}\",\"completed\":{},\
                  \"failed\":{},\"batches\":{},\"mean_batch\":{},\
                  \"p50_us\":{},\"p99_us\":{},\"slo_violations\":{},\
-                 \"mean_t_exit\":{}}}",
+                 \"mean_t_exit\":{},\"decode_dispatches\":{},\
+                 \"mean_decode_batch\":{},\"max_decode_batch\":{},\
+                 \"decode_drained\":{}}}",
                 i, sh.state.label(), sh.completed, sh.failed, sh.batches,
                 json_f64(sh.mean_batch), sh.p50_us, sh.p99_us,
-                sh.slo_violations, json_f64(sh.mean_t_exit)
+                sh.slo_violations, json_f64(sh.mean_t_exit),
+                sh.decode_dispatches, json_f64(sh.mean_decode_batch),
+                sh.max_decode_batch, sh.decode_drained
             ));
         }
         s.push_str("]}");
@@ -498,6 +567,11 @@ impl std::fmt::Display for MetricsSnapshot {
         if self.mean_t_exit > 0.0 {
             write!(f, " t_exit={:.2}", self.mean_t_exit)?;
         }
+        if self.decode_dispatches > 0 {
+            write!(f, " decode_batch={:.2}/max {} drained={}",
+                   self.mean_decode_batch, self.max_decode_batch,
+                   self.decode_drained)?;
+        }
         if self.per_shard.len() > 1 {
             for (i, s) in self.per_shard.iter().enumerate() {
                 write!(f,
@@ -509,6 +583,10 @@ impl std::fmt::Display for MetricsSnapshot {
                 }
                 if s.completed > 0 {
                     write!(f, " p50={}us p99={}us", s.p50_us, s.p99_us)?;
+                }
+                if s.decode_dispatches > 0 {
+                    write!(f, " decode_batch={:.2}/max {}",
+                           s.mean_decode_batch, s.max_decode_batch)?;
                 }
                 if s.t_exit_hist.iter().any(|&c| c > 0) {
                     write!(f, " t_exit={:.2} hist[", s.mean_t_exit)?;
@@ -750,6 +828,47 @@ mod tests {
         assert_eq!(t_exit_bucket(16), 6);
         assert_eq!(t_exit_bucket(17), 7);
         assert_eq!(t_exit_bucket(1000), 7);
+    }
+
+    #[test]
+    fn batched_decode_occupancy_tracks_mean_max_and_drained() {
+        let m = Metrics::new(2);
+        // Before any dispatch the display omits the decode section and
+        // the JSON reports zeros.
+        assert!(!m.snapshot().to_string().contains("decode_batch"));
+        m.record_decode_dispatch(0, 1);
+        m.record_decode_dispatch(0, 5);
+        m.record_decode_dispatch(1, 2);
+        let s = m.snapshot();
+        assert_eq!(s.decode_dispatches, 3);
+        assert!((s.mean_decode_batch - 8.0 / 3.0).abs() < 1e-9);
+        assert_eq!(s.max_decode_batch, 5);
+        // Eight sessions stepped by three dispatches: five queue waits
+        // eliminated.
+        assert_eq!(s.decode_drained, 5);
+        assert_eq!(s.per_shard[0].decode_dispatches, 2);
+        assert!((s.per_shard[0].mean_decode_batch - 3.0).abs() < 1e-9);
+        assert_eq!(s.per_shard[0].max_decode_batch, 5);
+        assert_eq!(s.per_shard[0].decode_drained, 4);
+        assert_eq!(s.per_shard[1].max_decode_batch, 2);
+        let text = s.to_string();
+        assert!(text.contains("decode_batch=2.67/max 5 drained=5"),
+                "{text}");
+        assert!(text.contains("shard0: done=0 failed=0 batches=0 \
+                               mean_batch=0.00 decode_batch=3.00/max 5"),
+                "{text}");
+        let j = Json::parse(&s.to_json()).expect("valid JSON");
+        assert_eq!(j.get("decode_dispatches").and_then(Json::as_usize),
+                   Some(3));
+        assert_eq!(j.get("max_decode_batch").and_then(Json::as_usize),
+                   Some(5));
+        assert_eq!(j.get("decode_drained").and_then(Json::as_usize),
+                   Some(5));
+        let shards = j.get("per_shard").and_then(Json::as_arr).unwrap();
+        assert_eq!(shards[0].get("decode_dispatches")
+                       .and_then(Json::as_usize), Some(2));
+        assert_eq!(shards[1].get("max_decode_batch")
+                       .and_then(Json::as_usize), Some(2));
     }
 
     #[test]

@@ -714,9 +714,18 @@ fn close_session(session: u64, shards: &mut ShardSet,
     }
 }
 
+/// Cap on generate tokens gathered into one batched decode dispatch:
+/// one lane-sliced word serves up to 64 co-resident sessions, so
+/// gathering past a word's width adds queueing latency without adding
+/// any weight-traversal sharing.
+const GENERATE_SLAB: usize = 64;
+
 /// One shard's executor: pad each routed batch to the executable shape,
-/// run it under per-request seeds, slice per-request responses back out;
-/// advance pinned generation sessions one token at a time.
+/// run it under per-request seeds, slice per-request responses back out.
+/// Generate tokens are gathered per tick — under the same
+/// admission-anchored deadline discipline as continuous batching — and
+/// dispatched as one batched decode call, so co-pending sessions share
+/// crossbar weight traversals instead of queueing behind each other.
 fn shard_loop<B: InferenceBackend>(shard: usize, backend: B, cfg: RunConfig,
                                    rx: Receiver<ShardMsg>,
                                    metrics: Arc<Metrics>,
@@ -729,32 +738,83 @@ fn shard_loop<B: InferenceBackend>(shard: usize, backend: B, cfg: RunConfig,
     // Reused input/seed buffers: no per-batch allocation on the hot path.
     let mut x = vec![0.0f32; exe_batch * sample_len];
     let mut seeds = vec![0u32; exe_batch];
-    while let Ok(msg) = rx.recv() {
+    // A non-Generate message pulled off the queue while a decode slab
+    // was gathering; handled on the next iteration.
+    let mut pending: Option<ShardMsg> = None;
+    loop {
+        let msg = match pending.take() {
+            Some(m) => m,
+            None => match rx.recv() {
+                Ok(m) => m,
+                Err(_) => break,
+            },
+        };
         let batch = match msg {
             ShardMsg::Batch(batch) => batch,
             ShardMsg::Generate(g) => {
-                let started = Instant::now();
-                let result = backend.generate_step(
-                    g.session, &g.token, g.seed ^ (cfg.seed as u32));
-                inflight[shard].fetch_sub(1, Ordering::SeqCst);
-                match result {
-                    Ok(logits) => {
-                        let queue_us =
-                            (started - g.enqueued).as_micros() as u64;
-                        let e2e_us =
-                            g.enqueued.elapsed().as_micros() as u64;
-                        metrics.record_done(shard, e2e_us, queue_us);
-                        // Decode always runs the full T window.
-                        metrics.record_t_exit(shard, t_max);
-                        let _ = g.respond.send(Response {
-                            logits_t: logits, t_max, classes,
-                            t_exit: t_max, queue_us, e2e_us,
-                        });
+                // Gather co-pending generate work into one batched
+                // dispatch: the slab fills until it holds GENERATE_SLAB
+                // tokens or the *first* token's admission-anchored
+                // window expires — a zero window dispatches
+                // immediately, exactly like the serial path did.
+                let deadline = g.enqueued
+                    + Duration::from_micros(cfg.batch_window_us);
+                let mut gens = vec![g];
+                while gens.len() < GENERATE_SLAB {
+                    let left = deadline
+                        .saturating_duration_since(Instant::now());
+                    if left.is_zero() {
+                        break;
                     }
-                    Err(e) => {
-                        eprintln!("coordinator: shard {shard} generate \
-                                   failed: {e:#}");
-                        metrics.record_failed(shard, 1);
+                    match rx.recv_timeout(left) {
+                        Ok(ShardMsg::Generate(g2)) => gens.push(g2),
+                        Ok(other) => {
+                            pending = Some(other);
+                            break;
+                        }
+                        Err(_) => break,
+                    }
+                }
+                let started = Instant::now();
+                let entries: Vec<(u64, &[f32], u32)> = gens
+                    .iter()
+                    .map(|g| (g.session, g.token.as_slice(),
+                              g.seed ^ (cfg.seed as u32)))
+                    .collect();
+                let mut results =
+                    backend.generate_steps(&entries).into_iter();
+                inflight[shard].fetch_sub(gens.len(), Ordering::SeqCst);
+                metrics.record_decode_dispatch(shard, gens.len());
+                for g in gens {
+                    match results.next() {
+                        Some(Ok(logits)) => {
+                            let queue_us =
+                                (started - g.enqueued).as_micros() as u64;
+                            let e2e_us =
+                                g.enqueued.elapsed().as_micros() as u64;
+                            metrics.record_done(shard, e2e_us, queue_us);
+                            // Decode always runs the full T window.
+                            metrics.record_t_exit(shard, t_max);
+                            let _ = g.respond.send(Response {
+                                logits_t: logits, t_max, classes,
+                                t_exit: t_max, queue_us, e2e_us,
+                            });
+                        }
+                        res => {
+                            if let Some(Err(e)) = res {
+                                eprintln!("coordinator: shard {shard} \
+                                           generate failed: {e:#}");
+                            } else {
+                                eprintln!("coordinator: shard {shard} \
+                                           generate dropped an entry");
+                            }
+                            // Evict the possibly half-stepped state so
+                            // a retried session re-primes from scratch
+                            // instead of resuming a corrupt stream; the
+                            // waiter sees the dropped responder.
+                            backend.end_generate(g.session);
+                            metrics.record_failed(shard, 1);
+                        }
                     }
                 }
                 continue;

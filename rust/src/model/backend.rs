@@ -24,7 +24,7 @@
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
-use anyhow::{ensure, Result};
+use anyhow::{anyhow, ensure, Result};
 
 use crate::backend::InferenceBackend;
 use crate::energy::ModelEnergy;
@@ -216,6 +216,124 @@ impl InferenceBackend for NativeBackend {
         Ok(logits)
     }
 
+    /// Batched decode: advance several sessions' pending tokens in one
+    /// call. Entries are grouped into greedy rounds so a session
+    /// repeated in the call still steps serially in entry order; within
+    /// a round the distinct sessions are **bucketed by prefix length**
+    /// ([`DecodeState::tokens`] — sessions admitted at different times
+    /// sit at different prefixes) and each bucket advances through one
+    /// [`XpikeModel::decode_step_batch`] call: up to 64 co-resident
+    /// sessions per lane-sliced word, each bit-identical to its solo
+    /// serial [`Self::generate_step`] walk. Completion/eviction
+    /// semantics per entry match the serial path exactly (complete
+    /// windows fold energy and auto-evict; a failed entry keeps its
+    /// state pinned for the caller to evict).
+    fn generate_steps(&self, steps: &[(u64, &[f32], u32)])
+                      -> Vec<Result<Vec<f32>>> {
+        let in_feat = self.model.dims.in_feat;
+        if !self.model.causal {
+            return steps
+                .iter()
+                .map(|_| Err(anyhow!(
+                    "incremental generation needs a causal model")))
+                .collect();
+        }
+        let mut results: Vec<Option<Result<Vec<f32>>>> =
+            steps.iter().map(|_| None).collect();
+        // Greedy rounds: each entry joins the earliest round not yet
+        // holding its session, so a repeated session's k-th entry lands
+        // in round k — serial order preserved per session.
+        let mut rounds: Vec<Vec<usize>> = Vec::new();
+        for (i, &(session, token, _)) in steps.iter().enumerate() {
+            if token.len() != in_feat {
+                results[i] = Some(Err(anyhow!(
+                    "token length {} != {in_feat}", token.len())));
+                continue;
+            }
+            match rounds.iter_mut().find(|r| {
+                r.iter().all(|&j| steps[j].0 != session)
+            }) {
+                Some(r) => r.push(i),
+                None => rounds.push(vec![i]),
+            }
+        }
+        let mut sessions = self.sessions.lock().unwrap();
+        for round in rounds {
+            // Pull the round's states out of the shared map (priming
+            // new sessions with their first token's seed), so the
+            // batched kernel can hold simultaneous `&mut`s.
+            let mut taken: Vec<(usize, DecodeState)> = Vec::new();
+            for &i in &round {
+                let (session, _, seed) = steps[i];
+                let state = match sessions.remove(&session) {
+                    Some(st) => st,
+                    None => match self.model
+                        .begin_decode(1, &[seed as u64])
+                    {
+                        Ok(st) => st,
+                        Err(e) => {
+                            results[i] = Some(Err(e));
+                            continue;
+                        }
+                    },
+                };
+                taken.push((i, state));
+            }
+            // Prefix-length bucketing: the lane-sliced kernel packs one
+            // (timestep, token) coordinate per word, so each batched
+            // call needs uniform `tokens()`.
+            taken.sort_by_key(|(_, st)| st.tokens());
+            let mut lo = 0;
+            while lo < taken.len() {
+                let m = taken[lo].1.tokens();
+                let mut hi = lo;
+                while hi < taken.len() && taken[hi].1.tokens() == m {
+                    hi += 1;
+                }
+                let bucket = &mut taken[lo..hi];
+                let xs: Vec<f32> = bucket
+                    .iter()
+                    .flat_map(|&(i, _)| steps[i].1.iter().copied())
+                    .collect();
+                let mut refs: Vec<&mut DecodeState> =
+                    bucket.iter_mut().map(|(_, st)| st).collect();
+                let res = self.model.decode_step_batch(&mut refs, &xs);
+                drop(refs);
+                match res {
+                    Ok(outs) => {
+                        for ((i, _), out) in bucket.iter().zip(outs) {
+                            results[*i] = Some(Ok(out));
+                        }
+                    }
+                    Err(e) => {
+                        for (i, _) in bucket.iter() {
+                            results[*i] = Some(Err(anyhow!(
+                                "batched decode failed: {e}")));
+                        }
+                    }
+                }
+                lo = hi;
+            }
+            // Reinsert survivors. A completed window folds its energy
+            // and evicts; anything else — incomplete or failed — goes
+            // back pinned, mirroring the serial path (the coordinator
+            // evicts failed sessions explicitly).
+            for (i, state) in taken {
+                if matches!(results[i], Some(Ok(_)))
+                    && state.is_complete()
+                {
+                    self.energy.lock().unwrap().add(&state.energy());
+                } else {
+                    sessions.insert(steps[i].0, state);
+                }
+            }
+        }
+        results
+            .into_iter()
+            .map(|r| r.expect("every entry resolved"))
+            .collect()
+    }
+
     /// Evict `session`'s decode state. A window abandoned mid-stream is
     /// discarded without folding energy: an incomplete generation is not
     /// an inference.
@@ -395,6 +513,100 @@ mod tests {
         assert_eq!(e.inferences, 1);
         assert_eq!(e.total_pj(), want_e.total_pj(),
                    "completed generation folds forward-identical energy");
+    }
+
+    #[test]
+    fn batched_decode_generate_steps_bucket_prefixes_match_serial() {
+        // Three sessions admitted at staggered times step through the
+        // batched entry point; a serial backend walking the same
+        // (session, token, seed) sequence is the bit-identity oracle —
+        // logits per step and folded energy at the end.
+        let dims = crate::config::gpt_native(1, 64, 2, 2, 2, 2);
+        let hw = HardwareConfig::default();
+        let serial = NativeBackend::new(XpikeModel::new(&dims, &hw, 5), 1);
+        let batched = NativeBackend::new(XpikeModel::new(&dims, &hw, 5), 1);
+        let n = dims.n_tokens;
+        let f = dims.in_feat;
+        let xs: Vec<Vec<f32>> =
+            (0..3).map(|i| inputs(&serial, 1, 40 + i)).collect();
+        let sess = [30u64, 31, 32];
+        let seeds = [3u32, 4, 5];
+        let tok = |i: usize, m: usize| &xs[i][m * f..(m + 1) * f];
+        // Session 30 is admitted two tokens early: its prefix leads.
+        for m in 0..2 {
+            let want =
+                serial.generate_step(sess[0], tok(0, m), seeds[0]).unwrap();
+            let got =
+                batched.generate_steps(&[(sess[0], tok(0, m), seeds[0])]);
+            assert_eq!(got[0].as_ref().unwrap(), &want, "prefix {m}");
+        }
+        // Then all three step together: mixed prefixes, so every call
+        // spans two buckets ({31, 32} at m, {30} at m + 2).
+        for m in 0..n - 2 {
+            let entries = [
+                (sess[0], tok(0, m + 2), seeds[0]),
+                (sess[1], tok(1, m), seeds[1]),
+                (sess[2], tok(2, m), seeds[2]),
+            ];
+            let got = batched.generate_steps(&entries);
+            for (k, &(s, t, sd)) in entries.iter().enumerate() {
+                let want = serial.generate_step(s, t, sd).unwrap();
+                assert_eq!(got[k].as_ref().unwrap(), &want,
+                           "session {s} at global step {m}");
+            }
+        }
+        // Session 30 completed mid-run; 31/32 finish their last tokens.
+        for m in n - 2..n {
+            let entries = [
+                (sess[1], tok(1, m), seeds[1]),
+                (sess[2], tok(2, m), seeds[2]),
+            ];
+            let got = batched.generate_steps(&entries);
+            for (k, &(s, t, sd)) in entries.iter().enumerate() {
+                let want = serial.generate_step(s, t, sd).unwrap();
+                assert_eq!(got[k].as_ref().unwrap(), &want);
+            }
+        }
+        assert_eq!(batched.open_sessions(), 0,
+                   "completed sessions auto-evict on the batched path");
+        let (eb, es) = (batched.energy(), serial.energy());
+        assert_eq!(eb.inferences, 3);
+        assert_eq!(eb.total_pj(), es.total_pj(),
+                   "batched decode folds serial-identical energy");
+    }
+
+    #[test]
+    fn batched_decode_repeated_sessions_and_failures_stay_per_entry() {
+        // One call holding a repeated session and a malformed entry:
+        // the repeat steps serially in entry order, the bad entry fails
+        // alone, and the failed entry never primes a session.
+        let dims = crate::config::gpt_native(1, 64, 2, 2, 2, 2);
+        let hw = HardwareConfig::default();
+        let b = NativeBackend::new(XpikeModel::new(&dims, &hw, 5), 1);
+        let want = NativeBackend::new(XpikeModel::new(&dims, &hw, 5), 1);
+        let f = dims.in_feat;
+        let x = inputs(&b, 1, 8);
+        let bad = vec![0.5f32; f + 1];
+        let out = b.generate_steps(&[
+            (9, &x[..f], 31),
+            (5, &bad, 2),
+            (9, &x[f..2 * f], 31),
+        ]);
+        assert_eq!(out.len(), 3);
+        let w0 = want.generate_step(9, &x[..f], 31).unwrap();
+        let w1 = want.generate_step(9, &x[f..2 * f], 31).unwrap();
+        assert_eq!(out[0].as_ref().unwrap(), &w0);
+        assert!(out[1].is_err(), "token length is validated per entry");
+        assert_eq!(out[2].as_ref().unwrap(), &w1,
+                   "a repeated session steps serially in entry order");
+        assert_eq!(b.open_sessions(), 1,
+                   "the failed entry never primes a session");
+        // A non-causal backend fails every entry without touching state.
+        let vit = backend(1);
+        let outs = vit.generate_steps(&[(1, &x[..f], 0), (2, &x[..f], 0)]);
+        assert_eq!(outs.len(), 2);
+        assert!(outs.iter().all(|r| r.is_err()));
+        assert_eq!(vit.open_sessions(), 0);
     }
 
     #[test]

@@ -34,6 +34,19 @@
 //! enforce it, the same pattern that proved lane batching (PR 5) and bit
 //! packing (PR 2) safe.
 //!
+//! Decode batches too: [`XpikeModel::decode_step_batch`] advances many
+//! co-resident sessions at once. Under the default
+//! [`BatchKernel::LaneSliced`] kernel the flattened session lanes step
+//! in slabs of up to 64 — the packed K/V volumes are transposed into
+//! [`LaneSlicedVolume`] form so one crossbar weight-row visit and one
+//! AND-popcount word serve every session in the slab, with per-lane
+//! counts recovered by the [`VerticalCounter`] and compared against
+//! each lane's *own* LFSR draw planes. Per-lane RNG clones keep every
+//! stochastic stream private, so each session stays bit-identical to
+//! its solo serial [`XpikeModel::decode_step`] walk; the
+//! [`BatchKernel::LaneLoop`] variant steps the sessions serially and is
+//! retained as the equivalence oracle.
+//!
 //! Event-driven sparsity diagnostics propagate here too: the shared
 //! crossbar drive path counts per-slice silence (all-zero spike slices
 //! skip the wordline traversal, see `AimcCounts`), and the incremental
@@ -47,12 +60,13 @@
 
 use anyhow::{ensure, Result};
 
-use crate::config::ModelDims;
+use crate::config::{BatchKernel, ModelDims};
 use crate::energy::constants::{E_LIF_UPDATE, E_RESIDUAL_EL};
 use crate::energy::{LayerEnergy, ModelEnergy, SsaEnergy};
 use crate::model::forward::{aimc_energy, AimcCounts, XpikeModel};
 use crate::snn::{rate_encode_row, LifArray};
-use crate::spike::{and_popcount, SpikeVector, SpikeVolume};
+use crate::spike::{and_popcount, LaneSlicedVolume, SpikeVector,
+                   SpikeVolume, VerticalCounter};
 use crate::ssa::{draw_uniform, LfsrArray, SsaStats};
 use crate::util::Rng;
 
@@ -533,6 +547,356 @@ impl XpikeModel {
         state.tokens += 1;
         Ok(logits)
     }
+
+    /// Decode the next token for several sessions in one batched call.
+    ///
+    /// Every state must sit at the same prefix length (their
+    /// [`DecodeState::tokens`]): the lane-sliced kernel packs all
+    /// sessions' spike bits
+    /// for one (timestep, token) coordinate into shared words, which
+    /// only lines up when every lane is at that coordinate. Callers
+    /// with mixed prefixes bucket by `tokens()` first (the native
+    /// backend's `generate_steps` does exactly that).
+    ///
+    /// `xs` concatenates each state's lane-major `[in_feat]` token rows
+    /// in state order; the return value holds each state's lane-major
+    /// `[lanes, t_max, classes]` logits in the same order. Under
+    /// [`BatchKernel::LaneSliced`] the flattened session lanes advance
+    /// in slabs of up to 64 — one crossbar weight-row visit and one
+    /// AND-popcount word per slab — while per-lane RNG clones and LFSR
+    /// draw planes keep every stream private: each session's logits,
+    /// stats attribution, and folded [`DecodeState::energy`] are
+    /// bit-identical to its solo serial [`Self::decode_step`] walk.
+    /// Under [`BatchKernel::LaneLoop`] the states step serially — the
+    /// equivalence oracle.
+    pub fn decode_step_batch(&self, states: &mut [&mut DecodeState],
+                             xs: &[f32]) -> Result<Vec<Vec<f32>>> {
+        if states.is_empty() {
+            ensure!(xs.is_empty(),
+                    "token input for an empty state batch");
+            return Ok(Vec::new());
+        }
+        let d = &self.dims;
+        let (n, t_max, classes) = (d.n_tokens, d.t_steps, d.classes);
+        let m = states[0].tokens;
+        let mut total_lanes = 0usize;
+        for st in states.iter() {
+            ensure!(st.dims.name == d.name && st.dims.t_steps == t_max,
+                    "decode state primed for {}, model is {}",
+                    st.dims.name, d.name);
+            ensure!(st.tokens == m,
+                    "batched decode needs uniform prefix lengths: got \
+                     {} and {m} (bucket by tokens() first)", st.tokens);
+            total_lanes += st.lanes.len();
+        }
+        ensure!(m < n,
+                "decode window exhausted: {n} of {n} tokens emitted");
+        ensure!(xs.len() == total_lanes * d.in_feat,
+                "token input length {} != {total_lanes} lanes x {} \
+                 features", xs.len(), d.in_feat);
+        if self.hw.batch_kernel == BatchKernel::LaneLoop {
+            // Serial oracle: each state steps alone, exactly as a
+            // caller looping `decode_step` would.
+            let mut out = Vec::with_capacity(states.len());
+            let mut off = 0usize;
+            for st in states.iter_mut() {
+                let w = st.lanes.len() * d.in_feat;
+                out.push(self.decode_step(st, &xs[off..off + w])?);
+                off += w;
+            }
+            return Ok(out);
+        }
+        let mut flat: Vec<&mut LaneState> =
+            Vec::with_capacity(total_lanes);
+        for st in states.iter_mut() {
+            flat.extend(st.lanes.iter_mut());
+        }
+        let mut logits = vec![0.0f32; total_lanes * t_max * classes];
+        let mut lo = 0usize;
+        for slab in flat.chunks_mut(64) {
+            let hi = lo + slab.len();
+            self.decode_slab_sliced(
+                slab, m, &xs[lo * d.in_feat..hi * d.in_feat],
+                &mut logits[lo * t_max * classes
+                    ..hi * t_max * classes]);
+            lo = hi;
+        }
+        let mut out = Vec::with_capacity(states.len());
+        let mut off = 0usize;
+        for st in states.iter_mut() {
+            let w = st.lanes.len() * t_max * classes;
+            out.push(logits[off..off + w].to_vec());
+            off += w;
+            st.tokens += 1;
+        }
+        Ok(out)
+    }
+
+    /// One lane-sliced decode step for a slab of up to 64 session lanes
+    /// sitting at prefix length `m`. `xs` holds the slab's lane-major
+    /// token rows, `logits` receives lane-major `[lanes, t_max,
+    /// classes]` rows.
+    ///
+    /// Bit-identity per lane rests on the same pillars as the forward
+    /// slab kernel: per-lane RNG banks cloned from the priming
+    /// snapshots (every draw count is content-independent), the
+    /// `step_lanes`/`mvm_lanes` stages proven draw-for-draw identical
+    /// per lane by the forward equivalence oracles, vertical-counter
+    /// popcounts equal to each lane's serial AND/popcount, and
+    /// Bernoulli draws always >= 1 so a silent lane can never fire —
+    /// the serial path's silence short-circuits need no special-casing
+    /// here. Only the `drive_words`/`zero_drive_words` diagnostics
+    /// change unit (64-lane words instead of 64-feature words, see
+    /// `AimcCounts`); they carry no energy.
+    fn decode_slab_sliced(&self, lanes: &mut [&mut LaneState], m: usize,
+                          xs: &[f32], logits: &mut [f32]) {
+        let d = &self.dims;
+        let (n, dim, t_max) = (d.n_tokens, d.dim, d.t_steps);
+        let (heads, dh, classes) = (d.heads, d.d_head(), d.classes);
+        let hidden = d.hidden();
+        let nl = lanes.len();
+        debug_assert!(0 < nl && nl <= 64, "slab width {nl}");
+        let t_sec = self.drift.t_seconds;
+        let hw = &self.hw;
+        let embed = self.stage("embed");
+        let head = self.stage("head");
+        // -- Embed token m across all timesteps, all lanes ------------
+        // Fresh LIF banks are the serial path's `reset()`: membranes
+        // are per-token, nothing pre-reset is ever read.
+        let mut lifs: Vec<LifArray> =
+            (0..nl).map(|_| LifArray::new(dim)).collect();
+        let mut counts: Vec<AimcCounts> = lanes
+            .iter_mut()
+            .map(|l| std::mem::take(&mut l.embed_counts))
+            .collect();
+        // cur[t]: the slab's packed activations — dim lane words.
+        let mut cur: Vec<Vec<u64>> = vec![vec![0u64; dim]; t_max];
+        let mut drive = vec![0u64; d.in_feat];
+        for (t, cur_t) in cur.iter_mut().enumerate() {
+            let mut rngs: Vec<Rng> = lanes
+                .iter()
+                .map(|l| l.snap_embed[t][m].clone())
+                .collect();
+            drive.fill(0);
+            for (lane, rng) in rngs.iter_mut().enumerate() {
+                let feats =
+                    &xs[lane * d.in_feat..(lane + 1) * d.in_feat];
+                let enc = rate_encode_row(rng, feats);
+                enc.for_each_set(|i| drive[i] |= 1u64 << lane);
+            }
+            let sps = embed.step_lanes(&mut rngs, &drive, &mut lifs,
+                                       t_sec, hw, &mut counts);
+            for (lane, sp) in sps.iter().enumerate() {
+                sp.for_each_set(|i| cur_t[i] |= 1u64 << lane);
+            }
+        }
+        for (l, c) in lanes.iter_mut().zip(counts) {
+            l.embed_counts = c;
+        }
+        // -- Encoder blocks -------------------------------------------
+        let mut vc = VerticalCounter::new();
+        for b in 0..d.depth {
+            let wq = self.stage(&format!("blk{b}.wq"));
+            let wk = self.stage(&format!("blk{b}.wk"));
+            let wv = self.stage(&format!("blk{b}.wv"));
+            let wo = self.stage(&format!("blk{b}.wo"));
+            let w1 = self.stage(&format!("blk{b}.w1"));
+            let w2 = self.stage(&format!("blk{b}.w2"));
+            let mut counts: Vec<AimcCounts> = lanes
+                .iter_mut()
+                .map(|l| std::mem::take(&mut l.blocks[b].counts))
+                .collect();
+            let mut q_lifs: Vec<LifArray> =
+                (0..nl).map(|_| LifArray::new(dim)).collect();
+            let mut k_lifs: Vec<LifArray> =
+                (0..nl).map(|_| LifArray::new(dim)).collect();
+            let mut v_lifs: Vec<LifArray> =
+                (0..nl).map(|_| LifArray::new(dim)).collect();
+            let mut wo_lifs: Vec<LifArray> =
+                (0..nl).map(|_| LifArray::new(dim)).collect();
+            let mut w1_lifs: Vec<LifArray> =
+                (0..nl).map(|_| LifArray::new(hidden)).collect();
+            let mut w2_lifs: Vec<LifArray> =
+                (0..nl).map(|_| LifArray::new(dim)).collect();
+            // Q/K/V row m per timestep, appended to each lane's caches
+            // (which stay feature-major — joins/leaves never repack).
+            for (t, cur_t) in cur.iter().enumerate() {
+                let mut rngs: Vec<Rng> = lanes
+                    .iter()
+                    .map(|l| l.blocks[b].snap_qkv[t][m].clone())
+                    .collect();
+                let q_sps = wq.step_lanes(&mut rngs, cur_t, &mut q_lifs,
+                                          t_sec, hw, &mut counts);
+                let k_sps = wk.step_lanes(&mut rngs, cur_t, &mut k_lifs,
+                                          t_sec, hw, &mut counts);
+                let v_sps = wv.step_lanes(&mut rngs, cur_t, &mut v_lifs,
+                                          t_sec, hw, &mut counts);
+                for (lane, ((q, k), v)) in
+                    q_sps.iter().zip(&k_sps).zip(&v_sps).enumerate()
+                {
+                    for (h, hc) in
+                        lanes[lane].blocks[b].heads.iter_mut()
+                            .enumerate()
+                    {
+                        let (lo, hi) = (h * dh, (h + 1) * dh);
+                        hc.q.step_mut(t).set_row(m, &q.extract(lo, hi));
+                        hc.k.step_mut(t).set_row(m, &k.extract(lo, hi));
+                        hc.v.step_mut(t).set_row(m, &v.extract(lo, hi));
+                    }
+                }
+            }
+            // SSA rows for token m: shared AND words across the slab,
+            // per-lane counts recovered by the vertical counter and
+            // compared against each lane's own draw planes.
+            let cycles = ((t_max + 1) * dh) as u64;
+            let mut attn: Vec<Vec<u64>> = vec![vec![0u64; dim]; t_max];
+            for l in lanes.iter_mut() {
+                l.blocks[b].stats.cycles = cycles;
+            }
+            for h in 0..heads {
+                for l in lanes.iter_mut() {
+                    // Content-independent event counts, identical to
+                    // the serial per-head attribution.
+                    let stats = &mut l.blocks[b].stats;
+                    stats.and_ops += (2 * n * (t_max + 1) * dh) as u64;
+                    stats.adder_ops += (t_max * dh) as u64;
+                    stats.encoder_samples += (t_max * (n + dh)) as u64;
+                    stats.prn_bytes += t_max as u64
+                        * (n as u64 * draw_bytes(dh)
+                            + dh as u64 * draw_bytes(n));
+                }
+                let q_sl = LaneSlicedVolume::transpose_from_lane_refs(
+                    &lanes.iter().map(|l| &l.blocks[b].heads[h].q)
+                        .collect::<Vec<_>>());
+                let k_sl = LaneSlicedVolume::transpose_from_lane_refs(
+                    &lanes.iter().map(|l| &l.blocks[b].heads[h].k)
+                        .collect::<Vec<_>>());
+                let v_sl = LaneSlicedVolume::transpose_from_lane_refs(
+                    &lanes.iter().map(|l| &l.blocks[b].heads[h].v)
+                        .collect::<Vec<_>>());
+                for (t, attn_t) in attn.iter_mut().enumerate() {
+                    let qs = q_sl.step(t);
+                    let ks = k_sl.step(t);
+                    let vs = v_sl.step(t);
+                    let qm = qs.row(m);
+                    let q_live = qm.iter().fold(0u64, |a, &w| a | w);
+                    // Masked score row m (keys j <= m), one lane word
+                    // per key. The compare is unconditional per lane: a
+                    // silent Q row counts 0 and draws are >= 1, so the
+                    // serial short-circuit is reproduced exactly.
+                    let mut score_words = vec![0u64; m + 1];
+                    for (j, sw) in score_words.iter_mut().enumerate() {
+                        vc.clear();
+                        for (qw, kw) in qm.iter().zip(ks.row(j)) {
+                            vc.add_word(qw & kw);
+                        }
+                        for (lane, l) in lanes.iter_mut().enumerate() {
+                            let blk = &mut l.blocks[b];
+                            let cnt = vc.count(lane);
+                            blk.stats.counter_incs += cnt as u64;
+                            if cnt
+                                >= blk.heads[h].score_draws[t][m * n + j]
+                            {
+                                *sw |= 1u64 << lane;
+                            }
+                        }
+                    }
+                    // Pre-mask counter increments for the (i, m) pairs,
+                    // i < m — the tile counts every pair.
+                    for i in 0..m {
+                        vc.clear();
+                        for (qw, kw) in qs.row(i).iter().zip(ks.row(m)) {
+                            vc.add_word(qw & kw);
+                        }
+                        for (lane, l) in lanes.iter_mut().enumerate() {
+                            l.blocks[b].stats.counter_incs +=
+                                vc.count(lane) as u64;
+                        }
+                    }
+                    // Row-silence probes, two rows per (head, t, lane).
+                    let s_live = score_words.iter()
+                        .fold(0u64, |a, &w| a | w);
+                    for (lane, l) in lanes.iter_mut().enumerate() {
+                        let stats = &mut l.blocks[b].stats;
+                        stats.rows += 2;
+                        if q_live & (1u64 << lane) == 0 {
+                            stats.silent_rows += 1;
+                        }
+                        if s_live & (1u64 << lane) == 0 {
+                            stats.silent_rows += 1;
+                        }
+                    }
+                    // Output row m: column adders over the attended
+                    // values; an empty score row never clears a draw.
+                    for c in 0..dh {
+                        vc.clear();
+                        for (j, &sw) in score_words.iter().enumerate() {
+                            vc.add_word(sw & vs.word(j, c));
+                        }
+                        for (lane, l) in lanes.iter_mut().enumerate() {
+                            let blk = &mut l.blocks[b];
+                            if vc.count(lane)
+                                >= blk.heads[h].out_draws[t][m * dh + c]
+                            {
+                                attn_t[h * dh + c] |= 1u64 << lane;
+                            }
+                        }
+                    }
+                }
+            }
+            // Wo + OR residual + FFN + OR residual for token m.
+            let mut h_drive = vec![0u64; hidden];
+            for (t, cur_t) in cur.iter_mut().enumerate() {
+                let mut rngs: Vec<Rng> = lanes
+                    .iter()
+                    .map(|l| l.blocks[b].snap_ffn[t][m].clone())
+                    .collect();
+                let o_sps = wo.step_lanes(&mut rngs, &attn[t],
+                                          &mut wo_lifs, t_sec, hw,
+                                          &mut counts);
+                let mut r1 = cur_t.clone();
+                for (lane, o) in o_sps.iter().enumerate() {
+                    o.for_each_set(|i| r1[i] |= 1u64 << lane);
+                }
+                let h_sps = w1.step_lanes(&mut rngs, &r1, &mut w1_lifs,
+                                          t_sec, hw, &mut counts);
+                h_drive.fill(0);
+                for (lane, sp) in h_sps.iter().enumerate() {
+                    sp.for_each_set(|i| h_drive[i] |= 1u64 << lane);
+                }
+                let f_sps = w2.step_lanes(&mut rngs, &h_drive,
+                                          &mut w2_lifs, t_sec, hw,
+                                          &mut counts);
+                for (lane, f) in f_sps.iter().enumerate() {
+                    f.for_each_set(|i| r1[i] |= 1u64 << lane);
+                }
+                *cur_t = r1;
+            }
+            for (l, c) in lanes.iter_mut().zip(counts) {
+                l.blocks[b].counts = c;
+            }
+        }
+        // -- Head readout of the newest row ---------------------------
+        // Fresh counters replace the stored ones, keeping energy equal
+        // to forward's single final-row readout.
+        let mut head_counts: Vec<AimcCounts> =
+            (0..nl).map(|_| AimcCounts::default()).collect();
+        for (t, cur_t) in cur.iter().enumerate() {
+            let mut rngs: Vec<Rng> = lanes
+                .iter()
+                .map(|l| l.snap_head[t].clone())
+                .collect();
+            let outs = head.mvm_lanes(&mut rngs, cur_t, t_sec, hw,
+                                      &mut head_counts);
+            for (lane, out) in outs.iter().enumerate() {
+                let off = (lane * t_max + t) * classes;
+                logits[off..off + classes].copy_from_slice(out);
+            }
+        }
+        for (l, c) in lanes.iter_mut().zip(head_counts) {
+            l.head_counts = c;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -750,6 +1114,251 @@ mod tests {
                 "all-silent Q rows must register as skipped");
         assert_eq!(e.realized_steps, dims.t_steps as u64,
                    "decode always runs the full T window");
+    }
+
+    #[test]
+    fn batched_decode_staggered_joins_and_leaves_bit_identical() {
+        use crate::config::BatchKernel;
+        // Five sessions admitted in cohorts (ticks 0, 0, 2, 2, 3) so
+        // the prefix buckets genuinely hold several sessions; session 1
+        // closes early after 3 tokens. Every batched step must be
+        // bit-identical (logits and folded energy) to that session's
+        // solo serial decode, on both kernels.
+        let dims = odd_gpt(2);
+        let n = dims.n_tokens;
+        let joins = [0usize, 0, 2, 2, 3];
+        let seeds = [11u64, 222, 3333, 44, 5];
+        for kernel in [BatchKernel::LaneSliced, BatchKernel::LaneLoop] {
+            let hw = HardwareConfig { batch_kernel: kernel,
+                                      ..HardwareConfig::default() };
+            let model = XpikeModel::new(&dims, &hw, 17);
+            let xs: Vec<Vec<f32>> = (0..5)
+                .map(|i| sample(&model, 70 + i as u64))
+                .collect();
+            // Solo serial oracle: per-step logits + energy.
+            let mut want: Vec<Vec<Vec<f32>>> = Vec::new();
+            let mut want_e: Vec<Vec<ModelEnergy>> = Vec::new();
+            for i in 0..5 {
+                let mut st =
+                    model.begin_decode(1, &[seeds[i]]).unwrap();
+                let (mut steps, mut energies) = (Vec::new(), Vec::new());
+                for m in 0..n {
+                    steps.push(model
+                        .decode_step(&mut st,
+                                     &xs[i][m * dims.in_feat
+                                         ..(m + 1) * dims.in_feat])
+                        .unwrap());
+                    energies.push(st.energy());
+                }
+                want.push(steps);
+                want_e.push(energies);
+            }
+            let mut states: Vec<Option<DecodeState>> =
+                (0..5).map(|_| None).collect();
+            for tick in 0..32 {
+                for (i, &j) in joins.iter().enumerate() {
+                    if j == tick {
+                        states[i] = Some(
+                            model.begin_decode(1, &[seeds[i]]).unwrap());
+                    }
+                }
+                // Bucket active sessions by prefix length; advance each
+                // bucket in one batched call.
+                let mut by_m: std::collections::BTreeMap<usize,
+                                                         Vec<usize>> =
+                    Default::default();
+                for (i, st) in states.iter().enumerate() {
+                    if let Some(st) = st {
+                        by_m.entry(st.tokens()).or_default().push(i);
+                    }
+                }
+                if by_m.is_empty() && tick > 3 {
+                    break;
+                }
+                for (m, idxs) in by_m {
+                    let step_xs: Vec<f32> = idxs.iter()
+                        .flat_map(|&i| xs[i][m * dims.in_feat
+                            ..(m + 1) * dims.in_feat].to_vec())
+                        .collect();
+                    let mut refs: Vec<&mut DecodeState> = states
+                        .iter_mut()
+                        .enumerate()
+                        .filter(|(i, _)| idxs.contains(i))
+                        .filter_map(|(_, s)| s.as_mut())
+                        .collect();
+                    let outs = model
+                        .decode_step_batch(&mut refs, &step_xs)
+                        .unwrap();
+                    for (&i, out) in idxs.iter().zip(&outs) {
+                        assert_eq!(out, &want[i][m],
+                                   "session {i} token {m} {kernel:?}");
+                    }
+                }
+                // Leaves: session 1 closes mid-stream after 3 tokens;
+                // completed windows fold and evict.
+                for i in 0..5 {
+                    let Some(st) = &states[i] else { continue };
+                    if i == 1 && st.tokens() == 3 {
+                        assert_energy_identical(&st.energy(),
+                                                &want_e[1][2]);
+                        states[1] = None;
+                    } else if st.is_complete() {
+                        assert_energy_identical(&st.energy(),
+                                                &want_e[i][n - 1]);
+                        states[i] = None;
+                    }
+                }
+            }
+            assert!(states.iter().all(|s| s.is_none()),
+                    "every session must finish or close");
+        }
+    }
+
+    #[test]
+    fn batched_decode_two_slab_65_sessions_bit_identical() {
+        // 65 co-resident sessions: the flattened lanes split into a
+        // full 64-lane slab plus a 1-lane tail; sessions 10 and 64
+        // leave after 2 tokens, shrinking the packing mid-stream. Every
+        // session stays bit-identical to its solo serial decode.
+        let dims = ModelDims {
+            name: "gpt_tiny_t1".into(),
+            kind: ModelKind::Gpt,
+            depth: 1,
+            dim: 16,
+            heads: 2,
+            n_tokens: 5,
+            in_feat: 6,
+            classes: 3,
+            mlp_ratio: 2,
+            t_steps: 1,
+            nt: 0,
+        };
+        let n = dims.n_tokens;
+        let model = XpikeModel::new(&dims, &HardwareConfig::default(), 23);
+        let total = 65usize;
+        let seeds: Vec<u64> =
+            (0..total).map(|i| 1 + 7 * i as u64).collect();
+        let xs: Vec<Vec<f32>> = (0..total)
+            .map(|i| sample(&model, 500 + i as u64))
+            .collect();
+        let mut want: Vec<Vec<Vec<f32>>> = Vec::new();
+        let mut want_e: Vec<Vec<ModelEnergy>> = Vec::new();
+        for i in 0..total {
+            let mut st = model.begin_decode(1, &[seeds[i]]).unwrap();
+            let (mut steps, mut energies) = (Vec::new(), Vec::new());
+            for m in 0..n {
+                steps.push(model
+                    .decode_step(&mut st,
+                                 &xs[i][m * dims.in_feat
+                                     ..(m + 1) * dims.in_feat])
+                    .unwrap());
+                energies.push(st.energy());
+            }
+            want.push(steps);
+            want_e.push(energies);
+        }
+        let mut states: Vec<Option<DecodeState>> = seeds.iter()
+            .map(|&s| Some(model.begin_decode(1, &[s]).unwrap()))
+            .collect();
+        for m in 0..n {
+            let active: Vec<usize> = states.iter().enumerate()
+                .filter(|(_, s)| s.is_some())
+                .map(|(i, _)| i)
+                .collect();
+            let step_xs: Vec<f32> = active.iter()
+                .flat_map(|&i| xs[i][m * dims.in_feat
+                    ..(m + 1) * dims.in_feat].to_vec())
+                .collect();
+            let mut refs: Vec<&mut DecodeState> = states
+                .iter_mut()
+                .filter_map(|s| s.as_mut())
+                .collect();
+            let outs =
+                model.decode_step_batch(&mut refs, &step_xs).unwrap();
+            for (&i, out) in active.iter().zip(&outs) {
+                assert_eq!(out, &want[i][m], "session {i} token {m}");
+            }
+            if m == 1 {
+                for i in [10usize, 64] {
+                    let st = states[i].take().unwrap();
+                    assert_energy_identical(&st.energy(), &want_e[i][1]);
+                }
+            }
+        }
+        for (i, st) in states.iter().enumerate() {
+            if let Some(st) = st {
+                assert!(st.is_complete());
+                assert_energy_identical(&st.energy(), &want_e[i][n - 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn batched_decode_multi_lane_states_match_serial_walks() {
+        // States with several lock-step lanes batch too: a 2-lane state
+        // and a 1-lane state flatten into one 3-lane slab, each lane
+        // bit-identical to the serial decode_step walk of its state.
+        let dims = odd_gpt(1);
+        let model = XpikeModel::new(&dims, &HardwareConfig::default(), 31);
+        let n = dims.n_tokens;
+        let xa = sample(&model, 81);
+        let xb = sample(&model, 82);
+        let xc = sample(&model, 83);
+        let mut sa = model.begin_decode(2, &[40, 41]).unwrap();
+        let mut sb = model.begin_decode(1, &[42]).unwrap();
+        let mut want = Vec::new();
+        for m in 0..n {
+            let f = m * dims.in_feat..(m + 1) * dims.in_feat;
+            let mut tok_a = xa[f.clone()].to_vec();
+            tok_a.extend_from_slice(&xb[f.clone()]);
+            let la = model.decode_step(&mut sa, &tok_a).unwrap();
+            let lb = model.decode_step(&mut sb, &xc[f]).unwrap();
+            want.push((la, lb));
+        }
+        let (want_ea, want_eb) = (sa.energy(), sb.energy());
+        let mut ba = model.begin_decode(2, &[40, 41]).unwrap();
+        let mut bb = model.begin_decode(1, &[42]).unwrap();
+        for m in 0..n {
+            let f = m * dims.in_feat..(m + 1) * dims.in_feat;
+            let mut step_xs = xa[f.clone()].to_vec();
+            step_xs.extend_from_slice(&xb[f.clone()]);
+            step_xs.extend_from_slice(&xc[f]);
+            let outs = model
+                .decode_step_batch(&mut [&mut ba, &mut bb], &step_xs)
+                .unwrap();
+            assert_eq!(outs[0], want[m].0, "state a token {m}");
+            assert_eq!(outs[1], want[m].1, "state b token {m}");
+        }
+        assert_energy_identical(&ba.energy(), &want_ea);
+        assert_energy_identical(&bb.energy(), &want_eb);
+    }
+
+    #[test]
+    fn batched_decode_rejects_mixed_prefixes_and_bad_input() {
+        let dims = odd_gpt(1);
+        let model = XpikeModel::new(&dims, &HardwareConfig::default(), 31);
+        assert!(model
+            .decode_step_batch(&mut [], &[])
+            .unwrap()
+            .is_empty());
+        assert!(model.decode_step_batch(&mut [], &[0.5]).is_err(),
+                "input for zero states");
+        let mut a = model.begin_decode(1, &[1]).unwrap();
+        let mut b = model.begin_decode(1, &[2]).unwrap();
+        let tok = vec![0.5f32; dims.in_feat];
+        model.decode_step(&mut a, &tok).unwrap();
+        // a is one token ahead of b: the uniform-prefix contract.
+        let two = [tok.clone(), tok.clone()].concat();
+        assert!(model
+            .decode_step_batch(&mut [&mut a, &mut b], &two)
+            .is_err());
+        assert!(model.decode_step_batch(&mut [&mut b], &two).is_err(),
+                "wrong flattened feature length");
+        // Window exhaustion is rejected batched exactly as serially.
+        for _ in 1..dims.n_tokens {
+            model.decode_step(&mut a, &tok).unwrap();
+        }
+        assert!(model.decode_step_batch(&mut [&mut a], &tok).is_err());
     }
 
     #[test]

@@ -12,8 +12,10 @@
 //! exerts backpressure. The generate path is covered against a
 //! session-recording mock: sticky session→shard routing, first-token
 //! seeding, close-time eviction, capability probing, inline routing
-//! around the continuously-forming batch, and shard-death eviction
-//! surfacing failures to the waiters. (Lifecycle scaling and the HTTP
+//! around the continuously-forming batch, gather-window batched decode
+//! dispatch (occupancy metrics), failure-time session eviction so
+//! retries re-prime, and shard-death eviction surfacing failures to
+//! the waiters. (Lifecycle scaling and the HTTP
 //! front door have their own suites: `lifecycle.rs`,
 //! `http_front_door.rs`.)
 
@@ -151,6 +153,9 @@ impl InferenceBackend for SingleSeedMock {
 struct GenMock {
     id: usize,
     panic_token: Option<f32>,
+    /// A token first-feature that makes the step *fail* (an `Err`, not
+    /// a panic) — the executor-side eviction probe.
+    fail_token: Option<f32>,
     /// session -> (priming seed, tokens served).
     sessions: Arc<Mutex<HashMap<u64, (u32, usize)>>>,
     /// Every (session, backend id) token served, in order.
@@ -171,6 +176,7 @@ impl GenMock {
         GenMock {
             id,
             panic_token: None,
+            fail_token: None,
             sessions: Arc::new(Mutex::new(HashMap::new())),
             served: Arc::new(Mutex::new(Vec::new())),
             closed: Arc::new(Mutex::new(Vec::new())),
@@ -234,6 +240,9 @@ impl InferenceBackend for GenMock {
                    "coordinator must validate token length");
         if self.panic_token.is_some_and(|p| token[0] == p) {
             panic!("gen mock: simulated executor death");
+        }
+        if self.fail_token.is_some_and(|p| token[0] == p) {
+            anyhow::bail!("gen mock: simulated step failure");
         }
         let (prime_seed, tokens) = {
             let mut sessions = self.sessions.lock().unwrap();
@@ -593,6 +602,80 @@ fn generate_tokens_ride_alongside_the_forming_batch() {
     // the 200ms window would have expired.
     assert_eq!(*execs.lock().unwrap(), 1,
                "infers must merge around the inline generate token");
+    drop(client);
+    server.shutdown();
+}
+
+#[test]
+fn batched_decode_dispatch_gathers_co_pending_sessions() {
+    // Three sessions submit their tokens while the shard's gather
+    // window is open: the executor drains them into one batched decode
+    // dispatch (occupancy > 1 in the metrics) while every response
+    // still decodes to its own (session, seed, token) — this mock only
+    // implements the serial hook, so the trait's fallback is the
+    // equivalence oracle the executor dispatches through.
+    let backend = GenMock::new(0);
+    // A generous window so all three submissions land in one gather
+    // even on a loaded CI machine.
+    let server = Server::start(backend, cfg(2, 50_000, 32));
+    let client = server.client();
+    let pend: Vec<_> = (0..3u64)
+        .map(|i| {
+            client
+                .generate(300 + i, vec![i as f32, 0.0], 20 + i as u32)
+                .unwrap()
+        })
+        .collect();
+    for (i, p) in pend.into_iter().enumerate() {
+        let r = p.wait().unwrap();
+        assert_eq!(r.logits_t[0],
+                   GenMock::glogit(0, 300 + i as u64, 20 + i as u32, 1,
+                                   i as f32, 0, 0),
+                   "session {i} must keep its own seed and stream");
+    }
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.completed, 3);
+    assert!(snap.decode_dispatches >= 1);
+    assert!(snap.max_decode_batch >= 2,
+            "co-pending sessions must share one dispatch: {snap}");
+    assert!(snap.mean_decode_batch > 1.0);
+    assert_eq!(snap.decode_drained, 3 - snap.decode_dispatches,
+               "drained counts the queue waits the gather eliminated");
+    assert_eq!(snap.per_shard[0].max_decode_batch, snap.max_decode_batch);
+    drop(client);
+    server.shutdown();
+}
+
+#[test]
+fn generate_failure_evicts_the_session_so_retry_reprimes() {
+    // Regression: a failed generate step used to leave the session's
+    // possibly half-stepped decode state pinned in the backend map. The
+    // executor must evict it (`end_generate`) so a retry re-primes from
+    // scratch instead of resuming a corrupt stream.
+    let backend = GenMock { fail_token: Some(-5.0), ..GenMock::new(0) };
+    let (sessions, closed) =
+        (Arc::clone(&backend.sessions), Arc::clone(&backend.closed));
+    let server = Server::start(backend, cfg(2, 0, 32));
+    let client = server.client();
+    let r = client.generate(7, vec![1.0, 0.0], 3).unwrap().wait().unwrap();
+    assert_eq!(r.logits_t[0], GenMock::glogit(0, 7, 3, 1, 1.0, 0, 0));
+    assert!(client.generate(7, vec![-5.0, 0.0], 3).unwrap().wait()
+                .is_err(),
+            "the failing token's waiter must observe the error");
+    // The responder drops only after the executor's eviction, so these
+    // are deterministic once wait() has returned.
+    assert_eq!(closed.lock().unwrap().as_slice(), &[7],
+               "the executor must evict the failed session");
+    assert!(sessions.lock().unwrap().is_empty());
+    // The retry re-primes fresh on the same (still alive) shard: the
+    // new seed takes and the token counter restarts at 1.
+    let r =
+        client.generate(7, vec![2.0, 0.0], 44).unwrap().wait().unwrap();
+    assert_eq!(r.logits_t[0], GenMock::glogit(0, 7, 44, 1, 2.0, 0, 0),
+               "retry must start a fresh stream, not resume the old one");
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.completed, 2);
+    assert_eq!(snap.failed, 1);
     drop(client);
     server.shutdown();
 }
